@@ -1,0 +1,89 @@
+//! End-to-end driver: proves all three layers compose on a real workload.
+//!
+//! * Layer 1/2: the AOT-lowered Pallas kernels (`artifacts/*.hlo.txt`,
+//!   built once by `make artifacts`) are loaded through PJRT and invoked
+//!   from the Rust request path — batched Bloom probing in `multi_get`
+//!   and XLA-scored migration decisions in the HHZS policy.
+//! * Layer 3: the full coordinator — load 80 MiB of KV objects over the
+//!   simulated hybrid zoned devices, run a skewed YCSB-B-style phase, then
+//!   serve batched point reads.
+//!
+//! The run asserts bit-identical results between the XLA and native read
+//! paths and reports throughput/latency — the numbers recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `make artifacts && cargo run --release --example end_to_end`
+
+use std::rc::Rc;
+
+use hhzs::coordinator::Engine;
+use hhzs::exp::common::Profile;
+use hhzs::policy::HhzsPolicy;
+use hhzs::runtime::XlaKernels;
+use hhzs::sim::fmt_ns;
+use hhzs::ycsb::{Kind, Spec, YcsbSource};
+
+fn main() -> anyhow::Result<()> {
+    // ---- Layer 1/2: load the AOT artifacts -----------------------------
+    if !XlaKernels::artifacts_present("artifacts") {
+        anyhow::bail!("artifacts/ missing — run `make artifacts` first");
+    }
+    let kernels = Rc::new(XlaKernels::load("artifacts")?);
+    println!("[L1/L2] PJRT platform: {} — bloom_probe + priority kernels loaded", kernels.platform());
+
+    // ---- Layer 3: build the coordinator with XLA attached ---------------
+    let cfg = Profile::Quick.config();
+    let policy = HhzsPolicy::new(cfg.lsm.num_levels).with_scorer(kernels.clone());
+    let mut db = Engine::new(cfg.clone(), Box::new(policy));
+    db.attach_xla(kernels.clone());
+
+    // ---- load phase ------------------------------------------------------
+    let t0 = std::time::Instant::now();
+    let spec = Spec::from_config(&cfg, Kind::Load);
+    let mut src = YcsbSource::new(spec, cfg.workload.clients);
+    db.run(&mut src, cfg.workload.clients, None, false);
+    let load = std::mem::take(&mut db.metrics);
+    println!(
+        "[load ] {} objects at {:.0} ops/s (virtual), write p99 {}",
+        load.writes_done,
+        load.ops_per_sec(),
+        fmt_ns(load.write_lat.quantile(0.99)),
+    );
+
+    // ---- skewed read/write phase (YCSB B: 95% reads) --------------------
+    let mut spec = Spec::from_config(&cfg, Kind::B);
+    spec.alpha = 0.99;
+    let mut src = YcsbSource::new(spec, cfg.workload.clients);
+    db.run(&mut src, cfg.workload.clients, None, false);
+    let phase = std::mem::take(&mut db.metrics);
+    println!(
+        "[ycsb-B] {:.0} ops/s | read p50 {} p99 {} | HDD read share {:.1}% | {} migrations ({} XLA-scored scans)",
+        phase.ops_per_sec(),
+        fmt_ns(phase.read_lat.quantile(0.5)),
+        fmt_ns(phase.read_lat.quantile(0.99)),
+        phase.hdd_read_fraction() * 100.0,
+        phase.migrations_cap + phase.migrations_pop,
+        kernels.priority_calls.get(),
+    );
+
+    // ---- batched reads through the XLA bloom kernel ----------------------
+    let batch: Vec<Vec<u8>> = (0..512u64)
+        .map(|i| hhzs::ycsb::key_for(i * 97 % cfg.workload.load_objects, 24))
+        .collect();
+    let via_xla = db.multi_get(&batch);
+    let bloom_calls = kernels.bloom_calls.get();
+    // Parity check: the same keys through the native per-key path.
+    db.xla = None;
+    let native: Vec<Option<Vec<u8>>> = batch.iter().map(|k| db.get(k)).collect();
+    anyhow::ensure!(via_xla == native, "XLA and native read paths must agree");
+    let found = via_xla.iter().filter(|v| v.is_some()).count();
+    println!(
+        "[multi_get] 512 keys, {found} found | {bloom_calls} PJRT bloom dispatches | parity with native path OK"
+    );
+
+    println!(
+        "[e2e] all layers composed: JAX/Pallas -> HLO text -> PJRT -> rust hot path ({:.1}s wall)",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

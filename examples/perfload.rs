@@ -1,0 +1,21 @@
+//! Perf-pass driver: a fresh heavy load (the wall-clock-dominant phase)
+//! for `perf record` profiling. See EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo run --release --example perfload -- [quick|default|full]`
+use hhzs::exp::common::*;
+
+fn main() {
+    let p = std::env::args().nth(1).unwrap_or_else(|| "default".into());
+    let cfg = Profile::from_str(&p).expect("quick|default|full").config();
+    let t0 = std::time::Instant::now();
+    let (_, m) = load_fresh(&cfg, "HHZS", None, false);
+    println!(
+        "load {} objs: {:.2}s wall, {:.0} virt ops/s, {} flushes {} compactions, comp_rw={}MB",
+        m.writes_done,
+        t0.elapsed().as_secs_f64(),
+        m.ops_per_sec(),
+        m.flushes,
+        m.compactions,
+        (m.compaction_read_bytes + m.compaction_write_bytes) / 1_000_000
+    );
+}

@@ -1,0 +1,71 @@
+//! Quickstart: the HHZS public API in five minutes.
+//!
+//! Builds a hybrid zoned store (simulated ZNS SSD + HM-SMR HDD under a
+//! virtual clock), mounts the LSM-tree KV engine with the full HHZS policy,
+//! and exercises puts, gets, deletes, overwrites, and scans.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hhzs::config::Config;
+use hhzs::coordinator::Engine;
+use hhzs::policy::HhzsPolicy;
+use hhzs::sim::fmt_ns;
+
+fn main() {
+    // A small paper-proportioned geometry: SSD zones ≈ 1 MiB (1/1024 of
+    // the ZN540), SST ≈ 4 HDD zones, 20 SSD zones, 2 reserved for WAL+cache.
+    let cfg = Config::paper_scaled(1024);
+    let mut db = Engine::new(cfg.clone(), Box::new(HhzsPolicy::new(cfg.lsm.num_levels)));
+
+    // --- puts -----------------------------------------------------------
+    println!("writing 60,000 KV objects (24 B keys / 1,000 B values)...");
+    for i in 0..60_000u64 {
+        let key = hhzs::ycsb::key_for(i, 24);
+        let value = hhzs::ycsb::value_for(i, 1000);
+        db.put(&key, &value);
+    }
+    db.quiesce(); // let background flush/compaction/migration settle
+
+    println!(
+        "  virtual time {} | {} SSTs | {} flushes | {} compactions | {} migrations",
+        fmt_ns(db.now),
+        db.version.total_ssts(),
+        db.metrics.flushes,
+        db.metrics.compactions,
+        db.metrics.migrations_cap + db.metrics.migrations_pop,
+    );
+
+    // --- reads ----------------------------------------------------------
+    let k = hhzs::ycsb::key_for(31_337, 24);
+    let v = db.get(&k).expect("key written above");
+    assert_eq!(v, hhzs::ycsb::value_for(31_337, 1000));
+    println!("  get(key 31337) -> {} bytes OK", v.len());
+
+    // --- overwrite & delete ---------------------------------------------
+    db.put(&k, b"fresh value");
+    assert_eq!(db.get(&k).as_deref(), Some(b"fresh value".as_slice()));
+    db.delete(&k);
+    assert_eq!(db.get(&k), None);
+    println!("  overwrite + delete OK");
+
+    // --- scans ----------------------------------------------------------
+    let n = db.scan(&hhzs::ycsb::key_for(0, 24), 100);
+    println!("  scan(100) -> {n} entries OK");
+
+    // --- where did the data land? ----------------------------------------
+    println!("placement (write-guided, per level):");
+    for (lvl, (ssd, all)) in db.ssd_share_by_level().iter().enumerate() {
+        if *all > 0 {
+            println!(
+                "  L{lvl}: {:>11} bytes, {:>5.1}% on SSD",
+                all,
+                *ssd as f64 / *all as f64 * 100.0
+            );
+        }
+    }
+    println!(
+        "devices: SSD {:.1}% busy, HDD {:.1}% busy (virtual)",
+        db.fs.ssd.timer.utilization(db.now) * 100.0,
+        db.fs.hdd.timer.utilization(db.now) * 100.0,
+    );
+}

@@ -1,0 +1,34 @@
+//! Migration-interference demo (the Exp#6 phenomenon): how the §3.4 rate
+//! limit trades migration speed against foreground read tail latency.
+//!
+//! Run: `cargo run --release --example tail_latency`
+
+use hhzs::config::MIB;
+use hhzs::exp::common::{load_and_run, Profile};
+use hhzs::sim::fmt_ns;
+use hhzs::ycsb::Kind;
+
+fn main() {
+    let base = Profile::Quick.config();
+    println!("P+M under a 50/50 mix at alpha=0.9, sweeping the migration rate limit:");
+    println!(
+        "{:>10} {:>10} {:>10} {:>10} {:>12} {:>12}",
+        "rate", "p99", "p99.9", "p99.99", "migrations", "migr-bytes"
+    );
+    for rate_mib in [1.0f64, 4.0, 16.0, 64.0] {
+        let mut cfg = base.clone();
+        cfg.hhzs.migration_rate_bps = rate_mib * MIB as f64;
+        let (_, m) = load_and_run(&cfg, "P+M", Kind::Mixed { read_pct: 50 }, 0.9);
+        println!(
+            "{:>7.0}MiB {:>10} {:>10} {:>10} {:>12} {:>12}",
+            rate_mib,
+            fmt_ns(m.read_lat.quantile(0.99)),
+            fmt_ns(m.read_lat.quantile(0.999)),
+            fmt_ns(m.read_lat.quantile(0.9999)),
+            m.migrations_cap + m.migrations_pop,
+            m.migration_bytes,
+        );
+    }
+    println!("\nExpected shape (paper Fig 10): p99 roughly flat; p99.9/p99.99 grow");
+    println!("with the migration rate as bulk chunks queue ahead of point reads.");
+}

@@ -1,0 +1,63 @@
+//! Hybrid-tiering showcase: the same YCSB workload under a basic static
+//! placement (B3), SpanDB's AUTO, and HHZS — the Exp#1 story in miniature.
+//!
+//! Run: `cargo run --release --example ycsb_hybrid [-- <A|B|C|D|E|F>]`
+
+use hhzs::exp::common::{load_and_run, Profile};
+use hhzs::report::fmt_pct;
+use hhzs::ycsb::Kind;
+
+fn main() {
+    let arg = std::env::args().nth(1).unwrap_or_else(|| "B".to_string());
+    let kind = match arg.as_str() {
+        "A" => Kind::A,
+        "B" => Kind::B,
+        "C" => Kind::C,
+        "D" => Kind::D,
+        "E" => Kind::E,
+        "F" => Kind::F,
+        other => {
+            eprintln!("unknown workload {other:?}; use A..F");
+            std::process::exit(2);
+        }
+    };
+    let cfg = Profile::Quick.config();
+    println!(
+        "YCSB workload {arg}: {} records loaded, {} ops, alpha={}",
+        cfg.workload.load_objects, cfg.workload.ops, cfg.workload.zipf_alpha
+    );
+    println!(
+        "{:<6} {:>9} {:>10} {:>12} {:>11} {:>10}",
+        "scheme", "OPS", "hdd-reads", "migrations", "cache-hits", "p99-read"
+    );
+    let mut baseline = None;
+    for scheme in ["B3", "AUTO", "HHZS"] {
+        let (engine, m) = load_and_run(&cfg, scheme, kind, cfg.workload.zipf_alpha);
+        let tput = m.ops_per_sec();
+        if scheme == "B3" {
+            baseline = Some(tput);
+        }
+        println!(
+            "{:<6} {:>9.0} {:>10} {:>12} {:>11} {:>10}",
+            scheme,
+            tput,
+            fmt_pct(m.hdd_read_fraction()),
+            m.migrations_cap + m.migrations_pop,
+            m.ssd_cache_hits,
+            hhzs::sim::fmt_ns(m.read_lat.quantile(0.99)),
+        );
+        if scheme == "HHZS" {
+            let gain = (tput / baseline.unwrap() - 1.0) * 100.0;
+            println!("        -> HHZS vs B3: {gain:+.1}% throughput");
+            println!("        -> SSD share by level at end of run:");
+            for (lvl, (ssd, all)) in engine.ssd_share_by_level().iter().enumerate() {
+                if *all > 0 {
+                    println!(
+                        "             L{lvl}: {}",
+                        fmt_pct(*ssd as f64 / *all as f64)
+                    );
+                }
+            }
+        }
+    }
+}

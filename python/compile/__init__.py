@@ -1,0 +1,6 @@
+# Enable f64 throughout the compile path: the priority score encodes
+# (level, read-rate) in one scalar and needs f64 resolution (f32 ulp at
+# 6e12 is ~5e5, which would erase read-rate tie-breaks within a level).
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,76 @@
+"""AOT lowering: JAX (Layer 2) → HLO **text** → ``artifacts/*.hlo.txt``.
+
+HLO text — NOT ``lowered.compile().serialize()`` — is the interchange
+format: jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids which
+the pinned xla_extension 0.5.1 (behind the Rust ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Run once via ``make artifacts``; the Rust binary is self-contained after.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    BLOOM_BATCH,
+    BLOOM_WORDS,
+    PRIORITY_N,
+    bloom_probe_fn,
+    migration_plan_fn,
+    priority_fn,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_all():
+    u32, i32, f32 = jnp.uint32, jnp.int32, jnp.float32
+    n = (PRIORITY_N,)
+    return {
+        "bloom_probe": jax.jit(bloom_probe_fn).lower(
+            spec((BLOOM_BATCH,), u32),
+            spec((BLOOM_WORDS,), u32),
+            spec((), u32),
+            spec((), u32),
+        ),
+        "priority": jax.jit(priority_fn).lower(
+            spec(n, i32), spec(n, f32), spec(n, f32)
+        ),
+        # The composed L2 "model": scores + the §3.4 decision extrema.
+        "model": jax.jit(migration_plan_fn).lower(
+            spec(n, i32), spec(n, f32), spec(n, f32), spec(n, i32), spec(n, i32)
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, lowered in lower_all().items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars  {path}")
+
+
+if __name__ == "__main__":
+    main()

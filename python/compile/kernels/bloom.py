@@ -1,0 +1,57 @@
+"""Layer-1 Pallas kernel: batched Bloom-filter probing.
+
+The compute hot-spot of the LSM read path: for a batch of key
+fingerprints, evaluate k double-hash probes against one SST's filter.
+Tiled for VMEM: one fingerprint block and the (padded) filter words are
+the kernel's resident working set; hashing is element-wise VPU work (no
+MXU), with the K_MAX probe lanes vectorized along the minor dimension.
+
+Lowered with ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU behaviour is estimated in DESIGN.md
+(§Hardware-Adaptation).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import H1_MUL, H2_MUL, K_MAX
+
+
+def _bloom_probe_kernel(fps_ref, words_ref, nbits_ref, k_ref, out_ref):
+    fps = fps_ref[...]  # [B] uint32
+    words = words_ref[...]  # [W] uint32
+    nbits = jnp.maximum(nbits_ref[0], jnp.uint32(1))
+    k = k_ref[0]
+    h1 = fps * H1_MUL
+    h2 = (fps * H2_MUL) | jnp.uint32(1)
+    j = jnp.arange(K_MAX, dtype=jnp.uint32)[None, :]  # [1, K_MAX]
+    pos = (h1[:, None] + j * h2[:, None]) % nbits  # [B, K_MAX]
+    word = jnp.take(words, (pos // 32).astype(jnp.int32), axis=0)
+    bit = (word >> (pos % 32)) & jnp.uint32(1)
+    probe_ok = (bit == 1) | (j >= k)
+    out_ref[...] = jnp.all(probe_ok, axis=1).astype(jnp.int32)
+
+
+def bloom_probe(fps, words, nbits, k):
+    """Batched Bloom probe via the Pallas kernel.
+
+    Args:
+      fps:   uint32[B] fingerprints.
+      words: uint32[W] filter words.
+      nbits: uint32 scalar (live bits).
+      k:     uint32 scalar (probes, <= K_MAX).
+
+    Returns: int32[B] membership flags.
+    """
+    b = fps.shape[0]
+    return pl.pallas_call(
+        _bloom_probe_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(
+        fps.astype(jnp.uint32),
+        words.astype(jnp.uint32),
+        jnp.asarray(nbits, jnp.uint32).reshape((1,)),
+        jnp.asarray(k, jnp.uint32).reshape((1,)),
+    )

@@ -1,0 +1,44 @@
+"""Layer-1 Pallas kernel: fused SST priority scoring (§3.4).
+
+The migration scanner's hot-spot: for every live SST, compute
+``score = -level * 1e12 + reads / age`` in one fused element-wise pass.
+Lower level always outranks higher level; within a level the read rate
+breaks ties. The score is computed and returned in **f64**: at f32, the
+ulp near 6e12 is ~5e5, which would erase read-rate tie-breaks — f64 keeps
+sub-milli-IOPS resolution across all level bands (and matches the Rust
+`priority_score`, which is f64).
+
+Tiling: the three input vectors and the output share one VMEM block; pure
+VPU arithmetic. ``interpret=True`` as required for CPU PJRT execution.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _priority_kernel(levels_ref, reads_ref, ages_ref, out_ref):
+    levels = levels_ref[...].astype(jnp.float64)
+    reads = reads_ref[...].astype(jnp.float64)
+    ages = jnp.maximum(ages_ref[...].astype(jnp.float64), 1e-9)
+    out_ref[...] = -levels * 1e12 + reads / ages
+
+
+def priority_scores(levels, reads, ages):
+    """Fused priority scores via the Pallas kernel.
+
+    Args:
+      levels: int32[N]; reads: float32[N]; ages: float32[N] (seconds).
+
+    Returns: float64[N] scores (higher = migrate-to-SSD first).
+    """
+    n = levels.shape[0]
+    return pl.pallas_call(
+        _priority_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float64),
+        interpret=True,
+    )(
+        levels.astype(jnp.int32),
+        reads.astype(jnp.float32),
+        ages.astype(jnp.float32),
+    )

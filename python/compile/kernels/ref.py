@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness
+signal: pytest asserts kernel == ref across shape/dtype sweeps).
+
+The Bloom hash scheme is shared bit-for-bit with the Rust implementation in
+``rust/src/lsm/bloom.rs``:
+
+    h1 = fp * 0x9E3779B1            (u32 wrap-around)
+    h2 = fp * 0x85EBCA77 | 1
+    pos_j = (h1 + j * h2) mod nbits     for j in 0..k
+
+The priority score matches ``rust/src/policy::priority_score``:
+
+    score = -level * 1e12 + reads / age
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+H1_MUL = np.uint32(0x9E3779B1)
+H2_MUL = np.uint32(0x85EBCA77)
+
+K_MAX = 16  # compile-time probe bound; runtime k <= K_MAX
+
+
+def bloom_probe_ref(fps, words, nbits, k):
+    """Reference batched Bloom probe.
+
+    Args:
+      fps:   uint32[B] key fingerprints (padding entries allowed).
+      words: uint32[W] filter words (bit i lives at words[i//32] >> (i%32)).
+      nbits: scalar uint32, number of live bits (<= W*32).
+      k:     scalar uint32, number of probes (<= K_MAX).
+
+    Returns: int32[B], 1 where the filter may contain the fingerprint.
+    """
+    fps = jnp.asarray(fps, jnp.uint32)
+    words = jnp.asarray(words, jnp.uint32)
+    nbits = jnp.asarray(nbits, jnp.uint32)
+    k = jnp.asarray(k, jnp.uint32)
+    h1 = fps * H1_MUL
+    h2 = (fps * H2_MUL) | jnp.uint32(1)
+    j = jnp.arange(K_MAX, dtype=jnp.uint32)[None, :]  # [1, K_MAX]
+    pos = (h1[:, None] + j * h2[:, None]) % jnp.maximum(nbits, jnp.uint32(1))
+    word = jnp.take(words, (pos // 32).astype(jnp.int32), axis=0)
+    bit = (word >> (pos % 32)) & jnp.uint32(1)
+    probe_ok = (bit == 1) | (j >= k)  # probes beyond k are vacuously true
+    return jnp.all(probe_ok, axis=1).astype(jnp.int32)
+
+
+def priority_scores_ref(levels, reads, ages):
+    """Reference SST priority scores (§3.4).
+
+    Args:
+      levels: int32[N] LSM level of each SST.
+      reads:  float32[N] total reads.
+      ages:   float32[N] age in seconds (>= tiny epsilon).
+
+    Returns: float64[N] scores; higher = higher migration priority.
+    """
+    levels = jnp.asarray(levels, jnp.int32).astype(jnp.float64)
+    reads = jnp.asarray(reads, jnp.float32).astype(jnp.float64)
+    ages = jnp.asarray(ages, jnp.float32).astype(jnp.float64)
+    rate = reads / jnp.maximum(ages, 1e-9)
+    return -levels * 1e12 + rate
+
+
+def migration_plan_ref(levels, reads, ages, on_ssd, valid):
+    """Reference L2 migration plan: scores + masked arg-extrema.
+
+    Returns (scores f32[N], hdd_best i32, ssd_worst i32); the index values
+    are -1 when the respective set is empty.
+    """
+    scores = priority_scores_ref(levels, reads, ages)
+    valid = jnp.asarray(valid, jnp.int32) != 0
+    on_ssd = jnp.asarray(on_ssd, jnp.int32) != 0
+    neg = jnp.float64(-jnp.inf)
+    pos = jnp.float64(jnp.inf)
+    hdd_mask = valid & ~on_ssd
+    ssd_mask = valid & on_ssd
+    hdd_scores = jnp.where(hdd_mask, scores, neg)
+    ssd_scores = jnp.where(ssd_mask, scores, pos)
+    hdd_best = jnp.where(jnp.any(hdd_mask), jnp.argmax(hdd_scores), -1)
+    ssd_worst = jnp.where(jnp.any(ssd_mask), jnp.argmin(ssd_scores), -1)
+    return scores, hdd_best.astype(jnp.int32), ssd_worst.astype(jnp.int32)

@@ -1,0 +1,52 @@
+"""Layer-2 JAX functions: the AOT entry points the Rust coordinator
+executes through PJRT. Each wraps the Layer-1 Pallas kernels and fixes the
+shapes the Rust runtime pads to (rust/src/runtime/mod.rs must agree).
+
+Entry points
+------------
+* ``bloom_probe_fn``   — [BLOOM_BATCH] fingerprints × one padded filter.
+* ``priority_fn``      — [PRIORITY_N] SST descriptors → scores.
+* ``migration_plan_fn``— scores + masked arg-extrema: the full §3.4
+  migration decision (best HDD candidate, worst SSD resident) in one call.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.bloom import bloom_probe
+from .kernels.priority import priority_scores
+
+# Fixed AOT shapes — keep in sync with rust/src/runtime/mod.rs.
+BLOOM_BATCH = 128
+BLOOM_WORDS = 8192
+PRIORITY_N = 1024
+
+
+def bloom_probe_fn(fps, words, nbits, k):
+    """uint32[BLOOM_BATCH], uint32[BLOOM_WORDS], u32, u32 -> (i32[BLOOM_BATCH],)"""
+    return (bloom_probe(fps, words, nbits, k),)
+
+
+def priority_fn(levels, reads, ages):
+    """i32[PRIORITY_N], f32[PRIORITY_N], f32[PRIORITY_N] -> (f64[PRIORITY_N],)"""
+    return (priority_scores(levels, reads, ages),)
+
+
+def migration_plan_fn(levels, reads, ages, on_ssd, valid):
+    """Full migration decision (§3.4) on top of the L1 score kernel.
+
+    Args (all [PRIORITY_N]):
+      levels i32, reads f32, ages f32, on_ssd i32 (1 = SSD), valid i32.
+
+    Returns (scores f32[N], hdd_best i32, ssd_worst i32); indices are -1
+    when the set is empty.
+    """
+    scores = priority_scores(levels, reads, ages)
+    validb = valid != 0
+    ssdb = on_ssd != 0
+    hdd_mask = validb & ~ssdb
+    ssd_mask = validb & ssdb
+    hdd_scores = jnp.where(hdd_mask, scores, jnp.float64(-jnp.inf))
+    ssd_scores = jnp.where(ssd_mask, scores, jnp.float64(jnp.inf))
+    hdd_best = jnp.where(jnp.any(hdd_mask), jnp.argmax(hdd_scores), -1)
+    ssd_worst = jnp.where(jnp.any(ssd_mask), jnp.argmin(ssd_scores), -1)
+    return scores, hdd_best.astype(jnp.int32), ssd_worst.astype(jnp.int32)

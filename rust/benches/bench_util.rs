@@ -1,0 +1,48 @@
+//! Minimal bench harness shared by the `cargo bench` targets (criterion is
+//! not available in this offline environment). Each experiment bench runs
+//! the corresponding paper table/figure at the Quick profile (or Default
+//! with `HHZS_BENCH_FULL=1`) and reports wall time; component benches do
+//! classic iterate-and-time micro-measurement with warmup.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+pub fn profile() -> hhzs::exp::Profile {
+    if std::env::var("HHZS_BENCH_FULL").is_ok() {
+        hhzs::exp::Profile::Default
+    } else {
+        hhzs::exp::Profile::Quick
+    }
+}
+
+pub fn opts() -> hhzs::exp::ExpOpts {
+    hhzs::exp::ExpOpts { cfg: profile().config(), csv_dir: Some("results".into()) }
+}
+
+/// Run one experiment driver and report wall time.
+pub fn run_experiment(name: &str) {
+    let o = opts();
+    println!("\n##### bench: {name} (profile {:?}) #####", profile());
+    let t0 = Instant::now();
+    hhzs::exp::run(name, &o).expect("experiment runs");
+    println!("##### {name}: {:.2}s wall #####", t0.elapsed().as_secs_f64());
+}
+
+/// Classic micro-bench: warm up, then time `iters` calls of `f`, reporting
+/// ns/iter and throughput.
+pub fn bench_fn<F: FnMut()>(name: &str, iters: u64, mut f: F) {
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let dt = t0.elapsed();
+    let ns = dt.as_nanos() as f64 / iters as f64;
+    println!(
+        "{name:<44} {ns:>12.1} ns/iter {:>14.0} iters/s",
+        1e9 / ns.max(1e-9)
+    );
+}

@@ -1,0 +1,111 @@
+//! Component micro-benchmarks: the building blocks on the request path and
+//! inside the DES. These are the §Perf profiling probes recorded in
+//! EXPERIMENTS.md — run before/after every hot-path change.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::bench_fn;
+use hhzs::config::Config;
+use hhzs::coordinator::Engine;
+use hhzs::lsm::sst::{build_sst, search_block};
+use hhzs::lsm::{Bloom, Entry, MemTable};
+use hhzs::policy::HhzsPolicy;
+use hhzs::sim::rng::{fingerprint32, Rng};
+use hhzs::sim::zipf::{KeyChooser, Zipf};
+use hhzs::ycsb::{key_for, value_for};
+
+fn main() {
+    println!("== component benchmarks ==");
+
+    // Bloom filter: build + probe.
+    let fps: Vec<u32> = (0..4000u64).map(|i| fingerprint32(&i.to_be_bytes())).collect();
+    bench_fn("bloom::build(4000 keys, 10 bpk)", 200, || {
+        std::hint::black_box(Bloom::build(&fps, 10));
+    });
+    let bloom = Bloom::build(&fps, 10);
+    let mut i = 0u64;
+    bench_fn("bloom::may_contain", 2_000_000, || {
+        i = i.wrapping_add(0x9E3779B97F4A7C15);
+        std::hint::black_box(bloom.may_contain(i as u32));
+    });
+
+    // Zipf sampling.
+    let mut z = Zipf::new(1_000_000, 0.9);
+    let mut rng = Rng::new(7);
+    bench_fn("zipf::next(n=1M, a=0.9)", 2_000_000, || {
+        std::hint::black_box(z.next(&mut rng));
+    });
+
+    // MemTable insert/get.
+    let mut mem = MemTable::new();
+    let mut seq = 0u64;
+    bench_fn("memtable::insert(1KiB value)", 200_000, || {
+        seq += 1;
+        mem.insert(key_for(seq % 50_000, 24), seq, Some(value_for(seq, 1000)));
+    });
+    bench_fn("memtable::get", 500_000, || {
+        seq += 1;
+        std::hint::black_box(mem.get(&key_for(seq % 50_000, 24)));
+    });
+
+    // SST block search.
+    let entries: Vec<Entry> = (0..4000u64)
+        .map(|i| Entry { key: key_for(i, 24), seq: i, value: Some(value_for(i, 1000)) })
+        .collect();
+    let mut sorted = entries.clone();
+    sorted.sort_by(|a, b| a.key.cmp(&b.key));
+    let (meta, data) = build_sst(&sorted, 1, 1, 4096, 10, 0);
+    bench_fn("sst::find_block + search_block", 500_000, || {
+        seq += 1;
+        let key = key_for(seq % 4000, 24);
+        if let Some(bi) = meta.find_block(&key) {
+            let h = &meta.blocks[bi];
+            let block = &data[h.offset as usize..(h.offset + h.len as u64) as usize];
+            std::hint::black_box(search_block(block, &key));
+        }
+    });
+
+    // End-to-end engine paths (virtual-time ops; wall cost is what the DES
+    // spends per op).
+    let cfg = Config::tiny();
+    let mut e = Engine::new(cfg.clone(), Box::new(HhzsPolicy::new(cfg.lsm.num_levels)));
+    for i in 0..60_000u64 {
+        e.put(&key_for(i, 24), &value_for(i, 1000));
+    }
+    e.quiesce();
+    let mut k = 0u64;
+    bench_fn("engine::put (incl. DES)", 50_000, || {
+        k += 1;
+        e.put(&key_for(k % 60_000, 24), &value_for(k, 1000));
+    });
+    e.quiesce();
+    bench_fn("engine::get (incl. DES)", 50_000, || {
+        k += 1;
+        std::hint::black_box(e.get(&key_for((k * 7) % 60_000, 24)));
+    });
+    bench_fn("engine::scan(10)", 5_000, || {
+        k += 1;
+        std::hint::black_box(e.scan(&key_for(k % 60_000, 24), 10));
+    });
+
+    // XLA kernels, when the artifacts exist.
+    if hhzs::runtime::XlaKernels::artifacts_present("artifacts") {
+        let kx = hhzs::runtime::XlaKernels::load("artifacts").unwrap();
+        let words = bloom.words().to_vec();
+        let probe_fps: Vec<u32> = (0..128u32).collect();
+        bench_fn("xla::bloom_probe(128 fps) [PJRT dispatch]", 300, || {
+            std::hint::black_box(
+                kx.bloom_probe(&probe_fps, &words, bloom.nbits(), bloom.k()).unwrap(),
+            );
+        });
+        let levels = vec![3i32; 256];
+        let reads = vec![10f32; 256];
+        let ages = vec![1f32; 256];
+        bench_fn("xla::priority_scores(256) [PJRT dispatch]", 300, || {
+            std::hint::black_box(kx.priority_scores(&levels, &reads, &ages).unwrap());
+        });
+    } else {
+        println!("(skipping XLA component benches: run `make artifacts`)");
+    }
+}

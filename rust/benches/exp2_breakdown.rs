@@ -1,0 +1,8 @@
+//! `cargo bench` target regenerating the paper's exp2 artefact.
+//! Full-size run: `HHZS_BENCH_FULL=1 cargo bench --bench exp2_breakdown`.
+#[path = "bench_util.rs"]
+mod bench_util;
+
+fn main() {
+    bench_util::run_experiment("exp2");
+}

@@ -1,0 +1,403 @@
+//! Configuration system.
+//!
+//! All geometry is expressed relative to the paper's testbed (a 4-TiB WD
+//! ZN540 ZNS SSD with 1,077 MiB zones and a 14-TiB Seagate ST14000NM0007
+//! HM-SMR HDD with 256 MiB zones) and scaled down by a configurable
+//! denominator so experiments run in RAM under the discrete-event clock.
+//! `Config::paper_scaled(d)` derives every size from the paper constants;
+//! `Config::default()` uses `d = 256` (the CI-friendly profile).
+//!
+//! Configs round-trip through a TOML subset (`[section]`, `key = value`)
+//! parsed by the in-tree [`minitoml`] module — no external crates are
+//! available in this offline environment.
+
+pub mod minitoml;
+
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * 1024;
+pub const GIB: u64 = 1024 * 1024 * 1024;
+
+/// Paper constants (§2.3, §4.1) — unscaled.
+pub mod paper {
+    use super::MIB;
+    pub const SSD_ZONE_CAP: u64 = (1077.0 * MIB as f64) as u64;
+    pub const HDD_ZONE_CAP: u64 = 256 * MIB;
+    /// §3.2: 1,011.2 MiB — 93.9% of an SSD zone, exactly 4 HDD zones.
+    pub const SST_SIZE: u64 = (1011.2 * MIB as f64) as u64;
+    pub const MEMTABLE_SIZE: u64 = 512 * MIB;
+    pub const L0_TARGET: u64 = 1024 * MIB;
+    pub const BLOCK_CACHE: u64 = 8 * MIB;
+
+    pub const SSD_SEQ_READ_MIBS: f64 = 1039.6;
+    pub const SSD_SEQ_WRITE_MIBS: f64 = 1002.8;
+    pub const SSD_RAND_READ_IOPS: f64 = 16928.3;
+    pub const HDD_SEQ_READ_MIBS: f64 = 210.0;
+    pub const HDD_SEQ_WRITE_MIBS: f64 = 210.0;
+    pub const HDD_RAND_READ_IOPS: f64 = 115.0;
+    pub const SSD_PRICE_GIB: f64 = 0.28;
+    pub const HDD_PRICE_GIB: f64 = 0.021;
+}
+
+/// Timing profile of one zoned device (drives the DES service model).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceProfile {
+    pub name: String,
+    /// Sequential read bandwidth, bytes/second.
+    pub seq_read_bps: f64,
+    /// Sequential write bandwidth, bytes/second.
+    pub seq_write_bps: f64,
+    /// Random 4-KiB read rate, IO/second.
+    pub rand_read_iops: f64,
+    /// Fixed per-request overhead in nanoseconds (command setup; seek is
+    /// folded into `rand_read_iops` for HDDs).
+    pub per_req_overhead_ns: u64,
+}
+
+impl DeviceProfile {
+    pub fn zn540_ssd() -> Self {
+        DeviceProfile {
+            name: "ZN540-ZNS-SSD".into(),
+            seq_read_bps: paper::SSD_SEQ_READ_MIBS * MIB as f64,
+            seq_write_bps: paper::SSD_SEQ_WRITE_MIBS * MIB as f64,
+            rand_read_iops: paper::SSD_RAND_READ_IOPS,
+            per_req_overhead_ns: 10_000, // ~10 µs NVMe command overhead
+        }
+    }
+    pub fn st14000_smr_hdd() -> Self {
+        DeviceProfile {
+            name: "ST14000-HM-SMR-HDD".into(),
+            seq_read_bps: paper::HDD_SEQ_READ_MIBS * MIB as f64,
+            seq_write_bps: paper::HDD_SEQ_WRITE_MIBS * MIB as f64,
+            rand_read_iops: paper::HDD_RAND_READ_IOPS,
+            per_req_overhead_ns: 100_000, // ~100 µs SATA/queueing overhead
+        }
+    }
+}
+
+/// Zone/file geometry (scaled from the paper's §3.2/§4.1 values).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Geometry {
+    /// Scale denominator relative to the paper testbed (1 = full size).
+    pub scale_denom: u64,
+    pub ssd_zone_cap: u64,
+    pub hdd_zone_cap: u64,
+    /// Target SST size: fits one SSD zone (93.9%) or exactly 4 HDD zones.
+    pub sst_size: u64,
+    /// Number of SSD zones made available (paper default: 20 → 21.0 GiB).
+    pub ssd_zones: u32,
+    /// HDD zones (effectively unbounded in the paper; sized to fit the
+    /// workload here).
+    pub hdd_zones: u32,
+    /// Zones reserved for WAL + SSD cache (§3.2: max WAL size / zone cap = 2).
+    pub wal_cache_zones: u32,
+}
+
+/// LSM-tree store parameters (§4.1 setup).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LsmConfig {
+    pub memtable_size: u64,
+    /// Keep at most this many MemTables in memory (writes stall beyond).
+    pub max_memtables: usize,
+    /// Flush when at least this many MemTables exist.
+    pub min_flush_memtables: usize,
+    pub block_size: u64,
+    pub block_cache_bytes: u64,
+    pub bloom_bits_per_key: u32,
+    /// Target size of L0 and L1; higher levels grow by `level_multiplier`.
+    pub l0_target: u64,
+    pub level_multiplier: u64,
+    pub num_levels: usize,
+    /// Background flush+compaction thread slots (§4.1: 12).
+    pub bg_threads: usize,
+    /// Hard write stall when L0 reaches this many files.
+    pub l0_stop_files: usize,
+    /// L0→L1 compaction trigger (number of L0 files).
+    pub l0_compaction_trigger: usize,
+}
+
+/// HHZS-specific knobs (§3.4, §3.5).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HhzsConfig {
+    /// Migration rate limit in bytes/second (§3.4 default 4 MiB/s).
+    pub migration_rate_bps: f64,
+    /// Popularity migration triggers when the aggregate HDD read rate
+    /// exceeds this fraction of the HDD's max random-read IOPS (§3.4: 0.5).
+    pub hdd_rate_threshold: f64,
+    /// Virtual interval between migration scans, nanoseconds.
+    pub scan_interval_ns: u64,
+    /// Background I/O chunk size (bytes) — the interleaving granularity of
+    /// flush/compaction/migration against foreground requests. Real
+    /// devices interleave small (WAL) writes with bulk traffic at command
+    /// granularity; 128 KiB keeps queue-wait distortion of point ops low
+    /// while still charging full bulk bandwidth.
+    pub chunk_bytes: u64,
+    /// Virtual interval between level-size samples (Fig 2(a)/(d)); the
+    /// paper samples every minute over an 8-hour load — scaled alike.
+    pub sample_interval_ns: u64,
+}
+
+/// Workload defaults (YCSB §4.1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadConfig {
+    pub key_size: usize,
+    pub value_size: usize,
+    /// Number of KV objects loaded before each experiment.
+    pub load_objects: u64,
+    /// Operations per measured workload.
+    pub ops: u64,
+    /// Closed-loop client threads.
+    pub clients: usize,
+    pub zipf_alpha: f64,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    pub geometry: Geometry,
+    pub ssd: DeviceProfile,
+    pub hdd: DeviceProfile,
+    pub lsm: LsmConfig,
+    pub hhzs: HhzsConfig,
+    pub workload: WorkloadConfig,
+    /// Use the AOT-compiled XLA kernels on the hot path when artifacts exist.
+    pub use_xla_kernels: bool,
+}
+
+impl Config {
+    /// Derive a configuration from the paper constants divided by `d`.
+    ///
+    /// Every ratio the analysis depends on is preserved: SST ≈ 0.94 SSD
+    /// zones = 4 HDD zones; SSD = 20 zones; WAL+cache = 2 zones; L0/L1
+    /// target = 1 paper-GiB; level multiplier 10×.
+    pub fn paper_scaled(d: u64) -> Self {
+        assert!(d >= 1);
+        let ssd_zone_cap = paper::SSD_ZONE_CAP / d;
+        let hdd_zone_cap = paper::HDD_ZONE_CAP / d;
+        let sst_size = hdd_zone_cap * 4 - hdd_zone_cap / 20; // 3.95 HDD zones
+        let memtable = paper::MEMTABLE_SIZE / d;
+        let l0_target = paper::L0_TARGET / d;
+        // 200 GiB of 1-KiB objects scaled.
+        let load_objects = (200 * GIB / d) / 1024;
+        Config {
+            geometry: Geometry {
+                scale_denom: d,
+                ssd_zone_cap,
+                hdd_zone_cap,
+                sst_size,
+                ssd_zones: 20,
+                hdd_zones: 8192,
+                wal_cache_zones: 2,
+            },
+            ssd: DeviceProfile::zn540_ssd(),
+            hdd: DeviceProfile::st14000_smr_hdd(),
+            lsm: LsmConfig {
+                memtable_size: memtable,
+                max_memtables: 4,
+                min_flush_memtables: 2,
+                block_size: 4096,
+                block_cache_bytes: (paper::BLOCK_CACHE / d).max(64 * KIB),
+                bloom_bits_per_key: 10,
+                l0_target,
+                level_multiplier: 10,
+                num_levels: 7,
+                bg_threads: 12,
+                l0_stop_files: 64,
+                l0_compaction_trigger: 4,
+            },
+            hhzs: HhzsConfig {
+                migration_rate_bps: 4.0 * MIB as f64,
+                hdd_rate_threshold: 0.5,
+                scan_interval_ns: 100_000_000, // 100 ms virtual
+                chunk_bytes: 128 * KIB,
+                // One paper-minute, compressed by the scale factor.
+                sample_interval_ns: (60_000_000_000 / d).max(10_000_000),
+            },
+            workload: WorkloadConfig {
+                key_size: 24,
+                value_size: 1000,
+                load_objects,
+                ops: 1_000_000,
+                clients: 8,
+                zipf_alpha: 0.9,
+                seed: 42,
+            },
+            use_xla_kernels: false,
+        }
+    }
+
+    /// CI-friendly default (scale 1/256; ~800 MiB load, quick workloads).
+    pub fn small() -> Self {
+        let mut c = Config::paper_scaled(256);
+        c.workload.ops = 200_000;
+        c
+    }
+
+    /// Tiny profile for unit tests / bench inner loops.
+    pub fn tiny() -> Self {
+        let mut c = Config::paper_scaled(2048);
+        c.workload.load_objects = 60_000;
+        c.workload.ops = 20_000;
+        c
+    }
+
+    /// Total bytes of SSD capacity given to the experiment.
+    pub fn ssd_capacity(&self) -> u64 {
+        self.geometry.ssd_zone_cap * self.geometry.ssd_zones as u64
+    }
+
+    /// HDD zones an SST occupies (§3.2: 4 at paper geometry).
+    pub fn hdd_zones_per_sst(&self) -> u32 {
+        self.geometry.sst_size.div_ceil(self.geometry.hdd_zone_cap) as u32
+    }
+
+    /// Serialize to the TOML subset understood by [`minitoml`].
+    pub fn to_toml(&self) -> String {
+        let g = &self.geometry;
+        let l = &self.lsm;
+        let h = &self.hhzs;
+        let w = &self.workload;
+        format!(
+            "[geometry]\n\
+             scale_denom = {}\nssd_zone_cap = {}\nhdd_zone_cap = {}\n\
+             sst_size = {}\nssd_zones = {}\nhdd_zones = {}\nwal_cache_zones = {}\n\n\
+             [lsm]\n\
+             memtable_size = {}\nmax_memtables = {}\nmin_flush_memtables = {}\n\
+             block_size = {}\nblock_cache_bytes = {}\nbloom_bits_per_key = {}\n\
+             l0_target = {}\nlevel_multiplier = {}\nnum_levels = {}\n\
+             bg_threads = {}\nl0_stop_files = {}\nl0_compaction_trigger = {}\n\n\
+             [hhzs]\n\
+             migration_rate_bps = {}\nhdd_rate_threshold = {}\n\
+             scan_interval_ns = {}\nchunk_bytes = {}\nsample_interval_ns = {}\n\n\
+             [workload]\n\
+             key_size = {}\nvalue_size = {}\nload_objects = {}\nops = {}\n\
+             clients = {}\nzipf_alpha = {}\nseed = {}\n\n\
+             [runtime]\nuse_xla_kernels = {}\n",
+            g.scale_denom, g.ssd_zone_cap, g.hdd_zone_cap, g.sst_size, g.ssd_zones,
+            g.hdd_zones, g.wal_cache_zones,
+            l.memtable_size, l.max_memtables, l.min_flush_memtables, l.block_size,
+            l.block_cache_bytes, l.bloom_bits_per_key, l.l0_target, l.level_multiplier,
+            l.num_levels, l.bg_threads, l.l0_stop_files, l.l0_compaction_trigger,
+            h.migration_rate_bps, h.hdd_rate_threshold, h.scan_interval_ns, h.chunk_bytes,
+            h.sample_interval_ns,
+            w.key_size, w.value_size, w.load_objects, w.ops, w.clients, w.zipf_alpha, w.seed,
+            self.use_xla_kernels,
+        )
+    }
+
+    /// Parse a config from TOML text; unspecified keys keep the defaults of
+    /// `Config::small()`.
+    pub fn from_toml_str(s: &str) -> anyhow::Result<Self> {
+        let doc = minitoml::parse(s)?;
+        let mut c = Config::small();
+        {
+            let g = &mut c.geometry;
+            doc.get_u64("geometry", "scale_denom", &mut g.scale_denom);
+            doc.get_u64("geometry", "ssd_zone_cap", &mut g.ssd_zone_cap);
+            doc.get_u64("geometry", "hdd_zone_cap", &mut g.hdd_zone_cap);
+            doc.get_u64("geometry", "sst_size", &mut g.sst_size);
+            doc.get_u32("geometry", "ssd_zones", &mut g.ssd_zones);
+            doc.get_u32("geometry", "hdd_zones", &mut g.hdd_zones);
+            doc.get_u32("geometry", "wal_cache_zones", &mut g.wal_cache_zones);
+        }
+        {
+            let l = &mut c.lsm;
+            doc.get_u64("lsm", "memtable_size", &mut l.memtable_size);
+            doc.get_usize("lsm", "max_memtables", &mut l.max_memtables);
+            doc.get_usize("lsm", "min_flush_memtables", &mut l.min_flush_memtables);
+            doc.get_u64("lsm", "block_size", &mut l.block_size);
+            doc.get_u64("lsm", "block_cache_bytes", &mut l.block_cache_bytes);
+            doc.get_u32("lsm", "bloom_bits_per_key", &mut l.bloom_bits_per_key);
+            doc.get_u64("lsm", "l0_target", &mut l.l0_target);
+            doc.get_u64("lsm", "level_multiplier", &mut l.level_multiplier);
+            doc.get_usize("lsm", "num_levels", &mut l.num_levels);
+            doc.get_usize("lsm", "bg_threads", &mut l.bg_threads);
+            doc.get_usize("lsm", "l0_stop_files", &mut l.l0_stop_files);
+            doc.get_usize("lsm", "l0_compaction_trigger", &mut l.l0_compaction_trigger);
+        }
+        {
+            let h = &mut c.hhzs;
+            doc.get_f64("hhzs", "migration_rate_bps", &mut h.migration_rate_bps);
+            doc.get_f64("hhzs", "hdd_rate_threshold", &mut h.hdd_rate_threshold);
+            doc.get_u64("hhzs", "scan_interval_ns", &mut h.scan_interval_ns);
+            doc.get_u64("hhzs", "chunk_bytes", &mut h.chunk_bytes);
+            doc.get_u64("hhzs", "sample_interval_ns", &mut h.sample_interval_ns);
+        }
+        {
+            let w = &mut c.workload;
+            doc.get_usize("workload", "key_size", &mut w.key_size);
+            doc.get_usize("workload", "value_size", &mut w.value_size);
+            doc.get_u64("workload", "load_objects", &mut w.load_objects);
+            doc.get_u64("workload", "ops", &mut w.ops);
+            doc.get_usize("workload", "clients", &mut w.clients);
+            doc.get_f64("workload", "zipf_alpha", &mut w.zipf_alpha);
+            doc.get_u64("workload", "seed", &mut w.seed);
+        }
+        doc.get_bool("runtime", "use_xla_kernels", &mut c.use_xla_kernels);
+        Ok(c)
+    }
+
+    pub fn from_toml(path: &str) -> anyhow::Result<Self> {
+        let s = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {path}: {e}"))?;
+        Self::from_toml_str(&s)
+    }
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config::small()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_ratios_preserved() {
+        for d in [1, 64, 256, 1024] {
+            let c = Config::paper_scaled(d);
+            // SST fits in one SSD zone at ~94% utilization.
+            assert!(c.geometry.sst_size <= c.geometry.ssd_zone_cap);
+            let util = c.geometry.sst_size as f64 / c.geometry.ssd_zone_cap as f64;
+            assert!(util > 0.90 && util < 0.97, "util={util} at d={d}");
+            // SST spans exactly 4 HDD zones.
+            assert_eq!(c.hdd_zones_per_sst(), 4);
+            // 20 SSD zones, 2 reserved for WAL+cache.
+            assert_eq!(c.geometry.ssd_zones, 20);
+            assert_eq!(c.geometry.wal_cache_zones, 2);
+        }
+    }
+
+    #[test]
+    fn full_scale_matches_paper_constants() {
+        let c = Config::paper_scaled(1);
+        assert_eq!(c.geometry.ssd_zone_cap, (1077.0 * MIB as f64) as u64);
+        assert_eq!(c.geometry.hdd_zone_cap, 256 * MIB);
+        assert_eq!(c.lsm.memtable_size, 512 * MIB);
+        // 200 GiB of 1 KiB objects.
+        assert_eq!(c.workload.load_objects, 200 * 1024 * 1024);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let c = Config::small();
+        let s = c.to_toml();
+        let c2 = Config::from_toml_str(&s).unwrap();
+        assert_eq!(c2, c);
+    }
+
+    #[test]
+    fn toml_partial_override() {
+        let c = Config::from_toml_str("[workload]\nops = 777\n").unwrap();
+        assert_eq!(c.workload.ops, 777);
+        assert_eq!(c.geometry.ssd_zones, 20); // default kept
+    }
+
+    #[test]
+    fn dataset_much_larger_than_ssd() {
+        let c = Config::paper_scaled(256);
+        let dataset = c.workload.load_objects * 1024;
+        assert!(dataset > 5 * c.ssd_capacity());
+    }
+}

@@ -1,0 +1,177 @@
+//! A minimal TOML-subset parser: `[section]` headers, `key = value` lines,
+//! `#` comments. Values: integers, floats, booleans, quoted strings.
+//! Sufficient for the config files in `configs/` without external crates.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+#[derive(Default, Debug)]
+pub struct Doc {
+    /// (section, key) → value
+    map: BTreeMap<(String, String), Value>,
+}
+
+impl Doc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.map.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_u64(&self, s: &str, k: &str, out: &mut u64) {
+        if let Some(Value::Int(v)) = self.get(s, k) {
+            *out = *v as u64;
+        }
+    }
+    pub fn get_u32(&self, s: &str, k: &str, out: &mut u32) {
+        if let Some(Value::Int(v)) = self.get(s, k) {
+            *out = *v as u32;
+        }
+    }
+    pub fn get_usize(&self, s: &str, k: &str, out: &mut usize) {
+        if let Some(Value::Int(v)) = self.get(s, k) {
+            *out = *v as usize;
+        }
+    }
+    pub fn get_f64(&self, s: &str, k: &str, out: &mut f64) {
+        match self.get(s, k) {
+            Some(Value::Float(v)) => *out = *v,
+            Some(Value::Int(v)) => *out = *v as f64,
+            _ => {}
+        }
+    }
+    pub fn get_bool(&self, s: &str, k: &str, out: &mut bool) {
+        if let Some(Value::Bool(v)) = self.get(s, k) {
+            *out = *v;
+        }
+    }
+    pub fn get_str(&self, s: &str, k: &str, out: &mut String) {
+        if let Some(Value::Str(v)) = self.get(s, k) {
+            *out = v.clone();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+fn parse_value(raw: &str) -> anyhow::Result<Value> {
+    let t = raw.trim();
+    if t == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if t == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if (t.starts_with('"') && t.ends_with('"') && t.len() >= 2)
+        || (t.starts_with('\'') && t.ends_with('\'') && t.len() >= 2)
+    {
+        return Ok(Value::Str(t[1..t.len() - 1].to_string()));
+    }
+    let cleaned = t.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    anyhow::bail!("unparseable value: {raw:?}")
+}
+
+pub fn parse(text: &str) -> anyhow::Result<Doc> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = match line.find('#') {
+            // Only strip comments outside of quotes (good enough for our files).
+            Some(i) if !line[..i].contains('"') && !line[..i].contains('\'') => &line[..i],
+            _ => line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                anyhow::bail!("line {}: malformed section header {line:?}", lineno + 1);
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            anyhow::bail!("line {}: expected key = value, got {line:?}", lineno + 1);
+        };
+        let key = line[..eq].trim().to_string();
+        let val = parse_value(&line[eq + 1..])?;
+        doc.map.insert((section.clone(), key), val);
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            "# top comment\n\
+             [a]\n\
+             x = 5\n\
+             y = 2.5\n\
+             z = true\n\
+             s = \"hello\"\n\
+             [b]\n\
+             x = 1_000_000\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("a", "x"), Some(&Value::Int(5)));
+        assert_eq!(doc.get("a", "y"), Some(&Value::Float(2.5)));
+        assert_eq!(doc.get("a", "z"), Some(&Value::Bool(true)));
+        assert_eq!(doc.get("a", "s"), Some(&Value::Str("hello".into())));
+        assert_eq!(doc.get("b", "x"), Some(&Value::Int(1_000_000)));
+        assert_eq!(doc.get("a", "missing"), None);
+        assert_eq!(doc.get("c", "x"), None);
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let doc = parse("\n# c\n[s]\nk = 1 # trailing\n\n").unwrap();
+        assert_eq!(doc.get("s", "k"), Some(&Value::Int(1)));
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("[s]\nnovalue\n").is_err());
+        assert!(parse("[s]\nk = @@@\n").is_err());
+    }
+
+    #[test]
+    fn typed_getters_apply_only_on_match() {
+        let doc = parse("[s]\ni = 7\nf = 1.5\nb = false\n").unwrap();
+        let mut u = 0u64;
+        doc.get_u64("s", "i", &mut u);
+        assert_eq!(u, 7);
+        let mut f = 0.0f64;
+        doc.get_f64("s", "f", &mut f);
+        assert_eq!(f, 1.5);
+        doc.get_f64("s", "i", &mut f); // int promotes to float
+        assert_eq!(f, 7.0);
+        let mut b = true;
+        doc.get_bool("s", "b", &mut b);
+        assert!(!b);
+        let mut untouched = 99u64;
+        doc.get_u64("s", "missing", &mut untouched);
+        assert_eq!(untouched, 99);
+    }
+}

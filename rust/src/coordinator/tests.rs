@@ -1,0 +1,412 @@
+//! Engine integration tests: correctness of the full KV path over the
+//! hybrid zoned substrate, placement/migration/caching behaviour, stalls,
+//! and the metric plumbing the experiments depend on.
+
+use super::*;
+use crate::policy::{AutoPolicy, BasicPolicy, HhzsPolicy};
+use crate::ycsb::{key_for, value_for};
+
+fn engine_with(policy: Box<dyn Policy>) -> Engine {
+    let mut cfg = Config::tiny();
+    cfg.workload.load_objects = 20_000;
+    Engine::new(cfg, policy)
+}
+
+fn hhzs_engine() -> Engine {
+    engine_with(Box::new(HhzsPolicy::new(Config::tiny().lsm.num_levels)))
+}
+
+#[test]
+fn put_get_roundtrip_memtable() {
+    let mut e = hhzs_engine();
+    e.put(b"alpha", b"one");
+    e.put(b"beta", b"two");
+    assert_eq!(e.get(b"alpha"), Some(b"one".to_vec()));
+    assert_eq!(e.get(b"beta"), Some(b"two".to_vec()));
+    assert_eq!(e.get(b"gamma"), None);
+}
+
+#[test]
+fn overwrite_returns_latest() {
+    let mut e = hhzs_engine();
+    e.put(b"k", b"v1");
+    e.put(b"k", b"v2");
+    assert_eq!(e.get(b"k"), Some(b"v2".to_vec()));
+}
+
+#[test]
+fn delete_hides_key() {
+    let mut e = hhzs_engine();
+    e.put(b"k", b"v");
+    e.delete(b"k");
+    assert_eq!(e.get(b"k"), None);
+}
+
+#[test]
+fn values_survive_flush_and_compaction() {
+    let mut e = hhzs_engine();
+    let n = 3_000u64;
+    for i in 0..n {
+        e.put(&key_for(i, 24), &value_for(i, 1000));
+    }
+    e.quiesce();
+    assert!(e.metrics.flushes > 0, "flushes should have happened");
+    assert!(e.version.total_ssts() > 0);
+    // Spot-check reads across the whole range, including keys that are now
+    // deep in the tree.
+    for i in (0..n).step_by(97) {
+        assert_eq!(
+            e.get(&key_for(i, 24)),
+            Some(value_for(i, 1000)),
+            "lost key {i} after flush/compaction"
+        );
+    }
+}
+
+#[test]
+fn overwrites_survive_compaction() {
+    let mut e = hhzs_engine();
+    for round in 0..3u64 {
+        for i in 0..1_500u64 {
+            let v = format!("round{round}-{i}");
+            e.put(&key_for(i, 24), v.as_bytes());
+        }
+    }
+    e.quiesce();
+    for i in (0..1_500u64).step_by(53) {
+        let v = format!("round2-{i}");
+        assert_eq!(e.get(&key_for(i, 24)), Some(v.into_bytes()), "key {i}");
+    }
+}
+
+#[test]
+fn virtual_time_advances_monotonically() {
+    let mut e = hhzs_engine();
+    let t0 = e.now;
+    for i in 0..500u64 {
+        e.put(&key_for(i, 24), &value_for(i, 1000));
+    }
+    assert!(e.now > t0, "puts must cost virtual time");
+}
+
+#[test]
+fn levels_populate_beyond_l0() {
+    let mut e = hhzs_engine();
+    for i in 0..20_000u64 {
+        e.put(&key_for(i, 24), &value_for(i, 1000));
+    }
+    e.quiesce();
+    let deep: usize = (1..e.version.num_levels()).map(|l| e.version.level(l).len()).sum();
+    assert!(deep > 0, "compaction should push SSTs beyond L0");
+    for lvl in 1..e.version.num_levels() {
+        assert!(e.version.disjoint(lvl), "L{lvl} must be disjoint");
+    }
+}
+
+#[test]
+fn hhzs_utilizes_ssd_and_prioritizes_low_levels() {
+    let mut e = hhzs_engine();
+    for i in 0..20_000u64 {
+        e.put(&key_for(i, 24), &value_for(i, 1000));
+    }
+    e.quiesce();
+    // Write-guided placement should leave the SSD well-utilized after a
+    // load that is ~2× the SSD size (O2's complaint about basics is
+    // under-utilization or displacement).
+    let free = e.fs.ssd_file_zones_free();
+    let total = e.fs.ssd_file_zones_total();
+    assert!(free * 4 <= total, "SSD under-utilized: {free}/{total} zones free");
+    // L0 (flush outputs) go to the SSD whenever a zone is empty.
+    let share = e.ssd_share_by_level();
+    let (ssd0, all0) = share[0];
+    if all0 > 0 {
+        assert!(ssd0 * 2 >= all0, "most of L0 on SSD: {ssd0}/{all0}");
+    }
+    // After a skewed read phase, popularity migration + placement harmony
+    // must not leave hot low-level data stranded: run reads then check
+    // that *some* HDD→SSD or SSD→HDD refinement happened (full Fig 5(b)
+    // behaviour is asserted by the exp1 harness).
+    let mut reads = crate::ycsb::YcsbSource::new(
+        crate::ycsb::Spec {
+            kind: crate::ycsb::Kind::C,
+            records: 20_000,
+            ops: 8_000,
+            alpha: 1.1,
+            key_size: 24,
+            value_size: 1000,
+            seed: 11,
+        },
+        4,
+    );
+    e.run(&mut reads, 4, None, false);
+    e.quiesce();
+    assert!(
+        e.metrics.migrations_cap + e.metrics.migrations_pop > 0
+            || e.fs.ssd_file_zones_free() == 0,
+        "workload-aware migration should engage under skewed reads"
+    );
+}
+
+#[test]
+fn wal_traffic_recorded() {
+    let mut e = hhzs_engine();
+    for i in 0..100u64 {
+        e.put(&key_for(i, 24), &value_for(i, 1000));
+    }
+    let wal_ssd = e
+        .metrics
+        .write_traffic
+        .get(&(WriteCategory::Wal, Dev::Ssd))
+        .map(|c| c.bytes)
+        .unwrap_or(0);
+    assert!(wal_ssd > 100 * 1000, "WAL bytes on SSD: {wal_ssd}");
+}
+
+#[test]
+fn basic_scheme_places_high_levels_on_hdd() {
+    let mut e = engine_with(Box::new(BasicPolicy::new(1)));
+    for i in 0..20_000u64 {
+        e.put(&key_for(i, 24), &value_for(i, 1000));
+    }
+    e.quiesce();
+    // With h=1, everything at L1+ must be on the HDD.
+    for lvl in 1..e.version.num_levels() {
+        for m in e.version.level(lvl) {
+            assert_eq!(
+                e.fs.file_dev(m.id),
+                Some(Dev::Hdd),
+                "B1 must not place L{lvl} SSTs on the SSD"
+            );
+        }
+    }
+}
+
+#[test]
+fn auto_policy_runs_and_serves_reads() {
+    let mut e = engine_with(Box::new(AutoPolicy::new()));
+    for i in 0..8_000u64 {
+        e.put(&key_for(i, 24), &value_for(i, 1000));
+    }
+    e.quiesce();
+    for i in (0..8_000u64).step_by(211) {
+        assert_eq!(e.get(&key_for(i, 24)), Some(value_for(i, 1000)));
+    }
+}
+
+#[test]
+fn stalls_are_counted_under_write_burst() {
+    let mut cfg = Config::tiny();
+    // Tiny memtables + tiny L0 stop bound to force stalls.
+    cfg.lsm.memtable_size = 64 * 1024;
+    cfg.lsm.l0_stop_files = 6;
+    let mut e = Engine::new(cfg, Box::new(HhzsPolicy::new(7)));
+    let mut src = crate::ycsb::YcsbSource::new(
+        crate::ycsb::Spec {
+            kind: crate::ycsb::Kind::Load,
+            records: 30_000,
+            ops: 30_000,
+            alpha: 0.9,
+            key_size: 24,
+            value_size: 1000,
+            seed: 1,
+        },
+        4,
+    );
+    e.run(&mut src, 4, None, false);
+    assert_eq!(e.metrics.writes_done, 30_000);
+    assert!(e.metrics.stalls > 0, "write burst should hit stalls");
+}
+
+#[test]
+fn run_records_throughput_and_latencies() {
+    let mut e = hhzs_engine();
+    let mut load = crate::ycsb::YcsbSource::new(
+        crate::ycsb::Spec {
+            kind: crate::ycsb::Kind::Load,
+            records: 10_000,
+            ops: 10_000,
+            alpha: 0.9,
+            key_size: 24,
+            value_size: 1000,
+            seed: 3,
+        },
+        4,
+    );
+    e.run(&mut load, 4, None, true);
+    assert_eq!(e.metrics.ops_done, 10_000);
+    assert!(e.metrics.ops_per_sec() > 0.0);
+    assert!(e.metrics.write_lat.n == 10_000);
+    let mut reads = crate::ycsb::YcsbSource::new(
+        crate::ycsb::Spec {
+            kind: crate::ycsb::Kind::C,
+            records: 10_000,
+            ops: 2_000,
+            alpha: 0.9,
+            key_size: 24,
+            value_size: 1000,
+            seed: 3,
+        },
+        4,
+    );
+    e.run(&mut reads, 4, None, false);
+    assert_eq!(e.metrics.reads_done, 2_000);
+    assert!(e.metrics.read_lat.n == 2_000);
+    assert!(e.metrics.read_lat.quantile(0.99) >= e.metrics.read_lat.quantile(0.5));
+}
+
+#[test]
+fn throttling_caps_throughput() {
+    let mut e = hhzs_engine();
+    let spec = crate::ycsb::Spec {
+        kind: crate::ycsb::Kind::Load,
+        records: 5_000,
+        ops: 5_000,
+        alpha: 0.9,
+        key_size: 24,
+        value_size: 1000,
+        seed: 5,
+    };
+    let mut src = crate::ycsb::YcsbSource::new(spec, 4);
+    e.run(&mut src, 4, Some(2_000.0), false);
+    let tput = e.metrics.ops_per_sec();
+    assert!(tput <= 2_200.0, "throttled tput {tput} > target 2000 (+10%)");
+    assert!(tput > 1_500.0, "throttled tput {tput} unreasonably low");
+}
+
+#[test]
+fn scans_return_entries_and_charge_devices() {
+    let mut e = hhzs_engine();
+    for i in 0..5_000u64 {
+        e.put(&key_for(i, 24), &value_for(i, 100));
+    }
+    e.quiesce();
+    let got = e.scan(&key_for(100, 24), 50);
+    assert!(got > 0, "scan should see entries");
+    let read_bytes: u64 = e.metrics.read_traffic.values().map(|c| c.bytes).sum();
+    assert!(read_bytes > 0, "scan must charge device reads");
+}
+
+#[test]
+fn ssd_cache_serves_hot_hdd_blocks() {
+    let mut cfg = Config::tiny();
+    cfg.lsm.block_cache_bytes = 16 * 1024; // tiny → rapid evictions
+    let mut e = Engine::new(cfg, Box::new(HhzsPolicy::new(7)));
+    for i in 0..20_000u64 {
+        e.put(&key_for(i, 24), &value_for(i, 1000));
+    }
+    e.quiesce();
+    // Hammer a small hot set: evictions → cache hints → SSD-cache
+    // admissions; repeats then hit the SSD cache.
+    for _ in 0..30 {
+        for i in 0..40u64 {
+            e.get(&key_for(i * 37, 24));
+        }
+    }
+    assert!(
+        e.pool.cached_blocks() > 0 || e.metrics.ssd_cache_hits > 0,
+        "hot HDD blocks should reach the SSD cache (cached={} hits={})",
+        e.pool.cached_blocks(),
+        e.metrics.ssd_cache_hits
+    );
+}
+
+#[test]
+fn migration_respects_rate_limit_pacing() {
+    // A migration of one SST at 4 MiB/s must take ≈ size/rate virtual time.
+    let mut e = hhzs_engine();
+    for i in 0..20_000u64 {
+        e.put(&key_for(i, 24), &value_for(i, 1000));
+    }
+    e.quiesce();
+    let migrated = e.metrics.migrations_cap + e.metrics.migrations_pop;
+    let bytes = e.metrics.migration_bytes;
+    if migrated > 0 {
+        // Rate limiting means migration bytes / total time ≤ rate (+ slack).
+        let dur_s = (e.now - 0) as f64 / 1e9;
+        let avg_rate = bytes as f64 / dur_s;
+        assert!(
+            avg_rate <= e.cfg.hhzs.migration_rate_bps * 1.5,
+            "migration rate {avg_rate} exceeds limit"
+        );
+    }
+}
+
+#[test]
+fn hints_flow_to_policy() {
+    // A counting policy verifies flush + all three compaction hint phases.
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[derive(Default)]
+    struct Counts {
+        flush: usize,
+        start: usize,
+        output: usize,
+        finish: usize,
+    }
+    struct CountingPolicy(Rc<RefCell<Counts>>);
+    impl Policy for CountingPolicy {
+        fn name(&self) -> String {
+            "counting".into()
+        }
+        fn reserved_pool_zones(&self, cfg: &Config) -> u32 {
+            cfg.geometry.wal_cache_zones
+        }
+        fn on_hint(&mut self, hint: &Hint, _view: &View) {
+            let mut c = self.0.borrow_mut();
+            match hint {
+                Hint::Flush(_) => c.flush += 1,
+                Hint::Compaction(CompactionHint::Start { .. }) => c.start += 1,
+                Hint::Compaction(CompactionHint::OutputSst { .. }) => c.output += 1,
+                Hint::Compaction(CompactionHint::Finish { .. }) => c.finish += 1,
+                Hint::CacheEvict(_) => {}
+            }
+        }
+        fn on_sst_read(&mut self, _: SstId, _: Dev, _: Ns) {}
+        fn on_sst_deleted(&mut self, _: SstId) {}
+        fn place_sst(&mut self, level: usize, _: u64, _: SstOrigin, _: &View) -> Dev {
+            if level < 2 {
+                Dev::Ssd
+            } else {
+                Dev::Hdd
+            }
+        }
+        fn pick_migration(&mut self, _: &View) -> Option<crate::policy::MigrationOp> {
+            None
+        }
+    }
+
+    let counts = Rc::new(RefCell::new(Counts::default()));
+    let mut e = engine_with(Box::new(CountingPolicy(counts.clone())));
+    for i in 0..20_000u64 {
+        e.put(&key_for(i, 24), &value_for(i, 1000));
+    }
+    e.quiesce();
+    let c = counts.borrow();
+    assert!(c.flush > 0, "flush hints");
+    assert!(c.start > 0, "compaction start hints");
+    assert!(c.output > 0, "compaction output hints");
+    assert_eq!(c.start, c.finish, "every compaction start gets a finish");
+}
+
+#[test]
+fn zone_accounting_stays_consistent() {
+    let mut e = hhzs_engine();
+    for i in 0..20_000u64 {
+        e.put(&key_for(i, 24), &value_for(i, 1000));
+    }
+    e.quiesce();
+    // Every SST in the version has a zenfs file; every SSD-resident SST
+    // occupies exactly one SSD zone.
+    let mut ssd_ssts = 0u32;
+    for m in e.version.all_ssts() {
+        let f = e.fs.file(m.id).expect("version SST has a file");
+        if f.dev == Dev::Ssd {
+            assert_eq!(f.extents.len(), 1, "SSD SST must occupy one zone");
+            ssd_ssts += 1;
+        } else {
+            assert!(f.extents.len() >= 1);
+        }
+    }
+    assert!(ssd_ssts <= e.fs.ssd_file_zones_total());
+}

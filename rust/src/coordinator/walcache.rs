@@ -1,0 +1,519 @@
+//! WAL + SSD-cache zone pool (§3.2, §3.5).
+//!
+//! HHZS (and AUTO) reserve a fixed number of SSD zones — the configured
+//! maximum WAL size divided by the zone capacity — shared between WAL zones
+//! and cache zones. All WAL data is guaranteed to fit; empty pool zones may
+//! be converted into *cache zones* holding data blocks evicted from the
+//! in-memory block cache, and are reclaimed FIFO (oldest cache zone first)
+//! when the WAL needs space or the cache grows.
+//!
+//! The basic schemes (§2.3) run in *dynamic* mode instead: WAL zones are
+//! allocated like any other zone (SSD if one is empty, else HDD).
+//!
+//! The cache bookkeeping is exactly §3.5: an in-memory mapping table
+//! `(SST id, block offset) → SSD cache location` plus an in-memory FIFO
+//! queue used to identify the blocks of an evicted zone.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::lsm::SstId;
+use crate::metrics::{Metrics, WriteCategory};
+use crate::sim::Ns;
+use crate::zenfs::ZenFs;
+use crate::zone::{Dev, ZoneId};
+
+/// Location of a cached block inside an SSD cache zone.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheLoc {
+    pub zone: ZoneId,
+    pub offset: u64,
+    pub len: u32,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct FifoEntry {
+    sst: SstId,
+    block_offset: u64,
+    zone: ZoneId,
+}
+
+enum Mode {
+    /// HHZS/AUTO: fixed SSD zone pool.
+    Reserved { pool: Vec<ZoneId> },
+    /// Basic schemes: allocate WAL zones anywhere on demand.
+    Dynamic,
+}
+
+/// One WAL segment = the log of one MemTable. Released when flushed.
+#[derive(Default, Clone, Debug)]
+struct Segment {
+    zones: Vec<(Dev, ZoneId)>,
+    bytes: u64,
+    /// Byte runs of this segment's records: (dev, zone, offset, len) —
+    /// segments interleave within zones, so recovery needs exact runs.
+    runs: Vec<(Dev, ZoneId, u64, u64)>,
+}
+
+pub struct PoolManager {
+    mode: Mode,
+    /// Live WAL segments: segment id → zones holding its records.
+    segments: HashMap<u64, Segment>,
+    /// (dev, zone) → number of live segments with records in it.
+    zone_refs: HashMap<(Dev, ZoneId), u32>,
+    active_wal: Option<(Dev, ZoneId)>,
+    cur_segment: u64,
+    next_segment: u64,
+    /// Cache zones in creation (FIFO) order; the active one is last.
+    cache_zones: VecDeque<ZoneId>,
+    mapping: HashMap<(SstId, u64), CacheLoc>,
+    fifo: VecDeque<FifoEntry>,
+    /// Overflow WAL appends that could not be placed in the pool (should
+    /// stay 0 when the pool is sized per §3.2).
+    pub wal_overflows: u64,
+    pub cache_zone_evictions: u64,
+}
+
+impl PoolManager {
+    pub fn reserved(pool: Vec<ZoneId>) -> Self {
+        Self::with_mode(Mode::Reserved { pool })
+    }
+
+    pub fn dynamic() -> Self {
+        Self::with_mode(Mode::Dynamic)
+    }
+
+    fn with_mode(mode: Mode) -> Self {
+        PoolManager {
+            mode,
+            segments: HashMap::from([(0, Segment::default())]),
+            zone_refs: HashMap::new(),
+            active_wal: None,
+            cur_segment: 0,
+            next_segment: 1,
+            cache_zones: VecDeque::new(),
+            mapping: HashMap::new(),
+            fifo: VecDeque::new(),
+            wal_overflows: 0,
+            cache_zone_evictions: 0,
+        }
+    }
+
+    pub fn is_reserved_mode(&self) -> bool {
+        matches!(self.mode, Mode::Reserved { .. })
+    }
+
+    /// Zones currently holding live WAL data (D_0 proxy, §3.3).
+    pub fn wal_zones_in_use(&self) -> u32 {
+        self.zone_refs.len() as u32
+    }
+
+    pub fn cached_blocks(&self) -> usize {
+        self.mapping.len()
+    }
+
+    pub fn cache_zone_count(&self) -> usize {
+        self.cache_zones.len()
+    }
+
+    /// An empty pool zone not used by WAL or cache.
+    fn find_empty_pool_zone(&self, fs: &ZenFs) -> Option<ZoneId> {
+        let Mode::Reserved { pool } = &self.mode else { return None };
+        pool.iter()
+            .find(|z| {
+                fs.ssd.zone(**z).is_empty()
+                    && !self.cache_zones.contains(z)
+                    && self.active_wal != Some((Dev::Ssd, **z))
+            })
+            .copied()
+    }
+
+    // ------------------------------------------------------------------
+    // WAL
+    // ------------------------------------------------------------------
+
+    /// Append a WAL record for the current segment. Returns the device used
+    /// and the virtual completion time. `preferred` is the policy's WAL
+    /// placement for dynamic mode.
+    pub fn append_wal(
+        &mut self,
+        fs: &mut ZenFs,
+        metrics: &mut Metrics,
+        now: Ns,
+        record: &[u8],
+        preferred: Dev,
+    ) -> Ns {
+        let len = record.len() as u64;
+        // Ensure an active WAL zone with room.
+        let need_new = match self.active_wal {
+            None => true,
+            Some((dev, z)) => fs.device_ref(dev).zone(z).remaining() < len,
+        };
+        if need_new {
+            self.active_wal = self.allocate_wal_zone(fs, preferred);
+        }
+        let Some((dev, z)) = self.active_wal else {
+            // Nowhere to put WAL data at all (pathological) — charge the
+            // preferred device anyway so time advances, and count it.
+            self.wal_overflows += 1;
+            let (_, f) = fs.charge(now, preferred, crate::sim::AccessKind::SeqWrite, len);
+            metrics.record_write(WriteCategory::Wal, preferred, len);
+            return f;
+        };
+        let (offset, _, finish) = fs
+            .device(dev)
+            .append(now, z, record)
+            .expect("WAL append within checked capacity");
+        metrics.record_write(WriteCategory::Wal, dev, len);
+        let seg = self.segments.entry(self.cur_segment).or_default();
+        if !seg.zones.contains(&(dev, z)) {
+            seg.zones.push((dev, z));
+            *self.zone_refs.entry((dev, z)).or_insert(0) += 1;
+        }
+        seg.bytes += len;
+        // Extend the last run if contiguous, else start a new one.
+        match seg.runs.last_mut() {
+            Some((rd, rz, roff, rlen)) if *rd == dev && *rz == z && *roff + *rlen == offset => {
+                *rlen += len;
+            }
+            _ => seg.runs.push((dev, z, offset, len)),
+        }
+        finish
+    }
+
+    /// Read back the raw record bytes of every live (unflushed) WAL
+    /// segment, oldest first — the crash-recovery input. Charges
+    /// sequential reads for the replayed bytes.
+    pub fn recover_segments(&self, fs: &mut ZenFs, now: Ns) -> Vec<(u64, Vec<u8>)> {
+        let mut ids: Vec<u64> = self.segments.keys().copied().collect();
+        ids.sort_unstable();
+        let mut out = Vec::new();
+        for id in ids {
+            let seg = &self.segments[&id];
+            let mut bytes = Vec::with_capacity(seg.bytes as usize);
+            for (dev, zone, offset, len) in &seg.runs {
+                let data = fs
+                    .device(*dev)
+                    .read_untimed(*zone, *offset, *len)
+                    .expect("live WAL run readable");
+                fs.charge(now, *dev, crate::sim::AccessKind::SeqRead, *len);
+                bytes.extend_from_slice(&data);
+            }
+            out.push((id, bytes));
+        }
+        out
+    }
+
+    fn allocate_wal_zone(&mut self, fs: &mut ZenFs, preferred: Dev) -> Option<(Dev, ZoneId)> {
+        match &self.mode {
+            Mode::Reserved { .. } => {
+                if let Some(z) = self.find_empty_pool_zone(fs) {
+                    return Some((Dev::Ssd, z));
+                }
+                // Reclaim the oldest cache zone for the WAL (§3.5: "HHZS
+                // evicts cached blocks if it runs out of space ... when
+                // writing new WAL data").
+                if self.evict_oldest_cache_zone(fs) {
+                    if let Some(z) = self.find_empty_pool_zone(fs) {
+                        return Some((Dev::Ssd, z));
+                    }
+                }
+                None
+            }
+            Mode::Dynamic => {
+                // Any empty zone on the preferred device, else the other.
+                for dev in [preferred, other(preferred)] {
+                    let free = match dev {
+                        Dev::Ssd => {
+                            // Respect zenfs reservations (none for basics).
+                            (0..fs.ssd.num_zones()).find(|z| {
+                                fs.ssd.zone(*z).is_empty()
+                                    && !fs.reserved_ssd_zones().contains(z)
+                            })
+                        }
+                        Dev::Hdd => fs.hdd.find_empty_zone(),
+                    };
+                    if let Some(z) = free {
+                        return Some((dev, z));
+                    }
+                }
+                None
+            }
+        }
+    }
+
+    /// Seal the current WAL segment (MemTable rotation); returns its id and
+    /// switches appends to a fresh segment.
+    pub fn seal_segment(&mut self) -> u64 {
+        let sealed = self.cur_segment;
+        self.cur_segment = self.next_segment;
+        self.next_segment += 1;
+        self.segments.entry(self.cur_segment).or_default();
+        sealed
+    }
+
+    /// Release a flushed segment: decrement zone refs; zones that no longer
+    /// hold live WAL data are reset (pool zones become reusable; dynamic
+    /// zones return to the device).
+    pub fn release_segment(&mut self, fs: &mut ZenFs, seg: u64) {
+        let Some(segment) = self.segments.remove(&seg) else { return };
+        for (dev, z) in segment.zones {
+            let refs = self.zone_refs.get_mut(&(dev, z)).expect("ref tracked");
+            *refs -= 1;
+            if *refs == 0 {
+                self.zone_refs.remove(&(dev, z));
+                if self.active_wal == Some((dev, z)) {
+                    self.active_wal = None;
+                }
+                fs.device(dev).reset(z);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // SSD cache (§3.5)
+    // ------------------------------------------------------------------
+
+    /// Look up a cached block; on hit, charges an SSD random read and
+    /// returns the data plus completion time.
+    pub fn cache_lookup(
+        &mut self,
+        fs: &mut ZenFs,
+        now: Ns,
+        sst: SstId,
+        block_offset: u64,
+    ) -> Option<(Vec<u8>, Ns)> {
+        let loc = *self.mapping.get(&(sst, block_offset))?;
+        let (data, _, finish) =
+            fs.ssd.read_random(now, loc.zone, loc.offset, loc.len as u64).ok()?;
+        Some((data, finish))
+    }
+
+    pub fn cache_contains(&self, sst: SstId, block_offset: u64) -> bool {
+        self.mapping.contains_key(&(sst, block_offset))
+    }
+
+    /// Admit an evicted block (§3.5 workflow step 2). The engine has
+    /// already verified the SST lives on the HDD. Charges an SSD
+    /// sequential write. Returns false if no pool zone could host it.
+    pub fn cache_admit(
+        &mut self,
+        fs: &mut ZenFs,
+        metrics: &mut Metrics,
+        now: Ns,
+        sst: SstId,
+        block_offset: u64,
+        data: &[u8],
+    ) -> bool {
+        if !self.is_reserved_mode() || self.mapping.contains_key(&(sst, block_offset)) {
+            return false;
+        }
+        let len = data.len() as u64;
+        // Active cache zone = back of the FIFO deque.
+        let need_new = match self.cache_zones.back() {
+            None => true,
+            Some(z) => fs.ssd.zone(*z).remaining() < len,
+        };
+        if need_new {
+            let z = match self.find_empty_pool_zone(fs) {
+                Some(z) => Some(z),
+                None => {
+                    // Evict the oldest cache zone; never the active one
+                    // (it is full anyway when we get here).
+                    if self.evict_oldest_cache_zone(fs) {
+                        self.find_empty_pool_zone(fs)
+                    } else {
+                        None
+                    }
+                }
+            };
+            match z {
+                Some(z) => self.cache_zones.push_back(z),
+                None => return false, // pool fully claimed by WAL
+            }
+        }
+        let zone = *self.cache_zones.back().expect("active cache zone");
+        let (offset, _, _) = fs.ssd.append(now, zone, data).expect("cache append fits");
+        metrics.record_write(WriteCategory::CacheZone, Dev::Ssd, len);
+        self.mapping
+            .insert((sst, block_offset), CacheLoc { zone, offset, len: data.len() as u32 });
+        self.fifo.push_back(FifoEntry { sst, block_offset, zone });
+        true
+    }
+
+    /// FIFO zone-granular eviction (§3.5): drop the oldest cache zone,
+    /// removing its blocks from the mapping table via the FIFO queue.
+    fn evict_oldest_cache_zone(&mut self, fs: &mut ZenFs) -> bool {
+        let Some(zone) = self.cache_zones.pop_front() else { return false };
+        while let Some(head) = self.fifo.front() {
+            if head.zone != zone {
+                break;
+            }
+            let e = self.fifo.pop_front().unwrap();
+            self.mapping.remove(&(e.sst, e.block_offset));
+        }
+        fs.ssd.reset(zone);
+        self.cache_zone_evictions += 1;
+        true
+    }
+
+    /// Drop mapping entries of a deleted SST (stale FIFO entries are
+    /// skipped at eviction time via the mapping check).
+    pub fn invalidate_sst(&mut self, sst: SstId) {
+        self.mapping.retain(|(s, _), _| *s != sst);
+    }
+}
+
+fn other(d: Dev) -> Dev {
+    match d {
+        Dev::Ssd => Dev::Hdd,
+        Dev::Hdd => Dev::Ssd,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, MIB};
+
+    fn fs_with_pool() -> (ZenFs, PoolManager, Metrics) {
+        let cfg = Config::tiny();
+        let mut fs = ZenFs::new(
+            cfg.geometry.ssd_zone_cap,
+            20,
+            cfg.geometry.hdd_zone_cap,
+            64,
+            cfg.ssd.clone(),
+            cfg.hdd.clone(),
+        );
+        let pool = fs.reserve_ssd_zones(2);
+        (fs, PoolManager::reserved(pool), Metrics::default())
+    }
+
+    #[test]
+    fn wal_appends_fill_pool_zone() {
+        let (mut fs, mut pm, mut m) = fs_with_pool();
+        let rec = vec![0u8; 1024];
+        let f = pm.append_wal(&mut fs, &mut m, 0, &rec, Dev::Ssd);
+        assert!(f > 0);
+        assert_eq!(pm.wal_zones_in_use(), 1);
+        assert_eq!(pm.wal_overflows, 0);
+    }
+
+    #[test]
+    fn segment_release_resets_zone() {
+        let (mut fs, mut pm, mut m) = fs_with_pool();
+        pm.append_wal(&mut fs, &mut m, 0, &[0u8; 512], Dev::Ssd);
+        let seg = pm.seal_segment();
+        pm.append_wal(&mut fs, &mut m, 0, &[0u8; 512], Dev::Ssd);
+        assert_eq!(pm.wal_zones_in_use(), 1, "both segments share the zone");
+        pm.release_segment(&mut fs, seg);
+        // Second segment still holds the zone.
+        assert_eq!(pm.wal_zones_in_use(), 1);
+        let seg2 = pm.seal_segment();
+        pm.release_segment(&mut fs, seg2);
+        assert_eq!(pm.wal_zones_in_use(), 0);
+    }
+
+    #[test]
+    fn wal_spans_zones_when_full() {
+        let (mut fs, mut pm, mut m) = fs_with_pool();
+        let zone_cap = fs.ssd.zone_cap;
+        // Fill past one zone.
+        let rec = vec![0u8; (zone_cap / 2 + 100) as usize];
+        pm.append_wal(&mut fs, &mut m, 0, &rec, Dev::Ssd);
+        pm.append_wal(&mut fs, &mut m, 0, &rec, Dev::Ssd);
+        assert_eq!(pm.wal_zones_in_use(), 2);
+    }
+
+    #[test]
+    fn cache_admit_lookup_roundtrip() {
+        let (mut fs, mut pm, mut m) = fs_with_pool();
+        let block = vec![7u8; 4096];
+        assert!(pm.cache_admit(&mut fs, &mut m, 0, 42, 8192, &block));
+        assert!(pm.cache_contains(42, 8192));
+        let (data, _) = pm.cache_lookup(&mut fs, 0, 42, 8192).unwrap();
+        assert_eq!(data, block);
+        assert!(pm.cache_lookup(&mut fs, 0, 42, 0).is_none());
+    }
+
+    #[test]
+    fn duplicate_admission_rejected() {
+        let (mut fs, mut pm, mut m) = fs_with_pool();
+        let block = vec![1u8; 4096];
+        assert!(pm.cache_admit(&mut fs, &mut m, 0, 1, 0, &block));
+        assert!(!pm.cache_admit(&mut fs, &mut m, 0, 1, 0, &block));
+        assert_eq!(pm.cached_blocks(), 1);
+    }
+
+    #[test]
+    fn fifo_zone_eviction_when_pool_exhausted() {
+        let (mut fs, mut pm, mut m) = fs_with_pool();
+        let zone_cap = fs.ssd.zone_cap;
+        let block = vec![2u8; 4096];
+        let blocks_per_zone = zone_cap / 4096;
+        // Fill both pool zones with cache blocks, then one more.
+        let total = blocks_per_zone * 2 + 1;
+        for i in 0..total {
+            assert!(pm.cache_admit(&mut fs, &mut m, 0, 9, i * 4096, &block));
+        }
+        assert!(pm.cache_zone_evictions >= 1);
+        // The first zone's blocks are gone from the mapping.
+        assert!(!pm.cache_contains(9, 0));
+        // The newest block is present.
+        assert!(pm.cache_contains(9, (total - 1) * 4096));
+    }
+
+    #[test]
+    fn wal_reclaims_cache_zones() {
+        let (mut fs, mut pm, mut m) = fs_with_pool();
+        let block = vec![3u8; 4096];
+        // Turn both pool zones into cache zones.
+        let zone_cap = fs.ssd.zone_cap;
+        for i in 0..(zone_cap / 4096) * 2 {
+            pm.cache_admit(&mut fs, &mut m, 0, 5, i * 4096, &block);
+        }
+        assert_eq!(pm.cache_zone_count(), 2);
+        // WAL append must evict a cache zone rather than overflow.
+        let f = pm.append_wal(&mut fs, &mut m, 0, &[0u8; 1024], Dev::Ssd);
+        assert!(f > 0);
+        assert_eq!(pm.wal_overflows, 0);
+        assert_eq!(pm.wal_zones_in_use(), 1);
+    }
+
+    #[test]
+    fn invalidate_sst_drops_mappings() {
+        let (mut fs, mut pm, mut m) = fs_with_pool();
+        pm.cache_admit(&mut fs, &mut m, 0, 1, 0, &[0u8; 128]);
+        pm.cache_admit(&mut fs, &mut m, 0, 2, 0, &[0u8; 128]);
+        pm.invalidate_sst(1);
+        assert!(!pm.cache_contains(1, 0));
+        assert!(pm.cache_contains(2, 0));
+    }
+
+    #[test]
+    fn dynamic_mode_allocates_anywhere() {
+        let cfg = Config::tiny();
+        let mut fs = ZenFs::new(
+            cfg.geometry.ssd_zone_cap,
+            2,
+            cfg.geometry.hdd_zone_cap,
+            8,
+            cfg.ssd.clone(),
+            cfg.hdd.clone(),
+        );
+        let mut pm = PoolManager::dynamic();
+        let mut m = Metrics::default();
+        // Occupy both SSD zones with files → WAL falls through to the HDD.
+        fs.create_file(0, 1, Dev::Ssd, &[0u8; 64], true).unwrap();
+        fs.create_file(0, 2, Dev::Ssd, &[0u8; 64], true).unwrap();
+        pm.append_wal(&mut fs, &mut m, 0, &[0u8; 512], Dev::Ssd);
+        let hdd_wal = m
+            .write_traffic
+            .get(&(WriteCategory::Wal, Dev::Hdd))
+            .map(|c| c.bytes)
+            .unwrap_or(0);
+        assert_eq!(hdd_wal, 512);
+        // Cache is a no-op in dynamic mode.
+        assert!(!pm.cache_admit(&mut fs, &mut m, 0, 1, 0, &[0u8; 64]));
+    }
+}

@@ -1,0 +1,56 @@
+//! Ablation study (extension beyond the paper's figures): quantify the
+//! design choices DESIGN.md calls out.
+//!
+//! * **Hints** — HHZS with compaction-hint storage demands disabled
+//!   (`HHZS-nohints`): the tiering level sees only current allocations,
+//!   not in-flight compaction output (§3.3 Step 1 ablated).
+//! * **Cache-zone budget** — the WAL+cache pool size (§3.2 fixes it at
+//!   max-WAL/zone-capacity = 2): sweep 2/4/8 zones on a read-heavy skewed
+//!   workload to show the SSD-cache capacity trade-off.
+
+use crate::report::Table;
+use crate::ycsb::Kind;
+
+use super::common::{load_and_run, ExpOpts};
+
+pub fn run(opts: &ExpOpts) {
+    let cfg = &opts.cfg;
+    let csv = opts.csv_dir.as_deref();
+
+    // ---- hint ablation ---------------------------------------------------
+    let mut t = Table::new(
+        "Ablation A: compaction-hint storage demands (50%r mixes)",
+        &["scheme", "a=0.9 OPS", "a=1.1 OPS", "hdd-read a=1.1"],
+    );
+    for s in ["HHZS", "HHZS-nohints", "B3"] {
+        println!("ablate: {s}...");
+        let (_, m09) = load_and_run(cfg, s, Kind::Mixed { read_pct: 50 }, 0.9);
+        let (_, m11) = load_and_run(cfg, s, Kind::Mixed { read_pct: 50 }, 1.1);
+        t.row(vec![
+            s.to_string(),
+            format!("{:.0}", m09.ops_per_sec()),
+            format!("{:.0}", m11.ops_per_sec()),
+            format!("{:.1}%", m11.hdd_read_fraction() * 100.0),
+        ]);
+    }
+    t.emit(csv, "ablate_hints");
+
+    // ---- cache-zone budget -----------------------------------------------
+    let mut t = Table::new(
+        "Ablation B: WAL+cache pool size (workload C, a=1.2)",
+        &["pool zones", "OPS", "ssd-cache hits", "hdd-read %"],
+    );
+    for zones in [2u32, 4, 8] {
+        println!("ablate: pool={zones} zones...");
+        let mut c = cfg.clone();
+        c.geometry.wal_cache_zones = zones;
+        let (_, m) = load_and_run(&c, "HHZS", Kind::C, 1.2);
+        t.row(vec![
+            format!("{zones}"),
+            format!("{:.0}", m.ops_per_sec()),
+            format!("{}", m.ssd_cache_hits),
+            format!("{:.1}%", m.hdd_read_fraction() * 100.0),
+        ]);
+    }
+    t.emit(csv, "ablate_pool");
+}

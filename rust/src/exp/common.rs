@@ -1,0 +1,210 @@
+//! Shared experiment machinery: scheme construction, the load-then-measure
+//! protocol of §4.1 ("before evaluating each workload ... we always first
+//! clear the storage and load the KV objects"), and result records.
+
+use crate::config::Config;
+use crate::coordinator::Engine;
+use crate::metrics::Metrics;
+use crate::policy::{AutoPolicy, BasicPolicy, HhzsPolicy, Policy};
+use crate::ycsb::{Kind, Spec, YcsbSource};
+
+/// Build a placement scheme by its paper name.
+///
+/// `B1..B4` — basic schemes (§2.3); `B3+M` — basic + migration (Exp#2);
+/// `AUTO` — SpanDB automated placement (§4.1); `P` / `P+M` / `P+M+C` —
+/// HHZS ablations (Exp#2); `HHZS` — the full system (= `P+M+C`).
+pub fn make_policy(name: &str, cfg: &Config) -> Box<dyn Policy> {
+    let nl = cfg.lsm.num_levels;
+    match name {
+        "B1" => Box::new(BasicPolicy::new(1)),
+        "B2" => Box::new(BasicPolicy::new(2)),
+        "B3" => Box::new(BasicPolicy::new(3)),
+        "B4" => Box::new(BasicPolicy::new(4)),
+        "B3+M" => Box::new(BasicPolicy::with_migration(3)),
+        "AUTO" => Box::new(AutoPolicy::new()),
+        "P" => Box::new(HhzsPolicy::placement_only(nl)),
+        "P+M" => Box::new(HhzsPolicy::placement_migration(nl)),
+        "P+M+C" | "HHZS" => Box::new(HhzsPolicy::new(nl)),
+        "HHZS-nohints" => Box::new(HhzsPolicy::without_demand_hints(nl)),
+        other => panic!("unknown scheme {other:?}"),
+    }
+}
+
+pub const ALL_BASICS: [&str; 4] = ["B1", "B2", "B3", "B4"];
+
+/// Summary of one measured phase.
+#[derive(Clone, Debug)]
+pub struct PhaseResult {
+    pub scheme: String,
+    pub phase: String,
+    pub ops_per_sec: f64,
+    pub hdd_read_frac: f64,
+    pub ssd_write_frac: f64,
+    pub read_p99_ns: u64,
+    pub read_p999_ns: u64,
+    pub read_p9999_ns: u64,
+    pub stalls: u64,
+    pub migrations: u64,
+    pub ssd_cache_hits: u64,
+}
+
+impl PhaseResult {
+    pub fn from_metrics(scheme: &str, phase: &str, m: &Metrics) -> Self {
+        PhaseResult {
+            scheme: scheme.into(),
+            phase: phase.into(),
+            ops_per_sec: m.ops_per_sec(),
+            hdd_read_frac: m.hdd_read_fraction(),
+            ssd_write_frac: m.ssd_write_fraction(None),
+            read_p99_ns: m.read_lat.quantile(0.99),
+            read_p999_ns: m.read_lat.quantile(0.999),
+            read_p9999_ns: m.read_lat.quantile(0.9999),
+            stalls: m.stalls,
+            migrations: m.migrations_cap + m.migrations_pop,
+            ssd_cache_hits: m.ssd_cache_hits,
+        }
+    }
+}
+
+/// Fresh engine with a fresh load of `cfg.workload.load_objects` objects
+/// (the §4.1 protocol). Returns the engine and the load-phase metrics.
+pub fn load_fresh(
+    cfg: &Config,
+    scheme: &str,
+    throttle: Option<f64>,
+    sample: bool,
+) -> (Engine, Metrics) {
+    let mut engine = Engine::new(cfg.clone(), make_policy(scheme, cfg));
+    let spec = Spec::from_config(cfg, Kind::Load);
+    let mut src = YcsbSource::new(spec, cfg.workload.clients);
+    engine.run(&mut src, cfg.workload.clients, throttle, sample);
+    let m = std::mem::take(&mut engine.metrics);
+    // YCSB's load and run phases are separate DB sessions: the reopen
+    // between them flushes all MemTables and empties the WAL.
+    engine.flush_all();
+    (engine, m)
+}
+
+/// Run one measured workload phase on an already-loaded engine.
+pub fn run_phase(engine: &mut Engine, cfg: &Config, kind: Kind, alpha: f64) -> Metrics {
+    let mut spec = Spec::from_config(cfg, kind);
+    spec.alpha = alpha;
+    let mut src = YcsbSource::new(spec, cfg.workload.clients);
+    engine.run(&mut src, cfg.workload.clients, None, false);
+    std::mem::take(&mut engine.metrics)
+}
+
+/// Load + measure in one call (fresh storage per workload, §4.1).
+pub fn load_and_run(cfg: &Config, scheme: &str, kind: Kind, alpha: f64) -> (Engine, Metrics) {
+    let (mut engine, _) = load_fresh(cfg, scheme, None, false);
+    let m = run_phase(&mut engine, cfg, kind, alpha);
+    (engine, m)
+}
+
+/// Quick/default/full sizing for experiment drivers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Profile {
+    /// Small but shape-preserving (CI / cargo bench default).
+    Quick,
+    /// The EXPERIMENTS.md reference profile.
+    Default,
+    /// Closer to paper proportions (slow).
+    Full,
+}
+
+impl Profile {
+    pub fn config(&self) -> Config {
+        match self {
+            Profile::Quick => {
+                let mut c = Config::paper_scaled(1024);
+                c.workload.load_objects = 120_000; // ~120 MiB ≈ 5.7× SSD
+                c.workload.ops = 40_000;
+                c
+            }
+            Profile::Default => {
+                let mut c = Config::paper_scaled(256);
+                c.workload.load_objects = 500_000; // ~0.5 GiB ≈ 6× SSD
+                c.workload.ops = 150_000;
+                c
+            }
+            Profile::Full => {
+                let mut c = Config::paper_scaled(64);
+                c.workload.load_objects = 2_000_000; // ~2 GiB ≈ 6× SSD
+                c.workload.ops = 1_000_000;
+                c
+            }
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Profile> {
+        match s {
+            "quick" => Some(Profile::Quick),
+            "default" => Some(Profile::Default),
+            "full" => Some(Profile::Full),
+            _ => None,
+        }
+    }
+}
+
+/// Options shared by all experiment drivers.
+pub struct ExpOpts {
+    pub cfg: Config,
+    pub csv_dir: Option<String>,
+}
+
+impl ExpOpts {
+    pub fn new(profile: Profile) -> Self {
+        ExpOpts { cfg: profile.config(), csv_dir: Some("results".into()) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_scheme_names_construct() {
+        let cfg = Config::tiny();
+        for s in ["B1", "B2", "B3", "B4", "B3+M", "AUTO", "P", "P+M", "P+M+C", "HHZS"] {
+            let p = make_policy(s, &cfg);
+            if s == "HHZS" {
+                assert_eq!(p.name(), "HHZS");
+            } else if s == "P+M+C" {
+                assert_eq!(p.name(), "HHZS");
+            } else {
+                assert_eq!(p.name(), s);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_scheme_panics() {
+        make_policy("B9", &Config::tiny());
+    }
+
+    #[test]
+    fn profiles_scale_monotonically() {
+        let q = Profile::Quick.config();
+        let d = Profile::Default.config();
+        let f = Profile::Full.config();
+        assert!(q.workload.load_objects < d.workload.load_objects);
+        assert!(d.workload.load_objects < f.workload.load_objects);
+        // All profiles keep dataset ≫ SSD (the experiments' core tension).
+        for c in [q, d, f] {
+            assert!(c.workload.load_objects * 1024 > 3 * c.ssd_capacity());
+        }
+    }
+
+    #[test]
+    fn load_and_phase_protocol() {
+        let mut cfg = Config::tiny();
+        cfg.workload.load_objects = 15_000;
+        cfg.workload.ops = 3_000;
+        let (mut e, load_m) = load_fresh(&cfg, "B3", None, false);
+        assert_eq!(load_m.writes_done, 15_000);
+        let m = run_phase(&mut e, &cfg, Kind::C, 0.9);
+        assert_eq!(m.reads_done, 3_000);
+        assert!(m.ops_per_sec() > 0.0);
+    }
+}

@@ -1,0 +1,79 @@
+//! Exp#1 (Fig 5): YCSB core workloads A–F + load, comparing B3, AUTO, and
+//! HHZS. Also reports the % of per-level data resident on the SSD at the
+//! end of workload A (Fig 5(b)).
+
+use crate::report::{fmt_pct, Table};
+use crate::ycsb::Kind;
+
+use super::common::{load_and_run, load_fresh, ExpOpts};
+
+pub const SCHEMES: [&str; 3] = ["B3", "AUTO", "HHZS"];
+
+pub fn run(opts: &ExpOpts) {
+    let cfg = &opts.cfg;
+    let csv = opts.csv_dir.as_deref();
+    let workloads = [
+        (Kind::A, "A"),
+        (Kind::B, "B"),
+        (Kind::C, "C"),
+        (Kind::D, "D"),
+        (Kind::E, "E"),
+        (Kind::F, "F"),
+    ];
+
+    let mut tput: Vec<Vec<f64>> = vec![Vec::new(); SCHEMES.len()];
+    // Load throughput per scheme.
+    for (si, s) in SCHEMES.iter().enumerate() {
+        println!("exp1: {s} load...");
+        let (_, m) = load_fresh(cfg, s, None, false);
+        tput[si].push(m.ops_per_sec());
+    }
+    let mut fig5b: Option<Vec<(u64, u64)>> = None;
+    for (kind, label) in workloads {
+        for (si, s) in SCHEMES.iter().enumerate() {
+            println!("exp1: {s} workload {label}...");
+            let (engine, m) = load_and_run(cfg, s, kind, cfg.workload.zipf_alpha);
+            tput[si].push(m.ops_per_sec());
+            if kind == Kind::A && *s == "HHZS" {
+                fig5b = Some(engine.ssd_share_by_level());
+            }
+        }
+    }
+
+    let mut t = Table::new(
+        "Fig 5(a): throughput normalized to B3 (B3 row shows absolute OPS)",
+        &["scheme", "load", "A", "B", "C", "D", "E", "F"],
+    );
+    for (si, s) in SCHEMES.iter().enumerate() {
+        let mut row = vec![s.to_string()];
+        for (wi, v) in tput[si].iter().enumerate() {
+            if si == 0 {
+                row.push(format!("{v:.0}"));
+            } else {
+                let b3 = tput[0][wi];
+                row.push(format!("{:.2}x", v / b3.max(1e-9)));
+            }
+        }
+        t.row(row);
+    }
+    t.emit(csv, "exp1_fig5a");
+
+    if let Some(share) = fig5b {
+        let mut t = Table::new(
+            "Fig 5(b): % of data in SSD per level at the end of workload A (HHZS)",
+            &["level", "ssd bytes", "total bytes", "% in SSD"],
+        );
+        for (lvl, (ssd, all)) in share.iter().enumerate() {
+            if *all == 0 {
+                continue;
+            }
+            t.row(vec![
+                format!("L{lvl}"),
+                format!("{ssd}"),
+                format!("{all}"),
+                fmt_pct(*ssd as f64 / *all as f64),
+            ]);
+        }
+        t.emit(csv, "exp1_fig5b");
+    }
+}

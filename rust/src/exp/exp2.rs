@@ -1,0 +1,52 @@
+//! Exp#2 (Fig 6): performance breakdown — how much each HHZS technique
+//! contributes. Schemes: B3, B3+M, P, P+M, P+M+C (= full HHZS), over load
+//! and the W1–W4 mixes.
+
+use crate::report::Table;
+use crate::ycsb::Kind;
+
+use super::common::{load_and_run, load_fresh, ExpOpts};
+
+pub const SCHEMES: [&str; 5] = ["B3", "B3+M", "P", "P+M", "P+M+C"];
+
+/// The four W workloads of §4.2: (reads %, α).
+pub const W: [(u32, f64, &str); 4] =
+    [(10, 0.9, "W1"), (50, 0.9, "W2"), (50, 1.2, "W3"), (100, 1.2, "W4")];
+
+pub fn run(opts: &ExpOpts) {
+    let cfg = &opts.cfg;
+    let csv = opts.csv_dir.as_deref();
+    let mut tput: Vec<Vec<f64>> = vec![Vec::new(); SCHEMES.len()];
+
+    for (si, s) in SCHEMES.iter().enumerate() {
+        println!("exp2: {s} load...");
+        let (_, m) = load_fresh(cfg, s, None, false);
+        tput[si].push(m.ops_per_sec());
+    }
+    for (read_pct, alpha, label) in W {
+        for (si, s) in SCHEMES.iter().enumerate() {
+            println!("exp2: {s} {label} ({read_pct}% reads, α={alpha})...");
+            let kind =
+                if read_pct == 100 { Kind::C } else { Kind::Mixed { read_pct } };
+            let (_, m) = load_and_run(cfg, s, kind, alpha);
+            tput[si].push(m.ops_per_sec());
+        }
+    }
+
+    let mut t = Table::new(
+        "Fig 6: breakdown — throughput normalized to B3 (B3 row absolute OPS)",
+        &["scheme", "load", "W1 10%r .9", "W2 50%r .9", "W3 50%r 1.2", "W4 100%r 1.2"],
+    );
+    for (si, s) in SCHEMES.iter().enumerate() {
+        let mut row = vec![s.to_string()];
+        for (wi, v) in tput[si].iter().enumerate() {
+            if si == 0 {
+                row.push(format!("{v:.0}"));
+            } else {
+                row.push(format!("{:.2}x", v / tput[0][wi].max(1e-9)));
+            }
+        }
+        t.row(row);
+    }
+    t.emit(csv, "exp2_fig6");
+}

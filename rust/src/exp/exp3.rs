@@ -1,0 +1,29 @@
+//! Exp#3 (Fig 7): impact of workload skewness — α from 0.8 to 1.2 with a
+//! 50/50 read-write mix, for B3, AUTO, and HHZS.
+
+use crate::report::Table;
+use crate::ycsb::Kind;
+
+use super::common::{load_and_run, ExpOpts};
+
+pub const ALPHAS: [f64; 5] = [0.8, 0.9, 1.0, 1.1, 1.2];
+pub const SCHEMES: [&str; 3] = ["B3", "AUTO", "HHZS"];
+
+pub fn run(opts: &ExpOpts) {
+    let cfg = &opts.cfg;
+    let csv = opts.csv_dir.as_deref();
+    let mut t = Table::new(
+        "Fig 7: throughput (OPS) vs skewness (50% reads / 50% writes)",
+        &["scheme", "α=0.8", "α=0.9", "α=1.0", "α=1.1", "α=1.2"],
+    );
+    for s in SCHEMES {
+        let mut row = vec![s.to_string()];
+        for alpha in ALPHAS {
+            println!("exp3: {s} α={alpha}...");
+            let (_, m) = load_and_run(cfg, s, Kind::Mixed { read_pct: 50 }, alpha);
+            row.push(format!("{:.0}", m.ops_per_sec()));
+        }
+        t.row(row);
+    }
+    t.emit(csv, "exp3_fig7");
+}

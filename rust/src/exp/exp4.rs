@@ -1,0 +1,29 @@
+//! Exp#4 (Fig 8): impact of the read-write ratio — 10% to 90% reads at
+//! α = 0.9, for B3, AUTO, and HHZS.
+
+use crate::report::Table;
+use crate::ycsb::Kind;
+
+use super::common::{load_and_run, ExpOpts};
+
+pub const READ_PCTS: [u32; 5] = [10, 30, 50, 70, 90];
+pub const SCHEMES: [&str; 3] = ["B3", "AUTO", "HHZS"];
+
+pub fn run(opts: &ExpOpts) {
+    let cfg = &opts.cfg;
+    let csv = opts.csv_dir.as_deref();
+    let mut t = Table::new(
+        "Fig 8: throughput (OPS) vs read percentage (α=0.9)",
+        &["scheme", "10%", "30%", "50%", "70%", "90%"],
+    );
+    for s in SCHEMES {
+        let mut row = vec![s.to_string()];
+        for pct in READ_PCTS {
+            println!("exp4: {s} {pct}% reads...");
+            let (_, m) = load_and_run(cfg, s, Kind::Mixed { read_pct: pct }, 0.9);
+            row.push(format!("{:.0}", m.ops_per_sec()));
+        }
+        t.row(row);
+    }
+    t.emit(csv, "exp4_fig8");
+}

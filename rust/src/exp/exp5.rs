@@ -1,0 +1,38 @@
+//! Exp#5 (Fig 9): impact of the SSD size — 20/40/60/80 available SSD
+//! zones, over (a) the load and (b) a 50/50 mixed workload at α = 0.9,
+//! comparing B1–B4, AUTO, P, and full HHZS.
+
+use crate::report::Table;
+use crate::ycsb::Kind;
+
+use super::common::{load_and_run, load_fresh, ExpOpts};
+
+pub const ZONE_COUNTS: [u32; 4] = [20, 40, 60, 80];
+pub const SCHEMES: [&str; 7] = ["B1", "B2", "B3", "B4", "AUTO", "P", "HHZS"];
+
+pub fn run(opts: &ExpOpts) {
+    let csv = opts.csv_dir.as_deref();
+    let headers = ["scheme", "20 zones", "40 zones", "60 zones", "80 zones"];
+    let mut t_load = Table::new("Fig 9(a): load throughput (OPS) vs SSD size", &headers);
+    let mut t_mixed = Table::new(
+        "Fig 9(b): mixed 50%r/50%w α=0.9 throughput (OPS) vs SSD size",
+        &headers,
+    );
+    for s in SCHEMES {
+        let mut row_load = vec![s.to_string()];
+        let mut row_mixed = vec![s.to_string()];
+        for zones in ZONE_COUNTS {
+            println!("exp5: {s} with {zones} SSD zones...");
+            let mut cfg = opts.cfg.clone();
+            cfg.geometry.ssd_zones = zones;
+            let (_, m) = load_fresh(&cfg, s, None, false);
+            row_load.push(format!("{:.0}", m.ops_per_sec()));
+            let (_, m) = load_and_run(&cfg, s, Kind::Mixed { read_pct: 50 }, 0.9);
+            row_mixed.push(format!("{:.0}", m.ops_per_sec()));
+        }
+        t_load.row(row_load);
+        t_mixed.row(row_mixed);
+    }
+    t_load.emit(csv, "exp5_fig9a");
+    t_mixed.emit(csv, "exp5_fig9b");
+}

@@ -1,0 +1,35 @@
+//! Exp#6 (Fig 10): impact of the migration rate limit on read tail
+//! latencies. P+M (no caching, as §4.2), rates 1–64 MiB/s, 50/50 mix at
+//! α = 0.9; reports p99 / p99.9 / p99.99 read latencies.
+
+use crate::config::MIB;
+use crate::report::Table;
+use crate::sim::fmt_ns;
+use crate::ycsb::Kind;
+
+use super::common::{load_and_run, ExpOpts};
+
+pub const RATES_MIB: [f64; 7] = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0];
+
+pub fn run(opts: &ExpOpts) {
+    let csv = opts.csv_dir.as_deref();
+    let mut t = Table::new(
+        "Fig 10: read tail latency vs migration rate (P+M, 50%r, α=0.9)",
+        &["rate", "p99", "p99.9", "p99.99", "migrations", "migr bytes"],
+    );
+    for rate in RATES_MIB {
+        println!("exp6: migration rate {rate} MiB/s...");
+        let mut cfg = opts.cfg.clone();
+        cfg.hhzs.migration_rate_bps = rate * MIB as f64;
+        let (_, m) = load_and_run(&cfg, "P+M", Kind::Mixed { read_pct: 50 }, 0.9);
+        t.row(vec![
+            format!("{rate} MiB/s"),
+            fmt_ns(m.read_lat.quantile(0.99)),
+            fmt_ns(m.read_lat.quantile(0.999)),
+            fmt_ns(m.read_lat.quantile(0.9999)),
+            format!("{}", m.migrations_cap + m.migrations_pop),
+            format!("{}", m.migration_bytes),
+        ]);
+    }
+    t.emit(csv, "exp6_fig10");
+}

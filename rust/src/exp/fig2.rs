@@ -1,0 +1,226 @@
+//! Figure 2: the motivating analysis of the basic placement schemes
+//! (§2.3, observations O1–O4).
+//!
+//! * (a)/(d): boxplots of actual WAL/L0–L4 sizes while loading under B4,
+//!   without/with write throttling — O1/O3: actual sizes blow past targets.
+//! * (b)/(e): % of write traffic to the SSD per category for B1–B4 — O2.
+//! * (c)/(f): load throughput for B1–B4 — O2.
+//! * (g): reads per SST at L3 under B4, SSD residents vs top HDD residents
+//!   — O4: hot SSTs strand on the HDD.
+//! * (h)/(i): % read traffic to HDD and read throughput, α ∈ {0.9, 1.2}.
+
+use crate::metrics::{Metrics, WriteCategory};
+use crate::report::{fmt_bytes, fmt_pct, Table};
+use crate::ycsb::Kind;
+use crate::zone::Dev;
+
+use super::common::{load_fresh, run_phase, ExpOpts, ALL_BASICS};
+
+fn boxplot(samples: &[u64]) -> (u64, u64, u64, u64, u64) {
+    let mut s = samples.to_vec();
+    s.sort_unstable();
+    if s.is_empty() {
+        return (0, 0, 0, 0, 0);
+    }
+    let q = |f: f64| s[((s.len() - 1) as f64 * f) as usize];
+    (s[0], q(0.25), q(0.5), q(0.75), s[s.len() - 1])
+}
+
+fn sizes_table(title: &str, cfg: &crate::config::Config, m: &Metrics, csv: Option<&str>, name: &str) {
+    let mut t = Table::new(
+        title,
+        &["level", "target", "min", "q1", "median", "q3", "max", "max/target"],
+    );
+    let num_levels = m.level_samples.first().map_or(0, |s| s.level_bytes.len());
+    // WAL row.
+    let wal: Vec<u64> = m.level_samples.iter().map(|s| s.wal_bytes).collect();
+    let (mn, q1, md, q3, mx) = boxplot(&wal);
+    let wal_target = cfg.geometry.wal_cache_zones as u64 * cfg.geometry.ssd_zone_cap;
+    t.row(vec![
+        "WAL".into(),
+        fmt_bytes(wal_target),
+        fmt_bytes(mn),
+        fmt_bytes(q1),
+        fmt_bytes(md),
+        fmt_bytes(q3),
+        fmt_bytes(mx),
+        format!("{:.1}x", mx as f64 / wal_target.max(1) as f64),
+    ]);
+    for lvl in 0..num_levels.min(5) {
+        let vals: Vec<u64> = m.level_samples.iter().map(|s| s.level_bytes[lvl]).collect();
+        let (mn, q1, md, q3, mx) = boxplot(&vals);
+        let target = match lvl {
+            0 | 1 => cfg.lsm.l0_target,
+            _ => cfg.lsm.l0_target * cfg.lsm.level_multiplier.pow(lvl as u32 - 1),
+        };
+        t.row(vec![
+            format!("L{lvl}"),
+            fmt_bytes(target),
+            fmt_bytes(mn),
+            fmt_bytes(q1),
+            fmt_bytes(md),
+            fmt_bytes(q3),
+            fmt_bytes(mx),
+            format!("{:.1}x", mx as f64 / target as f64),
+        ]);
+    }
+    t.emit(csv, name);
+}
+
+fn traffic_table(
+    title: &str,
+    results: &[(String, Metrics)],
+    csv: Option<&str>,
+    name: &str,
+) {
+    let mut t = Table::new(title, &["scheme", "WAL", "L0", "L1", "L2", "L3", "L4", "total"]);
+    for (scheme, m) in results {
+        let mut row = vec![scheme.clone()];
+        row.push(fmt_pct(m.ssd_write_fraction(Some(WriteCategory::Wal))));
+        for lvl in 0..5 {
+            row.push(fmt_pct(m.ssd_write_fraction(Some(WriteCategory::Sst(lvl)))));
+        }
+        row.push(fmt_pct(m.ssd_write_fraction(None)));
+        t.row(row);
+    }
+    t.emit(csv, name);
+}
+
+fn tput_table(title: &str, results: &[(String, Metrics)], csv: Option<&str>, name: &str) {
+    let mut t = Table::new(title, &["scheme", "OPS", "stalls"]);
+    for (scheme, m) in results {
+        t.row(vec![
+            scheme.clone(),
+            format!("{:.0}", m.ops_per_sec()),
+            format!("{}", m.stalls),
+        ]);
+    }
+    t.emit(csv, name);
+}
+
+pub fn run(opts: &ExpOpts) {
+    let cfg = &opts.cfg;
+    let csv = opts.csv_dir.as_deref();
+
+    // ---- (a)-(c): unthrottled loads over B1..B4 -----------------------
+    println!("fig2: loading under B1..B4 (unthrottled)...");
+    let mut loads: Vec<(String, Metrics)> = Vec::new();
+    let mut b4_sizes: Option<Metrics> = None;
+    for s in ALL_BASICS {
+        let (_, m) = load_fresh(cfg, s, None, true);
+        if s == "B4" {
+            b4_sizes = Some(m.clone_for_samples());
+        }
+        loads.push((s.to_string(), m));
+    }
+    sizes_table(
+        "Fig 2(a): actual sizes while loading (B4, no throttling)",
+        cfg,
+        b4_sizes.as_ref().unwrap(),
+        csv,
+        "fig2a_sizes",
+    );
+    traffic_table(
+        "Fig 2(b): % write traffic to SSD by category (no throttling)",
+        &loads,
+        csv,
+        "fig2b_traffic",
+    );
+    tput_table("Fig 2(c): load throughput (OPS)", &loads, csv, "fig2c_load");
+
+    // ---- (d)-(f): throttled loads --------------------------------------
+    // The paper throttles to 6,000 OPS — below every basic scheme's load
+    // throughput. We scale the same way: 60% of the slowest basic scheme.
+    let min_tput =
+        loads.iter().map(|(_, m)| m.ops_per_sec()).fold(f64::INFINITY, f64::min);
+    let target = (min_tput * 0.6).max(100.0);
+    println!("fig2: loading under B1..B4 (throttled to {target:.0} OPS)...");
+    let mut tloads: Vec<(String, Metrics)> = Vec::new();
+    let mut b4_tsizes: Option<Metrics> = None;
+    for s in ALL_BASICS {
+        let (_, m) = load_fresh(cfg, s, Some(target), true);
+        if s == "B4" {
+            b4_tsizes = Some(m.clone_for_samples());
+        }
+        tloads.push((s.to_string(), m));
+    }
+    sizes_table(
+        &format!("Fig 2(d): actual sizes while loading (B4, throttled {target:.0} OPS)"),
+        cfg,
+        b4_tsizes.as_ref().unwrap(),
+        csv,
+        "fig2d_sizes",
+    );
+    traffic_table(
+        "Fig 2(e): % write traffic to SSD by category (throttled)",
+        &tloads,
+        csv,
+        "fig2e_traffic",
+    );
+    tput_table("Fig 2(f): load throughput, throttled (OPS)", &tloads, csv, "fig2f_load");
+
+    // ---- (g): reads per L3 SST under B4 --------------------------------
+    println!("fig2: B4 + skewed reads (α=0.9) for per-SST read counts...");
+    let (mut e, _) = load_fresh(cfg, "B4", None, false);
+    let m = run_phase(&mut e, cfg, Kind::C, 0.9);
+    let mut ssd_l3: Vec<(u64, u64)> = Vec::new();
+    let mut hdd_l3: Vec<(u64, u64)> = Vec::new();
+    for (sst, (lvl, dev, n)) in &m.sst_reads {
+        if *lvl == 3 {
+            match dev {
+                Dev::Ssd => ssd_l3.push((*sst, *n)),
+                Dev::Hdd => hdd_l3.push((*sst, *n)),
+            }
+        }
+    }
+    hdd_l3.sort_by_key(|(_, n)| std::cmp::Reverse(*n));
+    let mut t = Table::new(
+        "Fig 2(g): reads per SST at L3 (B4, α=0.9): SSD residents vs top-5 HDD",
+        &["sst", "device", "reads"],
+    );
+    for (sst, n) in ssd_l3.iter().take(5) {
+        t.row(vec![format!("{sst}"), "SSD".into(), format!("{n}")]);
+    }
+    for (sst, n) in hdd_l3.iter().take(5) {
+        t.row(vec![format!("{sst}"), "HDD".into(), format!("{n}")]);
+    }
+    t.emit(csv, "fig2g_sst_reads");
+
+    // ---- (h)/(i): read traffic split and read throughput ----------------
+    let mut t_h = Table::new(
+        "Fig 2(h): % read traffic to HDD",
+        &["scheme", "α=0.9", "α=1.2"],
+    );
+    let mut t_i = Table::new(
+        "Fig 2(i): read throughput (OPS)",
+        &["scheme", "α=0.9", "α=1.2"],
+    );
+    for s in ALL_BASICS {
+        println!("fig2: {s} reads at α=0.9 / α=1.2 ...");
+        let (mut e9, _) = load_fresh(cfg, s, None, false);
+        let m9 = run_phase(&mut e9, cfg, Kind::C, 0.9);
+        let (mut e12, _) = load_fresh(cfg, s, None, false);
+        let m12 = run_phase(&mut e12, cfg, Kind::C, 1.2);
+        t_h.row(vec![
+            s.to_string(),
+            fmt_pct(m9.hdd_read_fraction()),
+            fmt_pct(m12.hdd_read_fraction()),
+        ]);
+        t_i.row(vec![
+            s.to_string(),
+            format!("{:.0}", m9.ops_per_sec()),
+            format!("{:.0}", m12.ops_per_sec()),
+        ]);
+    }
+    t_h.emit(csv, "fig2h_read_traffic");
+    t_i.emit(csv, "fig2i_read_tput");
+}
+
+impl Metrics {
+    /// Shallow copy carrying only the level samples (boxplot input).
+    pub fn clone_for_samples(&self) -> Metrics {
+        let mut m = Metrics::default();
+        m.level_samples = self.level_samples.clone();
+        m
+    }
+}

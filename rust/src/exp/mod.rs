@@ -1,0 +1,50 @@
+//! Experiment harness: one driver per table/figure of the paper's
+//! evaluation (see DESIGN.md §5 for the index).
+//!
+//! | driver   | paper artefact |
+//! |----------|----------------|
+//! | `table1` | Table 1 — device statistics |
+//! | `fig2`   | Fig 2(a)–(i) — basic-scheme motivating analysis |
+//! | `exp1`   | Fig 5 — YCSB A–F |
+//! | `exp2`   | Fig 6 — technique breakdown |
+//! | `exp3`   | Fig 7 — skewness sweep |
+//! | `exp4`   | Fig 8 — read-ratio sweep |
+//! | `exp5`   | Fig 9 — SSD-size sweep |
+//! | `exp6`   | Fig 10 — migration-rate tail latencies |
+
+pub mod ablate;
+pub mod common;
+pub mod exp1;
+pub mod exp2;
+pub mod exp3;
+pub mod exp4;
+pub mod exp5;
+pub mod exp6;
+pub mod fig2;
+pub mod table1;
+
+pub use common::{ExpOpts, Profile};
+
+/// Run an experiment by name ("all" runs everything).
+pub fn run(name: &str, opts: &ExpOpts) -> anyhow::Result<()> {
+    match name {
+        "table1" => table1::run(opts.csv_dir.as_deref()),
+        "fig2" => fig2::run(opts),
+        "exp1" => exp1::run(opts),
+        "exp2" => exp2::run(opts),
+        "exp3" => exp3::run(opts),
+        "exp4" => exp4::run(opts),
+        "exp5" => exp5::run(opts),
+        "exp6" => exp6::run(opts),
+        "ablate" => ablate::run(opts),
+        "all" => {
+            for e in ["table1", "fig2", "exp1", "exp2", "exp3", "exp4", "exp5", "exp6"] {
+                run(e, opts)?;
+            }
+        }
+        other => anyhow::bail!(
+            "unknown experiment {other:?} (expected table1|fig2|exp1..exp6|all)"
+        ),
+    }
+    Ok(())
+}

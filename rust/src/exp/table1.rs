@@ -1,0 +1,100 @@
+//! Table 1: device performance statistics — fio-like QD1 microbenchmarks
+//! (1 MiB sequential reads/writes, 4 KiB random reads) on both simulated
+//! zoned devices, plus the cost figures.
+
+use crate::config::{paper, Config, MIB};
+use crate::report::Table;
+use crate::sim::{AccessKind, DeviceTimer};
+
+pub struct DeviceBench {
+    pub seq_read_mibs: f64,
+    pub seq_write_mibs: f64,
+    pub rand_read_iops: f64,
+}
+
+/// QD1 microbenchmark of one device profile.
+pub fn bench_device(profile: &crate::config::DeviceProfile) -> DeviceBench {
+    let mut t = DeviceTimer::new(profile.clone());
+    let mut now = 0u64;
+    let n = 2_000u64;
+    for _ in 0..n {
+        now = t.access(now, AccessKind::SeqRead, MIB).1;
+    }
+    let seq_read_mibs = n as f64 / (now as f64 / 1e9);
+    let mut t = DeviceTimer::new(profile.clone());
+    let mut now = 0u64;
+    for _ in 0..n {
+        now = t.access(now, AccessKind::SeqWrite, MIB).1;
+    }
+    let seq_write_mibs = n as f64 / (now as f64 / 1e9);
+    let mut t = DeviceTimer::new(profile.clone());
+    let mut now = 0u64;
+    let m = 20_000u64;
+    for _ in 0..m {
+        now = t.access(now, AccessKind::RandRead, 4096).1;
+    }
+    let rand_read_iops = m as f64 / (now as f64 / 1e9);
+    DeviceBench { seq_read_mibs, seq_write_mibs, rand_read_iops }
+}
+
+pub fn run(csv_dir: Option<&str>) {
+    let cfg = Config::default();
+    let ssd = bench_device(&cfg.ssd);
+    let hdd = bench_device(&cfg.hdd);
+    let mut t = Table::new(
+        "Table 1: device statistics (simulated QD1, 1 MiB seq / 4 KiB rand)",
+        &["metric", "ZN540 (ZNS SSD)", "paper", "ST14000 (HM-SMR HDD)", "paper"],
+    );
+    t.row(vec![
+        "seq read (MiB/s)".into(),
+        format!("{:.1}", ssd.seq_read_mibs),
+        format!("{:.1}", paper::SSD_SEQ_READ_MIBS),
+        format!("{:.1}", hdd.seq_read_mibs),
+        format!("{:.1}", paper::HDD_SEQ_READ_MIBS),
+    ]);
+    t.row(vec![
+        "seq write (MiB/s)".into(),
+        format!("{:.1}", ssd.seq_write_mibs),
+        format!("{:.1}", paper::SSD_SEQ_WRITE_MIBS),
+        format!("{:.1}", hdd.seq_write_mibs),
+        format!("{:.1}", paper::HDD_SEQ_WRITE_MIBS),
+    ]);
+    t.row(vec![
+        "rand read (IO/s)".into(),
+        format!("{:.1}", ssd.rand_read_iops),
+        format!("{:.1}", paper::SSD_RAND_READ_IOPS),
+        format!("{:.1}", hdd.rand_read_iops),
+        format!("{:.1}", paper::HDD_RAND_READ_IOPS),
+    ]);
+    t.row(vec![
+        "price (US$/GiB)".into(),
+        format!("{:.3}", paper::SSD_PRICE_GIB),
+        format!("{:.3}", paper::SSD_PRICE_GIB),
+        format!("{:.3}", paper::HDD_PRICE_GIB),
+        format!("{:.3}", paper::HDD_PRICE_GIB),
+    ]);
+    t.emit(csv_dir, "table1");
+    println!(
+        "  random-read gap: {:.1}x (paper: 147.2x); price gap: {:.1}x (paper: 13.1x)\n",
+        ssd.rand_read_iops / hdd.rand_read_iops,
+        paper::SSD_PRICE_GIB / paper::HDD_PRICE_GIB
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulated_devices_match_table1_within_5pct() {
+        let cfg = Config::default();
+        let ssd = bench_device(&cfg.ssd);
+        let hdd = bench_device(&cfg.hdd);
+        let close = |a: f64, b: f64| (a - b).abs() / b < 0.05;
+        assert!(close(ssd.seq_read_mibs, paper::SSD_SEQ_READ_MIBS), "{}", ssd.seq_read_mibs);
+        assert!(close(ssd.seq_write_mibs, paper::SSD_SEQ_WRITE_MIBS), "{}", ssd.seq_write_mibs);
+        assert!(close(ssd.rand_read_iops, paper::SSD_RAND_READ_IOPS), "{}", ssd.rand_read_iops);
+        assert!(close(hdd.seq_read_mibs, paper::HDD_SEQ_READ_MIBS), "{}", hdd.seq_read_mibs);
+        assert!(close(hdd.rand_read_iops, paper::HDD_RAND_READ_IOPS), "{}", hdd.rand_read_iops);
+    }
+}

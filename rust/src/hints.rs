@@ -1,0 +1,75 @@
+//! Hints (§3.1) — the paper's core interface between the LSM-tree KV store
+//! and the hybrid-zoned-storage middleware.
+//!
+//! Each hint is tens of bytes and is passed synchronously alongside the
+//! operation it describes. The engine forwards every hint to the active
+//! [`crate::policy::Policy`]; only HHZS consumes all three kinds.
+
+use crate::lsm::SstId;
+
+/// A flushing operation produced a new SST at L0 (§3.1).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FlushHint {
+    pub sst: SstId,
+    pub bytes: u64,
+}
+
+/// Compaction hints are issued in three phases (§3.1).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CompactionHint {
+    /// Phase (i): compaction triggered — identifies the selected input SSTs
+    /// and the output level they merge into.
+    Start { job: u64, inputs: Vec<SstId>, output_level: usize },
+    /// Phase (ii): the compaction wrote one output SST at `level`.
+    OutputSst { job: u64, sst: SstId, level: usize, bytes: u64 },
+    /// Phase (iii): compaction finished — identifies all generated SSTs.
+    Finish { job: u64, outputs: Vec<SstId>, output_level: usize },
+}
+
+/// The in-memory block cache evicted a data block (§3.1). Identifies the
+/// SST and the block's offset within it; the block contents ride along so
+/// the SSD cache can admit without re-reading the HDD.
+#[derive(Clone, Debug)]
+pub struct CacheEvictHint {
+    pub sst: SstId,
+    pub block_offset: u64,
+    pub block_len: u64,
+}
+
+/// Union of all hints the KV store can issue.
+#[derive(Clone, Debug)]
+pub enum Hint {
+    Flush(FlushHint),
+    Compaction(CompactionHint),
+    CacheEvict(CacheEvictHint),
+}
+
+impl Hint {
+    /// Approximate wire size in bytes (the paper notes hints are tens of
+    /// bytes; we track this to show the overhead is negligible).
+    pub fn wire_size(&self) -> usize {
+        match self {
+            Hint::Flush(_) => 16,
+            Hint::Compaction(CompactionHint::Start { inputs, .. }) => 24 + 8 * inputs.len(),
+            Hint::Compaction(CompactionHint::OutputSst { .. }) => 32,
+            Hint::Compaction(CompactionHint::Finish { outputs, .. }) => 24 + 8 * outputs.len(),
+            Hint::CacheEvict(_) => 24,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_sizes_are_tens_of_bytes() {
+        let h = Hint::Compaction(CompactionHint::Start {
+            job: 1,
+            inputs: vec![1, 2, 3, 4],
+            output_level: 2,
+        });
+        assert!(h.wire_size() < 100);
+        assert!(Hint::Flush(FlushHint { sst: 9, bytes: 1 }).wire_size() < 32);
+    }
+}

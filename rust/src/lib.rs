@@ -1,0 +1,35 @@
+//! # HHZS — Hinted Hybrid Zoned Storage for LSM-tree KV stores
+//!
+//! A full reproduction of *"Efficient LSM-Tree Key-Value Data Management on
+//! Hybrid SSD/HDD Zoned Storage"* (Li, Wang, Lee; 2022).
+//!
+//! The crate is organized as a three-layer system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: a discrete-event-simulated
+//!   hybrid zoned-storage substrate ([`zone`], [`sim`]), a zone-aware file
+//!   layer ([`zenfs`]), a from-scratch LSM-tree KV store ([`lsm`]), the
+//!   paper's hint bus ([`hints`]) and the three HHZS techniques plus all
+//!   baselines ([`policy`]), driven by the DES engine in [`coordinator`].
+//! * **Layer 2 (python/compile/model.py)** — JAX functions for the batched
+//!   Bloom-probe and migration-priority hot spots, AOT-lowered to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels backing those
+//!   functions; executed from Rust via the PJRT runtime in [`runtime`].
+//!
+//! The experiment harness in [`exp`] regenerates every table and figure of
+//! the paper's evaluation (Table 1, Figure 2, Exp#1–Exp#6).
+
+pub mod config;
+pub mod coordinator;
+pub mod exp;
+pub mod hints;
+pub mod lsm;
+pub mod metrics;
+pub mod policy;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod ycsb;
+pub mod zenfs;
+pub mod zone;
+
+pub use config::Config;

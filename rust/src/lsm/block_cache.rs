@@ -1,0 +1,268 @@
+//! In-memory block cache (§2.2) — an exact LRU over `(sst, block_offset)`
+//! with byte-budget capacity. Evictions are *returned to the caller* so the
+//! engine can forward them to the policy as cache hints (§3.1: the cache
+//! hint identifies the SST and the offset of the evicted data block).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::SstId;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BlockKey {
+    pub sst: SstId,
+    pub offset: u64,
+}
+
+/// An evicted block, handed to the policy as a cache hint.
+pub struct Evicted {
+    pub key: BlockKey,
+    pub data: Arc<Vec<u8>>,
+}
+
+struct Node {
+    key: BlockKey,
+    data: Arc<Vec<u8>>,
+    prev: usize,
+    next: usize,
+}
+
+const NIL: usize = usize::MAX;
+
+/// Exact LRU with O(1) get/insert via an intrusive list over a slab.
+pub struct BlockCache {
+    capacity_bytes: u64,
+    used_bytes: u64,
+    map: HashMap<BlockKey, usize>,
+    slab: Vec<Node>,
+    free: Vec<usize>,
+    head: usize, // most recent
+    tail: usize, // least recent
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl BlockCache {
+    pub fn new(capacity_bytes: u64) -> Self {
+        BlockCache {
+            capacity_bytes,
+            used_bytes: 0,
+            map: HashMap::new(),
+            slab: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn detach(&mut self, i: usize) {
+        let (p, n) = (self.slab[i].prev, self.slab[i].next);
+        if p != NIL {
+            self.slab[p].next = n;
+        } else {
+            self.head = n;
+        }
+        if n != NIL {
+            self.slab[n].prev = p;
+        } else {
+            self.tail = p;
+        }
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.slab[i].prev = NIL;
+        self.slab[i].next = self.head;
+        if self.head != NIL {
+            self.slab[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    pub fn get(&mut self, key: &BlockKey) -> Option<Arc<Vec<u8>>> {
+        if let Some(&i) = self.map.get(key) {
+            self.detach(i);
+            self.push_front(i);
+            self.hits += 1;
+            Some(self.slab[i].data.clone())
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    /// Peek without touching LRU order or counters.
+    pub fn contains(&self, key: &BlockKey) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Insert a block; returns everything evicted to make room.
+    pub fn insert(&mut self, key: BlockKey, data: Arc<Vec<u8>>) -> Vec<Evicted> {
+        let mut evicted = Vec::new();
+        if self.capacity_bytes == 0 {
+            return vec![Evicted { key, data }];
+        }
+        if let Some(&i) = self.map.get(&key) {
+            // Refresh existing.
+            self.used_bytes -= self.slab[i].data.len() as u64;
+            self.used_bytes += data.len() as u64;
+            self.slab[i].data = data;
+            self.detach(i);
+            self.push_front(i);
+            return evicted;
+        }
+        let len = data.len() as u64;
+        // Evict LRU until it fits.
+        while self.used_bytes + len > self.capacity_bytes && self.tail != NIL {
+            let t = self.tail;
+            let node_key = self.slab[t].key;
+            let node_data = self.slab[t].data.clone();
+            self.detach(t);
+            self.map.remove(&node_key);
+            self.used_bytes -= node_data.len() as u64;
+            self.free.push(t);
+            evicted.push(Evicted { key: node_key, data: node_data });
+        }
+        if len > self.capacity_bytes {
+            // Block bigger than the whole cache: pass it straight through.
+            evicted.push(Evicted { key, data });
+            return evicted;
+        }
+        let node = Node { key, data, prev: NIL, next: NIL };
+        let i = if let Some(i) = self.free.pop() {
+            self.slab[i] = node;
+            i
+        } else {
+            self.slab.push(node);
+            self.slab.len() - 1
+        };
+        self.map.insert(key, i);
+        self.push_front(i);
+        self.used_bytes += len;
+        evicted
+    }
+
+    /// Drop all blocks of an SST (called when compaction deletes it).
+    pub fn invalidate_sst(&mut self, sst: SstId) {
+        let keys: Vec<BlockKey> =
+            self.map.keys().filter(|k| k.sst == sst).copied().collect();
+        for k in keys {
+            if let Some(i) = self.map.remove(&k) {
+                self.used_bytes -= self.slab[i].data.len() as u64;
+                self.detach(i);
+                self.free.push(i);
+            }
+        }
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+    pub fn hit_rate(&self) -> f64 {
+        if self.hits + self.misses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / (self.hits + self.misses) as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blk(n: usize) -> Arc<Vec<u8>> {
+        Arc::new(vec![0u8; n])
+    }
+
+    #[test]
+    fn hit_after_insert() {
+        let mut c = BlockCache::new(10_000);
+        let k = BlockKey { sst: 1, offset: 0 };
+        c.insert(k, blk(100));
+        assert!(c.get(&k).is_some());
+        assert_eq!(c.hits, 1);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_first() {
+        let mut c = BlockCache::new(300);
+        for i in 0..3u64 {
+            c.insert(BlockKey { sst: 1, offset: i * 100 }, blk(100));
+        }
+        // Touch offset 0 so offset 100 becomes LRU.
+        c.get(&BlockKey { sst: 1, offset: 0 });
+        let ev = c.insert(BlockKey { sst: 1, offset: 900 }, blk(100));
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].key.offset, 100);
+        assert!(c.contains(&BlockKey { sst: 1, offset: 0 }));
+    }
+
+    #[test]
+    fn capacity_respected() {
+        let mut c = BlockCache::new(1000);
+        for i in 0..100u64 {
+            c.insert(BlockKey { sst: 2, offset: i }, blk(100));
+        }
+        assert!(c.used_bytes() <= 1000);
+        assert_eq!(c.len(), 10);
+    }
+
+    #[test]
+    fn oversized_block_passes_through() {
+        let mut c = BlockCache::new(100);
+        let ev = c.insert(BlockKey { sst: 1, offset: 0 }, blk(500));
+        assert_eq!(ev.len(), 1);
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn invalidate_sst_removes_only_that_sst() {
+        let mut c = BlockCache::new(10_000);
+        c.insert(BlockKey { sst: 1, offset: 0 }, blk(10));
+        c.insert(BlockKey { sst: 1, offset: 1 }, blk(10));
+        c.insert(BlockKey { sst: 2, offset: 0 }, blk(10));
+        c.invalidate_sst(1);
+        assert!(!c.contains(&BlockKey { sst: 1, offset: 0 }));
+        assert!(c.contains(&BlockKey { sst: 2, offset: 0 }));
+        assert_eq!(c.used_bytes(), 10);
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_eviction() {
+        let mut c = BlockCache::new(250);
+        c.insert(BlockKey { sst: 1, offset: 0 }, blk(100));
+        c.insert(BlockKey { sst: 1, offset: 100 }, blk(100));
+        let ev = c.insert(BlockKey { sst: 1, offset: 0 }, blk(100));
+        assert!(ev.is_empty());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_cache_bypasses() {
+        let mut c = BlockCache::new(0);
+        let ev = c.insert(BlockKey { sst: 1, offset: 0 }, blk(10));
+        assert_eq!(ev.len(), 1);
+        assert!(c.get(&BlockKey { sst: 1, offset: 0 }).is_none());
+    }
+
+    #[test]
+    fn slab_reuse_after_eviction() {
+        let mut c = BlockCache::new(200);
+        for i in 0..50u64 {
+            c.insert(BlockKey { sst: 1, offset: i }, blk(100));
+        }
+        // Slab should not have grown unboundedly.
+        assert!(c.slab.len() <= 4, "slab len = {}", c.slab.len());
+    }
+}

@@ -1,0 +1,139 @@
+//! Per-SST Bloom filter (§2.2) using double hashing over 32-bit key
+//! fingerprints.
+//!
+//! The hash scheme is shared bit-for-bit with the Pallas kernel in
+//! `python/compile/kernels/bloom.py`: `h1 = fp * 0x9E3779B1`,
+//! `h2 = fp * 0x85EBCA77 | 1`, probe `j` at `(h1 + j*h2) mod nbits`
+//! (all u32 wrap-around arithmetic). The XLA-backed prober in
+//! [`crate::runtime`] must agree with this implementation exactly — that
+//! parity is asserted by integration tests and the pytest oracle.
+
+pub const H1_MUL: u32 = 0x9E3779B1;
+pub const H2_MUL: u32 = 0x85EBCA77;
+
+#[derive(Clone, Debug)]
+pub struct Bloom {
+    words: Vec<u32>,
+    nbits: u32,
+    k: u32,
+}
+
+impl Bloom {
+    /// Number of probes for a given bits-per-key budget (ln2 * b, clamped).
+    pub fn probes_for(bits_per_key: u32) -> u32 {
+        ((bits_per_key as f64 * 0.69) as u32).clamp(1, 30)
+    }
+
+    /// Build a filter over the given key fingerprints.
+    pub fn build(fps: &[u32], bits_per_key: u32) -> Self {
+        let nbits = ((fps.len() as u64 * bits_per_key as u64).max(64)) as u32;
+        // Round up to a whole number of 32-bit words.
+        let nwords = nbits.div_ceil(32);
+        let nbits = nwords * 32;
+        let k = Self::probes_for(bits_per_key);
+        let mut b = Bloom { words: vec![0u32; nwords as usize], nbits, k };
+        for &fp in fps {
+            let h1 = fp.wrapping_mul(H1_MUL);
+            let h2 = fp.wrapping_mul(H2_MUL) | 1;
+            for j in 0..k {
+                let pos = h1.wrapping_add(j.wrapping_mul(h2)) % nbits;
+                b.words[(pos / 32) as usize] |= 1 << (pos % 32);
+            }
+        }
+        b
+    }
+
+    /// The k probe positions for a fingerprint (shared with the kernel).
+    #[inline]
+    pub fn positions(&self, fp: u32) -> impl Iterator<Item = u32> + '_ {
+        let h1 = fp.wrapping_mul(H1_MUL);
+        let h2 = fp.wrapping_mul(H2_MUL) | 1;
+        let nbits = self.nbits;
+        (0..self.k).map(move |j| h1.wrapping_add(j.wrapping_mul(h2)) % nbits)
+    }
+
+    #[inline]
+    pub fn may_contain(&self, fp: u32) -> bool {
+        for pos in self.positions(fp) {
+            if self.words[(pos / 32) as usize] & (1 << (pos % 32)) == 0 {
+                return false;
+            }
+        }
+        true
+    }
+
+    pub fn nbits(&self) -> u32 {
+        self.nbits
+    }
+    pub fn k(&self) -> u32 {
+        self.k
+    }
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+    /// Serialized size in bytes (counted into the SST file size).
+    pub fn byte_len(&self) -> usize {
+        self.words.len() * 4 + 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::rng::fingerprint32;
+
+    fn fps(n: u64, salt: u64) -> Vec<u32> {
+        (0..n).map(|i| fingerprint32(&(i * 2 + salt).to_be_bytes())).collect()
+    }
+
+    #[test]
+    fn no_false_negatives() {
+        let keys = fps(4000, 0);
+        let b = Bloom::build(&keys, 10);
+        for &fp in &keys {
+            assert!(b.may_contain(fp));
+        }
+    }
+
+    #[test]
+    fn false_positive_rate_reasonable() {
+        let keys = fps(4000, 0);
+        let b = Bloom::build(&keys, 10);
+        // Probe keys disjoint from the build set (odd salt).
+        let probes = fps(20_000, 1);
+        let fp_hits = probes.iter().filter(|&&f| b.may_contain(f)).count();
+        let rate = fp_hits as f64 / probes.len() as f64;
+        // 10 bits/key, 6 probes → theoretical ~0.9%; allow < 3%.
+        assert!(rate < 0.03, "fp rate = {rate}");
+    }
+
+    #[test]
+    fn empty_filter_has_min_size() {
+        let b = Bloom::build(&[], 10);
+        assert!(b.nbits() >= 64);
+        assert!(!b.may_contain(12345));
+    }
+
+    #[test]
+    fn k_matches_bits_per_key() {
+        assert_eq!(Bloom::probes_for(10), 6);
+        assert_eq!(Bloom::probes_for(1), 1);
+    }
+
+    #[test]
+    fn positions_deterministic_and_in_range() {
+        let b = Bloom::build(&fps(100, 0), 10);
+        let p1: Vec<u32> = b.positions(777).collect();
+        let p2: Vec<u32> = b.positions(777).collect();
+        assert_eq!(p1, p2);
+        assert_eq!(p1.len(), b.k() as usize);
+        assert!(p1.iter().all(|&p| p < b.nbits()));
+    }
+
+    #[test]
+    fn nbits_word_aligned() {
+        let b = Bloom::build(&fps(123, 0), 10);
+        assert_eq!(b.nbits() % 32, 0);
+        assert_eq!(b.words().len() as u32 * 32, b.nbits());
+    }
+}

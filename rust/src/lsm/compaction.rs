@@ -1,0 +1,179 @@
+//! Compaction merge (§2.2): k-way merge-sort of sorted entry streams,
+//! discarding shadowed versions, splitting outputs at the target SST size.
+
+use super::Entry;
+
+/// Merge sorted entry streams into one deduplicated sorted stream.
+///
+/// `streams[i]` takes precedence over `streams[j]` for equal keys when the
+/// entry's sequence number is higher (standard LSM semantics — seqnos are
+/// globally unique and monotone). Tombstones are dropped entirely when
+/// `drop_tombstones` (bottom-level compaction); otherwise they propagate.
+pub fn merge_entries(streams: Vec<Vec<Entry>>, drop_tombstones: bool) -> Vec<Entry> {
+    // Binary-heap k-way merge: smallest key first; newest seq first on ties.
+    use std::collections::BinaryHeap;
+
+    struct Item {
+        e: Entry,
+        src: usize,
+    }
+    impl PartialEq for Item {
+        fn eq(&self, other: &Self) -> bool {
+            self.e.key == other.e.key && self.e.seq == other.e.seq
+        }
+    }
+    impl Eq for Item {}
+    impl PartialOrd for Item {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Item {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            // BinaryHeap is a max-heap; we want smallest key first, and for
+            // equal keys the *newest* (highest seq) first.
+            other
+                .e
+                .key
+                .cmp(&self.e.key)
+                .then_with(|| self.e.seq.cmp(&other.e.seq))
+        }
+    }
+
+    let total: usize = streams.iter().map(|s| s.len()).sum();
+    let mut heap: BinaryHeap<Item> = BinaryHeap::with_capacity(streams.len());
+    let mut iters: Vec<std::vec::IntoIter<Entry>> =
+        streams.into_iter().map(|s| s.into_iter()).collect();
+    for (src, it) in iters.iter_mut().enumerate() {
+        if let Some(e) = it.next() {
+            heap.push(Item { e, src });
+        }
+    }
+    let mut out: Vec<Entry> = Vec::with_capacity(total);
+    let mut last_key: Option<Vec<u8>> = None;
+    while let Some(Item { e, src }) = heap.pop() {
+        if let Some(next) = iters[src].next() {
+            debug_assert!(next.key >= e.key, "input stream not sorted");
+            heap.push(Item { e: next, src });
+        }
+        let dup = last_key.as_deref() == Some(e.key.as_slice());
+        if dup {
+            continue; // older version of a key we already emitted
+        }
+        last_key = Some(e.key.clone());
+        if e.value.is_none() && drop_tombstones {
+            continue;
+        }
+        out.push(e);
+    }
+    out
+}
+
+/// Split merged entries into output SSTs of at most `sst_size` encoded
+/// bytes each; returns the entry ranges.
+pub fn split_outputs(entries: &[Entry], sst_size: u64) -> Vec<std::ops::Range<usize>> {
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    let mut bytes = 0u64;
+    for (i, e) in entries.iter().enumerate() {
+        bytes += e.encoded_len() as u64;
+        if bytes >= sst_size {
+            out.push(start..i + 1);
+            start = i + 1;
+            bytes = 0;
+        }
+    }
+    if start < entries.len() {
+        out.push(start..entries.len());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e(key: &str, seq: u64, val: Option<&str>) -> Entry {
+        Entry {
+            key: key.as_bytes().to_vec(),
+            seq,
+            value: val.map(|v| v.as_bytes().to_vec()),
+        }
+    }
+
+    #[test]
+    fn newest_version_wins() {
+        let merged = merge_entries(
+            vec![
+                vec![e("a", 5, Some("new")), e("b", 2, Some("b1"))],
+                vec![e("a", 1, Some("old")), e("c", 3, Some("c1"))],
+            ],
+            false,
+        );
+        assert_eq!(merged.len(), 3);
+        assert_eq!(merged[0], e("a", 5, Some("new")));
+        assert_eq!(merged[1], e("b", 2, Some("b1")));
+        assert_eq!(merged[2], e("c", 3, Some("c1")));
+    }
+
+    #[test]
+    fn tombstone_shadows_then_drops_at_bottom() {
+        let streams = vec![
+            vec![e("a", 9, None)],          // newer tombstone
+            vec![e("a", 1, Some("alive"))], // older put
+        ];
+        let kept = merge_entries(streams.clone(), false);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].value, None);
+        let dropped = merge_entries(streams, true);
+        assert!(dropped.is_empty());
+    }
+
+    #[test]
+    fn output_sorted_and_unique() {
+        let mut streams = Vec::new();
+        for s in 0..5u64 {
+            let v: Vec<Entry> = (0..200u64)
+                .map(|i| e(&format!("k{:05}", (i * 7 + s * 3) % 500), s * 1000 + i, Some("v")))
+                .collect();
+            let mut v = v;
+            v.sort_by(|a, b| a.key.cmp(&b.key));
+            streams.push(v);
+        }
+        let merged = merge_entries(streams, false);
+        for w in merged.windows(2) {
+            assert!(w[0].key < w[1].key, "sorted & deduped");
+        }
+    }
+
+    #[test]
+    fn merge_empty_streams() {
+        assert!(merge_entries(vec![], false).is_empty());
+        assert!(merge_entries(vec![vec![], vec![]], false).is_empty());
+    }
+
+    #[test]
+    fn split_outputs_respects_size() {
+        let entries: Vec<Entry> =
+            (0..100u64).map(|i| e(&format!("k{i:04}"), i, Some("0123456789"))).collect();
+        let per = entries[0].encoded_len() as u64;
+        let ranges = split_outputs(&entries, per * 10);
+        assert_eq!(ranges.len(), 10);
+        let covered: usize = ranges.iter().map(|r| r.len()).sum();
+        assert_eq!(covered, 100);
+        // Ranges are contiguous and ordered.
+        let mut expect = 0;
+        for r in &ranges {
+            assert_eq!(r.start, expect);
+            expect = r.end;
+        }
+    }
+
+    #[test]
+    fn split_outputs_single_when_small() {
+        let entries: Vec<Entry> = (0..5u64).map(|i| e(&format!("k{i}"), i, Some("v"))).collect();
+        let ranges = split_outputs(&entries, 1 << 20);
+        assert_eq!(ranges.len(), 1);
+        assert_eq!(ranges[0], 0..5);
+    }
+}

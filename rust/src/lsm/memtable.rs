@@ -1,0 +1,132 @@
+//! In-memory write buffer (§2.2). A `MemTable` accumulates puts/deletes
+//! until it reaches the configured size, becomes immutable, and is flushed
+//! to an L0 SSTable by a background job.
+
+use std::collections::BTreeMap;
+
+use super::{Entry, Key};
+
+/// Per-entry bookkeeping overhead charged against the memtable budget
+/// (rough skiplist-node equivalent).
+const ENTRY_OVERHEAD: usize = 48;
+
+#[derive(Default, Clone)]
+pub struct MemTable {
+    map: BTreeMap<Key, (u64, Option<Vec<u8>>)>,
+    approx_bytes: usize,
+    /// Bytes of WAL records backing this memtable (for WAL accounting).
+    pub wal_bytes: u64,
+}
+
+impl MemTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert a put or delete. Returns the net byte growth.
+    pub fn insert(&mut self, key: Key, seq: u64, value: Option<Vec<u8>>) -> usize {
+        let add = key.len() + value.as_ref().map_or(0, |v| v.len()) + ENTRY_OVERHEAD;
+        let old = self.map.insert(key, (seq, value));
+        let sub = old.map_or(0, |(_, v)| v.as_ref().map_or(0, |v| v.len()));
+        self.approx_bytes += add;
+        self.approx_bytes = self.approx_bytes.saturating_sub(sub);
+        add
+    }
+
+    /// Point lookup. `Some(None)` means "deleted here" (tombstone).
+    pub fn get(&self, key: &[u8]) -> Option<Option<&Vec<u8>>> {
+        self.map.get(key).map(|(_, v)| v.as_ref())
+    }
+
+    pub fn approx_bytes(&self) -> usize {
+        self.approx_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Drain into sorted entries for flushing.
+    pub fn into_entries(self) -> Vec<Entry> {
+        self.map
+            .into_iter()
+            .map(|(key, (seq, value))| Entry { key, seq, value })
+            .collect()
+    }
+
+    /// Range scan within the memtable (used by the merged scan path).
+    pub fn range(&self, from: &[u8], limit: usize) -> Vec<(&Key, u64, Option<&Vec<u8>>)> {
+        self.map
+            .range(from.to_vec()..)
+            .take(limit)
+            .map(|(k, (s, v))| (k, *s, v.as_ref()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get() {
+        let mut m = MemTable::new();
+        m.insert(b"a".to_vec(), 1, Some(b"va".to_vec()));
+        assert_eq!(m.get(b"a"), Some(Some(&b"va".to_vec())));
+        assert_eq!(m.get(b"b"), None);
+    }
+
+    #[test]
+    fn newer_overwrites() {
+        let mut m = MemTable::new();
+        m.insert(b"k".to_vec(), 1, Some(b"v1".to_vec()));
+        m.insert(b"k".to_vec(), 2, Some(b"v2".to_vec()));
+        assert_eq!(m.get(b"k"), Some(Some(&b"v2".to_vec())));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn tombstone_visible() {
+        let mut m = MemTable::new();
+        m.insert(b"k".to_vec(), 1, Some(b"v".to_vec()));
+        m.insert(b"k".to_vec(), 2, None);
+        assert_eq!(m.get(b"k"), Some(None));
+    }
+
+    #[test]
+    fn size_grows_with_inserts() {
+        let mut m = MemTable::new();
+        let before = m.approx_bytes();
+        for i in 0..100u32 {
+            m.insert(i.to_be_bytes().to_vec(), i as u64, Some(vec![0u8; 100]));
+        }
+        assert!(m.approx_bytes() > before + 100 * 100);
+    }
+
+    #[test]
+    fn into_entries_sorted() {
+        let mut m = MemTable::new();
+        for k in [b"c".to_vec(), b"a".to_vec(), b"b".to_vec()] {
+            m.insert(k, 1, Some(b"v".to_vec()));
+        }
+        let es = m.into_entries();
+        let keys: Vec<&[u8]> = es.iter().map(|e| e.key.as_slice()).collect();
+        assert_eq!(keys, vec![b"a".as_slice(), b"b", b"c"]);
+    }
+
+    #[test]
+    fn range_scan() {
+        let mut m = MemTable::new();
+        for i in 0..10u8 {
+            m.insert(vec![i], 1, Some(vec![i]));
+        }
+        let r = m.range(&[5], 3);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r[0].0, &vec![5u8]);
+        assert_eq!(r[2].0, &vec![7u8]);
+    }
+}

@@ -1,0 +1,301 @@
+//! SSTable format (§2.2): data blocks of ~4 KiB, an index block mapping
+//! first-keys to block offsets, and a Bloom filter over all keys.
+//!
+//! The serialized layout written to zones is
+//! `[data blocks][index block][bloom block]`; the index and Bloom filter
+//! are also kept in memory in [`SstMeta`] (as RocksDB does via pinned
+//! meta-blocks), so point reads cost exactly one data-block I/O.
+
+use std::sync::Arc;
+
+use crate::sim::rng::fingerprint32;
+
+use super::{Bloom, Entry, Key, SstId};
+
+/// Location of one data block inside the SST file.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockHandle {
+    pub offset: u64,
+    pub len: u32,
+    /// First user key in the block (index entry).
+    pub first_key: Key,
+}
+
+/// In-memory metadata for one immutable SSTable.
+#[derive(Clone, Debug)]
+pub struct SstMeta {
+    pub id: SstId,
+    pub level: usize,
+    pub smallest: Key,
+    pub largest: Key,
+    /// Total serialized file size (data + index + bloom).
+    pub file_size: u64,
+    pub num_entries: u64,
+    pub blocks: Vec<BlockHandle>,
+    pub bloom: Bloom,
+    /// Virtual creation time (ns) — the "age" input of SST priorities (§3.4).
+    pub created_at: u64,
+}
+
+impl SstMeta {
+    /// Binary-search the index for the block that may contain `key`.
+    pub fn find_block(&self, key: &[u8]) -> Option<usize> {
+        if self.blocks.is_empty() || key < self.smallest.as_slice() || key > self.largest.as_slice()
+        {
+            return None;
+        }
+        // partition_point: first block whose first_key > key, minus one.
+        let idx = self.blocks.partition_point(|b| b.first_key.as_slice() <= key);
+        if idx == 0 {
+            None
+        } else {
+            Some(idx - 1)
+        }
+    }
+
+    /// Key-range overlap test (used for compaction input selection).
+    pub fn overlaps(&self, lo: &[u8], hi: &[u8]) -> bool {
+        self.smallest.as_slice() <= hi && self.largest.as_slice() >= lo
+    }
+}
+
+/// Builds the serialized form of one SST from sorted entries.
+pub struct SstBuilder {
+    block_size: u64,
+    bits_per_key: u32,
+    data: Vec<u8>,
+    blocks: Vec<BlockHandle>,
+    cur_block_start: u64,
+    cur_block_first: Option<Key>,
+    fps: Vec<u32>,
+    smallest: Option<Key>,
+    largest: Option<Key>,
+    num_entries: u64,
+}
+
+impl SstBuilder {
+    pub fn new(block_size: u64, bits_per_key: u32) -> Self {
+        Self::with_capacity(block_size, bits_per_key, 0)
+    }
+
+    /// Pre-reserve the serialized-data buffer (hot path: compaction knows
+    /// the output SST size up front).
+    pub fn with_capacity(block_size: u64, bits_per_key: u32, data_capacity: u64) -> Self {
+        SstBuilder {
+            block_size,
+            bits_per_key,
+            data: Vec::with_capacity(data_capacity as usize),
+            blocks: Vec::new(),
+            cur_block_start: 0,
+            cur_block_first: None,
+            fps: Vec::new(),
+            smallest: None,
+            largest: None,
+            num_entries: 0,
+        }
+    }
+
+    /// Append one entry (entries MUST arrive in sorted key order).
+    pub fn add(&mut self, e: &Entry) {
+        debug_assert!(
+            self.largest.as_ref().map_or(true, |l| l.as_slice() < e.key.as_slice()),
+            "entries must be added in strictly increasing key order"
+        );
+        if self.cur_block_first.is_none() {
+            self.cur_block_first = Some(e.key.clone());
+            self.cur_block_start = self.data.len() as u64;
+        }
+        e.encode_into(&mut self.data);
+        self.fps.push(fingerprint32(&e.key));
+        if self.smallest.is_none() {
+            self.smallest = Some(e.key.clone());
+        }
+        self.largest = Some(e.key.clone());
+        self.num_entries += 1;
+        if self.data.len() as u64 - self.cur_block_start >= self.block_size {
+            self.seal_block();
+        }
+    }
+
+    fn seal_block(&mut self) {
+        if let Some(first) = self.cur_block_first.take() {
+            self.blocks.push(BlockHandle {
+                offset: self.cur_block_start,
+                len: (self.data.len() as u64 - self.cur_block_start) as u32,
+                first_key: first,
+            });
+        }
+    }
+
+    /// Current serialized data size (for output-SST size targeting).
+    pub fn data_len(&self) -> u64 {
+        self.data.len() as u64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.num_entries == 0
+    }
+
+    /// Finish: returns the in-memory meta and the full serialized bytes.
+    pub fn finish(mut self, id: SstId, level: usize, created_at: u64) -> (SstMeta, Vec<u8>) {
+        self.seal_block();
+        let bloom = Bloom::build(&self.fps, self.bits_per_key);
+        // Serialize index + bloom after the data so the file size is honest.
+        let index_bytes: usize =
+            self.blocks.iter().map(|b| 12 + b.first_key.len()).sum::<usize>() + 8;
+        let mut data = self.data;
+        data.extend(std::iter::repeat(0u8).take(index_bytes + bloom.byte_len()));
+        let meta = SstMeta {
+            id,
+            level,
+            smallest: self.smallest.unwrap_or_default(),
+            largest: self.largest.unwrap_or_default(),
+            file_size: data.len() as u64,
+            num_entries: self.num_entries,
+            blocks: self.blocks,
+            bloom,
+            created_at,
+        };
+        (meta, data)
+    }
+}
+
+/// Search a raw data block for `key`, returning the matching entry.
+pub fn search_block(block: &[u8], key: &[u8]) -> Option<Entry> {
+    let mut at = 0;
+    while let Some((e, next)) = Entry::decode_from(block, at) {
+        match e.key.as_slice().cmp(key) {
+            std::cmp::Ordering::Equal => return Some(e),
+            std::cmp::Ordering::Greater => return None, // sorted — passed it
+            std::cmp::Ordering::Less => at = next,
+        }
+    }
+    None
+}
+
+/// Decode all entries of a data block (scan path / compaction).
+pub fn decode_block(block: &[u8]) -> Vec<Entry> {
+    let mut out = Vec::new();
+    let mut at = 0;
+    while let Some((e, next)) = Entry::decode_from(block, at) {
+        out.push(e);
+        at = next;
+    }
+    out
+}
+
+/// Convenience: build an SST from sorted entries in one call.
+pub fn build_sst(
+    entries: &[Entry],
+    id: SstId,
+    level: usize,
+    block_size: u64,
+    bits_per_key: u32,
+    created_at: u64,
+) -> (Arc<SstMeta>, Vec<u8>) {
+    let mut b = SstBuilder::new(block_size, bits_per_key);
+    for e in entries {
+        b.add(e);
+    }
+    let (meta, data) = b.finish(id, level, created_at);
+    (Arc::new(meta), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entries(n: u64) -> Vec<Entry> {
+        (0..n)
+            .map(|i| Entry {
+                key: format!("user{i:08}").into_bytes(),
+                seq: i,
+                value: Some(vec![(i % 251) as u8; 100]),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn build_and_point_lookup_every_key() {
+        let es = entries(500);
+        let (meta, data) = build_sst(&es, 1, 0, 4096, 10, 0);
+        assert!(meta.blocks.len() > 5, "should split into many blocks");
+        for e in &es {
+            let bi = meta.find_block(&e.key).expect("block for key");
+            let h = &meta.blocks[bi];
+            let block = &data[h.offset as usize..(h.offset + h.len as u64) as usize];
+            let found = search_block(block, &e.key).expect("entry in block");
+            assert_eq!(&found, e);
+        }
+    }
+
+    #[test]
+    fn missing_keys_return_none() {
+        let es = entries(100);
+        let (meta, data) = build_sst(&es, 1, 0, 4096, 10, 0);
+        // Key lexically inside the range but absent.
+        let probe = b"user00000050x".to_vec();
+        if let Some(bi) = meta.find_block(&probe) {
+            let h = &meta.blocks[bi];
+            let block = &data[h.offset as usize..(h.offset + h.len as u64) as usize];
+            assert!(search_block(block, &probe).is_none());
+        }
+        // Key outside the range.
+        assert!(meta.find_block(b"zzz").is_none());
+        assert!(meta.find_block(b"aaa").is_none());
+    }
+
+    #[test]
+    fn block_sizes_near_target() {
+        let es = entries(1000);
+        let (meta, _) = build_sst(&es, 1, 0, 4096, 10, 0);
+        for h in &meta.blocks[..meta.blocks.len() - 1] {
+            assert!(h.len as u64 >= 4096, "sealed block below target");
+            assert!((h.len as u64) < 4096 + 200, "block far above target");
+        }
+    }
+
+    #[test]
+    fn file_size_includes_index_and_bloom() {
+        let es = entries(1000);
+        let (meta, data) = build_sst(&es, 1, 0, 4096, 10, 0);
+        assert_eq!(meta.file_size, data.len() as u64);
+        let data_bytes: u64 = meta.blocks.iter().map(|b| b.len as u64).sum();
+        assert!(meta.file_size > data_bytes, "index/bloom accounted");
+    }
+
+    #[test]
+    fn smallest_largest_and_overlap() {
+        let es = entries(100);
+        let (meta, _) = build_sst(&es, 1, 2, 4096, 10, 0);
+        assert_eq!(meta.smallest, b"user00000000".to_vec());
+        assert_eq!(meta.largest, b"user00000099".to_vec());
+        assert!(meta.overlaps(b"user00000050", b"user00000060"));
+        assert!(meta.overlaps(b"user", b"user00000000"));
+        assert!(!meta.overlaps(b"v", b"w"));
+    }
+
+    #[test]
+    fn decode_block_roundtrip() {
+        let es = entries(50);
+        let (meta, data) = build_sst(&es, 1, 0, 100_000_000, 10, 0);
+        assert_eq!(meta.blocks.len(), 1);
+        let h = &meta.blocks[0];
+        let block = &data[h.offset as usize..(h.offset + h.len as u64) as usize];
+        assert_eq!(decode_block(block), es);
+    }
+
+    #[test]
+    fn bloom_rejects_most_absent_keys() {
+        let es = entries(1000);
+        let (meta, _) = build_sst(&es, 1, 0, 4096, 10, 0);
+        let mut rejected = 0;
+        for i in 0..1000u64 {
+            let probe = format!("other{i:08}");
+            if !meta.bloom.may_contain(crate::sim::rng::fingerprint32(probe.as_bytes())) {
+                rejected += 1;
+            }
+        }
+        assert!(rejected > 950, "rejected={rejected}");
+    }
+}

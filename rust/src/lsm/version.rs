@@ -1,0 +1,342 @@
+//! The version set: which SSTs live at which level, target sizes, and
+//! compaction picking (§2.2).
+//!
+//! L0 files may overlap and are searched newest-first; L1+ files are
+//! key-disjoint and sorted, searched by binary partition. Target sizes
+//! follow RocksDB defaults: `target(L_i) = target(L1) * m^(i-1)` with the
+//! paper's §4.1 values (L0 = L1 = 1 GiB-scaled, m = 10).
+
+use std::sync::Arc;
+
+use super::{SstId, SstMeta};
+
+/// A picked compaction: inputs from `level`, overlapping inputs from
+/// `level + 1`, outputs go to `level + 1`.
+#[derive(Clone, Debug)]
+pub struct CompactionPick {
+    pub level: usize,
+    pub inputs_lo: Vec<Arc<SstMeta>>,
+    pub inputs_hi: Vec<Arc<SstMeta>>,
+}
+
+impl CompactionPick {
+    pub fn output_level(&self) -> usize {
+        self.level + 1
+    }
+    pub fn all_inputs(&self) -> impl Iterator<Item = &Arc<SstMeta>> {
+        self.inputs_lo.iter().chain(self.inputs_hi.iter())
+    }
+    pub fn input_ids(&self) -> Vec<SstId> {
+        self.all_inputs().map(|m| m.id).collect()
+    }
+    pub fn input_bytes(&self) -> u64 {
+        self.all_inputs().map(|m| m.file_size).sum()
+    }
+}
+
+pub struct Version {
+    /// levels[0] is L0 in flush order (oldest first; search newest-first).
+    /// levels[i>=1] sorted by smallest key, disjoint ranges.
+    levels: Vec<Vec<Arc<SstMeta>>>,
+    l0_target: u64,
+    level_multiplier: u64,
+    l0_compaction_trigger: usize,
+    /// Round-robin compaction cursor per level (RocksDB-style).
+    cursors: Vec<Vec<u8>>,
+}
+
+impl Version {
+    pub fn new(num_levels: usize, l0_target: u64, level_multiplier: u64, l0_trigger: usize) -> Self {
+        Version {
+            levels: vec![Vec::new(); num_levels],
+            l0_target,
+            level_multiplier,
+            l0_compaction_trigger: l0_trigger,
+            cursors: vec![Vec::new(); num_levels],
+        }
+    }
+
+    pub fn num_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn level(&self, i: usize) -> &[Arc<SstMeta>] {
+        &self.levels[i]
+    }
+
+    pub fn level_bytes(&self, i: usize) -> u64 {
+        self.levels[i].iter().map(|m| m.file_size).sum()
+    }
+
+    pub fn total_ssts(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).sum()
+    }
+
+    pub fn all_ssts(&self) -> impl Iterator<Item = &Arc<SstMeta>> {
+        self.levels.iter().flatten()
+    }
+
+    /// Target size of level `i` (§4.1: L0 = L1 = base; L_{i+1} = 10 × L_i).
+    pub fn target_bytes(&self, i: usize) -> u64 {
+        match i {
+            0 | 1 => self.l0_target,
+            _ => self.l0_target * self.level_multiplier.pow(i as u32 - 1),
+        }
+    }
+
+    /// Insert a flushed SST at L0.
+    pub fn add_l0(&mut self, sst: Arc<SstMeta>) {
+        debug_assert_eq!(sst.level, 0);
+        self.levels[0].push(sst);
+    }
+
+    /// Install compaction outputs and remove inputs atomically.
+    pub fn apply_compaction(
+        &mut self,
+        level: usize,
+        input_ids: &[SstId],
+        outputs: Vec<Arc<SstMeta>>,
+    ) {
+        let out_level = level + 1;
+        self.levels[level].retain(|m| !input_ids.contains(&m.id));
+        self.levels[out_level].retain(|m| !input_ids.contains(&m.id));
+        for o in outputs {
+            debug_assert_eq!(o.level, out_level);
+            self.levels[out_level].push(o);
+        }
+        self.levels[out_level].sort_by(|a, b| a.smallest.cmp(&b.smallest));
+        debug_assert!(self.disjoint(out_level));
+    }
+
+    /// Check the disjointness invariant of a level (test/debug helper).
+    pub fn disjoint(&self, level: usize) -> bool {
+        if level == 0 {
+            return true;
+        }
+        self.levels[level].windows(2).all(|w| w[0].largest < w[1].smallest)
+    }
+
+    /// Candidate SSTs for a point lookup, in search order: all overlapping
+    /// L0 files newest-first, then ≤1 file per deeper level.
+    pub fn candidates_for(&self, key: &[u8]) -> Vec<Arc<SstMeta>> {
+        let mut out = Vec::new();
+        for m in self.levels[0].iter().rev() {
+            if m.smallest.as_slice() <= key && key <= m.largest.as_slice() {
+                out.push(m.clone());
+            }
+        }
+        for lvl in self.levels.iter().skip(1) {
+            let i = lvl.partition_point(|m| m.largest.as_slice() < key);
+            if i < lvl.len() && lvl[i].smallest.as_slice() <= key {
+                out.push(lvl[i].clone());
+            }
+        }
+        out
+    }
+
+    /// SSTs at `level` overlapping `[lo, hi]`.
+    pub fn overlapping(&self, level: usize, lo: &[u8], hi: &[u8]) -> Vec<Arc<SstMeta>> {
+        self.levels[level].iter().filter(|m| m.overlaps(lo, hi)).cloned().collect()
+    }
+
+    /// Compaction score of a level (>1.0 ⇒ wants compaction).
+    pub fn score(&self, level: usize) -> f64 {
+        if level == 0 {
+            self.levels[0].len() as f64 / self.l0_compaction_trigger as f64
+        } else {
+            self.level_bytes(level) as f64 / self.target_bytes(level) as f64
+        }
+    }
+
+    /// Pick the highest-score compaction, excluding SSTs in `busy` (already
+    /// being compacted) and levels in `busy_levels`.
+    pub fn pick_compaction(
+        &mut self,
+        busy: &dyn Fn(SstId) -> bool,
+        busy_level: &dyn Fn(usize) -> bool,
+    ) -> Option<CompactionPick> {
+        let last = self.levels.len() - 1;
+        let mut best: Option<(f64, usize)> = None;
+        for lvl in 0..last {
+            if busy_level(lvl) || busy_level(lvl + 1) {
+                continue;
+            }
+            let s = self.score(lvl);
+            if s >= 1.0 && best.map_or(true, |(bs, _)| s > bs) {
+                best = Some((s, lvl));
+            }
+        }
+        let (_, level) = best?;
+        if level == 0 {
+            // Compact every L0 file (RocksDB merges all of L0 at once).
+            let inputs_lo: Vec<_> = self.levels[0].iter().cloned().collect();
+            if inputs_lo.is_empty() || inputs_lo.iter().any(|m| busy(m.id)) {
+                return None;
+            }
+            let lo = inputs_lo.iter().map(|m| m.smallest.clone()).min().unwrap();
+            let hi = inputs_lo.iter().map(|m| m.largest.clone()).max().unwrap();
+            let inputs_hi = self.overlapping(1, &lo, &hi);
+            if inputs_hi.iter().any(|m| busy(m.id)) {
+                return None;
+            }
+            return Some(CompactionPick { level: 0, inputs_lo, inputs_hi });
+        }
+        // Round-robin pick: first file with smallest > cursor, else first.
+        let files = &self.levels[level];
+        if files.is_empty() {
+            return None;
+        }
+        let cursor = &self.cursors[level];
+        let start = files.partition_point(|m| m.smallest.as_slice() <= cursor.as_slice());
+        let pick = files.get(start).or_else(|| files.first())?.clone();
+        if busy(pick.id) {
+            return None;
+        }
+        self.cursors[level] = pick.largest.clone();
+        let inputs_hi = self.overlapping(level + 1, &pick.smallest, &pick.largest);
+        if inputs_hi.iter().any(|m| busy(m.id)) {
+            return None;
+        }
+        Some(CompactionPick { level, inputs_lo: vec![pick], inputs_hi })
+    }
+
+    /// Find an SST anywhere by id.
+    pub fn find(&self, id: SstId) -> Option<Arc<SstMeta>> {
+        self.all_ssts().find(|m| m.id == id).cloned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsm::Entry;
+    use crate::lsm::sst::build_sst;
+
+    fn sst(id: SstId, level: usize, lo: u64, hi: u64) -> Arc<SstMeta> {
+        let entries: Vec<Entry> = (lo..=hi)
+            .map(|i| Entry {
+                key: format!("user{i:08}").into_bytes(),
+                seq: id * 1000 + i,
+                value: Some(vec![0u8; 16]),
+            })
+            .collect();
+        let (mut meta, _) = build_sst(&entries, id, level, 4096, 10, 0);
+        Arc::get_mut(&mut Arc::clone(&meta)); // no-op, meta is fresh
+        let mut m = (*meta).clone();
+        m.level = level;
+        Arc::new(m)
+    }
+
+    fn version() -> Version {
+        Version::new(7, 1 << 20, 10, 4)
+    }
+
+    #[test]
+    fn target_sizes_exponential() {
+        let v = version();
+        assert_eq!(v.target_bytes(0), 1 << 20);
+        assert_eq!(v.target_bytes(1), 1 << 20);
+        assert_eq!(v.target_bytes(2), 10 << 20);
+        assert_eq!(v.target_bytes(3), 100 << 20);
+    }
+
+    #[test]
+    fn l0_candidates_newest_first() {
+        let mut v = version();
+        v.add_l0(sst(1, 0, 0, 100));
+        v.add_l0(sst(2, 0, 50, 150));
+        let c = v.candidates_for(b"user00000060");
+        assert_eq!(c[0].id, 2, "newest L0 first");
+        assert_eq!(c[1].id, 1);
+    }
+
+    #[test]
+    fn deeper_levels_binary_search() {
+        let mut v = version();
+        v.apply_compaction(0, &[], vec![sst(10, 1, 0, 99), sst(11, 1, 200, 299)]);
+        let c = v.candidates_for(b"user00000250");
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].id, 11);
+        // Key in the gap between files → no candidate.
+        assert!(v.candidates_for(b"user00000150").is_empty());
+    }
+
+    #[test]
+    fn l0_score_counts_files() {
+        let mut v = version();
+        for i in 0..4 {
+            v.add_l0(sst(i, 0, i * 10, i * 10 + 5));
+        }
+        assert!(v.score(0) >= 1.0);
+    }
+
+    #[test]
+    fn pick_l0_takes_all_l0_and_overlap() {
+        let mut v = version();
+        for i in 0..4 {
+            v.add_l0(sst(i + 1, 0, 0, 100));
+        }
+        v.apply_compaction(0, &[], vec![sst(10, 1, 0, 50), sst(11, 1, 200, 250)]);
+        let p = v.pick_compaction(&|_| false, &|_| false).unwrap();
+        assert_eq!(p.level, 0);
+        assert_eq!(p.inputs_lo.len(), 4);
+        // Only the overlapping L1 file joins.
+        assert_eq!(p.inputs_hi.len(), 1);
+        assert_eq!(p.inputs_hi[0].id, 10);
+    }
+
+    #[test]
+    fn apply_compaction_removes_inputs_adds_outputs() {
+        let mut v = version();
+        for i in 0..4 {
+            v.add_l0(sst(i + 1, 0, 0, 100));
+        }
+        let p = v.pick_compaction(&|_| false, &|_| false).unwrap();
+        let ids = p.input_ids();
+        v.apply_compaction(0, &ids, vec![sst(20, 1, 0, 100)]);
+        assert_eq!(v.level(0).len(), 0);
+        assert_eq!(v.level(1).len(), 1);
+        assert_eq!(v.level(1)[0].id, 20);
+        assert!(v.disjoint(1));
+    }
+
+    #[test]
+    fn busy_inputs_block_pick() {
+        let mut v = version();
+        for i in 0..4 {
+            v.add_l0(sst(i + 1, 0, 0, 100));
+        }
+        assert!(v.pick_compaction(&|id| id == 2, &|_| false).is_none());
+        assert!(v.pick_compaction(&|_| false, &|l| l == 1).is_none());
+        assert!(v.pick_compaction(&|_| false, &|_| false).is_some());
+    }
+
+    #[test]
+    fn round_robin_cursor_advances() {
+        let mut v = version();
+        // Two oversized L1 files (target 1 MiB; each file has big values).
+        let big: Vec<Entry> = (0..3000u64)
+            .map(|i| Entry {
+                key: format!("user{i:08}").into_bytes(),
+                seq: i,
+                value: Some(vec![0u8; 400]),
+            })
+            .collect();
+        let (m1, _) = build_sst(&big[..1500], 1, 1, 4096, 10, 0);
+        let (m2, _) = build_sst(&big[1500..], 2, 1, 4096, 10, 0);
+        v.apply_compaction(0, &[], vec![m1, m2]);
+        assert!(v.score(1) >= 1.0);
+        let p1 = v.pick_compaction(&|_| false, &|_| false).unwrap();
+        let first = p1.inputs_lo[0].id;
+        let p2 = v.pick_compaction(&|_| false, &|_| false).unwrap();
+        assert_ne!(p2.inputs_lo[0].id, first, "cursor should advance");
+    }
+
+    #[test]
+    fn find_by_id() {
+        let mut v = version();
+        v.add_l0(sst(42, 0, 0, 10));
+        assert!(v.find(42).is_some());
+        assert!(v.find(43).is_none());
+    }
+}

@@ -1,0 +1,172 @@
+//! `hhzs` — the launcher.
+//!
+//! ```text
+//! hhzs exp <table1|fig2|exp1..exp6|all> [--profile quick|default|full]
+//!          [--config FILE] [--csv DIR] [--objects N] [--ops N]
+//!          [--ssd-zones N] [--alpha F] [--seed N]
+//! hhzs bench-devices                  # Table 1 microbench only
+//! hhzs demo [--n N]                   # tiny put/get/scan smoke demo
+//! hhzs config [--profile P]           # print the effective config TOML
+//! hhzs xla-check                      # load + smoke the AOT kernels
+//! ```
+//!
+//! Argument parsing is hand-rolled (no external crates are available in
+//! this offline build environment).
+
+use hhzs::exp::{self, ExpOpts, Profile};
+use hhzs::runtime::XlaKernels;
+use hhzs::Config;
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::HashMap::new();
+    let mut it = argv.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let val = if it.peek().map_or(false, |v| !v.starts_with("--")) {
+                it.next().unwrap().clone()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(name.to_string(), val);
+        } else {
+            positional.push(a.clone());
+        }
+    }
+    Args { positional, flags }
+}
+
+fn build_config(args: &Args) -> anyhow::Result<Config> {
+    let mut cfg = if let Some(path) = args.flags.get("config") {
+        Config::from_toml(path)?
+    } else {
+        let profile = args
+            .flags
+            .get("profile")
+            .map(|p| {
+                Profile::from_str(p)
+                    .ok_or_else(|| anyhow::anyhow!("bad --profile {p:?}"))
+            })
+            .transpose()?
+            .unwrap_or(Profile::Default);
+        profile.config()
+    };
+    if let Some(v) = args.flags.get("objects") {
+        cfg.workload.load_objects = v.parse()?;
+    }
+    if let Some(v) = args.flags.get("ops") {
+        cfg.workload.ops = v.parse()?;
+    }
+    if let Some(v) = args.flags.get("ssd-zones") {
+        cfg.geometry.ssd_zones = v.parse()?;
+    }
+    if let Some(v) = args.flags.get("alpha") {
+        cfg.workload.zipf_alpha = v.parse()?;
+    }
+    if let Some(v) = args.flags.get("seed") {
+        cfg.workload.seed = v.parse()?;
+    }
+    if let Some(v) = args.flags.get("clients") {
+        cfg.workload.clients = v.parse()?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let cfg = build_config(args)?;
+    let opts = ExpOpts {
+        cfg,
+        csv_dir: Some(
+            args.flags.get("csv").cloned().unwrap_or_else(|| "results".to_string()),
+        ),
+    };
+    let t0 = std::time::Instant::now();
+    exp::run(&name, &opts)?;
+    eprintln!("[exp {name} done in {:.1}s wall]", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_demo(args: &Args) -> anyhow::Result<()> {
+    use hhzs::coordinator::Engine;
+    use hhzs::policy::HhzsPolicy;
+    use hhzs::ycsb::{key_for, value_for};
+    let n: u64 = args.flags.get("n").map_or(Ok(50_000), |v| v.parse())?;
+    let cfg = build_config(args)?;
+    let mut e = Engine::new(cfg.clone(), Box::new(HhzsPolicy::new(cfg.lsm.num_levels)));
+    println!("loading {n} objects ...");
+    for i in 0..n {
+        e.put(&key_for(i, 24), &value_for(i, cfg.workload.value_size));
+    }
+    e.quiesce();
+    println!(
+        "virtual time: {} | SSTs: {} | flushes: {} | compactions: {}",
+        hhzs::sim::fmt_ns(e.now),
+        e.version.total_ssts(),
+        e.metrics.flushes,
+        e.metrics.compactions
+    );
+    let probe = key_for(n / 2, 24);
+    let v = e.get(&probe);
+    println!("get(mid key) -> {} bytes", v.map_or(0, |v| v.len()));
+    println!("scan(50) -> {} entries", e.scan(&key_for(0, 24), 50));
+    for (lvl, (ssd, all)) in e.ssd_share_by_level().iter().enumerate() {
+        if *all > 0 {
+            println!("  L{lvl}: {:.1}% on SSD", *ssd as f64 / *all as f64 * 100.0);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_xla_check() -> anyhow::Result<()> {
+    if !XlaKernels::artifacts_present("artifacts") {
+        anyhow::bail!("artifacts/ missing — run `make artifacts` first");
+    }
+    let k = XlaKernels::load("artifacts")?;
+    println!("PJRT platform: {}", k.platform());
+    let fps: Vec<u32> = (0..64).map(|i| i * 2654435761u32).collect();
+    let bloom = hhzs::lsm::Bloom::build(&fps, 10);
+    let hits = k.bloom_probe(&fps, bloom.words(), bloom.nbits(), bloom.k())?;
+    anyhow::ensure!(hits.iter().all(|&h| h), "bloom self-probe failed");
+    let scores = k.priority_scores(&[0, 3], &[10.0, 10.0], &[1.0, 1.0])?;
+    anyhow::ensure!(scores[0] > scores[1], "priority ordering failed");
+    println!("bloom_probe + priority kernels OK (AOT artifacts executable from rust)");
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: hhzs <exp|bench-devices|demo|config|xla-check> [flags]\n\
+         run `hhzs exp all --profile quick` for a fast full sweep"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = parse_args(&argv);
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("exp") => cmd_exp(&args),
+        Some("bench-devices") => {
+            hhzs::exp::table1::run(None);
+            Ok(())
+        }
+        Some("demo") => cmd_demo(&args),
+        Some("config") => {
+            let cfg = build_config(&args)?;
+            println!("{}", cfg.to_toml());
+            Ok(())
+        }
+        Some("xla-check") => cmd_xla_check(),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,167 @@
+//! Log-bucketed latency histogram (HDR-style, ~3% relative error) with
+//! O(1) record and O(buckets) quantile — used for the p99/p99.9/p99.99
+//! read-latency results in Exp#6.
+
+/// 16 sub-buckets per power of two, covering 1ns .. ~2^40ns (~18 min).
+const SUB_BITS: u32 = 4;
+const SUB: usize = 1 << SUB_BITS;
+const DECADES: usize = 41;
+const BUCKETS: usize = DECADES * SUB;
+
+#[derive(Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    pub n: u64,
+    pub sum: u128,
+    pub max: u64,
+    pub min: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { counts: vec![0; BUCKETS], n: 0, sum: 0, max: 0, min: u64::MAX }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros();
+        let decade = (msb - SUB_BITS + 1) as usize;
+        let sub = (v >> (msb - SUB_BITS)) as usize & (SUB - 1);
+        (decade * SUB + sub + SUB).min(BUCKETS - 1)
+    }
+
+    /// Representative (upper-bound) value of a bucket.
+    fn value_of(idx: usize) -> u64 {
+        if idx < SUB {
+            return idx as u64;
+        }
+        let decade = (idx - SUB) / SUB;
+        let sub = (idx - SUB) % SUB;
+        // Bucket for values in [2^m, 2^(m+1)) where m = decade + SUB_BITS - 1;
+        // each of the SUB sub-buckets spans base/SUB values.
+        let base = 1u64 << (decade as u32 + SUB_BITS - 1);
+        base + ((sub as u64 + 1) * base) / SUB as u64 - 1
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::index(v)] += 1;
+        self.n += 1;
+        self.sum += v as u128;
+        self.max = self.max.max(v);
+        self.min = self.min.min(v);
+    }
+
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.n == 0 {
+            return 0;
+        }
+        let target = ((q * self.n as f64).ceil() as u64).clamp(1, self.n);
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::value_of(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.n as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+        self.min = self.min.min(other.min);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_quantile_is_zero() {
+        let h = LogHistogram::new();
+        assert_eq!(h.quantile(0.99), 0);
+    }
+
+    #[test]
+    fn exact_small_values() {
+        let mut h = LogHistogram::new();
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        assert_eq!(h.min, 0);
+        assert_eq!(h.max, 15);
+        assert_eq!(h.quantile(1.0), 15);
+    }
+
+    #[test]
+    fn quantile_within_relative_error() {
+        let mut h = LogHistogram::new();
+        // Uniform 1..=100_000.
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let expect = (q * 100_000.0) as f64;
+            let got = h.quantile(q) as f64;
+            let rel = (got - expect).abs() / expect;
+            assert!(rel < 0.08, "q={q} got={got} expect={expect}");
+        }
+    }
+
+    #[test]
+    fn tail_sensitivity() {
+        let mut h = LogHistogram::new();
+        for _ in 0..19_997 {
+            h.record(1_000);
+        }
+        for _ in 0..3 {
+            h.record(50_000_000);
+        }
+        // p99 unaffected; p99.99 (rank 19,999 of 20,000) is an outlier.
+        assert!(h.quantile(0.99) < 2_000);
+        assert!(h.quantile(0.9999) > 40_000_000);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        a.record(10);
+        b.record(1_000_000);
+        a.merge(&b);
+        assert_eq!(a.n, 2);
+        assert_eq!(a.max, 1_000_000);
+        assert_eq!(a.min, 10);
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = LogHistogram::new();
+        h.record(100);
+        h.record(300);
+        assert!((h.mean() - 200.0).abs() < 1e-9);
+    }
+}

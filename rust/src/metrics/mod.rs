@@ -1,0 +1,203 @@
+//! Experiment metrics: latency histograms, per-category traffic splits,
+//! level-size samplers, throughput — everything Figures 2, 5–10 report.
+
+mod hist;
+
+pub use hist::LogHistogram;
+
+use crate::sim::Ns;
+use crate::zone::Dev;
+use std::collections::BTreeMap;
+
+/// What a write belonged to — drives the Fig 2(b)/(e) traffic breakdown.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum WriteCategory {
+    Wal,
+    Sst(usize), // level
+    CacheZone,
+    Migration,
+}
+
+impl WriteCategory {
+    pub fn label(&self) -> String {
+        match self {
+            WriteCategory::Wal => "WAL".into(),
+            WriteCategory::Sst(l) => format!("L{l}"),
+            WriteCategory::CacheZone => "cache".into(),
+            WriteCategory::Migration => "migr".into(),
+        }
+    }
+}
+
+/// One (category, device) traffic cell.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Cell {
+    pub bytes: u64,
+    pub ios: u64,
+}
+
+/// A periodic sample of per-level actual sizes (Fig 2(a)/(d) boxplots).
+#[derive(Clone, Debug)]
+pub struct LevelSizeSample {
+    pub at: Ns,
+    pub wal_bytes: u64,
+    pub level_bytes: Vec<u64>,
+}
+
+/// Aggregate metrics for one run.
+#[derive(Default)]
+pub struct Metrics {
+    /// Client operation latencies by kind.
+    pub read_lat: LogHistogram,
+    pub write_lat: LogHistogram,
+    pub scan_lat: LogHistogram,
+    pub ops_done: u64,
+    pub reads_done: u64,
+    pub writes_done: u64,
+    pub scans_done: u64,
+    /// Write traffic split by (category, device).
+    pub write_traffic: BTreeMap<(WriteCategory, Dev), Cell>,
+    /// Read traffic split by device (data-block reads only).
+    pub read_traffic: BTreeMap<Dev, Cell>,
+    /// SSD-cache effectiveness (§3.5).
+    pub ssd_cache_hits: u64,
+    pub ssd_cache_misses: u64,
+    pub block_cache_hits: u64,
+    pub block_cache_misses: u64,
+    pub memtable_hits: u64,
+    /// Level-size samples, taken every virtual minute during loads.
+    pub level_samples: Vec<LevelSizeSample>,
+    /// Per-SST read counts: sst id -> (level, device at last read, reads).
+    pub sst_reads: BTreeMap<u64, (usize, Dev, u64)>,
+    /// Stall accounting.
+    pub stall_ns: Ns,
+    pub stalls: u64,
+    /// Migration accounting.
+    pub migrations_cap: u64,
+    pub migrations_pop: u64,
+    pub migration_bytes: u64,
+    /// Compaction/flush accounting.
+    pub flushes: u64,
+    pub compactions: u64,
+    pub compaction_read_bytes: u64,
+    pub compaction_write_bytes: u64,
+    /// Start/end of run (virtual).
+    pub start_ns: Ns,
+    pub finished_at: Ns,
+}
+
+impl Metrics {
+    pub fn record_write(&mut self, cat: WriteCategory, dev: Dev, bytes: u64) {
+        let c = self.write_traffic.entry((cat, dev)).or_default();
+        c.bytes += bytes;
+        c.ios += 1;
+    }
+
+    pub fn record_read(&mut self, dev: Dev, bytes: u64) {
+        let c = self.read_traffic.entry(dev).or_default();
+        c.bytes += bytes;
+        c.ios += 1;
+    }
+
+    pub fn record_sst_read(&mut self, sst: u64, level: usize, dev: Dev) {
+        let e = self.sst_reads.entry(sst).or_insert((level, dev, 0));
+        e.0 = level;
+        e.1 = dev;
+        e.2 += 1;
+    }
+
+    /// Throughput in operations/virtual-second.
+    pub fn ops_per_sec(&self) -> f64 {
+        let dur = self.finished_at.saturating_sub(self.start_ns);
+        if dur == 0 {
+            return 0.0;
+        }
+        self.ops_done as f64 / (dur as f64 / 1e9)
+    }
+
+    /// Fraction of write traffic (for `cat`, or all SST+WAL when None)
+    /// that went to the SSD.
+    pub fn ssd_write_fraction(&self, cat: Option<WriteCategory>) -> f64 {
+        let mut ssd = 0u64;
+        let mut all = 0u64;
+        for ((c, d), cell) in &self.write_traffic {
+            if matches!(c, WriteCategory::CacheZone | WriteCategory::Migration) {
+                continue;
+            }
+            if let Some(want) = cat {
+                if *c != want {
+                    continue;
+                }
+            }
+            all += cell.bytes;
+            if *d == Dev::Ssd {
+                ssd += cell.bytes;
+            }
+        }
+        if all == 0 {
+            0.0
+        } else {
+            ssd as f64 / all as f64
+        }
+    }
+
+    /// Fraction of data-block read traffic served by the HDD (Fig 2(h)).
+    pub fn hdd_read_fraction(&self) -> f64 {
+        let ssd = self.read_traffic.get(&Dev::Ssd).map_or(0, |c| c.bytes);
+        let hdd = self.read_traffic.get(&Dev::Hdd).map_or(0, |c| c.bytes);
+        if ssd + hdd == 0 {
+            0.0
+        } else {
+            hdd as f64 / (ssd + hdd) as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traffic_fractions() {
+        let mut m = Metrics::default();
+        m.record_write(WriteCategory::Wal, Dev::Ssd, 100);
+        m.record_write(WriteCategory::Wal, Dev::Hdd, 300);
+        m.record_write(WriteCategory::Sst(0), Dev::Ssd, 600);
+        assert!((m.ssd_write_fraction(Some(WriteCategory::Wal)) - 0.25).abs() < 1e-9);
+        assert!((m.ssd_write_fraction(None) - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cache_and_migration_excluded_from_placement_fraction() {
+        let mut m = Metrics::default();
+        m.record_write(WriteCategory::Sst(1), Dev::Hdd, 100);
+        m.record_write(WriteCategory::CacheZone, Dev::Ssd, 1000);
+        m.record_write(WriteCategory::Migration, Dev::Ssd, 1000);
+        assert_eq!(m.ssd_write_fraction(None), 0.0);
+    }
+
+    #[test]
+    fn hdd_read_fraction() {
+        let mut m = Metrics::default();
+        m.record_read(Dev::Hdd, 75);
+        m.record_read(Dev::Ssd, 25);
+        assert!((m.hdd_read_fraction() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ops_per_sec() {
+        let mut m = Metrics::default();
+        m.ops_done = 5000;
+        m.finished_at = 2_000_000_000; // 2 virtual seconds
+        assert!((m.ops_per_sec() - 2500.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sst_read_counter_updates_location() {
+        let mut m = Metrics::default();
+        m.record_sst_read(7, 3, Dev::Hdd);
+        m.record_sst_read(7, 3, Dev::Ssd);
+        let (lvl, dev, n) = m.sst_reads[&7];
+        assert_eq!((lvl, dev, n), (3, Dev::Ssd, 2));
+    }
+}

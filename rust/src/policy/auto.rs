@@ -1,0 +1,214 @@
+//! Re-implementation of SpanDB's automated placement (AUTO) following the
+//! paper's §4.1 description:
+//!
+//! * AUTO maintains a *maximum level* `M`; all LSM-tree levels `<= M` are
+//!   placed on fast storage (the SSD).
+//! * When the SSD write throughput is below 40% of its sequential-write
+//!   bandwidth, `M` is incremented (SSD underutilized → move more levels
+//!   in); above 65%, `M` is decremented.
+//! * When the remaining SSD space is below 13.3% of the total, `M` is fixed
+//!   at 1; below 8%, no SST data is written to the SSD at all.
+//! * AUTO reserves SSD space for the WAL, as HHZS does.
+
+use crate::config::Config;
+use crate::hints::Hint;
+use crate::lsm::SstId;
+use crate::sim::Ns;
+use crate::zone::Dev;
+
+use super::{MigrationOp, Policy, SstOrigin, SstStats, View};
+
+const LOW_UTIL: f64 = 0.40;
+const HIGH_UTIL: f64 = 0.65;
+const SPACE_PIN_M1: f64 = 0.133;
+const SPACE_NO_SST: f64 = 0.08;
+
+pub struct AutoPolicy {
+    max_level: usize,
+    stats: SstStats,
+    /// (virtual time, cumulative SSD write bytes) of the last tick sample.
+    last_sample: Option<(Ns, u64)>,
+}
+
+impl AutoPolicy {
+    pub fn new() -> Self {
+        AutoPolicy { max_level: 1, stats: SstStats::default(), last_sample: None }
+    }
+
+    pub fn max_level(&self) -> usize {
+        self.max_level
+    }
+
+    fn remaining_space_frac(&self, view: &View) -> f64 {
+        let total = view.fs.ssd.num_zones() as f64;
+        let free = view.fs.ssd.empty_zone_count() as f64;
+        free / total
+    }
+}
+
+impl Default for AutoPolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for AutoPolicy {
+    fn name(&self) -> String {
+        "AUTO".into()
+    }
+
+    fn reserved_pool_zones(&self, cfg: &Config) -> u32 {
+        // "AUTO reserves the SSD space for the WAL, as in HHZS" (§4.1).
+        cfg.geometry.wal_cache_zones
+    }
+
+    fn on_hint(&mut self, _hint: &Hint, _view: &View) {}
+
+    fn on_sst_read(&mut self, sst: SstId, dev: Dev, now: Ns) {
+        self.stats.on_read(sst, dev, now);
+    }
+
+    fn on_sst_deleted(&mut self, sst: SstId) {
+        self.stats.on_deleted(sst);
+    }
+
+    fn place_sst(&mut self, level: usize, _size: u64, _origin: SstOrigin, view: &View) -> Dev {
+        let frac = self.remaining_space_frac(view);
+        if frac < SPACE_NO_SST {
+            return Dev::Hdd;
+        }
+        if frac < SPACE_PIN_M1 {
+            return if level <= 1 { Dev::Ssd } else { Dev::Hdd };
+        }
+        if level <= self.max_level {
+            Dev::Ssd
+        } else {
+            Dev::Hdd
+        }
+    }
+
+    fn pick_migration(&mut self, _view: &View) -> Option<MigrationOp> {
+        None // AUTO does not migrate data between tiers
+    }
+
+    fn tick(&mut self, now: Ns, view: &View) {
+        let written = view.fs.ssd.timer.traffic.write_bytes;
+        if let Some((t0, b0)) = self.last_sample {
+            let dt = now.saturating_sub(t0);
+            // Tune at ~1-virtual-second granularity.
+            if dt >= 1_000_000_000 {
+                let bps = (written - b0) as f64 / (dt as f64 / 1e9);
+                let util = bps / view.cfg.ssd.seq_write_bps;
+                if util < LOW_UTIL {
+                    self.max_level = (self.max_level + 1).min(view.version.num_levels() - 1);
+                } else if util > HIGH_UTIL {
+                    self.max_level = self.max_level.saturating_sub(1).max(1);
+                }
+                self.last_sample = Some((now, written));
+            }
+        } else {
+            self.last_sample = Some((now, written));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsm::Version;
+    use crate::zenfs::ZenFs;
+
+    fn setup() -> (Config, ZenFs, Version) {
+        let cfg = Config::tiny();
+        let fs = ZenFs::new(
+            cfg.geometry.ssd_zone_cap,
+            20,
+            cfg.geometry.hdd_zone_cap,
+            64,
+            cfg.ssd.clone(),
+            cfg.hdd.clone(),
+        );
+        let version = Version::new(7, 1 << 20, 10, 4);
+        (cfg, fs, version)
+    }
+
+    fn view<'a>(
+        cfg: &'a Config,
+        fs: &'a ZenFs,
+        version: &'a Version,
+        now: Ns,
+        busy: &'a dyn Fn(SstId) -> bool,
+    ) -> View<'a> {
+        View { now, cfg, fs, version, wal_zones_in_use: 0, busy_ssts: busy }
+    }
+
+    #[test]
+    fn low_utilization_raises_max_level() {
+        let (cfg, fs, version) = setup();
+        let busy = |_: SstId| false;
+        let mut p = AutoPolicy::new();
+        p.tick(0, &view(&cfg, &fs, &version, 0, &busy));
+        // No SSD writes happened → 0% utilization → M goes up.
+        p.tick(2_000_000_000, &view(&cfg, &fs, &version, 2_000_000_000, &busy));
+        assert_eq!(p.max_level(), 2);
+    }
+
+    #[test]
+    fn high_utilization_lowers_max_level() {
+        let (cfg, mut fs, version) = setup();
+        let mut p = AutoPolicy::new();
+        p.max_level = 3;
+        {
+            let busy = |_: SstId| false;
+            p.tick(0, &view(&cfg, &fs, &version, 0, &busy));
+        }
+        // Saturate the SSD for 2 virtual seconds (~100% of seq-write bw).
+        let bytes = (2.0 * cfg.ssd.seq_write_bps) as u64;
+        fs.charge(0, Dev::Ssd, crate::sim::AccessKind::SeqWrite, bytes);
+        let busy = |_: SstId| false;
+        p.tick(2_000_000_000, &view(&cfg, &fs, &version, 2_000_000_000, &busy));
+        assert_eq!(p.max_level(), 2);
+    }
+
+    #[test]
+    fn space_cutoffs_override_level() {
+        let (cfg, mut fs, version) = setup();
+        let mut p = AutoPolicy::new();
+        p.max_level = 4;
+        // Fill SSD zones until < 8% remain (20 zones → fewer than 2 free).
+        for i in 0..19u64 {
+            fs.create_file(0, i, Dev::Ssd, &[0u8; 64], true).unwrap();
+        }
+        let busy = |_: SstId| false;
+        let v = view(&cfg, &fs, &version, 0, &busy);
+        assert_eq!(p.place_sst(0, 64, SstOrigin::Flush, &v), Dev::Hdd, "below 8% → no SSTs");
+        // Free some zones into the 8–13.3% band → pinned at M=1.
+        fs.delete_file(0).unwrap();
+        fs.delete_file(1).unwrap(); // 3/20 = 15% > 13.3 → normal again
+        let v = view(&cfg, &fs, &version, 0, &busy);
+        assert_eq!(p.place_sst(4, 64, SstOrigin::Compaction, &v), Dev::Ssd);
+    }
+
+    #[test]
+    fn pinned_band_allows_only_low_levels() {
+        let (cfg, mut fs, version) = setup();
+        let mut p = AutoPolicy::new();
+        p.max_level = 4;
+        // Leave exactly 2 of 20 zones free → 10% (between 8% and 13.3%).
+        for i in 0..18u64 {
+            fs.create_file(0, i, Dev::Ssd, &[0u8; 64], true).unwrap();
+        }
+        let busy = |_: SstId| false;
+        let v = view(&cfg, &fs, &version, 0, &busy);
+        assert_eq!(p.place_sst(1, 64, SstOrigin::Compaction, &v), Dev::Ssd);
+        assert_eq!(p.place_sst(2, 64, SstOrigin::Compaction, &v), Dev::Hdd);
+    }
+
+    #[test]
+    fn never_migrates() {
+        let (cfg, fs, version) = setup();
+        let busy = |_: SstId| false;
+        let mut p = AutoPolicy::new();
+        assert!(p.pick_migration(&view(&cfg, &fs, &version, 0, &busy)).is_none());
+    }
+}

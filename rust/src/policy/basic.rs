@@ -1,0 +1,166 @@
+//! The basic data placement schemes B1–B4 (§2.3) and the B3+M ablation
+//! (§4.2 Exp#2).
+//!
+//! `Bh` stores the WAL and the SSTs at levels `L_0 .. L_{h-1}` on the SSD
+//! and everything else on the HDD. If the SSD is full, writes fall through
+//! to the HDD (no stalls, no migration) — exactly the behaviour whose
+//! limitations O1–O4 motivate HHZS.
+//!
+//! `B3+M` adds workload-aware migration restricted to the static layout:
+//! it moves SSTs at `L_0..L_{h-1}` found on the HDD back to the SSD when
+//! zones free up, but never moves higher levels to the SSD (B3 requires
+//! L3/L4 to live on the HDD).
+
+use crate::config::Config;
+use crate::hints::Hint;
+use crate::lsm::SstId;
+use crate::sim::Ns;
+use crate::zone::Dev;
+
+use super::{
+    priority_score, MigrationKind, MigrationOp, Policy, SstOrigin, SstStats, View,
+};
+
+pub struct BasicPolicy {
+    /// Level threshold `h`: levels < h go to the SSD.
+    pub h: usize,
+    /// Enable the migration ablation (B3+M in Exp#2).
+    pub migration: bool,
+    stats: SstStats,
+}
+
+impl BasicPolicy {
+    pub fn new(h: usize) -> Self {
+        BasicPolicy { h, migration: false, stats: SstStats::default() }
+    }
+
+    pub fn with_migration(h: usize) -> Self {
+        BasicPolicy { h, migration: true, stats: SstStats::default() }
+    }
+}
+
+impl Policy for BasicPolicy {
+    fn name(&self) -> String {
+        if self.migration {
+            format!("B{}+M", self.h)
+        } else {
+            format!("B{}", self.h)
+        }
+    }
+
+    fn reserved_pool_zones(&self, _cfg: &Config) -> u32 {
+        0 // basic schemes do not reserve WAL zones (§2.3)
+    }
+
+    fn on_hint(&mut self, _hint: &Hint, _view: &View) {}
+
+    fn on_sst_read(&mut self, sst: SstId, dev: Dev, now: Ns) {
+        self.stats.on_read(sst, dev, now);
+    }
+
+    fn on_sst_deleted(&mut self, sst: SstId) {
+        self.stats.on_deleted(sst);
+    }
+
+    fn place_sst(&mut self, level: usize, _size: u64, _origin: SstOrigin, _view: &View) -> Dev {
+        if level < self.h {
+            Dev::Ssd
+        } else {
+            Dev::Hdd
+        }
+    }
+
+    fn pick_migration(&mut self, view: &View) -> Option<MigrationOp> {
+        if !self.migration || view.ssd_free() == 0 {
+            return None;
+        }
+        // Highest-priority low-level SST currently stranded on the HDD.
+        let mut best: Option<(f64, SstId)> = None;
+        for lvl in 0..self.h.min(view.version.num_levels()) {
+            for m in view.version.level(lvl) {
+                if view.fs.file_dev(m.id) != Some(Dev::Hdd) || (view.busy_ssts)(m.id) {
+                    continue;
+                }
+                let score =
+                    priority_score(lvl, self.stats.read_rate(m.id, m.created_at, view.now));
+                if best.map_or(true, |(s, _)| score > s) {
+                    best = Some((score, m.id));
+                }
+            }
+        }
+        best.map(|(_, sst)| MigrationOp {
+            sst,
+            to: Dev::Ssd,
+            kind: MigrationKind::Popularity,
+            swap_with: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names() {
+        assert_eq!(BasicPolicy::new(3).name(), "B3");
+        assert_eq!(BasicPolicy::with_migration(3).name(), "B3+M");
+    }
+
+    #[test]
+    fn static_threshold_placement() {
+        let mut p = BasicPolicy::new(3);
+        // place_sst ignores the view for basic schemes; build a dummy view
+        // via the engine-free helper below is overkill — the decision is a
+        // pure function of the level.
+        // (Integration behaviour with fallback is covered in engine tests.)
+        let cfg = Config::tiny();
+        let fs = crate::zenfs::ZenFs::new(
+            cfg.geometry.ssd_zone_cap,
+            4,
+            cfg.geometry.hdd_zone_cap,
+            16,
+            cfg.ssd.clone(),
+            cfg.hdd.clone(),
+        );
+        let version = crate::lsm::Version::new(7, 1 << 20, 10, 4);
+        let busy = |_: SstId| false;
+        let view = View {
+            now: 0,
+            cfg: &cfg,
+            fs: &fs,
+            version: &version,
+            wal_zones_in_use: 0,
+            busy_ssts: &busy,
+        };
+        assert_eq!(p.place_sst(0, 1, SstOrigin::Flush, &view), Dev::Ssd);
+        assert_eq!(p.place_sst(2, 1, SstOrigin::Compaction, &view), Dev::Ssd);
+        assert_eq!(p.place_sst(3, 1, SstOrigin::Compaction, &view), Dev::Hdd);
+        assert_eq!(p.place_sst(4, 1, SstOrigin::Compaction, &view), Dev::Hdd);
+    }
+
+    #[test]
+    fn no_migration_unless_enabled() {
+        let mut p = BasicPolicy::new(3);
+        let cfg = Config::tiny();
+        let fs = crate::zenfs::ZenFs::new(
+            cfg.geometry.ssd_zone_cap,
+            4,
+            cfg.geometry.hdd_zone_cap,
+            16,
+            cfg.ssd.clone(),
+            cfg.hdd.clone(),
+        );
+        let version = crate::lsm::Version::new(7, 1 << 20, 10, 4);
+        let busy = |_: SstId| false;
+        let view = View {
+            now: 0,
+            cfg: &cfg,
+            fs: &fs,
+            version: &version,
+            wal_zones_in_use: 0,
+            busy_ssts: &busy,
+        };
+        assert!(p.pick_migration(&view).is_none());
+    }
+}

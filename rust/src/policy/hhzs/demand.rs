@@ -1,0 +1,121 @@
+//! Storage-demand tracking (§3.3 Step 1).
+//!
+//! The demand of `L_0` is the number of WAL zones currently in use (the
+//! proxy for MemTable bytes awaiting flush). The demand of `L_i (i ≥ 1)`
+//! is maintained from compaction hints:
+//!
+//! * **Start** of a compaction writing to `L_i`: demand += number of
+//!   selected input SSTs (the maximum number of SSTs the job can emit);
+//! * each **OutputSst** written to `L_i`: demand -= 1;
+//! * **Finish**: demand -= (selected − actually generated), clearing the
+//!   remainder the job did not use.
+
+use std::collections::HashMap;
+
+/// Per-level storage demand in SST units (≈ SSD zones, since one SST fills
+/// one SSD zone, §3.2).
+#[derive(Default, Debug)]
+pub struct DemandTracker {
+    /// demand[level] for levels ≥ 1 (L0 comes from WAL zones).
+    demand: Vec<i64>,
+    /// job id → (output level, selected inputs, outputs emitted so far).
+    jobs: HashMap<u64, (usize, i64, i64)>,
+}
+
+impl DemandTracker {
+    pub fn new(num_levels: usize) -> Self {
+        DemandTracker { demand: vec![0; num_levels], jobs: HashMap::new() }
+    }
+
+    pub fn on_compaction_start(&mut self, job: u64, output_level: usize, selected: usize) {
+        self.demand[output_level] += selected as i64;
+        self.jobs.insert(job, (output_level, selected as i64, 0));
+    }
+
+    pub fn on_output_sst(&mut self, job: u64, level: usize) {
+        if let Some((out_level, _, emitted)) = self.jobs.get_mut(&job) {
+            debug_assert_eq!(*out_level, level);
+            *emitted += 1;
+            self.demand[level] -= 1;
+        }
+    }
+
+    pub fn on_compaction_finish(&mut self, job: u64) {
+        if let Some((level, selected, emitted)) = self.jobs.remove(&job) {
+            // Clear the unused remainder (selected − generated).
+            self.demand[level] -= selected - emitted;
+        }
+    }
+
+    /// Demand of level `i ≥ 1` in SSTs (never negative).
+    pub fn demand(&self, level: usize) -> u32 {
+        self.demand.get(level).map_or(0, |d| (*d).max(0) as u32)
+    }
+
+    /// Number of compactions currently in flight.
+    pub fn active_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demand_lifecycle_exact_outputs() {
+        let mut d = DemandTracker::new(5);
+        d.on_compaction_start(1, 2, 4);
+        assert_eq!(d.demand(2), 4);
+        for _ in 0..4 {
+            d.on_output_sst(1, 2);
+        }
+        assert_eq!(d.demand(2), 0);
+        d.on_compaction_finish(1);
+        assert_eq!(d.demand(2), 0);
+    }
+
+    #[test]
+    fn demand_lifecycle_fewer_outputs() {
+        let mut d = DemandTracker::new(5);
+        d.on_compaction_start(7, 3, 5);
+        d.on_output_sst(7, 3);
+        d.on_output_sst(7, 3);
+        assert_eq!(d.demand(3), 3);
+        // Job finishes having produced only 2 of 5 potential SSTs.
+        d.on_compaction_finish(7);
+        assert_eq!(d.demand(3), 0);
+    }
+
+    #[test]
+    fn concurrent_jobs_same_level() {
+        let mut d = DemandTracker::new(5);
+        d.on_compaction_start(1, 2, 2);
+        d.on_compaction_start(2, 2, 3);
+        assert_eq!(d.demand(2), 5);
+        assert_eq!(d.active_jobs(), 2);
+        d.on_output_sst(2, 2);
+        assert_eq!(d.demand(2), 4);
+        d.on_compaction_finish(1);
+        assert_eq!(d.demand(2), 2);
+        d.on_compaction_finish(2);
+        assert_eq!(d.demand(2), 0);
+    }
+
+    #[test]
+    fn unknown_job_output_ignored() {
+        let mut d = DemandTracker::new(5);
+        d.on_output_sst(99, 2);
+        assert_eq!(d.demand(2), 0);
+        d.on_compaction_finish(99); // no panic
+    }
+
+    #[test]
+    fn never_negative() {
+        let mut d = DemandTracker::new(5);
+        d.on_compaction_start(1, 1, 1);
+        d.on_output_sst(1, 1);
+        d.on_output_sst(1, 1); // engine bug shouldn't wedge the tracker
+        assert_eq!(d.demand(1), 0);
+    }
+}

@@ -1,0 +1,235 @@
+//! Placement/migration/caching policies: the paper's HHZS plus all the
+//! baselines it is evaluated against (B1–B4 and SpanDB's AUTO).
+//!
+//! A [`Policy`] makes *decisions*; the DES engine in [`crate::coordinator`]
+//! executes them (allocates zones, charges I/O, runs rate-limited migration
+//! chunks). Policies receive every hint the KV store emits (§3.1) plus
+//! per-SST read notifications, and keep whatever state they need — HHZS
+//! keeps storage demands and SST read-rate mappings exactly as §3.3/§3.4
+//! describe.
+
+pub mod auto;
+pub mod basic;
+pub mod hhzs;
+
+pub use auto::AutoPolicy;
+pub use basic::BasicPolicy;
+pub use hhzs::HhzsPolicy;
+
+use std::collections::HashMap;
+
+use crate::config::Config;
+use crate::hints::Hint;
+use crate::lsm::{SstId, Version};
+use crate::sim::Ns;
+use crate::zenfs::ZenFs;
+use crate::zone::Dev;
+
+/// Where a to-be-written SST came from (flushing vs compaction — the two
+/// hint sources of §3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SstOrigin {
+    Flush,
+    Compaction,
+}
+
+/// A migration decision (§3.4). `swap_with` implements popularity
+/// migration's swap case: move `swap_with` (SSD → HDD) first to free the
+/// zone, then `sst` (HDD → SSD).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MigrationOp {
+    pub sst: SstId,
+    pub to: Dev,
+    pub kind: MigrationKind,
+    pub swap_with: Option<SstId>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MigrationKind {
+    Capacity,
+    Popularity,
+}
+
+/// Read-only view of system state handed to policy decision points.
+pub struct View<'a> {
+    pub now: Ns,
+    pub cfg: &'a Config,
+    pub fs: &'a ZenFs,
+    pub version: &'a Version,
+    /// Zones currently holding live WAL data (the §3.3 proxy for the L0
+    /// storage demand).
+    pub wal_zones_in_use: u32,
+    /// SSTs that are inputs of a running compaction (excluded from
+    /// migration per §3.4) or currently being migrated.
+    pub busy_ssts: &'a dyn Fn(SstId) -> bool,
+}
+
+impl<'a> View<'a> {
+    /// SSD zones usable for SSTs (C_ssd in §3.3).
+    pub fn c_ssd(&self) -> u32 {
+        self.fs.ssd_file_zones_total()
+    }
+
+    /// Empty SSD zones available for SSTs right now.
+    pub fn ssd_free(&self) -> u32 {
+        self.fs.ssd_file_zones_free()
+    }
+
+    /// Number of SSTs of `level` resident on the SSD (A_i in §3.3 — one
+    /// SSD zone per SST).
+    pub fn allocated_ssd(&self, level: usize) -> u32 {
+        self.version
+            .level(level)
+            .iter()
+            .filter(|m| self.fs.file_dev(m.id) == Some(Dev::Ssd))
+            .count() as u32
+    }
+}
+
+/// Per-SST read statistics used for SST priorities (§3.4): HHZS "keeps the
+/// mappings between each SST and its level, total number of reads, and age
+/// in memory".
+#[derive(Default, Clone)]
+pub struct SstStats {
+    reads: HashMap<SstId, u64>,
+    /// Sliding-window HDD read counter (for the popularity trigger).
+    window_start: Ns,
+    window_hdd_reads: u64,
+    hdd_read_rate: f64,
+}
+
+/// Window length for the HDD read-rate estimate (1 virtual second).
+const RATE_WINDOW: Ns = 1_000_000_000;
+
+impl SstStats {
+    pub fn on_read(&mut self, sst: SstId, dev: Dev, now: Ns) {
+        *self.reads.entry(sst).or_insert(0) += 1;
+        if now.saturating_sub(self.window_start) > RATE_WINDOW {
+            self.hdd_read_rate =
+                self.window_hdd_reads as f64 / (now - self.window_start).max(1) as f64 * 1e9;
+            self.window_start = now;
+            self.window_hdd_reads = 0;
+        }
+        if dev == Dev::Hdd {
+            self.window_hdd_reads += 1;
+        }
+    }
+
+    pub fn on_deleted(&mut self, sst: SstId) {
+        self.reads.remove(&sst);
+    }
+
+    pub fn reads(&self, sst: SstId) -> u64 {
+        self.reads.get(&sst).copied().unwrap_or(0)
+    }
+
+    /// Read rate in IOPS: total reads / age (§3.4).
+    pub fn read_rate(&self, sst: SstId, created_at: Ns, now: Ns) -> f64 {
+        let age_s = (now.saturating_sub(created_at)).max(1) as f64 / 1e9;
+        self.reads(sst) as f64 / age_s
+    }
+
+    /// Recent aggregate HDD read IOPS (popularity-migration trigger §3.4).
+    pub fn hdd_read_rate(&self, now: Ns) -> f64 {
+        if now.saturating_sub(self.window_start) > RATE_WINDOW {
+            // Window elapsed without updates — decay toward the live count.
+            self.window_hdd_reads as f64 / (now - self.window_start).max(1) as f64 * 1e9
+        } else {
+            self.hdd_read_rate
+                .max(self.window_hdd_reads as f64 / (now - self.window_start).max(1) as f64 * 1e9)
+        }
+    }
+}
+
+/// SST priority (§3.4): lower level ⇒ higher priority; same level ⇒ higher
+/// read rate wins. Encoded as a single f64 score (shared with the Pallas
+/// priority kernel: `score = -level * 1e12 + read_rate`).
+pub fn priority_score(level: usize, read_rate: f64) -> f64 {
+    -(level as f64) * 1e12 + read_rate
+}
+
+/// The policy interface.
+pub trait Policy {
+    fn name(&self) -> String;
+
+    /// SSD zones to reserve at startup for the WAL(+cache) pool. HHZS and
+    /// AUTO reserve `cfg.geometry.wal_cache_zones`; the basic schemes
+    /// reserve none (§2.3 writes the WAL to any empty SSD zone).
+    fn reserved_pool_zones(&self, cfg: &Config) -> u32;
+
+    /// Application-hinted SSD caching enabled (§3.5)?
+    fn ssd_cache_enabled(&self) -> bool {
+        false
+    }
+
+    /// Receive a hint from the KV store (§3.1).
+    fn on_hint(&mut self, hint: &Hint, view: &View);
+
+    /// A data block of `sst` was read from `dev`.
+    fn on_sst_read(&mut self, sst: SstId, dev: Dev, now: Ns);
+
+    /// An SST was deleted (compaction inputs reclaimed).
+    fn on_sst_deleted(&mut self, sst: SstId);
+
+    /// Choose the device for a new SST of `level` (fallback to HDD when the
+    /// chosen device has no empty zones is applied by the engine).
+    fn place_sst(&mut self, level: usize, size: u64, origin: SstOrigin, view: &View) -> Dev;
+
+    /// Choose the device for new WAL zone allocation in dynamic-WAL mode
+    /// (basic schemes). Reserved-pool policies never get asked.
+    fn place_wal(&mut self, view: &View) -> Dev {
+        if view.ssd_free() > 0 {
+            Dev::Ssd
+        } else {
+            Dev::Hdd
+        }
+    }
+
+    /// Migration decision point, called on each policy tick while the
+    /// migration actor is idle (§3.4).
+    fn pick_migration(&mut self, view: &View) -> Option<MigrationOp>;
+
+    /// Periodic tick (AUTO uses it for throughput-threshold tuning).
+    fn tick(&mut self, _now: Ns, _view: &View) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_lower_level_always_wins() {
+        assert!(priority_score(0, 0.0) > priority_score(1, 1e9));
+        assert!(priority_score(2, 5.0) > priority_score(3, 1e6));
+    }
+
+    #[test]
+    fn priority_same_level_read_rate_breaks_tie() {
+        assert!(priority_score(3, 100.0) > priority_score(3, 1.0));
+    }
+
+    #[test]
+    fn sst_stats_read_rate() {
+        let mut s = SstStats::default();
+        for _ in 0..100 {
+            s.on_read(7, Dev::Hdd, 1_000_000);
+        }
+        // 100 reads over 2 seconds of age = 50 IOPS.
+        let rate = s.read_rate(7, 0, 2_000_000_000);
+        assert!((rate - 50.0).abs() < 1.0, "rate={rate}");
+        s.on_deleted(7);
+        assert_eq!(s.reads(7), 0);
+    }
+
+    #[test]
+    fn hdd_rate_window() {
+        let mut s = SstStats::default();
+        // 200 HDD reads within the first second.
+        for i in 0..200u64 {
+            s.on_read(1, Dev::Hdd, i * 5_000_000);
+        }
+        // Trigger a window rollover past 1s.
+        s.on_read(1, Dev::Ssd, 1_200_000_000);
+        assert!(s.hdd_read_rate(1_200_000_000) > 100.0);
+    }
+}

@@ -1,0 +1,137 @@
+//! Plain-text table / CSV rendering for the experiment harness (no
+//! external crates in this environment).
+
+/// A simple column-aligned text table with a CSV twin.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let line = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &w));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (w.len() - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &w));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.headers.join(","));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print the table and optionally write the CSV beside it.
+    pub fn emit(&self, csv_dir: Option<&str>, name: &str) {
+        println!("{}", self.render());
+        if let Some(dir) = csv_dir {
+            let _ = std::fs::create_dir_all(dir);
+            let path = format!("{dir}/{name}.csv");
+            if std::fs::write(&path, self.to_csv()).is_ok() {
+                println!("  [csv: {path}]");
+            }
+        }
+    }
+}
+
+/// Human format helpers.
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let bf = b as f64;
+    if bf >= K * K * K {
+        format!("{:.2}GiB", bf / K / K / K)
+    } else if bf >= K * K {
+        format!("{:.2}MiB", bf / K / K)
+    } else if bf >= K {
+        format!("{:.2}KiB", bf / K)
+    } else {
+        format!("{b}B")
+    }
+}
+
+pub fn fmt_pct(f: f64) -> String {
+    format!("{:.1}%", f * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["scheme", "ops"]);
+        t.row(vec!["B3".into(), "9000".into()]);
+        t.row(vec!["HHZS".into(), "12000".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.contains("B3"));
+        assert!(r.lines().count() >= 5);
+    }
+
+    #[test]
+    fn csv_roundtrips_cells() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.00KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00MiB");
+        assert_eq!(fmt_pct(0.123), "12.3%");
+    }
+}

@@ -1,0 +1,197 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` (Layer 2 JAX functions wrapping the Layer 1
+//! Pallas kernels) and executes them from the Rust hot path.
+//!
+//! The interchange format is HLO **text** — jax ≥ 0.5 emits serialized
+//! protos with 64-bit instruction ids that the pinned xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md
+//! and python/compile/aot.py).
+//!
+//! Shapes are fixed at AOT time and padded by the callers here; the
+//! constants below must match `python/compile/model.py`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Batch of fingerprints per bloom-probe call (`model.BLOOM_BATCH`).
+pub const BLOOM_BATCH: usize = 128;
+/// Padded filter size in u32 words (`model.BLOOM_WORDS`). Filters larger
+/// than this fall back to the native prober.
+pub const BLOOM_WORDS: usize = 8192;
+/// Padded SST count per priority-scoring call (`model.PRIORITY_N`).
+pub const PRIORITY_N: usize = 1024;
+
+/// Compiled XLA executables backing the two kernel entry points.
+pub struct XlaKernels {
+    client: xla::PjRtClient,
+    bloom: xla::PjRtLoadedExecutable,
+    priority: xla::PjRtLoadedExecutable,
+    /// Wall-clock dispatch counters (perf accounting, EXPERIMENTS.md §Perf).
+    pub bloom_calls: std::cell::Cell<u64>,
+    pub priority_calls: std::cell::Cell<u64>,
+}
+
+impl XlaKernels {
+    /// Load both kernels from `dir` (normally `artifacts/`). Returns an
+    /// error if the artifacts are missing — callers treat that as "run
+    /// with native kernels".
+    pub fn load(dir: &str) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let bloom = Self::compile(&client, &format!("{dir}/bloom_probe.hlo.txt"))?;
+        let priority = Self::compile(&client, &format!("{dir}/priority.hlo.txt"))?;
+        Ok(XlaKernels {
+            client,
+            bloom,
+            priority,
+            bloom_calls: std::cell::Cell::new(0),
+            priority_calls: std::cell::Cell::new(0),
+        })
+    }
+
+    /// True if the artifact files exist (cheap check before `load`).
+    pub fn artifacts_present(dir: &str) -> bool {
+        Path::new(&format!("{dir}/bloom_probe.hlo.txt")).exists()
+            && Path::new(&format!("{dir}/priority.hlo.txt")).exists()
+    }
+
+    fn compile(client: &xla::PjRtClient, path: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("load HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).with_context(|| format!("compile {path}"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Probe `fps` (≤ BLOOM_BATCH fingerprints) against one Bloom filter
+    /// given as `words` (≤ BLOOM_WORDS u32 words) with `nbits` live bits
+    /// and `k` probes. Returns one bool per input fingerprint.
+    pub fn bloom_probe(&self, fps: &[u32], words: &[u32], nbits: u32, k: u32) -> Result<Vec<bool>> {
+        anyhow::ensure!(fps.len() <= BLOOM_BATCH, "fps batch too large");
+        anyhow::ensure!(words.len() <= BLOOM_WORDS, "filter too large for AOT shape");
+        let mut fps_pad = [0u32; BLOOM_BATCH];
+        fps_pad[..fps.len()].copy_from_slice(fps);
+        let mut words_pad = vec![0u32; BLOOM_WORDS];
+        words_pad[..words.len()].copy_from_slice(words);
+        let x_fps = xla::Literal::vec1(&fps_pad[..]);
+        let x_words = xla::Literal::vec1(&words_pad);
+        let x_nbits = xla::Literal::scalar(nbits);
+        let x_k = xla::Literal::scalar(k);
+        let result = self
+            .bloom
+            .execute::<xla::Literal>(&[x_fps, x_words, x_nbits, x_k])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let hits = out.to_vec::<i32>()?;
+        self.bloom_calls.set(self.bloom_calls.get() + 1);
+        Ok(hits[..fps.len()].iter().map(|&h| h != 0).collect())
+    }
+
+    /// Score up to PRIORITY_N SSTs: `score = -level * 1e12 + reads / age`
+    /// (§3.4 priorities; identical to `crate::policy::priority_score`,
+    /// computed in f64 by the kernel for read-rate tie-break resolution).
+    pub fn priority_scores(
+        &self,
+        levels: &[i32],
+        reads: &[f32],
+        ages_s: &[f32],
+    ) -> Result<Vec<f64>> {
+        let n = levels.len();
+        anyhow::ensure!(n == reads.len() && n == ages_s.len(), "length mismatch");
+        anyhow::ensure!(n <= PRIORITY_N, "too many SSTs for AOT shape");
+        let mut l = vec![0i32; PRIORITY_N];
+        let mut r = vec![0f32; PRIORITY_N];
+        let mut a = vec![1f32; PRIORITY_N];
+        l[..n].copy_from_slice(levels);
+        r[..n].copy_from_slice(reads);
+        a[..n].copy_from_slice(ages_s);
+        let result = self
+            .priority
+            .execute::<xla::Literal>(&[
+                xla::Literal::vec1(&l),
+                xla::Literal::vec1(&r),
+                xla::Literal::vec1(&a),
+            ])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let scores = out.to_vec::<f64>()?;
+        self.priority_calls.set(self.priority_calls.get() + 1);
+        Ok(scores[..n].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsm::Bloom;
+    use crate::policy::priority_score;
+    use crate::sim::rng::fingerprint32;
+
+    fn kernels() -> Option<XlaKernels> {
+        if !XlaKernels::artifacts_present("artifacts") {
+            eprintln!("skipping XLA test: artifacts/ not built (run `make artifacts`)");
+            return None;
+        }
+        Some(XlaKernels::load("artifacts").expect("load artifacts"))
+    }
+
+    #[test]
+    fn bloom_parity_with_native() {
+        let Some(k) = kernels() else { return };
+        let fps: Vec<u32> = (0..1000u64).map(|i| fingerprint32(&i.to_be_bytes())).collect();
+        let bloom = Bloom::build(&fps, 10);
+        assert!(bloom.words().len() <= BLOOM_WORDS);
+        // Probe a mix of present and absent fingerprints.
+        let probes: Vec<u32> =
+            (0..64u64).map(|i| fingerprint32(&(i * 37 + 1).to_be_bytes())).collect();
+        let xla_hits =
+            k.bloom_probe(&probes, bloom.words(), bloom.nbits(), bloom.k()).unwrap();
+        for (i, fp) in probes.iter().enumerate() {
+            assert_eq!(
+                xla_hits[i],
+                bloom.may_contain(*fp),
+                "parity mismatch at fp {fp:#x}"
+            );
+        }
+    }
+
+    #[test]
+    fn bloom_no_false_negatives_via_xla() {
+        let Some(k) = kernels() else { return };
+        let fps: Vec<u32> = (0..500u64).map(|i| fingerprint32(&i.to_be_bytes())).collect();
+        let bloom = Bloom::build(&fps, 10);
+        let hits = k.bloom_probe(&fps[..128], bloom.words(), bloom.nbits(), bloom.k()).unwrap();
+        assert!(hits.iter().all(|&h| h), "XLA prober must not produce false negatives");
+    }
+
+    #[test]
+    fn priority_parity_with_native() {
+        let Some(k) = kernels() else { return };
+        let levels = vec![0i32, 1, 2, 3, 3, 4];
+        let reads = vec![10f32, 200.0, 5.0, 1000.0, 10.0, 0.0];
+        let ages = vec![1f32, 2.0, 1.0, 4.0, 1.0, 10.0];
+        let scores = k.priority_scores(&levels, &reads, &ages).unwrap();
+        for i in 0..levels.len() {
+            let native = priority_score(levels[i] as usize, reads[i] as f64 / ages[i] as f64);
+            let rel = (scores[i] - native).abs() / native.abs().max(1.0);
+            assert!(rel < 1e-9, "i={i} xla={} native={}", scores[i], native);
+        }
+        // Ordering agrees: L3 with 250 IOPS beats L3 with 10 IOPS; any L2
+        // beats any L3.
+        assert!(scores[3] > scores[4]);
+        assert!(scores[2] > scores[3]);
+    }
+
+    #[test]
+    fn oversized_inputs_rejected() {
+        let Some(k) = kernels() else { return };
+        let big = vec![0u32; BLOOM_BATCH + 1];
+        assert!(k.bloom_probe(&big, &[0u32; 4], 128, 6).is_err());
+        let levels = vec![0i32; PRIORITY_N + 1];
+        let f = vec![0f32; PRIORITY_N + 1];
+        assert!(k.priority_scores(&levels, &f, &f).is_err());
+    }
+}

@@ -1,0 +1,48 @@
+//! Discrete-event-simulation substrate: virtual clock, deterministic RNG,
+//! key-distribution generators, and the zoned-device service-time model.
+//!
+//! Everything in the reproduction runs under a *virtual* nanosecond clock.
+//! Device accesses charge service time against a QD1 FIFO server per device
+//! (`DeviceTimer`), which is how contention — compaction vs. foreground
+//! reads, migration interference (Exp#6) — emerges without real hardware.
+
+pub mod device;
+pub mod rng;
+pub mod zipf;
+
+pub use device::{AccessKind, DeviceTimer};
+pub use rng::Rng;
+pub use zipf::{KeyChooser, Latest, Uniform, Zipf};
+
+/// Virtual time in nanoseconds.
+pub type Ns = u64;
+
+pub const SECOND: Ns = 1_000_000_000;
+pub const MILLI: Ns = 1_000_000;
+pub const MICRO: Ns = 1_000;
+
+/// Format a virtual duration for reports.
+pub fn fmt_ns(ns: Ns) -> String {
+    if ns >= SECOND {
+        format!("{:.2}s", ns as f64 / SECOND as f64)
+    } else if ns >= MILLI {
+        format!("{:.2}ms", ns as f64 / MILLI as f64)
+    } else if ns >= MICRO {
+        format!("{:.2}us", ns as f64 / MICRO as f64)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(5), "5ns");
+        assert_eq!(fmt_ns(5_000), "5.00us");
+        assert_eq!(fmt_ns(5_000_000), "5.00ms");
+        assert_eq!(fmt_ns(5_000_000_000), "5.00s");
+    }
+}

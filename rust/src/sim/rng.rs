@@ -1,0 +1,139 @@
+//! Deterministic xorshift64* RNG + FNV-1a hashing.
+//!
+//! No external RNG crate: determinism across runs is a requirement for the
+//! DES (same seed → bit-identical experiment output), and the generators
+//! here are exactly reproducible from the seed recorded in EXPERIMENTS.md.
+
+/// xorshift64* — fast, decent-quality 64-bit PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero state; mix the seed through splitmix64.
+        let mut z = seed.wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        Rng { state: (z ^ (z >> 31)) | 1 }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, n).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Multiply-shift rejection-free mapping (Lemire); bias is
+        // negligible for our n ≪ 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Fork an independent stream (for per-client RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+}
+
+/// FNV-1a 64-bit hash — used to scatter YCSB item numbers over the keyspace
+/// so Zipf-hot keys land in distinct SSTs (matches YCSB's hashed insert
+/// order, which is what makes O4's "hot SSTs" phenomenon appear).
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001B3);
+    }
+    h
+}
+
+/// FNV-1a over a u64 (item number) without materializing bytes.
+#[inline]
+pub fn fnv1a_u64(v: u64) -> u64 {
+    fnv1a(&v.to_le_bytes())
+}
+
+/// 32-bit key fingerprint used by the Bloom filters (both the Rust-native
+/// and the XLA/Pallas implementations hash this same fingerprint).
+#[inline]
+pub fn fingerprint32(key: &[u8]) -> u32 {
+    let h = fnv1a(key);
+    ((h >> 32) ^ h) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn next_below_in_range() {
+        let mut r = Rng::new(1);
+        for n in [1u64, 2, 7, 1000, 1 << 40] {
+            for _ in 0..200 {
+                assert!(r.next_below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn next_f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut root = Rng::new(9);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn fnv_known_vector() {
+        // FNV-1a("a") = 0xaf63dc4c8601ec8c
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+    }
+
+    #[test]
+    fn fingerprint_spreads() {
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000u64 {
+            seen.insert(fingerprint32(&i.to_be_bytes()));
+        }
+        assert!(seen.len() > 9_990);
+    }
+}

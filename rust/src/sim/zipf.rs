@@ -1,0 +1,213 @@
+//! YCSB-style key choosers: Zipfian, Latest, Uniform.
+//!
+//! The Zipfian generator follows the YCSB / Gray et al. "quick zipf"
+//! algorithm: O(1) sampling after an O(n)-ish zeta precomputation, with
+//! incremental zeta extension when the item count grows (needed by the
+//! Latest distribution during loads).
+
+use super::rng::Rng;
+
+/// A distribution over item indices `[0, n)`.
+pub trait KeyChooser {
+    /// Draw an item index.
+    fn next(&mut self, rng: &mut Rng) -> u64;
+    /// Number of items covered.
+    fn n(&self) -> u64;
+}
+
+/// Uniform over `[0, n)`.
+#[derive(Clone, Debug)]
+pub struct Uniform {
+    n: u64,
+}
+
+impl Uniform {
+    pub fn new(n: u64) -> Self {
+        assert!(n > 0);
+        Uniform { n }
+    }
+}
+
+impl KeyChooser for Uniform {
+    fn next(&mut self, rng: &mut Rng) -> u64 {
+        rng.next_below(self.n)
+    }
+    fn n(&self) -> u64 {
+        self.n
+    }
+}
+
+/// Zipfian over `[0, n)` with exponent `theta` (the paper's α).
+///
+/// Item 0 is the most popular. Callers that want popularity scattered over
+/// the keyspace (as YCSB does) hash the returned rank.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    zeta2: f64,
+    eta: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0);
+        assert!(theta > 0.0 && theta < 10.0 && (theta - 1.0).abs() > 1e-9);
+        let zetan = Self::zeta_static(0, n, theta, 0.0);
+        let zeta2 = Self::zeta_static(0, 2, theta, 0.0);
+        let mut z = Zipf { n, theta, alpha: 1.0 / (1.0 - theta), zetan, zeta2, eta: 0.0 };
+        z.update_eta();
+        z
+    }
+
+    fn update_eta(&mut self) {
+        self.eta = (1.0 - (2.0 / self.n as f64).powf(1.0 - self.theta))
+            / (1.0 - self.zeta2 / self.zetan);
+    }
+
+    fn zeta_static(from: u64, to: u64, theta: f64, base: f64) -> f64 {
+        let mut sum = base;
+        for i in from..to {
+            sum += 1.0 / ((i + 1) as f64).powf(theta);
+        }
+        sum
+    }
+
+    /// Extend the range to `n2 > n` incrementally (Latest distribution).
+    pub fn grow(&mut self, n2: u64) {
+        if n2 <= self.n {
+            return;
+        }
+        self.zetan = Self::zeta_static(self.n, n2, self.theta, self.zetan);
+        self.n = n2;
+        self.update_eta();
+    }
+}
+
+impl KeyChooser for Zipf {
+    fn next(&mut self, rng: &mut Rng) -> u64 {
+        let u = rng.next_f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let v = ((self.eta * u) - self.eta + 1.0).powf(self.alpha);
+        let idx = (self.n as f64 * v) as u64;
+        idx.min(self.n - 1)
+    }
+    fn n(&self) -> u64 {
+        self.n
+    }
+}
+
+/// YCSB "latest" distribution: Zipfian over recency — item `n-1-z` where
+/// `z` is Zipfian-distributed, so the most recently inserted keys are the
+/// most popular (workload D).
+#[derive(Clone, Debug)]
+pub struct Latest {
+    zipf: Zipf,
+}
+
+impl Latest {
+    pub fn new(n: u64, theta: f64) -> Self {
+        Latest { zipf: Zipf::new(n, theta) }
+    }
+    /// Account for a newly inserted item.
+    pub fn grow(&mut self, n2: u64) {
+        self.zipf.grow(n2);
+    }
+}
+
+impl KeyChooser for Latest {
+    fn next(&mut self, rng: &mut Rng) -> u64 {
+        let z = self.zipf.next(rng);
+        self.zipf.n() - 1 - z
+    }
+    fn n(&self) -> u64 {
+        self.zipf.n()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn head_mass(theta: f64, n: u64, draws: usize, head: u64) -> f64 {
+        let mut z = Zipf::new(n, theta);
+        let mut rng = Rng::new(11);
+        let mut hits = 0usize;
+        for _ in 0..draws {
+            if z.next(&mut rng) < head {
+                hits += 1;
+            }
+        }
+        hits as f64 / draws as f64
+    }
+
+    #[test]
+    fn zipf_in_range() {
+        let mut z = Zipf::new(1000, 0.9);
+        let mut rng = Rng::new(5);
+        for _ in 0..10_000 {
+            assert!(z.next(&mut rng) < 1000);
+        }
+    }
+
+    #[test]
+    fn higher_theta_is_more_skewed() {
+        let m09 = head_mass(0.9, 100_000, 50_000, 100);
+        let m12 = head_mass(1.2, 100_000, 50_000, 100);
+        assert!(m12 > m09 + 0.1, "m09={m09} m12={m12}");
+    }
+
+    #[test]
+    fn zipf_head_mass_roughly_theoretical() {
+        // For theta=0.99, n=1000: P(top-10) ≈ zeta_10/zeta_1000.
+        let theta = 0.99;
+        let n = 1000u64;
+        let z10 = Zipf::zeta_static(0, 10, theta, 0.0);
+        let zn = Zipf::zeta_static(0, n, theta, 0.0);
+        let expect = z10 / zn;
+        let got = head_mass(theta, n, 200_000, 10);
+        assert!((got - expect).abs() < 0.03, "got={got} expect={expect}");
+    }
+
+    #[test]
+    fn latest_prefers_recent() {
+        let mut l = Latest::new(10_000, 0.9);
+        let mut rng = Rng::new(3);
+        let mut recent = 0;
+        for _ in 0..10_000 {
+            if l.next(&mut rng) >= 9_000 {
+                recent += 1;
+            }
+        }
+        assert!(recent > 6_000, "recent={recent}");
+    }
+
+    #[test]
+    fn grow_extends_range() {
+        let mut z = Zipf::new(10, 0.9);
+        z.grow(1000);
+        assert_eq!(z.n(), 1000);
+        let mut rng = Rng::new(1);
+        let saw_big = (0..20_000).any(|_| z.next(&mut rng) >= 10);
+        assert!(saw_big);
+    }
+
+    #[test]
+    fn uniform_covers_range() {
+        let mut u = Uniform::new(16);
+        let mut rng = Rng::new(2);
+        let mut seen = [false; 16];
+        for _ in 0..1000 {
+            seen[u.next(&mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,416 @@
+//! YCSB workload generator (§4.1): the load phase plus core workloads A–F
+//! and the parameterized read/write mixes used by Exp#2–Exp#5.
+//!
+//! Keys follow YCSB's scrambled scheme: item ranks drawn from a Zipf(α)
+//! distribution are FNV-hashed onto the key space, so popularity is
+//! scattered across SSTs — the effect behind the paper's "hot SSTs on the
+//! HDD" observation (O4). Keys are `user` + 20 hashed digits = 24 bytes;
+//! values are `value_size` deterministic bytes.
+
+use crate::coordinator::{Op, OpSource};
+use crate::sim::rng::{fnv1a_u64, Rng};
+use crate::sim::zipf::{KeyChooser, Latest, Uniform, Zipf};
+
+/// Which workload to generate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kind {
+    /// Insert all `records` keys (the load phase).
+    Load,
+    /// 50% reads / 50% updates, Zipf.
+    A,
+    /// 95% reads / 5% updates, Zipf.
+    B,
+    /// 100% reads, Zipf.
+    C,
+    /// 95% latest-reads / 5% inserts.
+    D,
+    /// 95% scans / 5% inserts; scan length uniform 1–100.
+    E,
+    /// 50% reads / 50% read-modify-writes, Zipf.
+    F,
+    /// `read_pct`% reads, rest updates, Zipf (Exp#2–Exp#5 mixes).
+    Mixed { read_pct: u32 },
+}
+
+impl Kind {
+    pub fn label(&self) -> String {
+        match self {
+            Kind::Load => "load".into(),
+            Kind::A => "A".into(),
+            Kind::B => "B".into(),
+            Kind::C => "C".into(),
+            Kind::D => "D".into(),
+            Kind::E => "E".into(),
+            Kind::F => "F".into(),
+            Kind::Mixed { read_pct } => format!("r{read_pct}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Spec {
+    pub kind: Kind,
+    /// Number of records loaded before the workload runs.
+    pub records: u64,
+    /// Total operations across all clients.
+    pub ops: u64,
+    pub alpha: f64,
+    pub key_size: usize,
+    pub value_size: usize,
+    pub seed: u64,
+}
+
+impl Spec {
+    pub fn from_config(cfg: &crate::config::Config, kind: Kind) -> Self {
+        Spec {
+            kind,
+            records: cfg.workload.load_objects,
+            ops: if kind == Kind::Load { cfg.workload.load_objects } else { cfg.workload.ops },
+            alpha: cfg.workload.zipf_alpha,
+            key_size: cfg.workload.key_size,
+            value_size: cfg.workload.value_size,
+            seed: cfg.workload.seed,
+        }
+    }
+}
+
+/// Deterministic 24-byte key for item `i` (hashed digits — YCSB order
+/// scrambling, so loads insert in key-random order).
+pub fn key_for(i: u64, key_size: usize) -> Vec<u8> {
+    let mut k = format!("user{:020}", fnv1a_u64(i));
+    k.truncate(key_size.max(8));
+    k.into_bytes()
+}
+
+/// Deterministic value bytes for item `i`.
+pub fn value_for(i: u64, value_size: usize) -> Vec<u8> {
+    let b = (fnv1a_u64(i ^ 0xA1B2_C3D4) % 251) as u8;
+    vec![b; value_size]
+}
+
+enum Chooser {
+    Zipf(Zipf),
+    Latest(Latest),
+    Uniform(Uniform),
+}
+
+impl Chooser {
+    fn next(&mut self, rng: &mut Rng) -> u64 {
+        match self {
+            Chooser::Zipf(z) => z.next(rng),
+            Chooser::Latest(l) => l.next(rng),
+            Chooser::Uniform(u) => u.next(rng),
+        }
+    }
+    fn grow(&mut self, n: u64) {
+        match self {
+            Chooser::Latest(l) => l.grow(n),
+            Chooser::Zipf(z) => z.grow(n),
+            Chooser::Uniform(_) => {}
+        }
+    }
+}
+
+/// The YCSB [`OpSource`]: deterministic per-client streams sharing one key
+/// population.
+pub struct YcsbSource {
+    spec: Spec,
+    rngs: Vec<Rng>,
+    remaining: Vec<u64>,
+    chooser: Chooser,
+    /// Current key population (grows under D/E inserts; load counter).
+    n_keys: u64,
+    next_insert: u64,
+    pub ops_emitted: u64,
+}
+
+impl YcsbSource {
+    pub fn new(spec: Spec, clients: usize) -> Self {
+        assert!(clients > 0);
+        let mut root = Rng::new(spec.seed ^ 0x9c5b);
+        let rngs = (0..clients).map(|c| root.fork(c as u64)).collect();
+        let per = spec.ops / clients as u64;
+        let mut remaining: Vec<u64> = vec![per; clients];
+        remaining[0] += spec.ops - per * clients as u64;
+        let records = spec.records.max(1);
+        let chooser = match spec.kind {
+            Kind::Load => Chooser::Uniform(Uniform::new(records)),
+            Kind::D => Chooser::Latest(Latest::new(records, spec.alpha.max(0.01))),
+            _ => Chooser::Zipf(Zipf::new(records, clamp_alpha(spec.alpha))),
+        };
+        YcsbSource {
+            n_keys: records,
+            next_insert: match spec.kind {
+                Kind::Load => 0,
+                _ => records,
+            },
+            spec,
+            rngs,
+            remaining,
+            chooser,
+            ops_emitted: 0,
+        }
+    }
+
+    /// Scrambled-Zipf key choice: rank → hash → existing item index.
+    fn choose_key(&mut self, c: usize) -> Vec<u8> {
+        let rank = self.chooser.next(&mut self.rngs[c]);
+        let idx = match self.spec.kind {
+            Kind::D => rank, // latest: ranks ARE recency-ordered indices
+            _ => fnv1a_u64(rank) % self.n_keys,
+        };
+        key_for(idx, self.spec.key_size)
+    }
+
+    fn insert_new(&mut self) -> Op {
+        let i = self.next_insert;
+        self.next_insert += 1;
+        self.n_keys = self.n_keys.max(self.next_insert);
+        self.chooser.grow(self.n_keys);
+        Op::Insert {
+            key: key_for(i, self.spec.key_size),
+            value: value_for(i, self.spec.value_size),
+        }
+    }
+}
+
+fn clamp_alpha(a: f64) -> f64 {
+    // The Gray zeta formulation is singular at exactly 1.0.
+    if (a - 1.0).abs() < 1e-6 {
+        1.000001
+    } else {
+        a
+    }
+}
+
+impl OpSource for YcsbSource {
+    fn next_op(&mut self, client: usize) -> Option<Op> {
+        if self.remaining[client] == 0 {
+            return None;
+        }
+        self.remaining[client] -= 1;
+        self.ops_emitted += 1;
+        let roll = (self.rngs[client].next_f64() * 100.0) as u32;
+        let op = match self.spec.kind {
+            Kind::Load => self.insert_new(),
+            Kind::A | Kind::Mixed { read_pct: 50 } => {
+                if roll < 50 {
+                    Op::Read { key: self.choose_key(client) }
+                } else {
+                    let key = self.choose_key(client);
+                    Op::Update { key, value: value_for(roll as u64, self.spec.value_size) }
+                }
+            }
+            Kind::B => {
+                if roll < 95 {
+                    Op::Read { key: self.choose_key(client) }
+                } else {
+                    let key = self.choose_key(client);
+                    Op::Update { key, value: value_for(roll as u64, self.spec.value_size) }
+                }
+            }
+            Kind::C => Op::Read { key: self.choose_key(client) },
+            Kind::D => {
+                if roll < 95 {
+                    Op::Read { key: self.choose_key(client) }
+                } else {
+                    self.insert_new()
+                }
+            }
+            Kind::E => {
+                if roll < 95 {
+                    let len = 1 + (self.rngs[client].next_below(100)) as usize;
+                    Op::Scan { key: self.choose_key(client), len }
+                } else {
+                    self.insert_new()
+                }
+            }
+            Kind::F => {
+                if roll < 50 {
+                    Op::Read { key: self.choose_key(client) }
+                } else {
+                    let key = self.choose_key(client);
+                    Op::ReadModifyWrite {
+                        key,
+                        value: value_for(roll as u64, self.spec.value_size),
+                    }
+                }
+            }
+            Kind::Mixed { read_pct } => {
+                if roll < read_pct {
+                    Op::Read { key: self.choose_key(client) }
+                } else {
+                    let key = self.choose_key(client);
+                    Op::Update { key, value: value_for(roll as u64, self.spec.value_size) }
+                }
+            }
+        };
+        Some(op)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(kind: Kind) -> Spec {
+        Spec {
+            kind,
+            records: 10_000,
+            ops: 1_000,
+            alpha: 0.9,
+            key_size: 24,
+            value_size: 100,
+            seed: 7,
+        }
+    }
+
+    fn drain(src: &mut YcsbSource, clients: usize) -> Vec<Op> {
+        let mut out = Vec::new();
+        'outer: loop {
+            let mut any = false;
+            for c in 0..clients {
+                match src.next_op(c) {
+                    Some(op) => {
+                        out.push(op);
+                        any = true;
+                    }
+                    None => {}
+                }
+                if out.len() > 10_000 {
+                    break 'outer;
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn keys_are_24_bytes_and_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000u64 {
+            let k = key_for(i, 24);
+            assert_eq!(k.len(), 24);
+            assert!(seen.insert(k), "duplicate key for item {i}");
+        }
+    }
+
+    #[test]
+    fn load_emits_exactly_records_inserts() {
+        let mut s = spec(Kind::Load);
+        s.ops = s.records;
+        let mut src = YcsbSource::new(s, 4);
+        let ops = drain(&mut src, 4);
+        assert_eq!(ops.len(), 10_000);
+        assert!(ops.iter().all(|o| matches!(o, Op::Insert { .. })));
+        // All loaded keys distinct.
+        let keys: std::collections::HashSet<_> = ops
+            .iter()
+            .map(|o| match o {
+                Op::Insert { key, .. } => key.clone(),
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(keys.len(), 10_000);
+    }
+
+    #[test]
+    fn workload_c_is_all_reads() {
+        let mut src = YcsbSource::new(spec(Kind::C), 2);
+        let ops = drain(&mut src, 2);
+        assert_eq!(ops.len(), 1000);
+        assert!(ops.iter().all(|o| matches!(o, Op::Read { .. })));
+    }
+
+    #[test]
+    fn workload_a_is_half_reads() {
+        let mut src = YcsbSource::new(spec(Kind::A), 2);
+        let ops = drain(&mut src, 2);
+        let reads = ops.iter().filter(|o| matches!(o, Op::Read { .. })).count();
+        assert!((400..600).contains(&reads), "reads={reads}");
+    }
+
+    #[test]
+    fn workload_e_is_mostly_scans() {
+        let mut src = YcsbSource::new(spec(Kind::E), 2);
+        let ops = drain(&mut src, 2);
+        let scans = ops.iter().filter(|o| matches!(o, Op::Scan { .. })).count();
+        assert!(scans > 900, "scans={scans}");
+        for o in &ops {
+            if let Op::Scan { len, .. } = o {
+                assert!((1..=100).contains(len));
+            }
+        }
+    }
+
+    #[test]
+    fn workload_d_reads_recent_inserts() {
+        let mut src = YcsbSource::new(spec(Kind::D), 1);
+        let ops = drain(&mut src, 1);
+        let inserts = ops.iter().filter(|o| matches!(o, Op::Insert { .. })).count();
+        assert!((20..120).contains(&inserts), "inserts={inserts}");
+        // Reads target the most recent region of the key population: the
+        // majority should hit the top 20% of item indices.
+        let mut recent = 0;
+        let mut total = 0;
+        for o in &ops {
+            if let Op::Read { key } = o {
+                total += 1;
+                // Recover recency only statistically: the key of a recent
+                // item equals key_for(i) for some i near n. Compare against
+                // the most recent 2000 items.
+                let n = src.n_keys;
+                for i in (n.saturating_sub(2000))..n {
+                    if key == &key_for(i, 24) {
+                        recent += 1;
+                        break;
+                    }
+                }
+            }
+        }
+        assert!(recent * 2 > total, "recent={recent} total={total}");
+    }
+
+    #[test]
+    fn zipf_reads_are_skewed() {
+        let mut src = YcsbSource::new(spec(Kind::C), 1);
+        let ops = drain(&mut src, 1);
+        let mut counts: std::collections::HashMap<Vec<u8>, usize> = Default::default();
+        for o in &ops {
+            if let Op::Read { key } = o {
+                *counts.entry(key.clone()).or_default() += 1;
+            }
+        }
+        let max = counts.values().max().copied().unwrap_or(0);
+        assert!(max > 20, "hottest key only read {max} times out of 1000");
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = YcsbSource::new(spec(Kind::A), 3);
+        let mut b = YcsbSource::new(spec(Kind::A), 3);
+        for c in [0usize, 1, 2, 0, 1] {
+            let (x, y) = (a.next_op(c), b.next_op(c));
+            match (x, y) {
+                (Some(Op::Read { key: k1 }), Some(Op::Read { key: k2 })) => assert_eq!(k1, k2),
+                (Some(Op::Update { key: k1, .. }), Some(Op::Update { key: k2, .. })) => {
+                    assert_eq!(k1, k2)
+                }
+                (None, None) => {}
+                other => panic!("streams diverged: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn ops_split_across_clients() {
+        let mut s = spec(Kind::C);
+        s.ops = 10;
+        let mut src = YcsbSource::new(s, 3);
+        let ops = drain(&mut src, 3);
+        assert_eq!(ops.len(), 10);
+    }
+}

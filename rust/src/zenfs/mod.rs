@@ -1,0 +1,471 @@
+//! Zone-aware file layer over the two zoned devices — the reproduction of
+//! the (modified) ZenFS role in the paper (§3.6): it maps immutable SST
+//! files onto dedicated zones, supports *both* devices at once, and keeps
+//! the SST → zone mapping in an ordered map (as the original does with
+//! `std::map`).
+//!
+//! Placement policy stays **outside** this layer: callers decide the target
+//! device (that is HHZS's job); zenfs only enforces zone mechanics:
+//! * an SSD-resident SST occupies exactly one SSD zone (§3.2);
+//! * an HDD-resident SST spans `ceil(size / hdd_zone_cap)` dedicated zones;
+//! * deleting a file resets its zones (space reclaim = zone reset, §4.1).
+//!
+//! Some SSD zones can be reserved (WAL/cache pool, §3.2) — file allocation
+//! never touches them.
+
+use std::collections::{BTreeMap, HashSet};
+
+use crate::config::DeviceProfile;
+use crate::sim::{AccessKind, Ns};
+use crate::zone::{Dev, ZoneId, ZonedDevice};
+
+pub type FileId = u64;
+
+/// One contiguous piece of a file on a device zone.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Extent {
+    pub zone: ZoneId,
+    pub offset: u64,
+    pub len: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ZoneFile {
+    pub id: FileId,
+    pub dev: Dev,
+    pub size: u64,
+    pub extents: Vec<Extent>,
+}
+
+impl ZoneFile {
+    /// Translate a logical file offset to (zone, zone offset, run length).
+    pub fn translate(&self, offset: u64, len: u64) -> Option<(ZoneId, u64, u64)> {
+        let mut base = 0u64;
+        for e in &self.extents {
+            if offset < base + e.len {
+                let within = offset - base;
+                let run = (e.len - within).min(len);
+                return Some((e.zone, e.offset + within, run));
+            }
+            base += e.len;
+        }
+        None
+    }
+}
+
+/// File-layer errors.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FsError {
+    NoSpace(Dev),
+    NoSuchFile(FileId),
+    Zone(String),
+}
+
+impl std::fmt::Display for FsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FsError::NoSpace(d) => write!(f, "no empty zones on {}", d.name()),
+            FsError::NoSuchFile(id) => write!(f, "no such file {id}"),
+            FsError::Zone(e) => write!(f, "zone error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FsError {}
+
+/// The hybrid zoned file system.
+pub struct ZenFs {
+    pub ssd: ZonedDevice,
+    pub hdd: ZonedDevice,
+    files: BTreeMap<FileId, ZoneFile>,
+    /// SSD zones excluded from file allocation (WAL/cache pool).
+    reserved_ssd: HashSet<ZoneId>,
+}
+
+impl ZenFs {
+    pub fn new(
+        ssd_zone_cap: u64,
+        ssd_zones: u32,
+        hdd_zone_cap: u64,
+        hdd_zones: u32,
+        ssd_profile: DeviceProfile,
+        hdd_profile: DeviceProfile,
+    ) -> Self {
+        ZenFs {
+            ssd: ZonedDevice::new(Dev::Ssd, ssd_zone_cap, ssd_zones, ssd_profile),
+            hdd: ZonedDevice::new(Dev::Hdd, hdd_zone_cap, hdd_zones, hdd_profile),
+            files: BTreeMap::new(),
+            reserved_ssd: HashSet::new(),
+        }
+    }
+
+    pub fn device(&mut self, dev: Dev) -> &mut ZonedDevice {
+        match dev {
+            Dev::Ssd => &mut self.ssd,
+            Dev::Hdd => &mut self.hdd,
+        }
+    }
+
+    pub fn device_ref(&self, dev: Dev) -> &ZonedDevice {
+        match dev {
+            Dev::Ssd => &self.ssd,
+            Dev::Hdd => &self.hdd,
+        }
+    }
+
+    /// Reserve SSD zones for the WAL/cache pool; returns the zone ids.
+    pub fn reserve_ssd_zones(&mut self, n: u32) -> Vec<ZoneId> {
+        let mut out = Vec::new();
+        for z in 0..self.ssd.num_zones() {
+            if out.len() as u32 == n {
+                break;
+            }
+            if !self.reserved_ssd.contains(&z) && self.ssd.zone(z).is_empty() {
+                self.reserved_ssd.insert(z);
+                out.push(z);
+            }
+        }
+        out
+    }
+
+    pub fn reserved_ssd_zones(&self) -> &HashSet<ZoneId> {
+        &self.reserved_ssd
+    }
+
+    /// Empty SSD zones available for SST files (excludes the reserved pool).
+    pub fn ssd_file_zones_free(&self) -> u32 {
+        (0..self.ssd.num_zones())
+            .filter(|z| self.ssd.zone(*z).is_empty() && !self.reserved_ssd.contains(z))
+            .count() as u32
+    }
+
+    /// Total SSD zones usable for SST files.
+    pub fn ssd_file_zones_total(&self) -> u32 {
+        self.ssd.num_zones() - self.reserved_ssd.len() as u32
+    }
+
+    fn find_ssd_file_zone(&self) -> Option<ZoneId> {
+        (0..self.ssd.num_zones())
+            .find(|z| self.ssd.zone(*z).is_empty() && !self.reserved_ssd.contains(z))
+    }
+
+    /// Can a file of `size` bytes be placed on `dev` right now?
+    pub fn can_place(&self, dev: Dev, size: u64) -> bool {
+        match dev {
+            Dev::Ssd => size <= self.ssd.zone_cap && self.find_ssd_file_zone().is_some(),
+            Dev::Hdd => {
+                let need = size.div_ceil(self.hdd.zone_cap).max(1) as u32;
+                self.hdd.empty_zone_count() >= need
+            }
+        }
+    }
+
+    /// Write an immutable file (an SST) in full onto `dev`.
+    ///
+    /// With `charge_time`, device service time is charged at creation and
+    /// the finish time returned; background jobs that charge I/O chunk by
+    /// chunk themselves pass `charge_time = false`.
+    pub fn create_file(
+        &mut self,
+        now: Ns,
+        id: FileId,
+        dev: Dev,
+        data: &[u8],
+        charge_time: bool,
+    ) -> Result<(ZoneFile, Ns), FsError> {
+        let size = data.len() as u64;
+        let mut extents = Vec::new();
+        let mut finish = now;
+        match dev {
+            Dev::Ssd => {
+                if size > self.ssd.zone_cap {
+                    return Err(FsError::NoSpace(Dev::Ssd));
+                }
+                let z = self.find_ssd_file_zone().ok_or(FsError::NoSpace(Dev::Ssd))?;
+                let (off, f) = if charge_time {
+                    let (off, _, f) =
+                        self.ssd.append(now, z, data).map_err(|e| FsError::Zone(e.to_string()))?;
+                    (off, f)
+                } else {
+                    let off = self
+                        .ssd
+                        .append_untimed(z, data)
+                        .map_err(|e| FsError::Zone(e.to_string()))?;
+                    (off, now)
+                };
+                finish = finish.max(f);
+                extents.push(Extent { zone: z, offset: off, len: size });
+            }
+            Dev::Hdd => {
+                let need = size.div_ceil(self.hdd.zone_cap).max(1) as u32;
+                let zones = self.hdd.find_empty_zones(need).ok_or(FsError::NoSpace(Dev::Hdd))?;
+                let mut written = 0u64;
+                for z in zones {
+                    let chunk = (size - written).min(self.hdd.zone_cap) as usize;
+                    let part = &data[written as usize..written as usize + chunk];
+                    let (off, f) = if charge_time {
+                        let (off, _, f) = self
+                            .hdd
+                            .append(now, z, part)
+                            .map_err(|e| FsError::Zone(e.to_string()))?;
+                        (off, f)
+                    } else {
+                        let off = self
+                            .hdd
+                            .append_untimed(z, part)
+                            .map_err(|e| FsError::Zone(e.to_string()))?;
+                        (off, now)
+                    };
+                    finish = finish.max(f);
+                    extents.push(Extent { zone: z, offset: off, len: chunk as u64 });
+                    written += chunk as u64;
+                    if written >= size {
+                        break;
+                    }
+                }
+            }
+        }
+        let file = ZoneFile { id, dev, size, extents };
+        self.files.insert(id, file.clone());
+        Ok((file, finish))
+    }
+
+    /// Read `len` bytes at `offset` of file `id` with random-read cost.
+    pub fn read_file(
+        &mut self,
+        now: Ns,
+        id: FileId,
+        offset: u64,
+        len: u64,
+    ) -> Result<(Vec<u8>, Ns, Ns), FsError> {
+        let file = self.files.get(&id).ok_or(FsError::NoSuchFile(id))?.clone();
+        let mut out = Vec::with_capacity(len as usize);
+        let mut at = offset;
+        let mut remaining = len;
+        let mut start = Ns::MAX;
+        let mut finish = now;
+        while remaining > 0 {
+            let (zone, zoff, run) =
+                file.translate(at, remaining).ok_or(FsError::NoSuchFile(id))?;
+            let dev = self.device(file.dev);
+            let (data, s, f) = dev
+                .read_random(now, zone, zoff, run)
+                .map_err(|e| FsError::Zone(e.to_string()))?;
+            out.extend_from_slice(&data);
+            start = start.min(s);
+            finish = finish.max(f);
+            at += run;
+            remaining -= run;
+        }
+        Ok((out, start.min(finish), finish))
+    }
+
+    /// Read without charging device time (background jobs charge separately
+    /// in chunks to allow interleaving).
+    pub fn read_file_untimed(
+        &mut self,
+        id: FileId,
+        offset: u64,
+        len: u64,
+    ) -> Result<Vec<u8>, FsError> {
+        let file = self.files.get(&id).ok_or(FsError::NoSuchFile(id))?.clone();
+        let mut out = Vec::with_capacity(len as usize);
+        let mut at = offset;
+        let mut remaining = len;
+        while remaining > 0 {
+            let (zone, zoff, run) =
+                file.translate(at, remaining).ok_or(FsError::NoSuchFile(id))?;
+            let dev = self.device(file.dev);
+            let data =
+                dev.read_untimed(zone, zoff, run).map_err(|e| FsError::Zone(e.to_string()))?;
+            out.extend_from_slice(&data);
+            at += run;
+            remaining -= run;
+        }
+        Ok(out)
+    }
+
+    /// Delete a file and reset its zones (§4.1: "we reset a zone to reclaim
+    /// its space only when the ... SST in the zone is deleted").
+    pub fn delete_file(&mut self, id: FileId) -> Result<(), FsError> {
+        let file = self.files.remove(&id).ok_or(FsError::NoSuchFile(id))?;
+        for e in &file.extents {
+            self.device(file.dev).reset(e.zone);
+        }
+        Ok(())
+    }
+
+    pub fn file(&self, id: FileId) -> Option<&ZoneFile> {
+        self.files.get(&id)
+    }
+
+    pub fn file_dev(&self, id: FileId) -> Option<Dev> {
+        self.files.get(&id).map(|f| f.dev)
+    }
+
+    pub fn num_files(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn files(&self) -> impl Iterator<Item = &ZoneFile> {
+        self.files.values()
+    }
+
+    /// Charge device time for a background chunk (compaction/migration).
+    pub fn charge(&mut self, now: Ns, dev: Dev, kind: AccessKind, bytes: u64) -> (Ns, Ns) {
+        self.device(dev).charge(now, kind, bytes)
+    }
+
+    /// Move a file's bytes to the other device (migration, §3.4). Data is
+    /// copied untimed — the migration actor charges rate-limited chunk I/O
+    /// itself — and the old zones are reset.
+    pub fn relocate_file(&mut self, id: FileId, to: Dev) -> Result<(), FsError> {
+        let file = self.files.get(&id).ok_or(FsError::NoSuchFile(id))?.clone();
+        if file.dev == to {
+            return Ok(());
+        }
+        if !self.can_place(to, file.size) {
+            return Err(FsError::NoSpace(to));
+        }
+        let data = self.read_file_untimed(id, 0, file.size)?;
+        self.delete_file(id)?;
+        self.create_file(0, id, to, &data, false)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MIB;
+
+    fn fs() -> ZenFs {
+        ZenFs::new(
+            4 * MIB,
+            8,
+            MIB,
+            64,
+            DeviceProfile::zn540_ssd(),
+            DeviceProfile::st14000_smr_hdd(),
+        )
+    }
+
+    #[test]
+    fn ssd_file_occupies_one_zone() {
+        let mut f = fs();
+        let data = vec![7u8; (3 * MIB) as usize];
+        let (file, _) = f.create_file(0, 1, Dev::Ssd, &data, true).unwrap();
+        assert_eq!(file.extents.len(), 1);
+        assert_eq!(f.ssd.empty_zone_count(), 7);
+        let (back, _, _) = f.read_file(0, 1, MIB, 100).unwrap();
+        assert_eq!(back, vec![7u8; 100]);
+    }
+
+    #[test]
+    fn hdd_file_spans_multiple_zones() {
+        let mut f = fs();
+        let data: Vec<u8> = (0..(3 * MIB + 512)).map(|i| (i % 251) as u8).collect();
+        let (file, _) = f.create_file(0, 2, Dev::Hdd, &data, true).unwrap();
+        assert_eq!(file.extents.len(), 4);
+        // Cross-extent read comes back intact.
+        let off = MIB - 100;
+        let (back, _, _) = f.read_file(0, 2, off, 300).unwrap();
+        let expect: Vec<u8> = (off..off + 300).map(|i| (i % 251) as u8).collect();
+        assert_eq!(back, expect);
+    }
+
+    #[test]
+    fn delete_resets_zones() {
+        let mut f = fs();
+        let data = vec![1u8; (2 * MIB) as usize];
+        f.create_file(0, 3, Dev::Hdd, &data, true).unwrap();
+        assert_eq!(f.hdd.empty_zone_count(), 62);
+        f.delete_file(3).unwrap();
+        assert_eq!(f.hdd.empty_zone_count(), 64);
+        assert!(f.file(3).is_none());
+    }
+
+    #[test]
+    fn reserved_zones_not_used_for_files() {
+        let mut f = fs();
+        let reserved = f.reserve_ssd_zones(2);
+        assert_eq!(reserved.len(), 2);
+        assert_eq!(f.ssd_file_zones_total(), 6);
+        for i in 0..6 {
+            f.create_file(0, 10 + i, Dev::Ssd, &vec![0u8; MIB as usize], true).unwrap();
+        }
+        assert!(!f.can_place(Dev::Ssd, MIB));
+        assert_eq!(f.ssd.empty_zone_count(), 2, "reserved zones stay empty");
+    }
+
+    #[test]
+    fn no_space_error() {
+        let mut f = fs();
+        for i in 0..8 {
+            f.create_file(0, i, Dev::Ssd, &[0u8; 16], true).unwrap();
+        }
+        assert_eq!(
+            f.create_file(0, 99, Dev::Ssd, &[0u8; 16], true).unwrap_err(),
+            FsError::NoSpace(Dev::Ssd)
+        );
+    }
+
+    #[test]
+    fn oversized_ssd_file_rejected() {
+        let mut f = fs();
+        let too_big = vec![0u8; (5 * MIB) as usize];
+        assert!(f.create_file(0, 1, Dev::Ssd, &too_big, true).is_err());
+    }
+
+    #[test]
+    fn relocate_preserves_content() {
+        let mut f = fs();
+        let data: Vec<u8> = (0..2 * MIB).map(|i| (i % 13) as u8).collect();
+        f.create_file(0, 5, Dev::Ssd, &data, true).unwrap();
+        f.relocate_file(5, Dev::Hdd).unwrap();
+        assert_eq!(f.file_dev(5), Some(Dev::Hdd));
+        let back = f.read_file_untimed(5, MIB, 1000).unwrap();
+        assert_eq!(back, data[MIB as usize..MIB as usize + 1000].to_vec());
+        assert_eq!(f.ssd.empty_zone_count(), 8, "SSD zone reclaimed");
+    }
+
+    #[test]
+    fn relocate_to_full_device_fails_cleanly() {
+        let mut f = fs();
+        let data = vec![0u8; 100];
+        f.create_file(0, 1, Dev::Hdd, &data, true).unwrap();
+        for i in 0..8 {
+            f.create_file(0, 10 + i, Dev::Ssd, &[0u8; 4], true).unwrap();
+        }
+        assert_eq!(f.relocate_file(1, Dev::Ssd).unwrap_err(), FsError::NoSpace(Dev::Ssd));
+        assert_eq!(f.file_dev(1), Some(Dev::Hdd), "file untouched on failure");
+    }
+
+    #[test]
+    fn timing_charged_on_create() {
+        let mut f = fs();
+        let data = vec![0u8; MIB as usize];
+        let (_, finish) = f.create_file(0, 1, Dev::Hdd, &data, true).unwrap();
+        // 1 MiB at 210 MiB/s ≈ 4.76 ms (+0.1 ms overhead).
+        assert!(finish > 4_000_000 && finish < 6_000_000, "finish={finish}");
+        let (_, f2) = f.create_file(0, 2, Dev::Hdd, &data, false).unwrap();
+        assert_eq!(f2, 0, "untimed create returns caller time");
+    }
+
+    #[test]
+    fn translate_cross_extent() {
+        let file = ZoneFile {
+            id: 1,
+            dev: Dev::Hdd,
+            size: 200,
+            extents: vec![
+                Extent { zone: 3, offset: 0, len: 100 },
+                Extent { zone: 7, offset: 0, len: 100 },
+            ],
+        };
+        assert_eq!(file.translate(0, 50), Some((3, 0, 50)));
+        assert_eq!(file.translate(90, 50), Some((3, 90, 10)));
+        assert_eq!(file.translate(100, 50), Some((7, 0, 50)));
+        assert_eq!(file.translate(250, 1), None);
+    }
+}

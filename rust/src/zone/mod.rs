@@ -1,0 +1,202 @@
+//! Zoned block devices: append-only zones with write pointers, reset
+//! semantics, and RAM-backed data — the substrate the paper's ZNS SSD and
+//! HM-SMR HDD expose (§2.1).
+//!
+//! The simulator enforces the zoned-storage contract: a zone can be read at
+//! any offset below the write pointer, written only *at* the write pointer,
+//! and must be reset before its space is reused. Violations are hard errors
+//! — the LSM/zenfs layers above are required to be zone-correct, exactly as
+//! a host-managed device would require.
+
+mod device;
+
+pub use device::{ZoneStats, ZonedDevice};
+
+
+
+/// Which physical device a zone (or file extent) lives on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Dev {
+    Ssd,
+    Hdd,
+}
+
+impl Dev {
+    pub fn name(self) -> &'static str {
+        match self {
+            Dev::Ssd => "ssd",
+            Dev::Hdd => "hdd",
+        }
+    }
+}
+
+/// Zone index within one device.
+pub type ZoneId = u32;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ZoneState {
+    Empty,
+    Open,
+    Full,
+}
+
+/// One append-only zone with RAM-backed contents.
+#[derive(Clone, Debug)]
+pub struct Zone {
+    pub capacity: u64,
+    wp: u64,
+    state: ZoneState,
+    data: Vec<u8>,
+    /// Number of resets this zone has seen (wear accounting).
+    pub reset_count: u64,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ZoneError {
+    NotAtWritePointer { wp: u64, offset: u64 },
+    CapacityExceeded { wp: u64, len: u64, capacity: u64 },
+    ReadPastWp { wp: u64, offset: u64, len: u64 },
+    NotEmpty,
+}
+
+impl std::fmt::Display for ZoneError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ZoneError::NotAtWritePointer { wp, offset } => {
+                write!(f, "write at offset {offset} but write pointer is {wp}")
+            }
+            ZoneError::CapacityExceeded { wp, len, capacity } => {
+                write!(f, "append of {len} bytes at wp {wp} exceeds capacity {capacity}")
+            }
+            ZoneError::ReadPastWp { wp, offset, len } => {
+                write!(f, "read [{offset}, {offset}+{len}) past write pointer {wp}")
+            }
+            ZoneError::NotEmpty => write!(f, "zone not empty"),
+        }
+    }
+}
+
+impl std::error::Error for ZoneError {}
+
+impl Zone {
+    pub fn new(capacity: u64) -> Self {
+        Zone { capacity, wp: 0, state: ZoneState::Empty, data: Vec::new(), reset_count: 0 }
+    }
+
+    pub fn wp(&self) -> u64 {
+        self.wp
+    }
+
+    pub fn state(&self) -> ZoneState {
+        self.state
+    }
+
+    pub fn remaining(&self) -> u64 {
+        self.capacity - self.wp
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state == ZoneState::Empty
+    }
+
+    /// Append at the write pointer. Returns the offset the data landed at.
+    pub fn append(&mut self, buf: &[u8]) -> Result<u64, ZoneError> {
+        let len = buf.len() as u64;
+        if self.state == ZoneState::Full {
+            return Err(ZoneError::CapacityExceeded { wp: self.wp, len, capacity: self.capacity });
+        }
+        if self.wp + len > self.capacity {
+            return Err(ZoneError::CapacityExceeded { wp: self.wp, len, capacity: self.capacity });
+        }
+        let off = self.wp;
+        if self.data.capacity() == 0 {
+            // Reserve the zone once: WAL-style many-small-appends would
+            // otherwise pay O(log n) grow-and-copy cycles per zone.
+            self.data.reserve_exact(self.capacity as usize);
+        }
+        self.data.extend_from_slice(buf);
+        self.wp += len;
+        self.state = if self.wp == self.capacity { ZoneState::Full } else { ZoneState::Open };
+        Ok(off)
+    }
+
+    /// Explicitly transition Open → Full (the ZNS "finish zone" command).
+    pub fn finish(&mut self) {
+        if self.state == ZoneState::Open {
+            self.state = ZoneState::Full;
+        }
+    }
+
+    /// Read any range below the write pointer.
+    pub fn read(&self, offset: u64, len: u64) -> Result<&[u8], ZoneError> {
+        if offset + len > self.wp {
+            return Err(ZoneError::ReadPastWp { wp: self.wp, offset, len });
+        }
+        Ok(&self.data[offset as usize..(offset + len) as usize])
+    }
+
+    /// Reset: rewind the write pointer, discard contents, free RAM.
+    pub fn reset(&mut self) {
+        self.wp = 0;
+        self.state = ZoneState::Empty;
+        self.data = Vec::new();
+        self.reset_count += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_advances_wp() {
+        let mut z = Zone::new(100);
+        assert_eq!(z.append(&[1, 2, 3]).unwrap(), 0);
+        assert_eq!(z.append(&[4, 5]).unwrap(), 3);
+        assert_eq!(z.wp(), 5);
+        assert_eq!(z.state(), ZoneState::Open);
+    }
+
+    #[test]
+    fn append_past_capacity_rejected() {
+        let mut z = Zone::new(4);
+        assert!(z.append(&[0; 5]).is_err());
+        z.append(&[0; 4]).unwrap();
+        assert_eq!(z.state(), ZoneState::Full);
+        assert!(z.append(&[1]).is_err());
+    }
+
+    #[test]
+    fn read_below_wp_only() {
+        let mut z = Zone::new(16);
+        z.append(b"hello").unwrap();
+        assert_eq!(z.read(0, 5).unwrap(), b"hello");
+        assert_eq!(z.read(1, 3).unwrap(), b"ell");
+        assert!(z.read(0, 6).is_err());
+    }
+
+    #[test]
+    fn reset_rewinds_and_frees() {
+        let mut z = Zone::new(16);
+        z.append(b"0123456789abcdef").unwrap();
+        assert_eq!(z.state(), ZoneState::Full);
+        z.reset();
+        assert_eq!(z.state(), ZoneState::Empty);
+        assert_eq!(z.wp(), 0);
+        assert_eq!(z.reset_count, 1);
+        // Space reusable after reset.
+        z.append(b"x").unwrap();
+        assert_eq!(z.read(0, 1).unwrap(), b"x");
+    }
+
+    #[test]
+    fn finish_marks_full_and_rejects_appends() {
+        let mut z = Zone::new(16);
+        z.append(b"abc").unwrap();
+        z.finish();
+        assert_eq!(z.state(), ZoneState::Full);
+        assert!(z.append(b"d").is_err());
+        // Reads of written data still work on a finished zone.
+        assert_eq!(z.read(0, 3).unwrap(), b"abc");
+    }
+}

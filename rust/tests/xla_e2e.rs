@@ -1,0 +1,111 @@
+//! Three-layer integration: the AOT Pallas/JAX kernels executing inside
+//! the Rust coordinator's request path. Skipped (cleanly) when
+//! `artifacts/` has not been built yet.
+
+use std::rc::Rc;
+
+use hhzs::config::Config;
+use hhzs::coordinator::Engine;
+use hhzs::policy::HhzsPolicy;
+use hhzs::runtime::XlaKernels;
+use hhzs::ycsb::{key_for, value_for};
+
+fn kernels() -> Option<Rc<XlaKernels>> {
+    if !XlaKernels::artifacts_present("artifacts") {
+        eprintln!("skipping XLA e2e: run `make artifacts` first");
+        return None;
+    }
+    Some(Rc::new(XlaKernels::load("artifacts").expect("load artifacts")))
+}
+
+fn loaded_engine(k: Rc<XlaKernels>) -> Engine {
+    let mut cfg = Config::tiny();
+    cfg.workload.load_objects = 20_000;
+    let policy = HhzsPolicy::new(cfg.lsm.num_levels).with_scorer(k.clone());
+    let mut e = Engine::new(cfg, Box::new(policy));
+    e.attach_xla(k);
+    for i in 0..20_000u64 {
+        e.put(&key_for(i, 24), &value_for(i, 1000));
+    }
+    e.quiesce();
+    e
+}
+
+#[test]
+fn multi_get_parity_with_native_gets() {
+    let Some(k) = kernels() else { return };
+    let mut e = loaded_engine(k.clone());
+    let keys: Vec<Vec<u8>> = (0..300u64)
+        .map(|i| {
+            if i % 7 == 0 {
+                // Some keys that were never written.
+                format!("user-missing-{i:08}").into_bytes()
+            } else {
+                key_for(i * 61 % 20_000, 24)
+            }
+        })
+        .collect();
+    let batched = e.multi_get(&keys);
+    assert!(k.bloom_calls.get() > 0, "XLA bloom kernel must be dispatched");
+    e.xla = None; // native path
+    let native: Vec<Option<Vec<u8>>> = keys.iter().map(|key| e.get(key)).collect();
+    assert_eq!(batched, native, "XLA-batched and native reads must agree");
+    // Present keys found, missing keys absent.
+    for (i, key) in keys.iter().enumerate() {
+        if key.starts_with(b"user-missing") {
+            assert!(batched[i].is_none());
+        } else {
+            assert!(batched[i].is_some(), "key {i} lost");
+        }
+    }
+}
+
+#[test]
+fn xla_scored_migration_runs() {
+    let Some(k) = kernels() else { return };
+    let mut e = loaded_engine(k.clone());
+    // Skewed reads to trigger popularity migration with XLA scoring.
+    for round in 0..40 {
+        for i in 0..50u64 {
+            e.get(&key_for((i * 397 + round) % 20_000, 24));
+        }
+    }
+    e.quiesce();
+    assert!(
+        k.priority_calls.get() > 0,
+        "migration scans should dispatch the priority kernel"
+    );
+}
+
+#[test]
+fn xla_and_native_policies_make_same_decisions() {
+    // Run the same deterministic workload with and without the XLA scorer;
+    // placements + migrations must be identical (the scores are
+    // numerically identical by the parity tests, so decisions must be too).
+    let Some(k) = kernels() else { return };
+    let run = |scorer: Option<Rc<XlaKernels>>| {
+        let mut cfg = Config::tiny();
+        cfg.workload.load_objects = 15_000;
+        let mut policy = HhzsPolicy::new(cfg.lsm.num_levels);
+        if let Some(s) = scorer {
+            policy = policy.with_scorer(s);
+        }
+        let mut e = Engine::new(cfg, Box::new(policy));
+        for i in 0..15_000u64 {
+            e.put(&key_for(i, 24), &value_for(i, 1000));
+        }
+        for i in 0..3_000u64 {
+            e.get(&key_for(i * 31 % 15_000, 24));
+        }
+        e.quiesce();
+        (
+            e.now,
+            e.metrics.migrations_cap,
+            e.metrics.migrations_pop,
+            e.ssd_share_by_level(),
+        )
+    };
+    let native = run(None);
+    let xla = run(Some(k));
+    assert_eq!(native, xla, "XLA-scored decisions must match native exactly");
+}
