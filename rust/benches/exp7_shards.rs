@@ -1,0 +1,8 @@
+//! `cargo bench` target regenerating the Exp#7 shard-scalability artefact.
+//! Full-size run: `HHZS_BENCH_FULL=1 cargo bench --bench exp7_shards`.
+#[path = "bench_util.rs"]
+mod bench_util;
+
+fn main() {
+    bench_util::run_experiment("exp7");
+}

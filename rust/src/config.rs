@@ -159,6 +159,10 @@ pub struct Config {
     pub lsm: LsmConfig,
     pub hhzs: HhzsConfig,
     pub workload: WorkloadConfig,
+    /// Number of independent LSM engines the key space is striped over
+    /// (see [`crate::shard`]). `1` = the paper's single-engine system; the
+    /// substrate lease layer splits zones/memory budgets for `> 1`.
+    pub shards: usize,
     /// Use the AOT-compiled XLA kernels on the hot path when artifacts exist.
     pub use_xla_kernels: bool,
 }
@@ -221,6 +225,7 @@ impl Config {
                 zipf_alpha: 0.9,
                 seed: 42,
             },
+            shards: 1,
             use_xla_kernels: false,
         }
     }
@@ -271,6 +276,7 @@ impl Config {
              [workload]\n\
              key_size = {}\nvalue_size = {}\nload_objects = {}\nops = {}\n\
              clients = {}\nzipf_alpha = {}\nseed = {}\n\n\
+             [sharding]\nshards = {}\n\n\
              [runtime]\nuse_xla_kernels = {}\n",
             g.scale_denom, g.ssd_zone_cap, g.hdd_zone_cap, g.sst_size, g.ssd_zones,
             g.hdd_zones, g.wal_cache_zones,
@@ -280,6 +286,7 @@ impl Config {
             h.migration_rate_bps, h.hdd_rate_threshold, h.scan_interval_ns, h.chunk_bytes,
             h.sample_interval_ns,
             w.key_size, w.value_size, w.load_objects, w.ops, w.clients, w.zipf_alpha, w.seed,
+            self.shards,
             self.use_xla_kernels,
         )
     }
@@ -332,6 +339,8 @@ impl Config {
             doc.get_f64("workload", "zipf_alpha", &mut w.zipf_alpha);
             doc.get_u64("workload", "seed", &mut w.seed);
         }
+        doc.get_usize("sharding", "shards", &mut c.shards);
+        c.shards = c.shards.max(1);
         doc.get_bool("runtime", "use_xla_kernels", &mut c.use_xla_kernels);
         Ok(c)
     }
@@ -392,6 +401,16 @@ mod tests {
         let c = Config::from_toml_str("[workload]\nops = 777\n").unwrap();
         assert_eq!(c.workload.ops, 777);
         assert_eq!(c.geometry.ssd_zones, 20); // default kept
+    }
+
+    #[test]
+    fn shards_knob_defaults_to_one_and_round_trips() {
+        assert_eq!(Config::small().shards, 1);
+        let c = Config::from_toml_str("[sharding]\nshards = 4\n").unwrap();
+        assert_eq!(c.shards, 4);
+        // A zero in a config file degrades to the single-engine system.
+        let c = Config::from_toml_str("[sharding]\nshards = 0\n").unwrap();
+        assert_eq!(c.shards, 1);
     }
 
     #[test]

@@ -143,6 +143,10 @@ pub struct Engine {
     pub now: Ns,
     seq: u64,
     next_file_id: u64,
+    /// File-id increment. 1 for a standalone engine; shard `s` of `n`
+    /// leases the strided namespace `{s + 1, s + 1 + n, ...}` so file ids
+    /// stay globally unique across engines sharing the substrate.
+    file_id_stride: u64,
     next_job_id: u64,
     ev_seq: u64,
     mem: MemTable,
@@ -201,6 +205,7 @@ impl Engine {
             now: 0,
             seq: 0,
             next_file_id: 1,
+            file_id_stride: 1,
             next_job_id: 1,
             ev_seq: 0,
             mem: MemTable::new(),
@@ -224,6 +229,21 @@ impl Engine {
         let tick = e.cfg.hhzs.scan_interval_ns;
         e.push_event(tick, EventKind::PolicyTick);
         e
+    }
+
+    /// Lease this engine a strided file-id namespace (`base`, `base +
+    /// stride`, ...). Used by [`crate::shard`] so engines sharing the
+    /// substrate never collide on file ids; must be called before the
+    /// first SST is created. The default standalone namespace is
+    /// `base = 1, stride = 1`.
+    pub fn set_file_id_namespace(&mut self, base: u64, stride: u64) {
+        assert!(base >= 1 && stride >= 1, "degenerate file-id namespace");
+        assert_eq!(
+            self.next_file_id, 1,
+            "file-id namespace must be set before any SST exists"
+        );
+        self.next_file_id = base;
+        self.file_id_stride = stride;
     }
 
     fn push_event(&mut self, at: Ns, kind: EventKind) {
@@ -405,6 +425,7 @@ impl Engine {
             sst,
             block_offset: offset,
             block_len: data.len() as u64,
+            data: data.clone(),
         });
         self.emit_hint(hint);
         if !self.policy.ssd_cache_enabled() {
@@ -560,7 +581,7 @@ impl Engine {
                 continue;
             }
             let id = self.next_file_id;
-            self.next_file_id += 1;
+            self.next_file_id += self.file_id_stride;
             let (meta, data) = b.finish(id, level, self.now);
             outputs.push(PendingOutput { meta: Arc::new(meta), data, dev: None, written: 0 });
         }

@@ -1,0 +1,93 @@
+//! Exp#7 (beyond the paper): shard-count scalability.
+//!
+//! Runs the §4.1 protocol (fresh load, then YCSB A) with the full HHZS
+//! policy at 1/2/4/8 shards over the same substrate totals, and reports
+//! aggregate throughput (total ops over the slowest shard — shards run
+//! concurrently in deployment), merged tail latencies, load balance, and
+//! the arbiter's migration-budget split. Deterministic for a fixed seed:
+//! shard streams are router-filtered views of one global op stream, and
+//! each shard is a seed-identical DES engine on its lease.
+
+use crate::report::Table;
+use crate::shard::ShardedEngine;
+use crate::ycsb::{Kind, RoutedSource, Spec, YcsbSource};
+
+use super::common::{make_policy, ExpOpts};
+
+pub const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// Load + YCSB A at `n` shards; returns (load ops/s, A ops/s, merged A
+/// metrics, per-shard A ops).
+pub fn run_one(
+    cfg: &crate::config::Config,
+    n: usize,
+) -> (f64, f64, crate::metrics::Metrics, Vec<u64>) {
+    let mut cfg = cfg.clone();
+    cfg.shards = n;
+    let mut se = ShardedEngine::new(&cfg, |c| make_policy("HHZS", c));
+    let router = se.router;
+    let clients = cfg.workload.clients;
+
+    let load = Spec::from_config(&cfg, Kind::Load);
+    se.run(
+        |s| Box::new(RoutedSource::new(YcsbSource::new(load.clone(), clients), router, s)),
+        clients,
+        None,
+        false,
+    );
+    let load_tput = se.aggregate_ops_per_sec();
+    se.flush_all();
+    se.rebalance_migration_budgets();
+
+    let a = Spec::from_config(&cfg, Kind::A);
+    se.run(
+        |s| Box::new(RoutedSource::new(YcsbSource::new(a.clone(), clients), router, s)),
+        clients,
+        None,
+        false,
+    );
+    let a_tput = se.aggregate_ops_per_sec();
+    (load_tput, a_tput, se.merged_metrics(), se.ops_per_shard())
+}
+
+pub fn run(opts: &ExpOpts) {
+    let csv = opts.csv_dir.as_deref();
+    let mut t = Table::new(
+        "Exp#7: shard-count scalability (HHZS, fresh load + YCSB A per count)",
+        &[
+            "shards",
+            "load ops/s",
+            "A ops/s",
+            "A speedup",
+            "A read p99 ns",
+            "A read p99.9 ns",
+            "balance max/min",
+            "migrations",
+        ],
+    );
+    let mut base_a: Option<f64> = None;
+    for &n in &SHARD_COUNTS {
+        println!("exp7: {n} shard(s)...");
+        let (load_tput, a_tput, m, per_shard) = run_one(&opts.cfg, n);
+        let speedup = match base_a {
+            None => {
+                base_a = Some(a_tput);
+                1.0
+            }
+            Some(b) => a_tput / b.max(1e-9),
+        };
+        let max_ops = per_shard.iter().copied().max().unwrap_or(0);
+        let min_ops = per_shard.iter().copied().min().unwrap_or(0);
+        t.row(vec![
+            n.to_string(),
+            format!("{load_tput:.0}"),
+            format!("{a_tput:.0}"),
+            format!("{speedup:.2}x"),
+            m.read_lat.quantile(0.99).to_string(),
+            m.read_lat.quantile(0.999).to_string(),
+            format!("{:.2}", max_ops as f64 / (min_ops.max(1)) as f64),
+            (m.migrations_cap + m.migrations_pop).to_string(),
+        ]);
+    }
+    t.emit(csv, "exp7_shards");
+}

@@ -11,6 +11,7 @@
 //! | `exp4`   | Fig 8 — read-ratio sweep |
 //! | `exp5`   | Fig 9 — SSD-size sweep |
 //! | `exp6`   | Fig 10 — migration-rate tail latencies |
+//! | `exp7`   | beyond the paper — shard-count scalability (1/2/4/8) |
 
 pub mod ablate;
 pub mod common;
@@ -20,6 +21,7 @@ pub mod exp3;
 pub mod exp4;
 pub mod exp5;
 pub mod exp6;
+pub mod exp7;
 pub mod fig2;
 pub mod table1;
 
@@ -36,14 +38,15 @@ pub fn run(name: &str, opts: &ExpOpts) -> anyhow::Result<()> {
         "exp4" => exp4::run(opts),
         "exp5" => exp5::run(opts),
         "exp6" => exp6::run(opts),
+        "exp7" => exp7::run(opts),
         "ablate" => ablate::run(opts),
         "all" => {
-            for e in ["table1", "fig2", "exp1", "exp2", "exp3", "exp4", "exp5", "exp6"] {
+            for e in ["table1", "fig2", "exp1", "exp2", "exp3", "exp4", "exp5", "exp6", "exp7"] {
                 run(e, opts)?;
             }
         }
         other => anyhow::bail!(
-            "unknown experiment {other:?} (expected table1|fig2|exp1..exp6|all)"
+            "unknown experiment {other:?} (expected table1|fig2|exp1..exp7|all)"
         ),
     }
     Ok(())

@@ -28,12 +28,16 @@ pub enum CompactionHint {
 
 /// The in-memory block cache evicted a data block (§3.1). Identifies the
 /// SST and the block's offset within it; the block contents ride along so
-/// the SSD cache can admit without re-reading the HDD.
+/// the SSD cache can admit without re-reading the HDD (§3.5 workflow
+/// step 2 — admission happens at eviction time, not on the next miss).
 #[derive(Clone, Debug)]
 pub struct CacheEvictHint {
     pub sst: SstId,
     pub block_offset: u64,
     pub block_len: u64,
+    /// The evicted block's bytes (shared, not copied — the hint is passed
+    /// synchronously and the SSD cache admits from this buffer).
+    pub data: std::sync::Arc<Vec<u8>>,
 }
 
 /// Union of all hints the KV store can issue.
@@ -46,14 +50,18 @@ pub enum Hint {
 
 impl Hint {
     /// Approximate wire size in bytes (the paper notes hints are tens of
-    /// bytes; we track this to show the overhead is negligible).
+    /// bytes; we track this to show the overhead is negligible). A cache
+    /// hint's *identity* is tens of bytes; its block payload rides along
+    /// and is accounted explicitly here (§3.5 — the block would otherwise
+    /// be re-read from the HDD, so the payload replaces device traffic,
+    /// not hint-channel overhead).
     pub fn wire_size(&self) -> usize {
         match self {
             Hint::Flush(_) => 16,
             Hint::Compaction(CompactionHint::Start { inputs, .. }) => 24 + 8 * inputs.len(),
             Hint::Compaction(CompactionHint::OutputSst { .. }) => 32,
             Hint::Compaction(CompactionHint::Finish { outputs, .. }) => 24 + 8 * outputs.len(),
-            Hint::CacheEvict(_) => 24,
+            Hint::CacheEvict(h) => 24 + h.data.len(),
         }
     }
 }
@@ -71,5 +79,22 @@ mod tests {
         });
         assert!(h.wire_size() < 100);
         assert!(Hint::Flush(FlushHint { sst: 9, bytes: 1 }).wire_size() < 32);
+    }
+
+    #[test]
+    fn cache_hint_accounts_for_its_payload() {
+        let block = std::sync::Arc::new(vec![7u8; 4096]);
+        let h = Hint::CacheEvict(CacheEvictHint {
+            sst: 3,
+            block_offset: 8192,
+            block_len: block.len() as u64,
+            data: block.clone(),
+        });
+        assert_eq!(h.wire_size(), 24 + 4096);
+        // The payload is shared, not copied, across hint clones.
+        let h2 = h.clone();
+        drop(h);
+        assert_eq!(h2.wire_size(), 24 + 4096);
+        assert_eq!(std::sync::Arc::strong_count(&block), 2);
     }
 }

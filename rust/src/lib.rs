@@ -3,20 +3,32 @@
 //! A full reproduction of *"Efficient LSM-Tree Key-Value Data Management on
 //! Hybrid SSD/HDD Zoned Storage"* (Li, Wang, Lee; 2022).
 //!
-//! The crate is organized as a three-layer system:
+//! The crate is organized as a three-layer system, scaled out by a shard
+//! tier on top:
 //!
+//! * **Shard tier ([`shard`])** — stripes the key space over `N`
+//!   independent engines sharing the hybrid substrate: a deterministic
+//!   hash router, a substrate lease layer (zone quotas, per-shard
+//!   WAL/cache pool reservations, strided file-id namespaces), a
+//!   cross-shard migration-budget arbiter (§3.4 split), and merged
+//!   metrics. `shards = 1` reproduces the single-engine system
+//!   bit-for-bit.
 //! * **Layer 3 (this crate)** — the coordinator: a discrete-event-simulated
 //!   hybrid zoned-storage substrate ([`zone`], [`sim`]), a zone-aware file
 //!   layer ([`zenfs`]), a from-scratch LSM-tree KV store ([`lsm`]), the
 //!   paper's hint bus ([`hints`]) and the three HHZS techniques plus all
-//!   baselines ([`policy`]), driven by the DES engine in [`coordinator`].
+//!   baselines ([`policy`]), driven by the DES engine in [`coordinator`] —
+//!   instantiable once per shard.
 //! * **Layer 2 (python/compile/model.py)** — JAX functions for the batched
 //!   Bloom-probe and migration-priority hot spots, AOT-lowered to HLO text.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels backing those
-//!   functions; executed from Rust via the PJRT runtime in [`runtime`].
+//!   functions; executed from Rust via the PJRT runtime in [`runtime`]
+//!   (behind the off-by-default `xla` cargo feature; the default build
+//!   uses the bit-identical native fallbacks).
 //!
 //! The experiment harness in [`exp`] regenerates every table and figure of
-//! the paper's evaluation (Table 1, Figure 2, Exp#1–Exp#6).
+//! the paper's evaluation (Table 1, Figure 2, Exp#1–Exp#6) plus the
+//! beyond-paper Exp#7 shard-scalability study.
 
 pub mod config;
 pub mod coordinator;
@@ -27,6 +39,7 @@ pub mod metrics;
 pub mod policy;
 pub mod report;
 pub mod runtime;
+pub mod shard;
 pub mod sim;
 pub mod ycsb;
 pub mod zenfs;

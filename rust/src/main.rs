@@ -1,11 +1,11 @@
 //! `hhzs` — the launcher.
 //!
 //! ```text
-//! hhzs exp <table1|fig2|exp1..exp6|all> [--profile quick|default|full]
+//! hhzs exp <table1|fig2|exp1..exp7|all> [--profile quick|default|full]
 //!          [--config FILE] [--csv DIR] [--objects N] [--ops N]
 //!          [--ssd-zones N] [--alpha F] [--seed N]
 //! hhzs bench-devices                  # Table 1 microbench only
-//! hhzs demo [--n N]                   # tiny put/get/scan smoke demo
+//! hhzs demo [--n N] [--shards N]      # tiny put/get/scan smoke demo
 //! hhzs config [--profile P]           # print the effective config TOML
 //! hhzs xla-check                      # load + smoke the AOT kernels
 //! ```
@@ -74,6 +74,9 @@ fn build_config(args: &Args) -> anyhow::Result<Config> {
     if let Some(v) = args.flags.get("clients") {
         cfg.workload.clients = v.parse()?;
     }
+    if let Some(v) = args.flags.get("shards") {
+        cfg.shards = v.parse::<usize>()?.max(1);
+    }
     Ok(cfg)
 }
 
@@ -84,6 +87,17 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
         .cloned()
         .unwrap_or_else(|| "all".to_string());
     let cfg = build_config(args)?;
+    if cfg.shards > 1 {
+        // The paper drivers (table1/fig2/exp1..exp6) reproduce single-engine
+        // results and exp7 sweeps its own shard counts; don't let a --shards
+        // flag silently measure something else than the user expects.
+        eprintln!(
+            "note: `exp` ignores shards = {} (exp1..exp6 are single-engine \
+             reproductions; exp7 sweeps 1/2/4/8). Use `demo --shards N` to \
+             drive a sharded engine directly.",
+            cfg.shards
+        );
+    }
     let opts = ExpOpts {
         cfg,
         csv_dir: Some(
@@ -97,31 +111,39 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_demo(args: &Args) -> anyhow::Result<()> {
-    use hhzs::coordinator::Engine;
     use hhzs::policy::HhzsPolicy;
+    use hhzs::shard::ShardedEngine;
     use hhzs::ycsb::{key_for, value_for};
     let n: u64 = args.flags.get("n").map_or(Ok(50_000), |v| v.parse())?;
     let cfg = build_config(args)?;
-    let mut e = Engine::new(cfg.clone(), Box::new(HhzsPolicy::new(cfg.lsm.num_levels)));
-    println!("loading {n} objects ...");
+    // `--shards 1` (the default) is bit-for-bit the single-engine system.
+    let mut db = ShardedEngine::new(&cfg, |c| Box::new(HhzsPolicy::new(c.lsm.num_levels)));
+    println!("loading {n} objects over {} shard(s) ...", db.num_shards());
     for i in 0..n {
-        e.put(&key_for(i, 24), &value_for(i, cfg.workload.value_size));
+        db.put(&key_for(i, 24), &value_for(i, cfg.workload.value_size));
     }
-    e.quiesce();
+    db.quiesce();
+    let m = db.merged_metrics();
+    let ssts: usize = db.engines.iter().map(|e| e.version.total_ssts()).sum();
+    let now = db.engines.iter().map(|e| e.now).max().unwrap_or(0);
     println!(
         "virtual time: {} | SSTs: {} | flushes: {} | compactions: {}",
-        hhzs::sim::fmt_ns(e.now),
-        e.version.total_ssts(),
-        e.metrics.flushes,
-        e.metrics.compactions
+        hhzs::sim::fmt_ns(now),
+        ssts,
+        m.flushes,
+        m.compactions
     );
     let probe = key_for(n / 2, 24);
-    let v = e.get(&probe);
+    let v = db.get(&probe);
     println!("get(mid key) -> {} bytes", v.map_or(0, |v| v.len()));
-    println!("scan(50) -> {} entries", e.scan(&key_for(0, 24), 50));
-    for (lvl, (ssd, all)) in e.ssd_share_by_level().iter().enumerate() {
-        if *all > 0 {
-            println!("  L{lvl}: {:.1}% on SSD", *ssd as f64 / *all as f64 * 100.0);
+    println!("scan(50) -> {} entries", db.scan(&key_for(0, 24), 50));
+    let shard_label = db.num_shards() > 1;
+    for (s, e) in db.engines.iter().enumerate() {
+        for (lvl, (ssd, all)) in e.ssd_share_by_level().iter().enumerate() {
+            if *all > 0 {
+                let prefix = if shard_label { format!("shard {s} ") } else { String::new() };
+                println!("  {prefix}L{lvl}: {:.1}% on SSD", *ssd as f64 / *all as f64 * 100.0);
+            }
         }
     }
     Ok(())

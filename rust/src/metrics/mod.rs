@@ -45,7 +45,7 @@ pub struct LevelSizeSample {
 }
 
 /// Aggregate metrics for one run.
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct Metrics {
     /// Client operation latencies by kind.
     pub read_lat: LogHistogram,
@@ -141,6 +141,57 @@ impl Metrics {
         }
     }
 
+    /// Fold another run's metrics into this one — the cross-shard
+    /// aggregation of [`crate::shard`]: histograms merge bucket-wise,
+    /// counters and traffic cells sum, level samples interleave by time.
+    /// Per-SST read counts rely on the shards' disjoint (strided) file-id
+    /// namespaces; on an id collision the reads still sum.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.read_lat.merge(&other.read_lat);
+        self.write_lat.merge(&other.write_lat);
+        self.scan_lat.merge(&other.scan_lat);
+        self.ops_done += other.ops_done;
+        self.reads_done += other.reads_done;
+        self.writes_done += other.writes_done;
+        self.scans_done += other.scans_done;
+        for ((cat, dev), cell) in &other.write_traffic {
+            let c = self.write_traffic.entry((*cat, *dev)).or_default();
+            c.bytes += cell.bytes;
+            c.ios += cell.ios;
+        }
+        for (dev, cell) in &other.read_traffic {
+            let c = self.read_traffic.entry(*dev).or_default();
+            c.bytes += cell.bytes;
+            c.ios += cell.ios;
+        }
+        self.ssd_cache_hits += other.ssd_cache_hits;
+        self.ssd_cache_misses += other.ssd_cache_misses;
+        self.block_cache_hits += other.block_cache_hits;
+        self.block_cache_misses += other.block_cache_misses;
+        self.memtable_hits += other.memtable_hits;
+        self.level_samples.extend(other.level_samples.iter().cloned());
+        self.level_samples.sort_by_key(|s| s.at);
+        for (sst, (level, dev, reads)) in &other.sst_reads {
+            let e = self.sst_reads.entry(*sst).or_insert((*level, *dev, 0));
+            e.0 = *level;
+            e.1 = *dev;
+            e.2 += reads;
+        }
+        self.stall_ns += other.stall_ns;
+        self.stalls += other.stalls;
+        self.migrations_cap += other.migrations_cap;
+        self.migrations_pop += other.migrations_pop;
+        self.migration_bytes += other.migration_bytes;
+        self.flushes += other.flushes;
+        self.compactions += other.compactions;
+        self.compaction_read_bytes += other.compaction_read_bytes;
+        self.compaction_write_bytes += other.compaction_write_bytes;
+        // Shard clocks are independent; the merged window spans all of
+        // them so `ops_per_sec` stays a (conservative) aggregate rate.
+        self.start_ns = self.start_ns.min(other.start_ns);
+        self.finished_at = self.finished_at.max(other.finished_at);
+    }
+
     /// Fraction of data-block read traffic served by the HDD (Fig 2(h)).
     pub fn hdd_read_fraction(&self) -> f64 {
         let ssd = self.read_traffic.get(&Dev::Ssd).map_or(0, |c| c.bytes);
@@ -190,6 +241,33 @@ mod tests {
         m.ops_done = 5000;
         m.finished_at = 2_000_000_000; // 2 virtual seconds
         assert!((m.ops_per_sec() - 2500.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merge_sums_counters_and_traffic() {
+        let mut a = Metrics::default();
+        a.record_write(WriteCategory::Wal, Dev::Ssd, 100);
+        a.record_read(Dev::Hdd, 10);
+        a.read_lat.record(1_000);
+        a.ops_done = 5;
+        a.start_ns = 100;
+        a.finished_at = 200;
+        let mut b = Metrics::default();
+        b.record_write(WriteCategory::Wal, Dev::Ssd, 50);
+        b.record_write(WriteCategory::Sst(2), Dev::Hdd, 70);
+        b.record_read(Dev::Hdd, 30);
+        b.read_lat.record(9_000);
+        b.ops_done = 7;
+        b.start_ns = 150;
+        b.finished_at = 400;
+        a.merge(&b);
+        assert_eq!(a.ops_done, 12);
+        assert_eq!(a.read_lat.n, 2);
+        assert_eq!(a.write_traffic[&(WriteCategory::Wal, Dev::Ssd)].bytes, 150);
+        assert_eq!(a.write_traffic[&(WriteCategory::Sst(2), Dev::Hdd)].bytes, 70);
+        assert_eq!(a.read_traffic[&Dev::Hdd].bytes, 40);
+        assert_eq!(a.read_traffic[&Dev::Hdd].ios, 2);
+        assert_eq!((a.start_ns, a.finished_at), (100, 400));
     }
 
     #[test]

@@ -1,0 +1,79 @@
+//! Cross-shard migration arbiter.
+//!
+//! The paper rate-limits SST migration to a single global budget (§3.4,
+//! default 4 MiB/s) so migration I/O cannot swamp foreground requests.
+//! With the LSM striped over `N` engines there are `N` independent
+//! migration actors; this arbiter splits the one global budget across
+//! them **proportionally to each shard's storage demand** (bytes of live
+//! SST data), so HHZS's hints still govern global SSD/HDD placement: a
+//! shard holding twice the data gets twice the migration bandwidth, and
+//! the sum over all shards never exceeds the configured global rate.
+
+/// Splits the global §3.4 migration-rate budget across shards.
+#[derive(Clone, Copy, Debug)]
+pub struct MigrationArbiter {
+    total_bps: f64,
+}
+
+impl MigrationArbiter {
+    pub fn new(total_bps: f64) -> Self {
+        MigrationArbiter { total_bps }
+    }
+
+    pub fn total_bps(&self) -> f64 {
+        self.total_bps
+    }
+
+    /// Per-shard rates (bytes/second), proportional to `demand_bytes`.
+    ///
+    /// Every shard keeps a trickle (zero demand counts as one byte) so a
+    /// freshly emptied shard can still react to capacity violations; the
+    /// returned rates always sum to exactly the global budget. A single
+    /// shard receives the untouched budget — the `shards = 1` identity
+    /// the regression guard depends on.
+    pub fn split(&self, demand_bytes: &[u64]) -> Vec<f64> {
+        assert!(!demand_bytes.is_empty(), "no shards to arbitrate");
+        if demand_bytes.len() == 1 {
+            return vec![self.total_bps];
+        }
+        let weights: Vec<f64> = demand_bytes.iter().map(|&d| d.max(1) as f64).collect();
+        let sum: f64 = weights.iter().sum();
+        weights.iter().map(|w| self.total_bps * (w / sum)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_shard_gets_the_exact_budget() {
+        let a = MigrationArbiter::new(4.0 * 1024.0 * 1024.0);
+        let rates = a.split(&[123_456_789]);
+        assert_eq!(rates, vec![4.0 * 1024.0 * 1024.0]);
+    }
+
+    #[test]
+    fn rates_are_demand_proportional_and_conserve_the_budget() {
+        let total = 8.0 * 1024.0 * 1024.0;
+        let a = MigrationArbiter::new(total);
+        let rates = a.split(&[300, 100, 100, 0]);
+        assert_eq!(rates.len(), 4);
+        let sum: f64 = rates.iter().sum();
+        assert!((sum - total).abs() < 1e-6, "budget leaked: {sum} vs {total}");
+        // 3:1 demand ratio → 3:1 rate ratio.
+        assert!((rates[0] / rates[1] - 3.0).abs() < 1e-9);
+        // Zero demand still gets a (tiny) positive trickle.
+        assert!(rates[3] > 0.0);
+        assert!(rates[3] < rates[1]);
+    }
+
+    #[test]
+    fn equal_demands_split_evenly() {
+        let a = MigrationArbiter::new(1000.0);
+        let rates = a.split(&[5, 5, 5, 5]);
+        for r in rates {
+            assert!((r - 250.0).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Substrate lease layer: lets `N` independent LSM engines share the one
+//! hybrid SSD/HDD zoned substrate safely.
+//!
+//! Sharing is made safe by *partitioning up front* instead of locking at
+//! run time: each shard leases
+//!
+//! * a disjoint zone quota on both devices (the SSD's 20 zones and the
+//!   HDD zone pool are split with remainders going to the lowest shard
+//!   indices — conservation is exact: the leased quotas sum to the
+//!   substrate totals);
+//! * its own WAL/cache pool reservation, re-derived from the §3.2 rule
+//!   (per-shard maximum WAL size / zone capacity) because each shard runs
+//!   its own WAL stream over its own MemTables;
+//! * a strided slice of the shared file-id namespace (`shard + 1`,
+//!   `shard + 1 + N`, ...), so SST ids — which double as zenfs file ids
+//!   and metric keys — never collide across engines;
+//! * proportional slices of the memory budgets (MemTable, L0 target,
+//!   block cache), keeping the aggregate footprint equal to the
+//!   single-engine system's;
+//! * an initial `1/N` slice of the §3.4 migration-rate budget, later
+//!   refined by the demand-proportional [`crate::shard::arbiter`].
+//!
+//! `shards = 1` short-circuits to the untouched config (base 1, stride 1),
+//! which is what makes the single-shard system reproduce the seed engine
+//! bit-for-bit — the regression guard for this whole subsystem.
+
+use crate::config::{Config, KIB};
+
+/// What one shard is allowed to use of the shared substrate.
+pub struct ShardLease {
+    pub shard: usize,
+    /// The shard-local view of the configuration (leased geometry and
+    /// budget slices applied).
+    pub cfg: Config,
+    /// First file id of this shard's namespace slice.
+    pub file_id_base: u64,
+    /// Distance between consecutive ids of the slice (= shard count).
+    pub file_id_stride: u64,
+}
+
+/// `i`-th part of `total` split into `n` near-equal parts (remainder to
+/// the lowest indices). Exact: the parts sum back to `total`.
+fn split_zones(total: u32, n: u32, i: u32) -> u32 {
+    total / n + u32::from(i < total % n)
+}
+
+/// Carve the substrate described by `cfg` into `cfg.shards` leases.
+///
+/// Panics when the substrate cannot host that many engines (every shard
+/// needs at least one WAL/cache zone plus one SST zone on the SSD, and at
+/// least `hdd_zones_per_sst` zones on the HDD).
+pub fn carve(cfg: &Config) -> Vec<ShardLease> {
+    let n = cfg.shards.max(1);
+    if n == 1 {
+        // Exact single-engine reproduction: untouched config, unit stride.
+        return vec![ShardLease {
+            shard: 0,
+            cfg: cfg.clone(),
+            file_id_base: 1,
+            file_id_stride: 1,
+        }];
+    }
+    let n32 = n as u32;
+    assert!(
+        cfg.geometry.ssd_zones >= 2 * n32,
+        "substrate too small: {} SSD zones cannot host {} shards \
+         (each needs ≥ 1 pool zone + 1 file zone)",
+        cfg.geometry.ssd_zones,
+        n
+    );
+    assert!(
+        cfg.geometry.hdd_zones >= n32 * cfg.hdd_zones_per_sst(),
+        "substrate too small: {} HDD zones cannot host {} shards",
+        cfg.geometry.hdd_zones,
+        n
+    );
+    (0..n)
+        .map(|i| {
+            let mut c = cfg.clone();
+            c.geometry.ssd_zones = split_zones(cfg.geometry.ssd_zones, n32, i as u32);
+            c.geometry.hdd_zones = split_zones(cfg.geometry.hdd_zones, n32, i as u32);
+            // Memory budgets are split so N shards together spend what the
+            // single engine did.
+            c.lsm.memtable_size = (cfg.lsm.memtable_size / n as u64).max(4 * KIB);
+            c.lsm.l0_target = (cfg.lsm.l0_target / n as u64).max(c.lsm.memtable_size);
+            c.lsm.block_cache_bytes = (cfg.lsm.block_cache_bytes / n as u64).max(64 * KIB);
+            // §3.2 per shard: pool zones = ceil(max WAL size / zone cap),
+            // where max WAL = max_memtables × (per-shard) memtable size.
+            // Capped to leave at least one SST zone in the shard's slice.
+            let max_wal = c.lsm.memtable_size * cfg.lsm.max_memtables as u64;
+            let pool = max_wal.div_ceil(cfg.geometry.ssd_zone_cap).max(1) as u32;
+            c.geometry.wal_cache_zones = pool.min(c.geometry.ssd_zones - 1);
+            // Initial even split of the global migration budget; the
+            // arbiter refines this from measured storage demand.
+            c.hhzs.migration_rate_bps = cfg.hhzs.migration_rate_bps / n as f64;
+            ShardLease {
+                shard: i,
+                cfg: c,
+                file_id_base: i as u64 + 1,
+                file_id_stride: n as u64,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_shard_lease_is_the_identity() {
+        let cfg = Config::tiny();
+        let leases = carve(&cfg);
+        assert_eq!(leases.len(), 1);
+        assert_eq!(leases[0].cfg, cfg);
+        assert_eq!((leases[0].file_id_base, leases[0].file_id_stride), (1, 1));
+    }
+
+    #[test]
+    fn zone_quotas_conserve_the_substrate() {
+        for n in [2usize, 3, 4, 8] {
+            let mut cfg = Config::tiny();
+            cfg.shards = n;
+            let leases = carve(&cfg);
+            assert_eq!(leases.len(), n);
+            let ssd: u32 = leases.iter().map(|l| l.cfg.geometry.ssd_zones).sum();
+            let hdd: u32 = leases.iter().map(|l| l.cfg.geometry.hdd_zones).sum();
+            assert_eq!(ssd, cfg.geometry.ssd_zones, "SSD zones leak at n={n}");
+            assert_eq!(hdd, cfg.geometry.hdd_zones, "HDD zones leak at n={n}");
+        }
+    }
+
+    #[test]
+    fn every_shard_keeps_pool_and_file_zones() {
+        for n in [2usize, 4, 8] {
+            let mut cfg = Config::tiny();
+            cfg.shards = n;
+            for l in carve(&cfg) {
+                let g = &l.cfg.geometry;
+                assert!(g.wal_cache_zones >= 1, "shard {} has no pool zone", l.shard);
+                assert!(
+                    g.ssd_zones > g.wal_cache_zones,
+                    "shard {} has no SST zone ({} total, {} pool)",
+                    l.shard,
+                    g.ssd_zones,
+                    g.wal_cache_zones
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn file_id_namespaces_are_disjoint() {
+        let mut cfg = Config::tiny();
+        cfg.shards = 4;
+        let leases = carve(&cfg);
+        let mut seen = std::collections::HashSet::new();
+        for l in &leases {
+            // First 1000 ids of each shard's strided namespace.
+            for k in 0..1000u64 {
+                let id = l.file_id_base + k * l.file_id_stride;
+                assert!(seen.insert(id), "file id {id} leased to two shards");
+            }
+        }
+    }
+
+    #[test]
+    fn memory_budgets_split_but_floor() {
+        let mut cfg = Config::tiny();
+        cfg.shards = 4;
+        for l in carve(&cfg) {
+            assert!(l.cfg.lsm.memtable_size <= cfg.lsm.memtable_size / 4 + 4 * KIB);
+            assert!(l.cfg.lsm.block_cache_bytes >= 64 * KIB);
+            assert!(l.cfg.lsm.l0_target >= l.cfg.lsm.memtable_size);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "substrate too small")]
+    fn oversharding_is_rejected() {
+        let mut cfg = Config::tiny();
+        cfg.shards = cfg.geometry.ssd_zones as usize; // needs 2 zones/shard
+        carve(&cfg);
+    }
+
+    #[test]
+    fn migration_budget_splits_evenly_at_carve_time() {
+        let mut cfg = Config::tiny();
+        cfg.shards = 4;
+        let total: f64 = carve(&cfg).iter().map(|l| l.cfg.hhzs.migration_rate_bps).sum();
+        assert!((total - cfg.hhzs.migration_rate_bps).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,283 @@
+//! Sharded multi-engine subsystem: stripes the LSM key space over `N`
+//! independent engines sharing the hybrid SSD/HDD zoned substrate.
+//!
+//! The seed system is one LSM engine over one coordinator; production
+//! traffic needs the key space partitioned (KeystoneDB stripes 256 ways
+//! for the same reason). This module adds exactly that, without touching
+//! the engine's own semantics:
+//!
+//! * [`router`] — deterministic hash routing: every client op is owned by
+//!   exactly one shard;
+//! * [`lease`] — the substrate lease layer: zone quotas, per-shard
+//!   WAL/cache pool reservations, strided file-id namespaces, and memory
+//!   budget slices that make `N` engines safe on the shared substrate;
+//! * [`arbiter`] — splits the paper's global migration-rate budget
+//!   (§3.4) across shards proportionally to their storage demand;
+//! * [`ShardedEngine`] — owns the engines, routes synchronous ops, drives
+//!   workload phases, and merges per-shard metrics into one report.
+//!
+//! Two deliberate simplifications, both recorded as ROADMAP open items:
+//! each shard runs its own virtual clock (cross-shard device-queue
+//! contention is not modeled — zoned devices serve concurrent per-zone
+//! streams largely in parallel, which is what independent clocks
+//! approximate), and scans are served by the start key's home shard
+//! (no scatter-gather).
+//!
+//! `shards = 1` is bit-for-bit the seed single-engine system: the lease
+//! is the identity, the router maps everything to shard 0, and the
+//! arbiter returns the untouched budget. Tests pin this.
+
+pub mod arbiter;
+pub mod lease;
+pub mod router;
+
+pub use arbiter::MigrationArbiter;
+pub use lease::{carve, ShardLease};
+pub use router::Router;
+
+use crate::config::Config;
+use crate::coordinator::{Engine, OpSource};
+use crate::metrics::Metrics;
+use crate::policy::Policy;
+use crate::sim::Ns;
+
+/// `N` engines + a router over the shared substrate.
+pub struct ShardedEngine {
+    pub engines: Vec<Engine>,
+    pub router: Router,
+    /// The global §3.4 budget the arbiter re-splits.
+    total_migration_rate_bps: f64,
+}
+
+impl ShardedEngine {
+    /// Build `cfg.shards` engines from substrate leases. `policy_fn`
+    /// constructs each shard's placement policy from its leased config
+    /// (shards keep independent policy state — their own demand trackers
+    /// and read-rate maps — exactly like independent stores).
+    pub fn new(cfg: &Config, mut policy_fn: impl FnMut(&Config) -> Box<dyn Policy>) -> Self {
+        let leases = carve(cfg);
+        let router = Router::new(leases.len());
+        let engines = leases
+            .into_iter()
+            .map(|l| {
+                let policy = policy_fn(&l.cfg);
+                let mut e = Engine::new(l.cfg, policy);
+                e.set_file_id_namespace(l.file_id_base, l.file_id_stride);
+                e
+            })
+            .collect();
+        ShardedEngine {
+            engines,
+            router,
+            total_migration_rate_bps: cfg.hhzs.migration_rate_bps,
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.engines.len()
+    }
+
+    // ------------------------------------------------------------------
+    // Workload mode
+    // ------------------------------------------------------------------
+
+    /// Drive one workload phase on every shard. `make_source` builds the
+    /// shard-local op stream (normally a router-filtered view of the same
+    /// deterministic global stream — see `ycsb::RoutedSource`); each shard
+    /// serves `clients` closed-loop clients of its own frontend.
+    ///
+    /// `target_ops_per_sec` is a *global* budget: it is split evenly
+    /// across shards so the aggregate pace matches what a single engine
+    /// would be throttled to (`t / 1` is exact, preserving the
+    /// single-shard reproduction).
+    pub fn run(
+        &mut self,
+        mut make_source: impl FnMut(usize) -> Box<dyn OpSource>,
+        clients: usize,
+        target_ops_per_sec: Option<f64>,
+        sample_levels: bool,
+    ) {
+        let n = self.engines.len() as f64;
+        let per_shard_target = target_ops_per_sec.map(|t| t / n);
+        for (shard, e) in self.engines.iter_mut().enumerate() {
+            let mut src = make_source(shard);
+            e.run(&mut *src, clients, per_shard_target, sample_levels);
+        }
+    }
+
+    /// Flush every shard's MemTables (the between-phases reopen of §4.1).
+    pub fn flush_all(&mut self) {
+        for e in &mut self.engines {
+            e.flush_all();
+        }
+    }
+
+    /// Let all shards' background work settle.
+    pub fn quiesce(&mut self) {
+        for e in &mut self.engines {
+            e.quiesce();
+        }
+    }
+
+    /// Re-split the global migration budget (§3.4) across shards in
+    /// proportion to their live SST bytes; returns the per-shard rates.
+    /// Call between phases (migration pacing reads the config live).
+    pub fn rebalance_migration_budgets(&mut self) -> Vec<f64> {
+        let demands: Vec<u64> =
+            self.engines.iter().map(|e| e.fs.total_file_bytes()).collect();
+        let rates = MigrationArbiter::new(self.total_migration_rate_bps).split(&demands);
+        for (e, r) in self.engines.iter_mut().zip(&rates) {
+            e.cfg.hhzs.migration_rate_bps = *r;
+        }
+        rates
+    }
+
+    // ------------------------------------------------------------------
+    // Merged reporting
+    // ------------------------------------------------------------------
+
+    /// One metrics record for the whole system: histograms merged
+    /// bucket-wise, counters and traffic cells summed.
+    pub fn merged_metrics(&self) -> Metrics {
+        let mut m = self.engines[0].metrics.clone();
+        for e in &self.engines[1..] {
+            m.merge(&e.metrics);
+        }
+        m
+    }
+
+    /// Aggregate throughput of the last phase: total ops over the slowest
+    /// shard's duration (shards run concurrently in deployment, so the
+    /// straggler bounds the wall time).
+    pub fn aggregate_ops_per_sec(&self) -> f64 {
+        let total_ops: u64 = self.engines.iter().map(|e| e.metrics.ops_done).sum();
+        let max_dur: Ns = self
+            .engines
+            .iter()
+            .map(|e| e.metrics.finished_at.saturating_sub(e.metrics.start_ns))
+            .max()
+            .unwrap_or(0);
+        if max_dur == 0 {
+            0.0
+        } else {
+            total_ops as f64 / (max_dur as f64 / 1e9)
+        }
+    }
+
+    /// Ops executed per shard in the last phase (load-balance reporting).
+    pub fn ops_per_shard(&self) -> Vec<u64> {
+        self.engines.iter().map(|e| e.metrics.ops_done).collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Synchronous DB-style API (routed)
+    // ------------------------------------------------------------------
+
+    pub fn put(&mut self, key: &[u8], value: &[u8]) {
+        let s = self.router.route(key);
+        self.engines[s].put(key, value);
+    }
+
+    pub fn delete(&mut self, key: &[u8]) {
+        let s = self.router.route(key);
+        self.engines[s].delete(key);
+    }
+
+    pub fn get(&mut self, key: &[u8]) -> Option<Vec<u8>> {
+        let s = self.router.route(key);
+        self.engines[s].get(key)
+    }
+
+    /// Scan served by the start key's home shard (hash partitioning
+    /// scatters ranges; cross-shard scatter-gather is an open item).
+    pub fn scan(&mut self, start: &[u8], n: usize) -> usize {
+        let s = self.router.route(start);
+        self.engines[s].scan(start, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::HhzsPolicy;
+    use crate::ycsb::{key_for, value_for};
+
+    fn sharded(n: usize) -> ShardedEngine {
+        let mut cfg = Config::tiny();
+        cfg.shards = n;
+        ShardedEngine::new(&cfg, |c| Box::new(HhzsPolicy::new(c.lsm.num_levels)))
+    }
+
+    #[test]
+    fn routed_put_get_roundtrip() {
+        let mut se = sharded(4);
+        for i in 0..2_000u64 {
+            se.put(&key_for(i, 24), &value_for(i, 100));
+        }
+        se.quiesce();
+        for i in (0..2_000u64).step_by(31) {
+            assert_eq!(se.get(&key_for(i, 24)), Some(value_for(i, 100)), "key {i}");
+        }
+        assert_eq!(se.get(b"never-written"), None);
+        // Overwrite + delete stay on the owning shard.
+        let k = key_for(7, 24);
+        se.put(&k, b"fresh");
+        assert_eq!(se.get(&k).as_deref(), Some(b"fresh".as_slice()));
+        se.delete(&k);
+        assert_eq!(se.get(&k), None);
+    }
+
+    #[test]
+    fn data_lands_on_multiple_shards_with_disjoint_file_ids() {
+        let mut se = sharded(4);
+        for i in 0..8_000u64 {
+            se.put(&key_for(i, 24), &value_for(i, 500));
+        }
+        se.quiesce();
+        let mut seen = std::collections::HashSet::new();
+        let mut shards_with_files = 0;
+        for (s, e) in se.engines.iter().enumerate() {
+            let mut any = false;
+            for f in e.fs.files() {
+                assert!(seen.insert(f.id), "file id {} on two shards", f.id);
+                // Strided namespace: id ≡ shard + 1 (mod N).
+                assert_eq!((f.id - 1) % 4, s as u64, "file {} outside its lease", f.id);
+                any = true;
+            }
+            shards_with_files += usize::from(any);
+        }
+        assert!(shards_with_files >= 3, "hash routing should hit most shards");
+    }
+
+    #[test]
+    fn merged_metrics_sum_per_shard_ops() {
+        let mut se = sharded(2);
+        for i in 0..500u64 {
+            se.put(&key_for(i, 24), &value_for(i, 64));
+        }
+        let per: u64 = se.engines.iter().map(|e| e.metrics.writes_done).sum();
+        assert_eq!(per, 500);
+        assert_eq!(se.merged_metrics().writes_done, 500);
+    }
+
+    #[test]
+    fn rebalanced_budgets_follow_data_demand() {
+        let mut se = sharded(2);
+        for i in 0..6_000u64 {
+            se.put(&key_for(i, 24), &value_for(i, 500));
+        }
+        se.flush_all();
+        se.quiesce();
+        let rates = se.rebalance_migration_budgets();
+        let total: f64 = rates.iter().sum();
+        assert!((total - se.total_migration_rate_bps).abs() < 1e-6);
+        let demands: Vec<u64> =
+            se.engines.iter().map(|e| e.fs.total_file_bytes()).collect();
+        // More data ⇒ at least as much budget.
+        if demands[0] > demands[1] {
+            assert!(rates[0] >= rates[1]);
+        } else if demands[1] > demands[0] {
+            assert!(rates[1] >= rates[0]);
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Deterministic key → shard routing.
+//!
+//! Every client operation is owned by exactly one shard, decided by an
+//! FNV-1a hash of the user key modulo the shard count (the same scheme
+//! KeystoneDB's 256-stripe LSM uses). The mapping is a pure function of
+//! `(key, shard count)` — no state, no RNG — so op streams, replays, and
+//! recovery all agree on ownership across runs and processes.
+
+use crate::coordinator::Op;
+use crate::sim::rng::fnv1a;
+
+/// The shard router. Cheap to copy; embed it anywhere a placement
+/// decision is needed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Router {
+    shards: usize,
+}
+
+impl Router {
+    pub fn new(shards: usize) -> Self {
+        assert!(shards >= 1, "a router needs at least one shard");
+        Router { shards }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Home shard of a user key. Total (every key maps to exactly one
+    /// shard in `0..shards`) and deterministic.
+    pub fn route(&self, key: &[u8]) -> usize {
+        if self.shards == 1 {
+            return 0;
+        }
+        (fnv1a(key) % self.shards as u64) as usize
+    }
+
+    /// Home shard of a client operation (scans are routed by their start
+    /// key; cross-shard scatter-gather scans are an open ROADMAP item).
+    pub fn route_op(&self, op: &Op) -> usize {
+        let key = match op {
+            Op::Insert { key, .. }
+            | Op::Update { key, .. }
+            | Op::Read { key }
+            | Op::Scan { key, .. }
+            | Op::ReadModifyWrite { key, .. } => key,
+        };
+        self.route(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_shard_routes_everything_to_zero() {
+        let r = Router::new(1);
+        for i in 0..100u64 {
+            assert_eq!(r.route(&i.to_be_bytes()), 0);
+        }
+    }
+
+    #[test]
+    fn routing_is_total_and_deterministic() {
+        for n in [2usize, 3, 4, 8] {
+            let a = Router::new(n);
+            let b = Router::new(n);
+            for i in 0..1000u64 {
+                let key = crate::ycsb::key_for(i, 24);
+                let s = a.route(&key);
+                assert!(s < n, "route out of range");
+                assert_eq!(s, b.route(&key), "routers must agree");
+            }
+        }
+    }
+
+    #[test]
+    fn hashing_spreads_ycsb_keys() {
+        let n = 4;
+        let r = Router::new(n);
+        let mut counts = vec![0u64; n];
+        for i in 0..10_000u64 {
+            counts[r.route(&crate::ycsb::key_for(i, 24))] += 1;
+        }
+        for (s, c) in counts.iter().enumerate() {
+            // Loose balance bound: each shard gets 15–35% of a fair 25%.
+            assert!(
+                (1_500..=3_500).contains(c),
+                "shard {s} got {c} of 10000 keys"
+            );
+        }
+    }
+
+    #[test]
+    fn ops_route_by_their_key() {
+        let r = Router::new(8);
+        let key = crate::ycsb::key_for(42, 24);
+        let home = r.route(&key);
+        let ops = [
+            Op::Insert { key: key.clone(), value: vec![1] },
+            Op::Update { key: key.clone(), value: vec![2] },
+            Op::Read { key: key.clone() },
+            Op::Scan { key: key.clone(), len: 10 },
+            Op::ReadModifyWrite { key: key.clone(), value: vec![3] },
+        ];
+        for op in &ops {
+            assert_eq!(r.route_op(op), home);
+        }
+    }
+}

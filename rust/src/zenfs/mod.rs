@@ -311,6 +311,12 @@ impl ZenFs {
         self.files.values()
     }
 
+    /// Total bytes of live files — a shard's storage demand, read by the
+    /// cross-shard migration arbiter (§3.4 budget split).
+    pub fn total_file_bytes(&self) -> u64 {
+        self.files.values().map(|f| f.size).sum()
+    }
+
     /// Charge device time for a background chunk (compaction/migration).
     pub fn charge(&mut self, now: Ns, dev: Dev, kind: AccessKind, bytes: u64) -> (Ns, Ns) {
         self.device(dev).charge(now, kind, bytes)
@@ -439,6 +445,17 @@ mod tests {
         }
         assert_eq!(f.relocate_file(1, Dev::Ssd).unwrap_err(), FsError::NoSpace(Dev::Ssd));
         assert_eq!(f.file_dev(1), Some(Dev::Hdd), "file untouched on failure");
+    }
+
+    #[test]
+    fn total_file_bytes_tracks_live_files() {
+        let mut f = fs();
+        assert_eq!(f.total_file_bytes(), 0);
+        f.create_file(0, 1, Dev::Ssd, &[0u8; 1000], true).unwrap();
+        f.create_file(0, 2, Dev::Hdd, &[0u8; 2000], true).unwrap();
+        assert_eq!(f.total_file_bytes(), 3000);
+        f.delete_file(1).unwrap();
+        assert_eq!(f.total_file_bytes(), 2000);
     }
 
     #[test]

@@ -283,6 +283,101 @@ fn crash_recovery_mid_compaction_discards_orphans() {
 }
 
 #[test]
+fn sharded_one_shard_reproduces_single_engine_bit_for_bit() {
+    use hhzs::shard::ShardedEngine;
+    use hhzs::ycsb::{RoutedSource, Spec, YcsbSource};
+    let mut cfg = Config::paper_scaled(2048);
+    cfg.workload.load_objects = 20_000;
+    cfg.workload.ops = 5_000;
+    cfg.shards = 1;
+    let clients = cfg.workload.clients;
+
+    // Reference: the seed single-engine §4.1 protocol.
+    let (mut single, single_load) = load_fresh(&cfg, "HHZS", None, false);
+    let single_a = run_phase(&mut single, &cfg, Kind::A, cfg.workload.zipf_alpha);
+
+    // Same protocol through the shard subsystem at shards = 1.
+    let mut se = ShardedEngine::new(&cfg, |c| make_policy("HHZS", c));
+    let router = se.router;
+    let load = Spec::from_config(&cfg, Kind::Load);
+    se.run(
+        |s| Box::new(RoutedSource::new(YcsbSource::new(load.clone(), clients), router, s)),
+        clients,
+        None,
+        false,
+    );
+    let sharded_load = se.merged_metrics();
+    se.flush_all();
+    se.rebalance_migration_budgets();
+    let a = Spec::from_config(&cfg, Kind::A);
+    se.run(
+        |s| Box::new(RoutedSource::new(YcsbSource::new(a.clone(), clients), router, s)),
+        clients,
+        None,
+        false,
+    );
+    let sharded_a = se.merged_metrics();
+
+    // Same seed ⇒ identical virtual timeline and identical numbers.
+    assert_eq!(single.now, se.engines[0].now, "virtual clocks diverged");
+    for (name, s, m) in
+        [("load", &single_load, &sharded_load), ("A", &single_a, &sharded_a)]
+    {
+        assert_eq!(s.ops_done, m.ops_done, "{name}: ops");
+        assert_eq!(
+            s.ops_per_sec().to_bits(),
+            m.ops_per_sec().to_bits(),
+            "{name}: throughput must be bit-identical"
+        );
+        assert_eq!(s.stalls, m.stalls, "{name}: stalls");
+        assert_eq!(s.flushes, m.flushes, "{name}: flushes");
+        assert_eq!(s.compactions, m.compactions, "{name}: compactions");
+        assert_eq!(s.migration_bytes, m.migration_bytes, "{name}: migration bytes");
+        assert_eq!(
+            s.read_lat.quantile(0.999),
+            m.read_lat.quantile(0.999),
+            "{name}: read tail"
+        );
+    }
+}
+
+#[test]
+fn sharding_scales_aggregate_throughput() {
+    // Exp#7's acceptance property at test scale: aggregate simulated
+    // throughput on workload A is non-decreasing from 1 → 4 shards over
+    // the same substrate totals (each count is deterministic, so this is
+    // a fixed comparison, not a statistical one).
+    let mut cfg = Config::paper_scaled(1024);
+    cfg.workload.load_objects = 60_000;
+    cfg.workload.ops = 15_000;
+    let mut tputs = Vec::new();
+    for n in [1usize, 2, 4] {
+        let (_, a_tput, m, per_shard) = hhzs::exp::exp7::run_one(&cfg, n);
+        assert_eq!(m.ops_done, 15_000, "{n} shards lost ops");
+        assert_eq!(per_shard.len(), n);
+        tputs.push(a_tput);
+    }
+    assert!(
+        tputs[1] >= tputs[0],
+        "2 shards must not be slower than 1 ({:.0} vs {:.0})",
+        tputs[1],
+        tputs[0]
+    );
+    assert!(
+        tputs[2] >= tputs[1],
+        "4 shards must not be slower than 2 ({:.0} vs {:.0})",
+        tputs[2],
+        tputs[1]
+    );
+    assert!(
+        tputs[2] > tputs[0] * 1.5,
+        "4-way sharding should scale aggregate throughput ({:.0} vs {:.0})",
+        tputs[2],
+        tputs[0]
+    );
+}
+
+#[test]
 fn all_schemes_survive_full_protocol() {
     // Smoke every scheme through load + a mixed phase without panics and
     // with exact op accounting.

@@ -291,6 +291,108 @@ fn prop_engine_read_your_writes_and_zone_consistency() {
     });
 }
 
+// ---------------------------------------------------------------------
+// Shard-subsystem invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_router_total_deterministic_and_stable_across_instances() {
+    use hhzs::shard::Router;
+    forall("router", 30, |rng| {
+        let n = 1 + rng.next_below(16) as usize;
+        let a = Router::new(n);
+        let b = Router::new(n); // independent instance, same config
+        for _ in 0..200 {
+            let key = rand_key(rng);
+            let s = a.route(&key);
+            // Total: every key maps to exactly one shard in range.
+            assert!(s < n, "key routed outside 0..{n}");
+            // Deterministic: repeated and cross-instance routing agree.
+            assert_eq!(s, a.route(&key), "routing must be a pure function");
+            assert_eq!(s, b.route(&key), "instances must agree");
+        }
+    });
+}
+
+#[test]
+fn prop_histogram_merge_totals_equal_sum_of_parts() {
+    use hhzs::metrics::LogHistogram;
+    forall("hist-merge", 30, |rng| {
+        let parts = 1 + rng.next_below(8) as usize;
+        let mut merged = LogHistogram::new();
+        let mut shards = Vec::new();
+        let mut all_values = Vec::new();
+        for _ in 0..parts {
+            let mut h = LogHistogram::new();
+            for _ in 0..rng.next_below(500) {
+                let v = 1 + rng.next_below(1 << 30);
+                h.record(v);
+                all_values.push(v);
+            }
+            shards.push(h);
+        }
+        for h in &shards {
+            merged.merge(h);
+        }
+        let n_sum: u64 = shards.iter().map(|h| h.n).sum();
+        let sum_sum: u128 = shards.iter().map(|h| h.sum).sum();
+        assert_eq!(merged.n, n_sum, "merged count must equal the shard sum");
+        assert_eq!(merged.sum, sum_sum, "merged latency mass must be conserved");
+        if let Some(&max) = all_values.iter().max() {
+            assert_eq!(merged.max, max);
+            assert_eq!(merged.min, *all_values.iter().min().unwrap());
+            // The merged p100 lands on the true maximum (capped bucket).
+            assert_eq!(merged.quantile(1.0), merged.max.min(max));
+        }
+    });
+}
+
+#[test]
+fn prop_metrics_merge_conserves_counters_and_traffic() {
+    use hhzs::metrics::{Metrics, WriteCategory};
+    forall("metrics-merge", 20, |rng| {
+        let parts = 1 + rng.next_below(6) as usize;
+        let mut shards: Vec<Metrics> = Vec::new();
+        for _ in 0..parts {
+            let mut m = Metrics::default();
+            for _ in 0..rng.next_below(100) {
+                let dev = if rng.next_below(2) == 0 { Dev::Ssd } else { Dev::Hdd };
+                match rng.next_below(3) {
+                    0 => m.record_write(WriteCategory::Wal, dev, 1 + rng.next_below(4096)),
+                    1 => m.record_write(
+                        WriteCategory::Sst(rng.next_below(7) as usize),
+                        dev,
+                        1 + rng.next_below(4096),
+                    ),
+                    _ => m.record_read(dev, 1 + rng.next_below(4096)),
+                }
+                m.ops_done += 1;
+            }
+            shards.push(m);
+        }
+        let mut merged = Metrics::default();
+        for m in &shards {
+            merged.merge(m);
+        }
+        let ops: u64 = shards.iter().map(|m| m.ops_done).sum();
+        assert_eq!(merged.ops_done, ops);
+        let write_bytes = |m: &Metrics| -> u64 {
+            m.write_traffic.values().map(|c| c.bytes).sum()
+        };
+        let read_ios = |m: &Metrics| -> u64 { m.read_traffic.values().map(|c| c.ios).sum() };
+        assert_eq!(
+            write_bytes(&merged),
+            shards.iter().map(write_bytes).sum::<u64>(),
+            "write traffic must be conserved"
+        );
+        assert_eq!(
+            read_ios(&merged),
+            shards.iter().map(read_ios).sum::<u64>(),
+            "read IOs must be conserved"
+        );
+    });
+}
+
 #[test]
 fn prop_deterministic_replay() {
     // Same seed ⇒ bit-identical virtual timeline and metrics.

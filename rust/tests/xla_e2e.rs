@@ -1,6 +1,10 @@
 //! Three-layer integration: the AOT Pallas/JAX kernels executing inside
-//! the Rust coordinator's request path. Skipped (cleanly) when
-//! `artifacts/` has not been built yet.
+//! the Rust coordinator's request path. The whole target is compiled only
+//! with the `xla` cargo feature (the default build uses the native
+//! fallbacks), and skipped (cleanly) when `artifacts/` has not been built
+//! yet.
+
+#![cfg(feature = "xla")]
 
 use std::rc::Rc;
 

@@ -1,0 +1,121 @@
+//! API-compatible stub of the PJRT/XLA binding (`xla-rs` shape) used by
+//! `hhzs`'s off-by-default `xla` cargo feature.
+//!
+//! This vendor crate exists so `cargo build --features xla` still
+//! *compiles* in the offline environment. Every entry point returns a
+//! "PJRT runtime unavailable" error at runtime; `hhzs` treats that as
+//! "run with the native kernels" (its callers check
+//! `XlaKernels::artifacts_present` / `load` before dispatching). To run
+//! the real AOT Pallas kernels, replace this directory with the actual
+//! binding (see `/opt/xla-example` on the lab image) — the `hhzs` code
+//! needs no changes.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: every operation fails with this.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} is unavailable — this build links the vendored PJRT stub; \
+         install the real xla binding to execute AOT kernels"
+    ))
+}
+
+/// A host literal (stub: carries no data).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar<T>(_v: T) -> Literal {
+        Literal
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+/// A device buffer returned by an execution (stub: never constructed).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// An HLO module parsed from text (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled executable (stub: never constructed).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A PJRT client (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(Literal::vec1(&[1u32, 2]).to_vec::<i32>().is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("stub"));
+    }
+}
