@@ -61,8 +61,8 @@ fn main() {
         let key = key_for(seq % 4000, 24);
         if let Some(bi) = meta.find_block(&key) {
             let h = &meta.blocks[bi];
-            let block = &data[h.offset as usize..(h.offset + h.len as u64) as usize];
-            std::hint::black_box(search_block(block, &key));
+            let block = data.slice_to_buf(h.offset, h.len as u64);
+            std::hint::black_box(search_block(&block, &key));
         }
     });
 
@@ -71,13 +71,13 @@ fn main() {
     let cfg = Config::tiny();
     let mut e = Engine::new(cfg.clone(), Box::new(HhzsPolicy::new(cfg.lsm.num_levels)));
     for i in 0..60_000u64 {
-        e.put(&key_for(i, 24), &value_for(i, 1000));
+        e.put_payload(&key_for(i, 24), value_for(i, 1000));
     }
     e.quiesce();
     let mut k = 0u64;
     bench_fn("engine::put (incl. DES)", 50_000, || {
         k += 1;
-        e.put(&key_for(k % 60_000, 24), &value_for(k, 1000));
+        e.put_payload(&key_for(k % 60_000, 24), value_for(k, 1000));
     });
     e.quiesce();
     bench_fn("engine::get (incl. DES)", 50_000, || {

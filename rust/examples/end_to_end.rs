@@ -74,7 +74,7 @@ fn main() -> anyhow::Result<()> {
     let bloom_calls = kernels.bloom_calls.get();
     // Parity check: the same keys through the native per-key path.
     db.xla = None;
-    let native: Vec<Option<Vec<u8>>> = batch.iter().map(|k| db.get(k)).collect();
+    let native: Vec<Option<hhzs::wire::Payload>> = batch.iter().map(|k| db.get(k)).collect();
     anyhow::ensure!(via_xla == native, "XLA and native read paths must agree");
     let found = via_xla.iter().filter(|v| v.is_some()).count();
     println!(

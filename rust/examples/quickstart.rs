@@ -22,7 +22,7 @@ fn main() {
     for i in 0..60_000u64 {
         let key = hhzs::ycsb::key_for(i, 24);
         let value = hhzs::ycsb::value_for(i, 1000);
-        db.put(&key, &value);
+        db.put_payload(&key, value);
     }
     db.quiesce(); // let background flush/compaction/migration settle
 
@@ -39,11 +39,11 @@ fn main() {
     let k = hhzs::ycsb::key_for(31_337, 24);
     let v = db.get(&k).expect("key written above");
     assert_eq!(v, hhzs::ycsb::value_for(31_337, 1000));
-    println!("  get(key 31337) -> {} bytes OK", v.len());
+    println!("  get(key 31337) -> {} bytes OK", v.len);
 
     // --- overwrite & delete ---------------------------------------------
     db.put(&k, b"fresh value");
-    assert_eq!(db.get(&k).as_deref(), Some(b"fresh value".as_slice()));
+    assert_eq!(db.get(&k), Some(hhzs::wire::Payload::from_bytes(b"fresh value")));
     db.delete(&k);
     assert_eq!(db.get(&k), None);
     println!("  overwrite + delete OK");

@@ -32,7 +32,7 @@ fn main() {
 
     println!("\nwriting 60,000 KV objects through the router...");
     for i in 0..60_000u64 {
-        db.put(&key_for(i, 24), &value_for(i, 1000));
+        db.put_payload(&key_for(i, 24), value_for(i, 1000));
     }
     db.quiesce();
 
@@ -51,7 +51,7 @@ fn main() {
     let k = key_for(31_337, 24);
     let v = db.get(&k).expect("key written above");
     assert_eq!(v, value_for(31_337, 1000));
-    println!("\nget(key 31337) -> {} bytes from shard {}", v.len(), db.router.route(&k));
+    println!("\nget(key 31337) -> {} bytes from shard {}", v.len, db.router.route(&k));
 
     // The arbiter splits the global 4 MiB/s migration budget by demand.
     let rates = db.rebalance_migration_budgets();

@@ -1,0 +1,228 @@
+//! `hhzs bench wallclock` — the BENCH_2 wall-clock/memory benchmark.
+//!
+//! Measures what the zero-materialization data path is for: how many
+//! simulated operations the DES executes per *wall-clock* second, and
+//! that peak memory tracks entry count rather than payload bytes.
+//!
+//! The benchmark runs the §4.1 protocol (load, reopen, YCSB-A) on a
+//! shape-preserving geometry at 10× the test-default dataset (quick mode
+//! runs the 1× dataset for CI), sweeping `value_size` to demonstrate that
+//! wall time and resident bytes are independent of payload size, and runs
+//! the load once through the retained reference (materialize-everything)
+//! merge pipeline for a same-binary comparison of the streaming merge.
+//!
+//! Results are written as `BENCH_2.json`; CI uploads it as an artifact on
+//! every push so the perf trajectory accumulates.
+
+use std::time::Instant;
+
+use crate::config::Config;
+use crate::coordinator::Engine;
+use crate::policy::HhzsPolicy;
+use crate::ycsb::{Kind, Spec, YcsbSource};
+
+/// One measured run.
+#[derive(Clone, Debug)]
+pub struct WallclockRun {
+    pub label: String,
+    pub objects: u64,
+    pub ops: u64,
+    pub value_size: usize,
+    pub reference_datapath: bool,
+    pub wall_secs: f64,
+    /// Simulated operations executed per wall-clock second.
+    pub sim_ops_per_wall_sec: f64,
+    /// Throughput inside the simulation (virtual time).
+    pub virtual_ops_per_sec: f64,
+    /// VmHWM after this run (process-wide high-water mark, monotone).
+    pub peak_rss_bytes: u64,
+    /// Physically resident zone bytes at the end of the run.
+    pub zone_phys_bytes: u64,
+    /// Logical (accounted) zone bytes at the end of the run.
+    pub zone_logical_bytes: u64,
+}
+
+/// Peak resident set size of this process (VmHWM), or 0 if unavailable.
+pub fn peak_rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+fn bench_cfg(objects: u64, ops: u64, value_size: usize) -> Config {
+    // 1/512 paper scale: ~42 MiB SSD, ~4 GiB HDD — holds the 10× dataset
+    // at every swept value size.
+    let mut cfg = Config::paper_scaled(512);
+    cfg.workload.load_objects = objects;
+    cfg.workload.ops = ops;
+    cfg.workload.value_size = value_size;
+    cfg
+}
+
+/// Run load + YCSB-A once and measure it.
+pub fn run_one(
+    label: &str,
+    objects: u64,
+    ops: u64,
+    value_size: usize,
+    reference: bool,
+) -> WallclockRun {
+    let cfg = bench_cfg(objects, ops, value_size);
+    let mut e = Engine::new(cfg.clone(), Box::new(HhzsPolicy::new(cfg.lsm.num_levels)));
+    e.reference_datapath = reference;
+    let clients = cfg.workload.clients;
+    let t0 = Instant::now();
+    let mut load = YcsbSource::new(Spec::from_config(&cfg, Kind::Load), clients);
+    e.run(&mut load, clients, None, false);
+    let load_virtual = e.metrics.ops_per_sec();
+    e.flush_all();
+    let mut a = YcsbSource::new(Spec::from_config(&cfg, Kind::A), clients);
+    e.run(&mut a, clients, None, false);
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let total_ops = objects + ops;
+    WallclockRun {
+        label: label.to_string(),
+        objects,
+        ops,
+        value_size,
+        reference_datapath: reference,
+        wall_secs: wall,
+        sim_ops_per_wall_sec: total_ops as f64 / wall,
+        virtual_ops_per_sec: if e.metrics.ops_per_sec() > 0.0 {
+            e.metrics.ops_per_sec()
+        } else {
+            load_virtual
+        },
+        peak_rss_bytes: peak_rss_bytes(),
+        zone_phys_bytes: e.fs.phys_bytes(),
+        zone_logical_bytes: e.fs.ssd.written_bytes() + e.fs.hdd.written_bytes(),
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn run_to_json(r: &WallclockRun) -> String {
+    format!(
+        concat!(
+            "    {{\n",
+            "      \"label\": \"{}\",\n",
+            "      \"objects\": {},\n",
+            "      \"ops\": {},\n",
+            "      \"value_size\": {},\n",
+            "      \"reference_datapath\": {},\n",
+            "      \"wall_secs\": {:.3},\n",
+            "      \"sim_ops_per_wall_sec\": {:.1},\n",
+            "      \"virtual_ops_per_sec\": {:.1},\n",
+            "      \"peak_rss_bytes\": {},\n",
+            "      \"zone_phys_bytes\": {},\n",
+            "      \"zone_logical_bytes\": {}\n",
+            "    }}"
+        ),
+        json_escape(&r.label),
+        r.objects,
+        r.ops,
+        r.value_size,
+        r.reference_datapath,
+        r.wall_secs,
+        r.sim_ops_per_wall_sec,
+        r.virtual_ops_per_sec,
+        r.peak_rss_bytes,
+        r.zone_phys_bytes,
+        r.zone_logical_bytes,
+    )
+}
+
+/// The `hhzs bench wallclock` driver. `quick` runs the CI-sized dataset.
+/// Writes `out` (JSON) and prints a human summary.
+pub fn run_wallclock(quick: bool, out: &str) -> std::io::Result<()> {
+    // "1×" is the test-default dataset (Config::tiny): 60k objects.
+    let (objects, ops, scale_label) = if quick {
+        (60_000u64, 20_000u64, "1x")
+    } else {
+        (600_000u64, 60_000u64, "10x")
+    };
+    let mut runs: Vec<WallclockRun> = Vec::new();
+    // Value-size sweep: wall time and resident bytes must not scale with
+    // payload bytes (the O(entries) claim). The big-value run goes FIRST:
+    // VmHWM is process-monotone, so the high-water mark it sets bounds the
+    // 4× -payload footprint; `zone_phys_bytes` is the per-run flatness
+    // signal (peak_rss_bytes of later runs inherits earlier marks).
+    for value_size in [4000usize, 1000] {
+        let label = format!("streaming-{scale_label}-v{value_size}");
+        eprintln!("[bench] {label}: {objects} objects + {ops} YCSB-A ops ...");
+        let r = run_one(&label, objects, ops, value_size, false);
+        eprintln!(
+            "[bench] {label}: {:.1}s wall, {:.0} sim-ops/s, rss {} MiB, zone phys {} MiB / logical {} MiB",
+            r.wall_secs,
+            r.sim_ops_per_wall_sec,
+            r.peak_rss_bytes >> 20,
+            r.zone_phys_bytes >> 20,
+            r.zone_logical_bytes >> 20,
+        );
+        runs.push(r);
+    }
+    // Same-binary merge-path comparison: the retained reference
+    // (materialize-everything) pipeline vs the streaming merge.
+    {
+        let label = format!("reference-{scale_label}-v1000");
+        eprintln!("[bench] {label}: reference merge pipeline ...");
+        let r = run_one(&label, objects, ops, 1000, true);
+        eprintln!(
+            "[bench] {label}: {:.1}s wall, {:.0} sim-ops/s",
+            r.wall_secs, r.sim_ops_per_wall_sec
+        );
+        runs.push(r);
+    }
+
+    // runs[0] = streaming v4000, runs[1] = streaming v1000, runs[2] = reference v1000.
+    let phys_ratio = runs[0].zone_phys_bytes as f64 / runs[1].zone_phys_bytes.max(1) as f64;
+    let logical_ratio =
+        runs[0].zone_logical_bytes as f64 / runs[1].zone_logical_bytes.max(1) as f64;
+    let merge_speedup = runs[2].wall_secs / runs[1].wall_secs.max(1e-9);
+    eprintln!(
+        "[bench] value-size 4x sweep: zone phys ratio {phys_ratio:.2} (flat = O(entries)), \
+         logical ratio {logical_ratio:.2}; streaming vs reference merge: {merge_speedup:.2}x"
+    );
+
+    let runs_json: Vec<String> = runs.iter().map(run_to_json).collect();
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"wallclock\",\n",
+            "  \"quick\": {},\n",
+            "  \"note\": \"sim_ops_per_wall_sec = simulated client ops executed per wall-clock ",
+            "second (load + YCSB-A). zone_phys_bytes must stay flat across the value_size ",
+            "sweep (O(entries) memory); zone_logical_bytes scales with payload bytes. ",
+            "peak_rss_bytes is the process-wide VmHWM and is monotone across runs (the ",
+            "4x-payload run executes first so its mark bounds that footprint); use ",
+            "zone_phys_bytes for per-run comparisons. The reference run uses the retained ",
+            "pre-refactor materialize-everything merge pipeline in the same binary.\",\n",
+            "  \"value_size_sweep\": {{ \"zone_phys_ratio\": {:.3}, \"zone_logical_ratio\": {:.3} }},\n",
+            "  \"streaming_vs_reference_wall_ratio\": {:.3},\n",
+            "  \"runs\": [\n{}\n  ]\n",
+            "}}\n"
+        ),
+        quick,
+        phys_ratio,
+        logical_ratio,
+        merge_speedup,
+        runs_json.join(",\n"),
+    );
+    std::fs::write(out, json)?;
+    eprintln!("[bench] wrote {out}");
+    Ok(())
+}

@@ -18,9 +18,9 @@ use std::sync::Arc;
 use crate::config::Config;
 use crate::hints::{CacheEvictHint, CompactionHint, FlushHint, Hint};
 use crate::lsm::block_cache::BlockKey;
-use crate::lsm::compaction::{merge_entries, split_outputs};
+use crate::lsm::compaction::{merge_entries, split_outputs, streaming_merge, OutputShape};
 use crate::lsm::sst::{decode_block, search_block, SstBuilder};
-use crate::lsm::{BlockCache, Entry, MemTable, SstId, SstMeta, Version};
+use crate::lsm::{BlockCache, Entry, MemTable, Payload, SstId, SstMeta, Version, WireBuf};
 use crate::metrics::{LevelSizeSample, Metrics, WriteCategory};
 use crate::policy::{MigrationKind, Policy, SstOrigin, View};
 use crate::sim::rng::fingerprint32;
@@ -36,14 +36,15 @@ const CPU_BLOOM_NS: Ns = 200;
 const CPU_BLOCK_SEARCH_NS: Ns = 1_000;
 const CPU_CACHE_HIT_NS: Ns = 500;
 
-/// A client operation (the YCSB op alphabet).
+/// A client operation (the YCSB op alphabet). Values are synthetic
+/// [`Payload`]s — length + fingerprint — never materialized bytes.
 #[derive(Clone, Debug)]
 pub enum Op {
-    Insert { key: Vec<u8>, value: Vec<u8> },
-    Update { key: Vec<u8>, value: Vec<u8> },
+    Insert { key: Vec<u8>, value: Payload },
+    Update { key: Vec<u8>, value: Payload },
     Read { key: Vec<u8> },
     Scan { key: Vec<u8>, len: usize },
-    ReadModifyWrite { key: Vec<u8>, value: Vec<u8> },
+    ReadModifyWrite { key: Vec<u8>, value: Payload },
 }
 
 /// Produces each client's operation stream.
@@ -80,10 +81,12 @@ impl PartialOrd for Ev {
     }
 }
 
-/// An SST being written by a background job.
+/// An SST being written by a background job. `data` is wire-form: its
+/// logical length drives placement and chunked write charging, while only
+/// the compact physical bytes are resident.
 struct PendingOutput {
     meta: Arc<SstMeta>,
-    data: Vec<u8>,
+    data: WireBuf,
     dev: Option<Dev>,
     written: u64,
 }
@@ -165,7 +168,13 @@ pub struct Engine {
     sampling: bool,
     throttle_interval: Option<Ns>,
     /// Reused WAL-record encode buffer (hot path: one put per record).
-    wal_buf: Vec<u8>,
+    wal_buf: WireBuf,
+    /// Route flush/compaction merges through the seed engine's
+    /// materialize-everything pipeline instead of the streaming merge.
+    /// The two paths produce byte-identical outputs (pinned by
+    /// `tests/datapath.rs`); the reference path exists for those tests
+    /// and for `hhzs bench wallclock`'s merge-path comparison.
+    pub reference_datapath: bool,
     /// Optional XLA-backed bloom prober for the batched read path
     /// (`multi_get`); also attachable to the HHZS migration scorer.
     pub xla: Option<std::rc::Rc<crate::runtime::XlaKernels>>,
@@ -223,7 +232,8 @@ impl Engine {
             done_clients: 0,
             sampling: false,
             throttle_interval: None,
-            wal_buf: Vec::new(),
+            wal_buf: WireBuf::new(),
+            reference_datapath: false,
             xla: None,
         };
         let tick = e.cfg.hhzs.scan_interval_ns;
@@ -307,11 +317,11 @@ impl Engine {
     }
 
     /// Append WAL + MemTable insert. Returns completion time.
-    fn do_put(&mut self, key: Vec<u8>, value: Option<Vec<u8>>) -> Ns {
+    fn do_put(&mut self, key: Vec<u8>, value: Option<Payload>) -> Ns {
         self.seq += 1;
-        let entry = Entry { key, seq: self.seq, value };
+        let seq = self.seq;
         self.wal_buf.clear();
-        entry.encode_into(&mut self.wal_buf);
+        self.wal_buf.push_entry(&key, seq, value);
         let preferred = if self.pool.is_reserved_mode() {
             Dev::Ssd
         } else {
@@ -319,8 +329,8 @@ impl Engine {
         };
         let Engine { fs, metrics, pool, now, wal_buf, .. } = self;
         let wal_finish = pool.append_wal(fs, metrics, *now, wal_buf, preferred);
-        let record_len = self.wal_buf.len() as u64;
-        self.mem.insert(entry.key, self.seq, entry.value);
+        let record_len = self.wal_buf.len();
+        self.mem.insert(key, seq, value);
         self.mem.wal_bytes += record_len;
         if self.mem.approx_bytes() as u64 >= self.cfg.lsm.memtable_size {
             self.seal_memtable();
@@ -342,17 +352,17 @@ impl Engine {
     // ------------------------------------------------------------------
 
     /// Point lookup. Returns (value, completion time).
-    fn do_get(&mut self, key: &[u8]) -> (Option<Vec<u8>>, Ns) {
+    fn do_get(&mut self, key: &[u8]) -> (Option<Payload>, Ns) {
         self.metrics.reads_done += 1;
         // 1. MemTables (active, then immutables newest-first).
         if let Some(v) = self.mem.get(key) {
             self.metrics.memtable_hits += 1;
-            return (v.cloned(), self.now + CPU_MEMTABLE_NS);
+            return (v, self.now + CPU_MEMTABLE_NS);
         }
         for (_, im) in self.immutables.iter().rev() {
             if let Some(v) = im.get(key) {
                 self.metrics.memtable_hits += 1;
-                return (v.cloned(), self.now + CPU_MEMTABLE_NS);
+                return (v, self.now + CPU_MEMTABLE_NS);
             }
         }
         // 2. SSTs, L0 newest-first then one candidate per level.
@@ -378,8 +388,14 @@ impl Engine {
     }
 
     /// Fetch one data block through: block cache → SSD cache → device.
-    /// Returns the block bytes and the completion time.
-    fn fetch_block(&mut self, meta: &Arc<SstMeta>, offset: u64, len: u64, now: Ns) -> (Arc<Vec<u8>>, Ns) {
+    /// Returns the block (wire form) and the completion time.
+    fn fetch_block(
+        &mut self,
+        meta: &Arc<SstMeta>,
+        offset: u64,
+        len: u64,
+        now: Ns,
+    ) -> (Arc<WireBuf>, Ns) {
         let bk = BlockKey { sst: meta.id, offset };
         if let Some(b) = self.cache.get(&bk) {
             self.metrics.block_cache_hits += 1;
@@ -420,11 +436,11 @@ impl Engine {
 
     /// Forward a block-cache eviction as a cache hint (§3.1) and run the
     /// §3.5 admission flow.
-    fn handle_cache_eviction(&mut self, sst: SstId, offset: u64, data: Arc<Vec<u8>>) {
+    fn handle_cache_eviction(&mut self, sst: SstId, offset: u64, data: Arc<WireBuf>) {
         let hint = Hint::CacheEvict(CacheEvictHint {
             sst,
             block_offset: offset,
-            block_len: data.len() as u64,
+            block_len: data.len(),
             data: data.clone(),
         });
         self.emit_hint(hint);
@@ -449,14 +465,14 @@ impl Engine {
             .mem
             .range(start, n)
             .into_iter()
-            .map(|(k, s, v)| Entry { key: k.clone(), seq: s, value: v.cloned() })
+            .map(|(k, s, v)| Entry { key: k.clone(), seq: s, value: v })
             .collect();
         sources.push(mem_src);
         for (_, im) in &self.immutables {
             sources.push(
                 im.range(start, n)
                     .into_iter()
-                    .map(|(k, s, v)| Entry { key: k.clone(), seq: s, value: v.cloned() })
+                    .map(|(k, s, v)| Entry { key: k.clone(), seq: s, value: v })
                     .collect(),
             );
         }
@@ -492,9 +508,11 @@ impl Engine {
                 let (_, f) = self.fs.charge(self.now, dev, kind, h.len as u64);
                 self.metrics.record_read(dev, h.len as u64);
                 finish = finish.max(f);
-                for e in decode_block(&data) {
-                    if e.key.as_slice() >= start {
-                        collected.push(e);
+                // Zero-copy block walk: only qualifying entries are cloned
+                // into the merge sources.
+                for e in data.entries() {
+                    if e.key >= start {
+                        collected.push(e.to_entry());
                     }
                 }
                 if collected.len() >= n {
@@ -545,8 +563,15 @@ impl Engine {
         if streams.is_empty() {
             return;
         }
-        let entries = merge_entries(streams, false);
-        let outputs = self.build_outputs(&entries, 0);
+        let outputs = if self.reference_datapath {
+            let entries = merge_entries(streams, false);
+            self.build_outputs(&entries, 0)
+        } else {
+            let builders = streaming_merge(&[], streams, false, self.output_shape(), |_, _| {
+                unreachable!("flush has no SST inputs")
+            });
+            self.finish_builders(builders, 0)
+        };
         if outputs.is_empty() {
             for seg in segs {
                 let Engine { pool, fs, .. } = &mut *self;
@@ -563,8 +588,32 @@ impl Engine {
         self.metrics.flushes += 1;
     }
 
+    fn output_shape(&self) -> OutputShape {
+        OutputShape {
+            sst_size: self.cfg.geometry.sst_size,
+            block_size: self.cfg.lsm.block_size,
+            bloom_bits_per_key: self.cfg.lsm.bloom_bits_per_key,
+        }
+    }
+
+    /// Assign file ids to sealed builders and finish them into pending
+    /// outputs (streaming path).
+    fn finish_builders(&mut self, builders: Vec<SstBuilder>, level: usize) -> Vec<PendingOutput> {
+        let mut outputs = Vec::with_capacity(builders.len());
+        for b in builders {
+            if b.is_empty() {
+                continue;
+            }
+            let id = self.next_file_id;
+            self.next_file_id += self.file_id_stride;
+            let (meta, data) = b.finish(id, level, self.now);
+            outputs.push(PendingOutput { meta: Arc::new(meta), data, dev: None, written: 0 });
+        }
+        outputs
+    }
+
     /// Serialize merged entries into pending output SSTs (split at the
-    /// target SST size).
+    /// target SST size) — the reference (materialized) pipeline.
     fn build_outputs(&mut self, entries: &[Entry], level: usize) -> Vec<PendingOutput> {
         let ranges = split_outputs(entries, self.cfg.geometry.sst_size);
         let mut outputs = Vec::with_capacity(ranges.len());
@@ -610,26 +659,42 @@ impl Engine {
             inputs: input_ids.clone(),
             output_level: pick.output_level(),
         }));
-        // Read all input entries (data read untimed here; device time is
-        // charged chunk-by-chunk by JobStep events). BTreeMap: the chunk
+        // Device time for input reads is charged chunk-by-chunk by JobStep
+        // events; the merge below moves data untimed. BTreeMap: the chunk
         // charging order must be deterministic for replay.
         let mut read_plan: std::collections::BTreeMap<Dev, u64> = Default::default();
-        let mut streams = Vec::new();
-        for m in pick.all_inputs() {
+        let inputs: Vec<Arc<SstMeta>> = pick.all_inputs().cloned().collect();
+        for m in &inputs {
             let dev = self.fs.file_dev(m.id).expect("input exists");
             *read_plan.entry(dev).or_insert(0) += m.file_size;
-            // One contiguous read of the data-block region (entries are
-            // back-to-back), instead of a Vec per block.
-            let data_end = m.blocks.last().map_or(0, |h| h.offset + h.len as u64);
-            let data =
-                self.fs.read_file_untimed(m.id, 0, data_end).expect("compaction read");
-            let mut stream = Vec::with_capacity(m.num_entries as usize);
-            stream.extend(decode_block(&data));
-            streams.push(stream);
         }
         let last_level = pick.output_level() == self.version.num_levels() - 1;
-        let merged = merge_entries(streams, last_level);
-        let outputs = self.build_outputs(&merged, pick.output_level());
+        let outputs = if self.reference_datapath {
+            // Reference pipeline: decode every input fully, materialize
+            // the merged stream, then split and rebuild.
+            let mut streams = Vec::new();
+            for m in &inputs {
+                let data_end = m.blocks.last().map_or(0, |h| h.offset + h.len as u64);
+                let data =
+                    self.fs.read_file_untimed(m.id, 0, data_end).expect("compaction read");
+                streams.push(decode_block(&data));
+            }
+            let merged = merge_entries(streams, last_level);
+            self.build_outputs(&merged, pick.output_level())
+        } else {
+            // Streaming pipeline: cursor-based k-way merge over per-SST
+            // block readers feeding the builders incrementally — memory is
+            // O(one block per input), not O(total input bytes).
+            let shape = self.output_shape();
+            let builders = {
+                let Engine { fs, .. } = self;
+                streaming_merge(&inputs, Vec::new(), last_level, shape, |m, h| {
+                    fs.read_file_untimed(m.id, h.offset, h.len as u64)
+                        .expect("compaction block read")
+                })
+            };
+            self.finish_builders(builders, pick.output_level())
+        };
         self.metrics.compactions += 1;
         for id in &input_ids {
             self.busy_ssts.insert(*id);
@@ -724,7 +789,7 @@ impl Engine {
     ) -> Ns {
         let out = &mut outputs[*cur];
         if out.dev.is_none() {
-            let size = out.data.len() as u64;
+            let size = out.data.len();
             let dev = self.place_with_fallback(level, size, origin);
             out.dev = Some(dev);
             if origin == SstOrigin::Compaction {
@@ -738,7 +803,7 @@ impl Engine {
             }
         }
         let dev = out.dev.unwrap();
-        let remaining = out.data.len() as u64 - out.written;
+        let remaining = out.data.len() - out.written;
         let n = chunk.min(remaining);
         let (_, f) = self.fs.charge(self.now, dev, AccessKind::SeqWrite, n);
         self.metrics.record_write(WriteCategory::Sst(level), dev, n);
@@ -746,20 +811,20 @@ impl Engine {
             self.metrics.compaction_write_bytes += n;
         }
         out.written += n;
-        if out.written >= out.data.len() as u64 {
+        if out.written >= out.data.len() {
             // Install the file. Fall back at install time if the planned
             // device filled up while we were writing.
             let mut dev = dev;
-            if !self.fs.can_place(dev, out.data.len() as u64) {
+            if !self.fs.can_place(dev, out.data.len()) {
                 let alt = if dev == Dev::Ssd { Dev::Hdd } else { Dev::Ssd };
-                if self.fs.can_place(alt, out.data.len() as u64) {
+                if self.fs.can_place(alt, out.data.len()) {
                     dev = alt;
                 }
             }
             self.fs
                 .create_file(self.now, out.meta.id, dev, &out.data, false)
                 .expect("output placement");
-            out.data = Vec::new();
+            out.data = WireBuf::new();
             if origin == SstOrigin::Flush {
                 self.version.add_l0(out.meta.clone());
                 let hint =
@@ -1116,14 +1181,20 @@ impl Engine {
         self.now = self.now.max(t);
     }
 
-    /// Synchronous put: advances the virtual clock past the op.
+    /// Synchronous put of real bytes: the value is fingerprinted into a
+    /// [`Payload`] at this API boundary — the engine never stores it.
     pub fn put(&mut self, key: &[u8], value: &[u8]) {
+        self.put_payload(key, Payload::from_bytes(value));
+    }
+
+    /// Synchronous put: advances the virtual clock past the op.
+    pub fn put_payload(&mut self, key: &[u8], value: Payload) {
         while self.write_blocked() {
             // Let background work run until writes unblock.
             let next = self.events.peek().map(|e| e.at).expect("background progress");
             self.drain_until(next);
         }
-        let f = self.do_put(key.to_vec(), Some(value.to_vec()));
+        let f = self.do_put(key.to_vec(), Some(value));
         self.drain_until(f);
     }
 
@@ -1137,8 +1208,10 @@ impl Engine {
         self.drain_until(f);
     }
 
-    /// Synchronous get.
-    pub fn get(&mut self, key: &[u8]) -> Option<Vec<u8>> {
+    /// Synchronous get. Returns the value's [`Payload`] (length +
+    /// fingerprint) — bit-identical read path to a byte-materialized
+    /// engine, without the bytes.
+    pub fn get(&mut self, key: &[u8]) -> Option<Payload> {
         let (v, f) = self.do_get(key);
         self.drain_until(f);
         v
@@ -1243,13 +1316,11 @@ impl Engine {
         };
         let mut replayed = 0usize;
         let mut max_seq = self.seq;
-        for (_, bytes) in segments {
-            let mut at = 0usize;
-            while let Some((e, next)) = Entry::decode_from(&bytes, at) {
+        for (_, buf) in segments {
+            for e in buf.entries() {
                 max_seq = max_seq.max(e.seq);
-                self.mem.insert(e.key, e.seq, e.value);
+                self.mem.insert(e.key.to_vec(), e.seq, e.value);
                 replayed += 1;
-                at = next;
             }
         }
         self.seq = max_seq;
@@ -1267,16 +1338,16 @@ impl Engine {
     /// SSTs are probed through the AOT Pallas kernel — one PJRT dispatch
     /// per (SST, key-batch) pair — before any block I/O is issued; results
     /// are identical to per-key [`Engine::get`] (asserted in tests).
-    pub fn multi_get(&mut self, keys: &[Vec<u8>]) -> Vec<Option<Vec<u8>>> {
+    pub fn multi_get(&mut self, keys: &[Vec<u8>]) -> Vec<Option<Payload>> {
         let Some(xla) = self.xla.clone() else {
             return keys.iter().map(|k| self.get(k)).collect();
         };
-        let mut out: Vec<Option<Vec<u8>>> = vec![None; keys.len()];
+        let mut out: Vec<Option<Payload>> = vec![None; keys.len()];
         let mut resolved = vec![false; keys.len()];
         // 1. MemTable hits need no probing.
         for (i, key) in keys.iter().enumerate() {
             if let Some(v) = self.mem.get(key) {
-                out[i] = v.cloned();
+                out[i] = v;
                 resolved[i] = true;
                 self.metrics.memtable_hits += 1;
                 self.metrics.reads_done += 1;
@@ -1284,7 +1355,7 @@ impl Engine {
             }
             for (_, im) in self.immutables.iter().rev() {
                 if let Some(v) = im.get(key) {
-                    out[i] = v.cloned();
+                    out[i] = v;
                     resolved[i] = true;
                     self.metrics.memtable_hits += 1;
                     self.metrics.reads_done += 1;

@@ -4,6 +4,7 @@
 
 use super::*;
 use crate::policy::{AutoPolicy, BasicPolicy, HhzsPolicy};
+use crate::lsm::Payload;
 use crate::ycsb::{key_for, value_for};
 
 fn engine_with(policy: Box<dyn Policy>) -> Engine {
@@ -21,8 +22,8 @@ fn put_get_roundtrip_memtable() {
     let mut e = hhzs_engine();
     e.put(b"alpha", b"one");
     e.put(b"beta", b"two");
-    assert_eq!(e.get(b"alpha"), Some(b"one".to_vec()));
-    assert_eq!(e.get(b"beta"), Some(b"two".to_vec()));
+    assert_eq!(e.get(b"alpha"), Some(Payload::from_bytes(b"one")));
+    assert_eq!(e.get(b"beta"), Some(Payload::from_bytes(b"two")));
     assert_eq!(e.get(b"gamma"), None);
 }
 
@@ -31,7 +32,7 @@ fn overwrite_returns_latest() {
     let mut e = hhzs_engine();
     e.put(b"k", b"v1");
     e.put(b"k", b"v2");
-    assert_eq!(e.get(b"k"), Some(b"v2".to_vec()));
+    assert_eq!(e.get(b"k"), Some(Payload::from_bytes(b"v2")));
 }
 
 #[test]
@@ -47,7 +48,7 @@ fn values_survive_flush_and_compaction() {
     let mut e = hhzs_engine();
     let n = 3_000u64;
     for i in 0..n {
-        e.put(&key_for(i, 24), &value_for(i, 1000));
+        e.put_payload(&key_for(i, 24), value_for(i, 1000));
     }
     e.quiesce();
     assert!(e.metrics.flushes > 0, "flushes should have happened");
@@ -75,7 +76,7 @@ fn overwrites_survive_compaction() {
     e.quiesce();
     for i in (0..1_500u64).step_by(53) {
         let v = format!("round2-{i}");
-        assert_eq!(e.get(&key_for(i, 24)), Some(v.into_bytes()), "key {i}");
+        assert_eq!(e.get(&key_for(i, 24)), Some(Payload::from_bytes(v.as_bytes())), "key {i}");
     }
 }
 
@@ -84,7 +85,7 @@ fn virtual_time_advances_monotonically() {
     let mut e = hhzs_engine();
     let t0 = e.now;
     for i in 0..500u64 {
-        e.put(&key_for(i, 24), &value_for(i, 1000));
+        e.put_payload(&key_for(i, 24), value_for(i, 1000));
     }
     assert!(e.now > t0, "puts must cost virtual time");
 }
@@ -93,7 +94,7 @@ fn virtual_time_advances_monotonically() {
 fn levels_populate_beyond_l0() {
     let mut e = hhzs_engine();
     for i in 0..20_000u64 {
-        e.put(&key_for(i, 24), &value_for(i, 1000));
+        e.put_payload(&key_for(i, 24), value_for(i, 1000));
     }
     e.quiesce();
     let deep: usize = (1..e.version.num_levels()).map(|l| e.version.level(l).len()).sum();
@@ -107,7 +108,7 @@ fn levels_populate_beyond_l0() {
 fn hhzs_utilizes_ssd_and_prioritizes_low_levels() {
     let mut e = hhzs_engine();
     for i in 0..20_000u64 {
-        e.put(&key_for(i, 24), &value_for(i, 1000));
+        e.put_payload(&key_for(i, 24), value_for(i, 1000));
     }
     e.quiesce();
     // Write-guided placement should leave the SSD well-utilized after a
@@ -151,7 +152,7 @@ fn hhzs_utilizes_ssd_and_prioritizes_low_levels() {
 fn wal_traffic_recorded() {
     let mut e = hhzs_engine();
     for i in 0..100u64 {
-        e.put(&key_for(i, 24), &value_for(i, 1000));
+        e.put_payload(&key_for(i, 24), value_for(i, 1000));
     }
     let wal_ssd = e
         .metrics
@@ -166,7 +167,7 @@ fn wal_traffic_recorded() {
 fn basic_scheme_places_high_levels_on_hdd() {
     let mut e = engine_with(Box::new(BasicPolicy::new(1)));
     for i in 0..20_000u64 {
-        e.put(&key_for(i, 24), &value_for(i, 1000));
+        e.put_payload(&key_for(i, 24), value_for(i, 1000));
     }
     e.quiesce();
     // With h=1, everything at L1+ must be on the HDD.
@@ -185,7 +186,7 @@ fn basic_scheme_places_high_levels_on_hdd() {
 fn auto_policy_runs_and_serves_reads() {
     let mut e = engine_with(Box::new(AutoPolicy::new()));
     for i in 0..8_000u64 {
-        e.put(&key_for(i, 24), &value_for(i, 1000));
+        e.put_payload(&key_for(i, 24), value_for(i, 1000));
     }
     e.quiesce();
     for i in (0..8_000u64).step_by(211) {
@@ -277,7 +278,7 @@ fn throttling_caps_throughput() {
 fn scans_return_entries_and_charge_devices() {
     let mut e = hhzs_engine();
     for i in 0..5_000u64 {
-        e.put(&key_for(i, 24), &value_for(i, 100));
+        e.put_payload(&key_for(i, 24), value_for(i, 100));
     }
     e.quiesce();
     let got = e.scan(&key_for(100, 24), 50);
@@ -292,7 +293,7 @@ fn ssd_cache_serves_hot_hdd_blocks() {
     cfg.lsm.block_cache_bytes = 16 * 1024; // tiny → rapid evictions
     let mut e = Engine::new(cfg, Box::new(HhzsPolicy::new(7)));
     for i in 0..20_000u64 {
-        e.put(&key_for(i, 24), &value_for(i, 1000));
+        e.put_payload(&key_for(i, 24), value_for(i, 1000));
     }
     e.quiesce();
     // Hammer a small hot set: evictions → cache hints → SSD-cache
@@ -315,7 +316,7 @@ fn migration_respects_rate_limit_pacing() {
     // A migration of one SST at 4 MiB/s must take ≈ size/rate virtual time.
     let mut e = hhzs_engine();
     for i in 0..20_000u64 {
-        e.put(&key_for(i, 24), &value_for(i, 1000));
+        e.put_payload(&key_for(i, 24), value_for(i, 1000));
     }
     e.quiesce();
     let migrated = e.metrics.migrations_cap + e.metrics.migrations_pop;
@@ -379,7 +380,7 @@ fn hints_flow_to_policy() {
     let counts = Rc::new(RefCell::new(Counts::default()));
     let mut e = engine_with(Box::new(CountingPolicy(counts.clone())));
     for i in 0..20_000u64 {
-        e.put(&key_for(i, 24), &value_for(i, 1000));
+        e.put_payload(&key_for(i, 24), value_for(i, 1000));
     }
     e.quiesce();
     let c = counts.borrow();
@@ -393,7 +394,7 @@ fn hints_flow_to_policy() {
 fn zone_accounting_stays_consistent() {
     let mut e = hhzs_engine();
     for i in 0..20_000u64 {
-        e.put(&key_for(i, 24), &value_for(i, 1000));
+        e.put_payload(&key_for(i, 24), value_for(i, 1000));
     }
     e.quiesce();
     // Every SST in the version has a zenfs file; every SSD-resident SST

@@ -19,6 +19,7 @@ use std::collections::{HashMap, VecDeque};
 use crate::lsm::SstId;
 use crate::metrics::{Metrics, WriteCategory};
 use crate::sim::Ns;
+use crate::wire::WireBuf;
 use crate::zenfs::ZenFs;
 use crate::zone::{Dev, ZoneId};
 
@@ -139,10 +140,10 @@ impl PoolManager {
         fs: &mut ZenFs,
         metrics: &mut Metrics,
         now: Ns,
-        record: &[u8],
+        record: &WireBuf,
         preferred: Dev,
     ) -> Ns {
-        let len = record.len() as u64;
+        let len = record.len();
         // Ensure an active WAL zone with room.
         let need_new = match self.active_wal {
             None => true,
@@ -180,23 +181,23 @@ impl PoolManager {
         finish
     }
 
-    /// Read back the raw record bytes of every live (unflushed) WAL
+    /// Read back the wire-form records of every live (unflushed) WAL
     /// segment, oldest first — the crash-recovery input. Charges
-    /// sequential reads for the replayed bytes.
-    pub fn recover_segments(&self, fs: &mut ZenFs, now: Ns) -> Vec<(u64, Vec<u8>)> {
+    /// sequential reads for the replayed (logical) bytes.
+    pub fn recover_segments(&self, fs: &mut ZenFs, now: Ns) -> Vec<(u64, WireBuf)> {
         let mut ids: Vec<u64> = self.segments.keys().copied().collect();
         ids.sort_unstable();
         let mut out = Vec::new();
         for id in ids {
             let seg = &self.segments[&id];
-            let mut bytes = Vec::with_capacity(seg.bytes as usize);
+            let mut bytes = WireBuf::new();
             for (dev, zone, offset, len) in &seg.runs {
                 let data = fs
                     .device(*dev)
                     .read_untimed(*zone, *offset, *len)
                     .expect("live WAL run readable");
                 fs.charge(now, *dev, crate::sim::AccessKind::SeqRead, *len);
-                bytes.extend_from_slice(&data);
+                bytes.append_buf(&data);
             }
             out.push((id, bytes));
         }
@@ -281,7 +282,7 @@ impl PoolManager {
         now: Ns,
         sst: SstId,
         block_offset: u64,
-    ) -> Option<(Vec<u8>, Ns)> {
+    ) -> Option<(WireBuf, Ns)> {
         let loc = *self.mapping.get(&(sst, block_offset))?;
         let (data, _, finish) =
             fs.ssd.read_random(now, loc.zone, loc.offset, loc.len as u64).ok()?;
@@ -302,12 +303,12 @@ impl PoolManager {
         now: Ns,
         sst: SstId,
         block_offset: u64,
-        data: &[u8],
+        data: &WireBuf,
     ) -> bool {
         if !self.is_reserved_mode() || self.mapping.contains_key(&(sst, block_offset)) {
             return false;
         }
-        let len = data.len() as u64;
+        let len = data.len();
         // Active cache zone = back of the FIFO deque.
         let need_new = match self.cache_zones.back() {
             None => true,
@@ -335,7 +336,7 @@ impl PoolManager {
         let (offset, _, _) = fs.ssd.append(now, zone, data).expect("cache append fits");
         metrics.record_write(WriteCategory::CacheZone, Dev::Ssd, len);
         self.mapping
-            .insert((sst, block_offset), CacheLoc { zone, offset, len: data.len() as u32 });
+            .insert((sst, block_offset), CacheLoc { zone, offset, len: len as u32 });
         self.fifo.push_back(FifoEntry { sst, block_offset, zone });
         true
     }
@@ -375,6 +376,10 @@ mod tests {
     use super::*;
     use crate::config::{Config, MIB};
 
+    fn wire(bytes: &[u8]) -> WireBuf {
+        WireBuf::from_bytes(bytes)
+    }
+
     fn fs_with_pool() -> (ZenFs, PoolManager, Metrics) {
         let cfg = Config::tiny();
         let mut fs = ZenFs::new(
@@ -392,7 +397,7 @@ mod tests {
     #[test]
     fn wal_appends_fill_pool_zone() {
         let (mut fs, mut pm, mut m) = fs_with_pool();
-        let rec = vec![0u8; 1024];
+        let rec = wire(&[0u8; 1024]);
         let f = pm.append_wal(&mut fs, &mut m, 0, &rec, Dev::Ssd);
         assert!(f > 0);
         assert_eq!(pm.wal_zones_in_use(), 1);
@@ -402,9 +407,9 @@ mod tests {
     #[test]
     fn segment_release_resets_zone() {
         let (mut fs, mut pm, mut m) = fs_with_pool();
-        pm.append_wal(&mut fs, &mut m, 0, &[0u8; 512], Dev::Ssd);
+        pm.append_wal(&mut fs, &mut m, 0, &wire(&[0u8; 512]), Dev::Ssd);
         let seg = pm.seal_segment();
-        pm.append_wal(&mut fs, &mut m, 0, &[0u8; 512], Dev::Ssd);
+        pm.append_wal(&mut fs, &mut m, 0, &wire(&[0u8; 512]), Dev::Ssd);
         assert_eq!(pm.wal_zones_in_use(), 1, "both segments share the zone");
         pm.release_segment(&mut fs, seg);
         // Second segment still holds the zone.
@@ -419,7 +424,7 @@ mod tests {
         let (mut fs, mut pm, mut m) = fs_with_pool();
         let zone_cap = fs.ssd.zone_cap;
         // Fill past one zone.
-        let rec = vec![0u8; (zone_cap / 2 + 100) as usize];
+        let rec = wire(&vec![0u8; (zone_cap / 2 + 100) as usize]);
         pm.append_wal(&mut fs, &mut m, 0, &rec, Dev::Ssd);
         pm.append_wal(&mut fs, &mut m, 0, &rec, Dev::Ssd);
         assert_eq!(pm.wal_zones_in_use(), 2);
@@ -428,7 +433,7 @@ mod tests {
     #[test]
     fn cache_admit_lookup_roundtrip() {
         let (mut fs, mut pm, mut m) = fs_with_pool();
-        let block = vec![7u8; 4096];
+        let block = wire(&[7u8; 4096]);
         assert!(pm.cache_admit(&mut fs, &mut m, 0, 42, 8192, &block));
         assert!(pm.cache_contains(42, 8192));
         let (data, _) = pm.cache_lookup(&mut fs, 0, 42, 8192).unwrap();
@@ -439,7 +444,7 @@ mod tests {
     #[test]
     fn duplicate_admission_rejected() {
         let (mut fs, mut pm, mut m) = fs_with_pool();
-        let block = vec![1u8; 4096];
+        let block = wire(&[1u8; 4096]);
         assert!(pm.cache_admit(&mut fs, &mut m, 0, 1, 0, &block));
         assert!(!pm.cache_admit(&mut fs, &mut m, 0, 1, 0, &block));
         assert_eq!(pm.cached_blocks(), 1);
@@ -449,7 +454,7 @@ mod tests {
     fn fifo_zone_eviction_when_pool_exhausted() {
         let (mut fs, mut pm, mut m) = fs_with_pool();
         let zone_cap = fs.ssd.zone_cap;
-        let block = vec![2u8; 4096];
+        let block = wire(&[2u8; 4096]);
         let blocks_per_zone = zone_cap / 4096;
         // Fill both pool zones with cache blocks, then one more.
         let total = blocks_per_zone * 2 + 1;
@@ -466,7 +471,7 @@ mod tests {
     #[test]
     fn wal_reclaims_cache_zones() {
         let (mut fs, mut pm, mut m) = fs_with_pool();
-        let block = vec![3u8; 4096];
+        let block = wire(&[3u8; 4096]);
         // Turn both pool zones into cache zones.
         let zone_cap = fs.ssd.zone_cap;
         for i in 0..(zone_cap / 4096) * 2 {
@@ -474,7 +479,7 @@ mod tests {
         }
         assert_eq!(pm.cache_zone_count(), 2);
         // WAL append must evict a cache zone rather than overflow.
-        let f = pm.append_wal(&mut fs, &mut m, 0, &[0u8; 1024], Dev::Ssd);
+        let f = pm.append_wal(&mut fs, &mut m, 0, &wire(&[0u8; 1024]), Dev::Ssd);
         assert!(f > 0);
         assert_eq!(pm.wal_overflows, 0);
         assert_eq!(pm.wal_zones_in_use(), 1);
@@ -483,8 +488,8 @@ mod tests {
     #[test]
     fn invalidate_sst_drops_mappings() {
         let (mut fs, mut pm, mut m) = fs_with_pool();
-        pm.cache_admit(&mut fs, &mut m, 0, 1, 0, &[0u8; 128]);
-        pm.cache_admit(&mut fs, &mut m, 0, 2, 0, &[0u8; 128]);
+        pm.cache_admit(&mut fs, &mut m, 0, 1, 0, &wire(&[0u8; 128]));
+        pm.cache_admit(&mut fs, &mut m, 0, 2, 0, &wire(&[0u8; 128]));
         pm.invalidate_sst(1);
         assert!(!pm.cache_contains(1, 0));
         assert!(pm.cache_contains(2, 0));
@@ -504,9 +509,9 @@ mod tests {
         let mut pm = PoolManager::dynamic();
         let mut m = Metrics::default();
         // Occupy both SSD zones with files → WAL falls through to the HDD.
-        fs.create_file(0, 1, Dev::Ssd, &[0u8; 64], true).unwrap();
-        fs.create_file(0, 2, Dev::Ssd, &[0u8; 64], true).unwrap();
-        pm.append_wal(&mut fs, &mut m, 0, &[0u8; 512], Dev::Ssd);
+        fs.create_file(0, 1, Dev::Ssd, &wire(&[0u8; 64]), true).unwrap();
+        fs.create_file(0, 2, Dev::Ssd, &wire(&[0u8; 64]), true).unwrap();
+        pm.append_wal(&mut fs, &mut m, 0, &wire(&[0u8; 512]), Dev::Ssd);
         let hdd_wal = m
             .write_traffic
             .get(&(WriteCategory::Wal, Dev::Hdd))
@@ -514,6 +519,6 @@ mod tests {
             .unwrap_or(0);
         assert_eq!(hdd_wal, 512);
         // Cache is a no-op in dynamic mode.
-        assert!(!pm.cache_admit(&mut fs, &mut m, 0, 1, 0, &[0u8; 64]));
+        assert!(!pm.cache_admit(&mut fs, &mut m, 0, 1, 0, &wire(&[0u8; 64])));
     }
 }

@@ -6,6 +6,7 @@
 //! [`crate::policy::Policy`]; only HHZS consumes all three kinds.
 
 use crate::lsm::SstId;
+use crate::wire::WireBuf;
 
 /// A flushing operation produced a new SST at L0 (§3.1).
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -35,9 +36,10 @@ pub struct CacheEvictHint {
     pub sst: SstId,
     pub block_offset: u64,
     pub block_len: u64,
-    /// The evicted block's bytes (shared, not copied — the hint is passed
-    /// synchronously and the SSD cache admits from this buffer).
-    pub data: std::sync::Arc<Vec<u8>>,
+    /// The evicted block's wire-form contents (shared, not copied — the
+    /// hint is passed synchronously and the SSD cache admits from this
+    /// buffer).
+    pub data: std::sync::Arc<WireBuf>,
 }
 
 /// Union of all hints the KV store can issue.
@@ -61,7 +63,7 @@ impl Hint {
             Hint::Compaction(CompactionHint::Start { inputs, .. }) => 24 + 8 * inputs.len(),
             Hint::Compaction(CompactionHint::OutputSst { .. }) => 32,
             Hint::Compaction(CompactionHint::Finish { outputs, .. }) => 24 + 8 * outputs.len(),
-            Hint::CacheEvict(h) => 24 + h.data.len(),
+            Hint::CacheEvict(h) => 24 + h.data.len() as usize,
         }
     }
 }
@@ -83,11 +85,11 @@ mod tests {
 
     #[test]
     fn cache_hint_accounts_for_its_payload() {
-        let block = std::sync::Arc::new(vec![7u8; 4096]);
+        let block = std::sync::Arc::new(WireBuf::from_bytes(&[7u8; 4096]));
         let h = Hint::CacheEvict(CacheEvictHint {
             sst: 3,
             block_offset: 8192,
-            block_len: block.len() as u64,
+            block_len: block.len(),
             data: block.clone(),
         });
         assert_eq!(h.wire_size(), 24 + 4096);

@@ -30,6 +30,7 @@
 //! the paper's evaluation (Table 1, Figure 2, Exp#1–Exp#6) plus the
 //! beyond-paper Exp#7 shard-scalability study.
 
+pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod exp;
@@ -41,6 +42,7 @@ pub mod report;
 pub mod runtime;
 pub mod shard;
 pub mod sim;
+pub mod wire;
 pub mod ycsb;
 pub mod zenfs;
 pub mod zone;

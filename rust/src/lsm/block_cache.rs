@@ -2,9 +2,17 @@
 //! with byte-budget capacity. Evictions are *returned to the caller* so the
 //! engine can forward them to the policy as cache hints (§3.1: the cache
 //! hint identifies the SST and the offset of the evicted data block).
+//!
+//! Blocks are [`WireBuf`]s: the byte budget charges their *logical* size
+//! (identical hit/miss/eviction behaviour to a cache of materialized
+//! blocks) while residency costs only the compact physical bytes. A
+//! per-SST index of resident blocks makes [`BlockCache::invalidate_sst`]
+//! O(blocks of that SST) instead of a full-map walk.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::sync::Arc;
+
+use crate::wire::WireBuf;
 
 use super::SstId;
 
@@ -17,12 +25,12 @@ pub struct BlockKey {
 /// An evicted block, handed to the policy as a cache hint.
 pub struct Evicted {
     pub key: BlockKey,
-    pub data: Arc<Vec<u8>>,
+    pub data: Arc<WireBuf>,
 }
 
 struct Node {
     key: BlockKey,
-    data: Arc<Vec<u8>>,
+    data: Arc<WireBuf>,
     prev: usize,
     next: usize,
 }
@@ -34,6 +42,9 @@ pub struct BlockCache {
     capacity_bytes: u64,
     used_bytes: u64,
     map: HashMap<BlockKey, usize>,
+    /// Resident block offsets per SST (ordered for deterministic
+    /// invalidation), so deletion-time invalidation never scans the map.
+    by_sst: HashMap<SstId, BTreeSet<u64>>,
     slab: Vec<Node>,
     free: Vec<usize>,
     head: usize, // most recent
@@ -48,6 +59,7 @@ impl BlockCache {
             capacity_bytes,
             used_bytes: 0,
             map: HashMap::new(),
+            by_sst: HashMap::new(),
             slab: Vec::new(),
             free: Vec::new(),
             head: NIL,
@@ -83,7 +95,16 @@ impl BlockCache {
         }
     }
 
-    pub fn get(&mut self, key: &BlockKey) -> Option<Arc<Vec<u8>>> {
+    fn index_remove(&mut self, key: &BlockKey) {
+        if let Some(set) = self.by_sst.get_mut(&key.sst) {
+            set.remove(&key.offset);
+            if set.is_empty() {
+                self.by_sst.remove(&key.sst);
+            }
+        }
+    }
+
+    pub fn get(&mut self, key: &BlockKey) -> Option<Arc<WireBuf>> {
         if let Some(&i) = self.map.get(key) {
             self.detach(i);
             self.push_front(i);
@@ -101,21 +122,21 @@ impl BlockCache {
     }
 
     /// Insert a block; returns everything evicted to make room.
-    pub fn insert(&mut self, key: BlockKey, data: Arc<Vec<u8>>) -> Vec<Evicted> {
+    pub fn insert(&mut self, key: BlockKey, data: Arc<WireBuf>) -> Vec<Evicted> {
         let mut evicted = Vec::new();
         if self.capacity_bytes == 0 {
             return vec![Evicted { key, data }];
         }
         if let Some(&i) = self.map.get(&key) {
             // Refresh existing.
-            self.used_bytes -= self.slab[i].data.len() as u64;
-            self.used_bytes += data.len() as u64;
+            self.used_bytes -= self.slab[i].data.len();
+            self.used_bytes += data.len();
             self.slab[i].data = data;
             self.detach(i);
             self.push_front(i);
             return evicted;
         }
-        let len = data.len() as u64;
+        let len = data.len();
         // Evict LRU until it fits.
         while self.used_bytes + len > self.capacity_bytes && self.tail != NIL {
             let t = self.tail;
@@ -123,7 +144,8 @@ impl BlockCache {
             let node_data = self.slab[t].data.clone();
             self.detach(t);
             self.map.remove(&node_key);
-            self.used_bytes -= node_data.len() as u64;
+            self.index_remove(&node_key);
+            self.used_bytes -= node_data.len();
             self.free.push(t);
             evicted.push(Evicted { key: node_key, data: node_data });
         }
@@ -141,18 +163,20 @@ impl BlockCache {
             self.slab.len() - 1
         };
         self.map.insert(key, i);
+        self.by_sst.entry(key.sst).or_default().insert(key.offset);
         self.push_front(i);
         self.used_bytes += len;
         evicted
     }
 
     /// Drop all blocks of an SST (called when compaction deletes it).
+    /// O(resident blocks of that SST) via the per-SST index.
     pub fn invalidate_sst(&mut self, sst: SstId) {
-        let keys: Vec<BlockKey> =
-            self.map.keys().filter(|k| k.sst == sst).copied().collect();
-        for k in keys {
+        let Some(offsets) = self.by_sst.remove(&sst) else { return };
+        for offset in offsets {
+            let k = BlockKey { sst, offset };
             if let Some(i) = self.map.remove(&k) {
-                self.used_bytes -= self.slab[i].data.len() as u64;
+                self.used_bytes -= self.slab[i].data.len();
                 self.detach(i);
                 self.free.push(i);
             }
@@ -181,8 +205,8 @@ impl BlockCache {
 mod tests {
     use super::*;
 
-    fn blk(n: usize) -> Arc<Vec<u8>> {
-        Arc::new(vec![0u8; n])
+    fn blk(n: usize) -> Arc<WireBuf> {
+        Arc::new(WireBuf::from_bytes(&vec![0u8; n]))
     }
 
     #[test]
@@ -236,6 +260,20 @@ mod tests {
         assert!(!c.contains(&BlockKey { sst: 1, offset: 0 }));
         assert!(c.contains(&BlockKey { sst: 2, offset: 0 }));
         assert_eq!(c.used_bytes(), 10);
+    }
+
+    #[test]
+    fn per_sst_index_stays_in_sync_with_evictions() {
+        let mut c = BlockCache::new(300);
+        for i in 0..10u64 {
+            c.insert(BlockKey { sst: i % 2, offset: i * 100 }, blk(100));
+        }
+        // Only 3 resident; invalidate both SSTs → cache fully empty.
+        c.invalidate_sst(0);
+        c.invalidate_sst(1);
+        assert!(c.is_empty());
+        assert_eq!(c.used_bytes(), 0);
+        assert!(c.by_sst.is_empty(), "index must not leak evicted blocks");
     }
 
     #[test]

@@ -1,7 +1,23 @@
 //! Compaction merge (§2.2): k-way merge-sort of sorted entry streams,
 //! discarding shadowed versions, splitting outputs at the target SST size.
+//!
+//! Two implementations with pinned-identical output:
+//!
+//! * [`streaming_merge`] — the production path: a cursor-based k-way merge
+//!   over per-SST block readers that feeds [`SstBuilder`]s incrementally.
+//!   Memory is bounded by O(one block per input) plus the (compact)
+//!   output buffers; nothing is materialized per entry.
+//! * [`merge_entries`] + [`split_outputs`] — the seed engine's
+//!   materialize-everything pipeline, retained as the reference
+//!   implementation for the scan path and the equivalence tests that pin
+//!   the streaming path byte-for-byte against it.
 
-use super::Entry;
+use std::sync::Arc;
+
+use crate::wire::WireBuf;
+
+use super::sst::{BlockHandle, SstBuilder, SstMeta};
+use super::{Entry, Payload};
 
 /// Merge sorted entry streams into one deduplicated sorted stream.
 ///
@@ -89,6 +105,225 @@ pub fn split_outputs(entries: &[Entry], sst_size: u64) -> Vec<std::ops::Range<us
     out
 }
 
+/// Shape parameters of the streaming merge's outputs.
+#[derive(Clone, Copy, Debug)]
+pub struct OutputShape {
+    /// Rotate to a new output SST once this many encoded bytes are added.
+    pub sst_size: u64,
+    pub block_size: u64,
+    pub bloom_bits_per_key: u32,
+}
+
+/// The decoded-but-not-copied current entry of one SST block stream:
+/// positions into the stream's resident block.
+#[derive(Clone, Copy)]
+struct RawCur {
+    key_off: usize,
+    key_len: usize,
+    seq: u64,
+    value: Option<Payload>,
+}
+
+/// Cursor over one SST's entries, fetching one data block at a time.
+struct SstStream {
+    meta: Arc<SstMeta>,
+    next_block: usize,
+    block: WireBuf,
+    log: u64,
+    phys: usize,
+    run: usize,
+    cur: Option<RawCur>,
+}
+
+impl SstStream {
+    fn new(meta: Arc<SstMeta>) -> SstStream {
+        SstStream {
+            meta,
+            next_block: 0,
+            block: WireBuf::new(),
+            log: 0,
+            phys: 0,
+            run: 0,
+            cur: None,
+        }
+    }
+
+    fn advance<F>(&mut self, fetch: &mut F)
+    where
+        F: FnMut(&SstMeta, &BlockHandle) -> WireBuf,
+    {
+        loop {
+            if let Some(raw) = self.block.decode_entry_raw(self.log, self.phys, self.run) {
+                self.log = raw.next_log;
+                self.phys = raw.next_phys;
+                self.run = raw.next_run;
+                self.cur = Some(RawCur {
+                    key_off: raw.key_off,
+                    key_len: raw.key_len,
+                    seq: raw.seq,
+                    value: raw.value,
+                });
+                return;
+            }
+            if self.next_block >= self.meta.blocks.len() {
+                self.cur = None;
+                return;
+            }
+            // Exhausted the resident block — fetch the next one. Memory
+            // stays bounded at one block per input stream.
+            let h = self.meta.blocks[self.next_block].clone();
+            self.block = fetch(&self.meta, &h);
+            self.next_block += 1;
+            self.log = 0;
+            self.phys = 0;
+            self.run = 0;
+        }
+    }
+}
+
+/// One input of the streaming merge.
+enum Source {
+    /// In-memory sorted entries (flush path).
+    Mem { entries: Vec<Entry>, pos: usize },
+    /// Lazily-read SST blocks (compaction path).
+    Sst(SstStream),
+}
+
+impl Source {
+    fn key(&self) -> Option<&[u8]> {
+        match self {
+            Source::Mem { entries, pos } => entries.get(*pos).map(|e| e.key.as_slice()),
+            Source::Sst(s) => {
+                s.cur.as_ref().map(|c| s.block.key_at(c.key_off, c.key_len))
+            }
+        }
+    }
+
+    /// Seq of the current entry (only called while `key()` is `Some`).
+    fn seq(&self) -> u64 {
+        match self {
+            Source::Mem { entries, pos } => entries[*pos].seq,
+            Source::Sst(s) => s.cur.as_ref().expect("current entry").seq,
+        }
+    }
+
+    fn value(&self) -> Option<Payload> {
+        match self {
+            Source::Mem { entries, pos } => entries[*pos].value,
+            Source::Sst(s) => s.cur.as_ref().expect("current entry").value,
+        }
+    }
+
+    fn advance<F>(&mut self, fetch: &mut F)
+    where
+        F: FnMut(&SstMeta, &BlockHandle) -> WireBuf,
+    {
+        match self {
+            Source::Mem { pos, .. } => *pos += 1,
+            Source::Sst(s) => s.advance(fetch),
+        }
+    }
+}
+
+/// Streaming k-way merge: merges `mem_inputs` (owned sorted runs) and
+/// `sst_inputs` (block-cursor streams fed by `fetch`) into sealed
+/// [`SstBuilder`]s, rotating outputs at `shape.sst_size` encoded bytes.
+///
+/// Produces builders whose finished SSTs are byte-identical (sizes, block
+/// handles, bloom words) to the reference `merge_entries` +
+/// [`split_outputs`] pipeline — pinned by `tests/datapath.rs`.
+pub fn streaming_merge<F>(
+    sst_inputs: &[Arc<SstMeta>],
+    mem_inputs: Vec<Vec<Entry>>,
+    drop_tombstones: bool,
+    shape: OutputShape,
+    mut fetch: F,
+) -> Vec<SstBuilder>
+where
+    F: FnMut(&SstMeta, &BlockHandle) -> WireBuf,
+{
+    let mut sources: Vec<Source> = Vec::with_capacity(mem_inputs.len() + sst_inputs.len());
+    for entries in mem_inputs {
+        sources.push(Source::Mem { entries, pos: 0 });
+    }
+    for meta in sst_inputs {
+        let mut s = SstStream::new(meta.clone());
+        s.advance(&mut fetch); // prime the first entry
+        sources.push(Source::Sst(s));
+    }
+
+    let new_builder = |shape: &OutputShape| {
+        SstBuilder::with_capacity(
+            shape.block_size,
+            shape.bloom_bits_per_key,
+            shape.sst_size + shape.sst_size / 8,
+        )
+    };
+    let mut builders: Vec<SstBuilder> = Vec::new();
+    let mut cur = new_builder(&shape);
+    let mut bytes = 0u64;
+    // Reused last-emitted-key buffer for dedup (no per-entry allocation).
+    let mut last_key: Vec<u8> = Vec::new();
+    let mut have_last = false;
+
+    loop {
+        // Pick the source with the smallest key; ties (same key in several
+        // inputs) go to the newest version (highest seq), as in the
+        // reference heap merge. A linear scan is O(k) per entry where the
+        // heap would be O(log k): sources hold their current key as a
+        // borrow of their resident block, which a std BinaryHeap cannot
+        // store without copying every key, and k is small (all-of-L0 plus
+        // the overlapping run of the next level).
+        let mut best: Option<usize> = None;
+        for (i, s) in sources.iter().enumerate() {
+            let Some(k) = s.key() else { continue };
+            best = match best {
+                None => Some(i),
+                Some(j) => {
+                    let kj = sources[j].key().expect("best has a key");
+                    match k.cmp(kj) {
+                        std::cmp::Ordering::Less => Some(i),
+                        std::cmp::Ordering::Greater => Some(j),
+                        std::cmp::Ordering::Equal => {
+                            if s.seq() > sources[j].seq() {
+                                Some(i)
+                            } else {
+                                Some(j)
+                            }
+                        }
+                    }
+                }
+            };
+        }
+        let Some(i) = best else { break };
+        {
+            let key = sources[i].key().expect("picked source has a key");
+            let dup = have_last && last_key.as_slice() == key;
+            if !dup {
+                last_key.clear();
+                last_key.extend_from_slice(key);
+                have_last = true;
+                let value = sources[i].value();
+                if !(value.is_none() && drop_tombstones) {
+                    bytes += (crate::wire::ENTRY_HEADER
+                        + key.len()
+                        + value.map_or(0, |p| p.len as usize)) as u64;
+                    cur.add_parts(key, sources[i].seq(), value);
+                    if bytes >= shape.sst_size {
+                        builders.push(std::mem::replace(&mut cur, new_builder(&shape)));
+                        bytes = 0;
+                    }
+                }
+            }
+        }
+        sources[i].advance(&mut fetch);
+    }
+    if !cur.is_empty() {
+        builders.push(cur);
+    }
+    builders
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,7 +332,7 @@ mod tests {
         Entry {
             key: key.as_bytes().to_vec(),
             seq,
-            value: val.map(|v| v.as_bytes().to_vec()),
+            value: val.map(|v| Payload::from_bytes(v.as_bytes())),
         }
     }
 
@@ -175,5 +410,33 @@ mod tests {
         let ranges = split_outputs(&entries, 1 << 20);
         assert_eq!(ranges.len(), 1);
         assert_eq!(ranges[0], 0..5);
+    }
+
+    #[test]
+    fn streaming_merge_of_mem_streams_matches_reference() {
+        let streams = vec![
+            vec![e("a", 5, Some("new")), e("b", 2, Some("b1")), e("d", 7, None)],
+            vec![e("a", 1, Some("old")), e("c", 3, Some("c1")), e("d", 4, Some("dead"))],
+        ];
+        let shape = OutputShape { sst_size: 1 << 20, block_size: 4096, bloom_bits_per_key: 10 };
+        for drop in [false, true] {
+            let reference = merge_entries(streams.clone(), drop);
+            let builders =
+                streaming_merge(&[], streams.clone(), drop, shape, |_, _| unreachable!());
+            let mut ref_b = SstBuilder::new(4096, 10);
+            for ent in &reference {
+                ref_b.add(ent);
+            }
+            if reference.is_empty() {
+                assert!(builders.is_empty());
+                continue;
+            }
+            assert_eq!(builders.len(), 1);
+            let (m1, d1) = builders.into_iter().next().unwrap().finish(9, 1, 0);
+            let (m2, d2) = ref_b.finish(9, 1, 0);
+            assert_eq!(d1, d2, "drop={drop}");
+            assert_eq!(m1.num_entries, m2.num_entries);
+            assert_eq!(m1.blocks, m2.blocks);
+        }
     }
 }

@@ -1,10 +1,14 @@
 //! In-memory write buffer (§2.2). A `MemTable` accumulates puts/deletes
 //! until it reaches the configured size, becomes immutable, and is flushed
 //! to an L0 SSTable by a background job.
+//!
+//! Values are synthetic [`Payload`]s; the byte budget charges their
+//! *logical* length, so seal/flush timing is identical to a memtable
+//! holding real bytes.
 
 use std::collections::BTreeMap;
 
-use super::{Entry, Key};
+use super::{Entry, Key, Payload};
 
 /// Per-entry bookkeeping overhead charged against the memtable budget
 /// (rough skiplist-node equivalent).
@@ -12,7 +16,7 @@ const ENTRY_OVERHEAD: usize = 48;
 
 #[derive(Default, Clone)]
 pub struct MemTable {
-    map: BTreeMap<Key, (u64, Option<Vec<u8>>)>,
+    map: BTreeMap<Key, (u64, Option<Payload>)>,
     approx_bytes: usize,
     /// Bytes of WAL records backing this memtable (for WAL accounting).
     pub wal_bytes: u64,
@@ -24,18 +28,18 @@ impl MemTable {
     }
 
     /// Insert a put or delete. Returns the net byte growth.
-    pub fn insert(&mut self, key: Key, seq: u64, value: Option<Vec<u8>>) -> usize {
-        let add = key.len() + value.as_ref().map_or(0, |v| v.len()) + ENTRY_OVERHEAD;
+    pub fn insert(&mut self, key: Key, seq: u64, value: Option<Payload>) -> usize {
+        let add = key.len() + value.map_or(0, |p| p.len as usize) + ENTRY_OVERHEAD;
         let old = self.map.insert(key, (seq, value));
-        let sub = old.map_or(0, |(_, v)| v.as_ref().map_or(0, |v| v.len()));
+        let sub = old.map_or(0, |(_, v)| v.map_or(0, |p| p.len as usize));
         self.approx_bytes += add;
         self.approx_bytes = self.approx_bytes.saturating_sub(sub);
         add
     }
 
     /// Point lookup. `Some(None)` means "deleted here" (tombstone).
-    pub fn get(&self, key: &[u8]) -> Option<Option<&Vec<u8>>> {
-        self.map.get(key).map(|(_, v)| v.as_ref())
+    pub fn get(&self, key: &[u8]) -> Option<Option<Payload>> {
+        self.map.get(key).map(|(_, v)| *v)
     }
 
     pub fn approx_bytes(&self) -> usize {
@@ -59,11 +63,11 @@ impl MemTable {
     }
 
     /// Range scan within the memtable (used by the merged scan path).
-    pub fn range(&self, from: &[u8], limit: usize) -> Vec<(&Key, u64, Option<&Vec<u8>>)> {
+    pub fn range(&self, from: &[u8], limit: usize) -> Vec<(&Key, u64, Option<Payload>)> {
         self.map
             .range(from.to_vec()..)
             .take(limit)
-            .map(|(k, (s, v))| (k, *s, v.as_ref()))
+            .map(|(k, (s, v))| (k, *s, *v))
             .collect()
     }
 }
@@ -72,27 +76,31 @@ impl MemTable {
 mod tests {
     use super::*;
 
+    fn p(bytes: &[u8]) -> Payload {
+        Payload::from_bytes(bytes)
+    }
+
     #[test]
     fn put_get() {
         let mut m = MemTable::new();
-        m.insert(b"a".to_vec(), 1, Some(b"va".to_vec()));
-        assert_eq!(m.get(b"a"), Some(Some(&b"va".to_vec())));
+        m.insert(b"a".to_vec(), 1, Some(p(b"va")));
+        assert_eq!(m.get(b"a"), Some(Some(p(b"va"))));
         assert_eq!(m.get(b"b"), None);
     }
 
     #[test]
     fn newer_overwrites() {
         let mut m = MemTable::new();
-        m.insert(b"k".to_vec(), 1, Some(b"v1".to_vec()));
-        m.insert(b"k".to_vec(), 2, Some(b"v2".to_vec()));
-        assert_eq!(m.get(b"k"), Some(Some(&b"v2".to_vec())));
+        m.insert(b"k".to_vec(), 1, Some(p(b"v1")));
+        m.insert(b"k".to_vec(), 2, Some(p(b"v2")));
+        assert_eq!(m.get(b"k"), Some(Some(p(b"v2"))));
         assert_eq!(m.len(), 1);
     }
 
     #[test]
     fn tombstone_visible() {
         let mut m = MemTable::new();
-        m.insert(b"k".to_vec(), 1, Some(b"v".to_vec()));
+        m.insert(b"k".to_vec(), 1, Some(p(b"v")));
         m.insert(b"k".to_vec(), 2, None);
         assert_eq!(m.get(b"k"), Some(None));
     }
@@ -102,7 +110,7 @@ mod tests {
         let mut m = MemTable::new();
         let before = m.approx_bytes();
         for i in 0..100u32 {
-            m.insert(i.to_be_bytes().to_vec(), i as u64, Some(vec![0u8; 100]));
+            m.insert(i.to_be_bytes().to_vec(), i as u64, Some(Payload::fill(0, 100)));
         }
         assert!(m.approx_bytes() > before + 100 * 100);
     }
@@ -111,7 +119,7 @@ mod tests {
     fn into_entries_sorted() {
         let mut m = MemTable::new();
         for k in [b"c".to_vec(), b"a".to_vec(), b"b".to_vec()] {
-            m.insert(k, 1, Some(b"v".to_vec()));
+            m.insert(k, 1, Some(p(b"v")));
         }
         let es = m.into_entries();
         let keys: Vec<&[u8]> = es.iter().map(|e| e.key.as_slice()).collect();
@@ -122,7 +130,7 @@ mod tests {
     fn range_scan() {
         let mut m = MemTable::new();
         for i in 0..10u8 {
-            m.insert(vec![i], 1, Some(vec![i]));
+            m.insert(vec![i], 1, Some(Payload::fill(i, 1)));
         }
         let r = m.range(&[5], 3);
         assert_eq!(r.len(), 3);

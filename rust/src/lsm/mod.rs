@@ -6,6 +6,11 @@
 //! flush of immutable MemTables, leveled compaction with overlapping-range
 //! input selection) because the paper's observations O1–O4 are properties
 //! of that shape.
+//!
+//! Values are carried as synthetic [`Payload`]s (length + fingerprint)
+//! rather than materialized bytes — see [`crate::wire`]. All on-disk
+//! sizes and offsets are computed from logical lengths and are therefore
+//! byte-identical to an engine storing real values.
 
 pub mod block_cache;
 pub mod bloom;
@@ -21,6 +26,8 @@ pub use memtable::MemTable;
 pub use sst::{BlockHandle, SstBuilder, SstMeta};
 pub use version::{CompactionPick, Version};
 
+pub use crate::wire::{EntryCursor, EntryRef, Payload, WireBuf};
+
 /// SSTable identifier (also the zenfs file id of the SST).
 pub type SstId = u64;
 
@@ -32,55 +39,24 @@ pub type Key = Vec<u8>;
 pub struct Entry {
     pub key: Key,
     pub seq: u64,
-    pub value: Option<Vec<u8>>,
+    pub value: Option<Payload>,
 }
 
 impl Entry {
-    /// On-disk encoded size of this entry.
+    /// On-disk (logical) encoded size of this entry.
     pub fn encoded_len(&self) -> usize {
-        2 + 4 + 8 + self.key.len() + self.value.as_ref().map_or(0, |v| v.len())
+        crate::wire::ENTRY_HEADER + self.key.len() + self.value.map_or(0, |p| p.len as usize)
     }
 
-    pub fn encode_into(&self, out: &mut Vec<u8>) {
-        out.extend_from_slice(&(self.key.len() as u16).to_le_bytes());
-        match &self.value {
-            Some(v) => out.extend_from_slice(&(v.len() as u32).to_le_bytes()),
-            None => out.extend_from_slice(&u32::MAX.to_le_bytes()),
-        }
-        out.extend_from_slice(&self.seq.to_le_bytes());
-        out.extend_from_slice(&self.key);
-        if let Some(v) = &self.value {
-            out.extend_from_slice(v);
-        }
+    pub fn encode_into(&self, out: &mut WireBuf) {
+        out.push_entry(&self.key, self.seq, self.value);
     }
+}
 
-    /// Decode one entry from `buf[at..]`; returns the entry and the next
-    /// offset, or None at end-of-buffer / truncation.
-    pub fn decode_from(buf: &[u8], at: usize) -> Option<(Entry, usize)> {
-        if at + 14 > buf.len() {
-            return None;
-        }
-        let klen = u16::from_le_bytes(buf[at..at + 2].try_into().unwrap()) as usize;
-        let vlen_raw = u32::from_le_bytes(buf[at + 2..at + 6].try_into().unwrap());
-        let seq = u64::from_le_bytes(buf[at + 6..at + 14].try_into().unwrap());
-        let mut p = at + 14;
-        if p + klen > buf.len() {
-            return None;
-        }
-        let key = buf[p..p + klen].to_vec();
-        p += klen;
-        let value = if vlen_raw == u32::MAX {
-            None
-        } else {
-            let vlen = vlen_raw as usize;
-            if p + vlen > buf.len() {
-                return None;
-            }
-            let v = buf[p..p + vlen].to_vec();
-            p += vlen;
-            Some(v)
-        };
-        Some((Entry { key, seq, value }, p))
+impl EntryRef<'_> {
+    /// Owned copy of a borrowed decoded entry.
+    pub fn to_entry(&self) -> Entry {
+        Entry { key: self.key.to_vec(), seq: self.seq, value: self.value }
     }
 }
 
@@ -90,52 +66,56 @@ mod tests {
 
     #[test]
     fn entry_roundtrip() {
-        let e = Entry { key: b"user123".to_vec(), seq: 42, value: Some(vec![7u8; 100]) };
-        let mut buf = Vec::new();
+        let e = Entry { key: b"user123".to_vec(), seq: 42, value: Some(Payload::fill(7, 100)) };
+        let mut buf = WireBuf::new();
         e.encode_into(&mut buf);
-        assert_eq!(buf.len(), e.encoded_len());
-        let (d, next) = Entry::decode_from(&buf, 0).unwrap();
-        assert_eq!(d, e);
-        assert_eq!(next, buf.len());
+        assert_eq!(buf.len(), e.encoded_len() as u64);
+        let d = buf.entries().next().unwrap();
+        assert_eq!(d.to_entry(), e);
     }
 
     #[test]
     fn tombstone_roundtrip() {
         let e = Entry { key: b"k".to_vec(), seq: 1, value: None };
-        let mut buf = Vec::new();
+        let mut buf = WireBuf::new();
         e.encode_into(&mut buf);
-        let (d, _) = Entry::decode_from(&buf, 0).unwrap();
+        let d = buf.entries().next().unwrap();
         assert_eq!(d.value, None);
     }
 
     #[test]
     fn decode_multiple_sequential() {
-        let mut buf = Vec::new();
+        let mut buf = WireBuf::new();
         let entries: Vec<Entry> = (0..10)
             .map(|i| Entry {
                 key: format!("key{i:03}").into_bytes(),
                 seq: i,
-                value: Some(vec![i as u8; 8]),
+                value: Some(Payload::fill(i as u8, 8)),
             })
             .collect();
         for e in &entries {
             e.encode_into(&mut buf);
         }
-        let mut at = 0;
-        let mut out = Vec::new();
-        while let Some((e, next)) = Entry::decode_from(&buf, at) {
-            out.push(e);
-            at = next;
-        }
+        let out: Vec<Entry> = buf.entries().map(|e| e.to_entry()).collect();
         assert_eq!(out, entries);
     }
 
     #[test]
     fn truncated_decode_returns_none() {
-        let e = Entry { key: b"abc".to_vec(), seq: 3, value: Some(vec![1; 50]) };
-        let mut buf = Vec::new();
+        let e = Entry { key: b"abc".to_vec(), seq: 3, value: Some(Payload::fill(1, 50)) };
+        let mut buf = WireBuf::new();
         e.encode_into(&mut buf);
-        assert!(Entry::decode_from(&buf[..buf.len() - 1], 0).is_none());
-        assert!(Entry::decode_from(&buf, buf.len()).is_none());
+        let truncated = buf.slice_to_buf(0, buf.len() - 1);
+        assert_eq!(truncated.entries().count(), 0);
+    }
+
+    #[test]
+    fn encoded_len_matches_seed_on_disk_format() {
+        // The accounting invariant: logical size == the seed engine's
+        // materialized `2 + 4 + 8 + klen + vlen` encoding.
+        let e = Entry { key: vec![0u8; 24], seq: 9, value: Some(Payload::fill(3, 1000)) };
+        assert_eq!(e.encoded_len(), 2 + 4 + 8 + 24 + 1000);
+        let t = Entry { key: vec![0u8; 24], seq: 9, value: None };
+        assert_eq!(t.encoded_len(), 2 + 4 + 8 + 24);
     }
 }

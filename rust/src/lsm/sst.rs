@@ -5,12 +5,17 @@
 //! `[data blocks][index block][bloom block]`; the index and Bloom filter
 //! are also kept in memory in [`SstMeta`] (as RocksDB does via pinned
 //! meta-blocks), so point reads cost exactly one data-block I/O.
+//!
+//! All offsets and sizes are *logical* ([`WireBuf`] lengths) — identical
+//! to a materialized encoding — while the resident bytes are the compact
+//! physical form (headers + keys + padding only).
 
 use std::sync::Arc;
 
 use crate::sim::rng::fingerprint32;
+use crate::wire::{EntryRef, WireBuf};
 
-use super::{Bloom, Entry, Key, SstId};
+use super::{Bloom, Entry, Key, Payload, SstId};
 
 /// Location of one data block inside the SST file.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -63,7 +68,7 @@ impl SstMeta {
 pub struct SstBuilder {
     block_size: u64,
     bits_per_key: u32,
-    data: Vec<u8>,
+    data: WireBuf,
     blocks: Vec<BlockHandle>,
     cur_block_start: u64,
     cur_block_first: Option<Key>,
@@ -78,13 +83,16 @@ impl SstBuilder {
         Self::with_capacity(block_size, bits_per_key, 0)
     }
 
-    /// Pre-reserve the serialized-data buffer (hot path: compaction knows
-    /// the output SST size up front).
+    /// Pre-reserve the physical buffer. `data_capacity` is the expected
+    /// *logical* output size; the physical form is far smaller (headers +
+    /// keys), so a small fraction is reserved.
     pub fn with_capacity(block_size: u64, bits_per_key: u32, data_capacity: u64) -> Self {
+        let mut data = WireBuf::new();
+        data.reserve_phys((data_capacity / 16) as usize);
         SstBuilder {
             block_size,
             bits_per_key,
-            data: Vec::with_capacity(data_capacity as usize),
+            data,
             blocks: Vec::new(),
             cur_block_start: 0,
             cur_block_first: None,
@@ -97,22 +105,27 @@ impl SstBuilder {
 
     /// Append one entry (entries MUST arrive in sorted key order).
     pub fn add(&mut self, e: &Entry) {
+        self.add_parts(&e.key, e.seq, e.value);
+    }
+
+    /// Append one entry from borrowed parts (the streaming-merge feed).
+    pub fn add_parts(&mut self, key: &[u8], seq: u64, value: Option<Payload>) {
         debug_assert!(
-            self.largest.as_ref().map_or(true, |l| l.as_slice() < e.key.as_slice()),
+            self.largest.as_ref().map_or(true, |l| l.as_slice() < key),
             "entries must be added in strictly increasing key order"
         );
         if self.cur_block_first.is_none() {
-            self.cur_block_first = Some(e.key.clone());
-            self.cur_block_start = self.data.len() as u64;
+            self.cur_block_first = Some(key.to_vec());
+            self.cur_block_start = self.data.len();
         }
-        e.encode_into(&mut self.data);
-        self.fps.push(fingerprint32(&e.key));
+        self.data.push_entry(key, seq, value);
+        self.fps.push(fingerprint32(key));
         if self.smallest.is_none() {
-            self.smallest = Some(e.key.clone());
+            self.smallest = Some(key.to_vec());
         }
-        self.largest = Some(e.key.clone());
+        self.largest = Some(key.to_vec());
         self.num_entries += 1;
-        if self.data.len() as u64 - self.cur_block_start >= self.block_size {
+        if self.data.len() - self.cur_block_start >= self.block_size {
             self.seal_block();
         }
     }
@@ -121,36 +134,36 @@ impl SstBuilder {
         if let Some(first) = self.cur_block_first.take() {
             self.blocks.push(BlockHandle {
                 offset: self.cur_block_start,
-                len: (self.data.len() as u64 - self.cur_block_start) as u32,
+                len: (self.data.len() - self.cur_block_start) as u32,
                 first_key: first,
             });
         }
     }
 
-    /// Current serialized data size (for output-SST size targeting).
+    /// Current serialized (logical) data size, for output-SST targeting.
     pub fn data_len(&self) -> u64 {
-        self.data.len() as u64
+        self.data.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.num_entries == 0
     }
 
-    /// Finish: returns the in-memory meta and the full serialized bytes.
-    pub fn finish(mut self, id: SstId, level: usize, created_at: u64) -> (SstMeta, Vec<u8>) {
+    /// Finish: returns the in-memory meta and the full serialized buffer.
+    pub fn finish(mut self, id: SstId, level: usize, created_at: u64) -> (SstMeta, WireBuf) {
         self.seal_block();
         let bloom = Bloom::build(&self.fps, self.bits_per_key);
         // Serialize index + bloom after the data so the file size is honest.
         let index_bytes: usize =
             self.blocks.iter().map(|b| 12 + b.first_key.len()).sum::<usize>() + 8;
         let mut data = self.data;
-        data.extend(std::iter::repeat(0u8).take(index_bytes + bloom.byte_len()));
+        data.push_zeros(index_bytes + bloom.byte_len());
         let meta = SstMeta {
             id,
             level,
             smallest: self.smallest.unwrap_or_default(),
             largest: self.largest.unwrap_or_default(),
-            file_size: data.len() as u64,
+            file_size: data.len(),
             num_entries: self.num_entries,
             blocks: self.blocks,
             bloom,
@@ -160,28 +173,22 @@ impl SstBuilder {
     }
 }
 
-/// Search a raw data block for `key`, returning the matching entry.
-pub fn search_block(block: &[u8], key: &[u8]) -> Option<Entry> {
-    let mut at = 0;
-    while let Some((e, next)) = Entry::decode_from(block, at) {
-        match e.key.as_slice().cmp(key) {
+/// Search a data block for `key`, returning a zero-copy entry view.
+pub fn search_block<'a>(block: &'a WireBuf, key: &[u8]) -> Option<EntryRef<'a>> {
+    for e in block.entries() {
+        match e.key.cmp(key) {
             std::cmp::Ordering::Equal => return Some(e),
             std::cmp::Ordering::Greater => return None, // sorted — passed it
-            std::cmp::Ordering::Less => at = next,
+            std::cmp::Ordering::Less => {}
         }
     }
     None
 }
 
-/// Decode all entries of a data block (scan path / compaction).
-pub fn decode_block(block: &[u8]) -> Vec<Entry> {
-    let mut out = Vec::new();
-    let mut at = 0;
-    while let Some((e, next)) = Entry::decode_from(block, at) {
-        out.push(e);
-        at = next;
-    }
-    out
+/// Decode all entries of a data block into owned form (tests / reference
+/// paths; the hot paths iterate [`WireBuf::entries`] without cloning).
+pub fn decode_block(block: &WireBuf) -> Vec<Entry> {
+    block.entries().map(|e| e.to_entry()).collect()
 }
 
 /// Convenience: build an SST from sorted entries in one call.
@@ -192,7 +199,7 @@ pub fn build_sst(
     block_size: u64,
     bits_per_key: u32,
     created_at: u64,
-) -> (Arc<SstMeta>, Vec<u8>) {
+) -> (Arc<SstMeta>, WireBuf) {
     let mut b = SstBuilder::new(block_size, bits_per_key);
     for e in entries {
         b.add(e);
@@ -210,9 +217,13 @@ mod tests {
             .map(|i| Entry {
                 key: format!("user{i:08}").into_bytes(),
                 seq: i,
-                value: Some(vec![(i % 251) as u8; 100]),
+                value: Some(Payload::fill((i % 251) as u8, 100)),
             })
             .collect()
+    }
+
+    fn block_of(data: &WireBuf, h: &BlockHandle) -> WireBuf {
+        data.slice_to_buf(h.offset, h.len as u64)
     }
 
     #[test]
@@ -222,10 +233,9 @@ mod tests {
         assert!(meta.blocks.len() > 5, "should split into many blocks");
         for e in &es {
             let bi = meta.find_block(&e.key).expect("block for key");
-            let h = &meta.blocks[bi];
-            let block = &data[h.offset as usize..(h.offset + h.len as u64) as usize];
-            let found = search_block(block, &e.key).expect("entry in block");
-            assert_eq!(&found, e);
+            let block = block_of(&data, &meta.blocks[bi]);
+            let found = search_block(&block, &e.key).expect("entry in block");
+            assert_eq!(found.to_entry(), *e);
         }
     }
 
@@ -236,9 +246,8 @@ mod tests {
         // Key lexically inside the range but absent.
         let probe = b"user00000050x".to_vec();
         if let Some(bi) = meta.find_block(&probe) {
-            let h = &meta.blocks[bi];
-            let block = &data[h.offset as usize..(h.offset + h.len as u64) as usize];
-            assert!(search_block(block, &probe).is_none());
+            let block = block_of(&data, &meta.blocks[bi]);
+            assert!(search_block(&block, &probe).is_none());
         }
         // Key outside the range.
         assert!(meta.find_block(b"zzz").is_none());
@@ -259,9 +268,23 @@ mod tests {
     fn file_size_includes_index_and_bloom() {
         let es = entries(1000);
         let (meta, data) = build_sst(&es, 1, 0, 4096, 10, 0);
-        assert_eq!(meta.file_size, data.len() as u64);
+        assert_eq!(meta.file_size, data.len());
         let data_bytes: u64 = meta.blocks.iter().map(|b| b.len as u64).sum();
         assert!(meta.file_size > data_bytes, "index/bloom accounted");
+    }
+
+    #[test]
+    fn physical_size_excludes_payload_bytes() {
+        let es = entries(1000);
+        let (_, data) = build_sst(&es, 1, 0, 4096, 10, 0);
+        // 1000 entries × 100-byte values are logical-only.
+        assert!(data.len() > 100 * 1000, "logical size counts values");
+        assert!(
+            (data.phys_len() as u64) < data.len() - 90 * 1000,
+            "payload bytes must not be resident: phys={} logical={}",
+            data.phys_len(),
+            data.len()
+        );
     }
 
     #[test]
@@ -280,9 +303,8 @@ mod tests {
         let es = entries(50);
         let (meta, data) = build_sst(&es, 1, 0, 100_000_000, 10, 0);
         assert_eq!(meta.blocks.len(), 1);
-        let h = &meta.blocks[0];
-        let block = &data[h.offset as usize..(h.offset + h.len as u64) as usize];
-        assert_eq!(decode_block(block), es);
+        let block = block_of(&data, &meta.blocks[0]);
+        assert_eq!(decode_block(&block), es);
     }
 
     #[test]

@@ -91,20 +91,49 @@ impl Version {
     }
 
     /// Install compaction outputs and remove inputs atomically.
+    ///
+    /// Input removal is a set lookup per SST (not a scan of the id slice),
+    /// and the sorted output level is rebuilt by a single merge pass with
+    /// the (key-ascending) outputs instead of a full re-sort.
     pub fn apply_compaction(
         &mut self,
         level: usize,
         input_ids: &[SstId],
-        outputs: Vec<Arc<SstMeta>>,
+        mut outputs: Vec<Arc<SstMeta>>,
     ) {
         let out_level = level + 1;
-        self.levels[level].retain(|m| !input_ids.contains(&m.id));
-        self.levels[out_level].retain(|m| !input_ids.contains(&m.id));
-        for o in outputs {
-            debug_assert_eq!(o.level, out_level);
-            self.levels[out_level].push(o);
+        let ids: std::collections::HashSet<SstId> = input_ids.iter().copied().collect();
+        self.levels[level].retain(|m| !ids.contains(&m.id));
+        self.levels[out_level].retain(|m| !ids.contains(&m.id));
+        if outputs.is_empty() {
+            debug_assert!(self.disjoint(out_level));
+            return;
         }
-        self.levels[out_level].sort_by(|a, b| a.smallest.cmp(&b.smallest));
+        debug_assert!(outputs.iter().all(|o| o.level == out_level));
+        // Compaction emits outputs in ascending key order already; sorting
+        // here only guards direct callers (tests) that pass arbitrary sets.
+        outputs.sort_by(|a, b| a.smallest.cmp(&b.smallest));
+        let existing = std::mem::take(&mut self.levels[out_level]);
+        let mut merged = Vec::with_capacity(existing.len() + outputs.len());
+        let mut it_e = existing.into_iter().peekable();
+        let mut it_o = outputs.into_iter().peekable();
+        loop {
+            match (it_e.peek(), it_o.peek()) {
+                (Some(e), Some(o)) => {
+                    // On equal keys keep the existing file first (what the
+                    // seed's stable sort of appended outputs produced).
+                    if e.smallest <= o.smallest {
+                        merged.push(it_e.next().unwrap());
+                    } else {
+                        merged.push(it_o.next().unwrap());
+                    }
+                }
+                (Some(_), None) => merged.push(it_e.next().unwrap()),
+                (None, Some(_)) => merged.push(it_o.next().unwrap()),
+                (None, None) => break,
+            }
+        }
+        self.levels[out_level] = merged;
         debug_assert!(self.disjoint(out_level));
     }
 
@@ -217,7 +246,7 @@ mod tests {
             .map(|i| Entry {
                 key: format!("user{i:08}").into_bytes(),
                 seq: id * 1000 + i,
-                value: Some(vec![0u8; 16]),
+                value: Some(crate::lsm::Payload::fill(0, 16)),
             })
             .collect();
         let (mut meta, _) = build_sst(&entries, id, level, 4096, 10, 0);
@@ -319,7 +348,7 @@ mod tests {
             .map(|i| Entry {
                 key: format!("user{i:08}").into_bytes(),
                 seq: i,
-                value: Some(vec![0u8; 400]),
+                value: Some(crate::lsm::Payload::fill(0, 400)),
             })
             .collect();
         let (m1, _) = build_sst(&big[..1500], 1, 1, 4096, 10, 0);

@@ -4,6 +4,8 @@
 //! hhzs exp <table1|fig2|exp1..exp7|all> [--profile quick|default|full]
 //!          [--config FILE] [--csv DIR] [--objects N] [--ops N]
 //!          [--ssd-zones N] [--alpha F] [--seed N]
+//! hhzs bench wallclock [--quick] [--out BENCH_2.json]
+//!                                     # DES wall-clock + memory benchmark
 //! hhzs bench-devices                  # Table 1 microbench only
 //! hhzs demo [--n N] [--shards N]      # tiny put/get/scan smoke demo
 //! hhzs config [--profile P]           # print the effective config TOML
@@ -110,6 +112,13 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_bench_wallclock(args: &Args) -> anyhow::Result<()> {
+    let quick = args.flags.contains_key("quick");
+    let out = args.flags.get("out").cloned().unwrap_or_else(|| "BENCH_2.json".to_string());
+    hhzs::bench::run_wallclock(quick, &out)?;
+    Ok(())
+}
+
 fn cmd_demo(args: &Args) -> anyhow::Result<()> {
     use hhzs::policy::HhzsPolicy;
     use hhzs::shard::ShardedEngine;
@@ -120,7 +129,7 @@ fn cmd_demo(args: &Args) -> anyhow::Result<()> {
     let mut db = ShardedEngine::new(&cfg, |c| Box::new(HhzsPolicy::new(c.lsm.num_levels)));
     println!("loading {n} objects over {} shard(s) ...", db.num_shards());
     for i in 0..n {
-        db.put(&key_for(i, 24), &value_for(i, cfg.workload.value_size));
+        db.put_payload(&key_for(i, 24), value_for(i, cfg.workload.value_size));
     }
     db.quiesce();
     let m = db.merged_metrics();
@@ -135,7 +144,7 @@ fn cmd_demo(args: &Args) -> anyhow::Result<()> {
     );
     let probe = key_for(n / 2, 24);
     let v = db.get(&probe);
-    println!("get(mid key) -> {} bytes", v.map_or(0, |v| v.len()));
+    println!("get(mid key) -> {} bytes", v.map_or(0, |p| p.len));
     println!("scan(50) -> {} entries", db.scan(&key_for(0, 24), 50));
     let shard_label = db.num_shards() > 1;
     for (s, e) in db.engines.iter().enumerate() {
@@ -167,8 +176,9 @@ fn cmd_xla_check() -> anyhow::Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: hhzs <exp|bench-devices|demo|config|xla-check> [flags]\n\
-         run `hhzs exp all --profile quick` for a fast full sweep"
+        "usage: hhzs <exp|bench|bench-devices|demo|config|xla-check> [flags]\n\
+         run `hhzs exp all --profile quick` for a fast full sweep\n\
+         run `hhzs bench wallclock --quick` for the BENCH_2 wall-clock bench"
     );
     std::process::exit(2);
 }
@@ -178,6 +188,14 @@ fn main() -> anyhow::Result<()> {
     let args = parse_args(&argv);
     match args.positional.first().map(|s| s.as_str()) {
         Some("exp") => cmd_exp(&args),
+        Some("bench") => match args.positional.get(1).map(|s| s.as_str()) {
+            Some("wallclock") | None => cmd_bench_wallclock(&args),
+            Some("devices") => {
+                hhzs::exp::table1::run(None);
+                Ok(())
+            }
+            _ => usage(),
+        },
         Some("bench-devices") => {
             hhzs::exp::table1::run(None);
             Ok(())

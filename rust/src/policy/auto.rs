@@ -177,7 +177,8 @@ mod tests {
         p.max_level = 4;
         // Fill SSD zones until < 8% remain (20 zones → fewer than 2 free).
         for i in 0..19u64 {
-            fs.create_file(0, i, Dev::Ssd, &[0u8; 64], true).unwrap();
+            let data = crate::wire::WireBuf::from_bytes(&[0u8; 64]);
+            fs.create_file(0, i, Dev::Ssd, &data, true).unwrap();
         }
         let busy = |_: SstId| false;
         let v = view(&cfg, &fs, &version, 0, &busy);
@@ -196,7 +197,8 @@ mod tests {
         p.max_level = 4;
         // Leave exactly 2 of 20 zones free → 10% (between 8% and 13.3%).
         for i in 0..18u64 {
-            fs.create_file(0, i, Dev::Ssd, &[0u8; 64], true).unwrap();
+            let data = crate::wire::WireBuf::from_bytes(&[0u8; 64]);
+            fs.create_file(0, i, Dev::Ssd, &data, true).unwrap();
         }
         let busy = |_: SstId| false;
         let v = view(&cfg, &fs, &version, 0, &busy);

@@ -376,7 +376,7 @@ mod tests {
                 .map(|k| Entry {
                     key: format!("user{k:012}").into_bytes(),
                     seq: k,
-                    value: Some(vec![0u8; 64]),
+                    value: Some(crate::lsm::Payload::fill(0, 64)),
                 })
                 .collect();
             let (meta, data) = build_sst(&entries, *id, *level, 4096, 10, 0);

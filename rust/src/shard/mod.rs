@@ -178,12 +178,17 @@ impl ShardedEngine {
         self.engines[s].put(key, value);
     }
 
+    pub fn put_payload(&mut self, key: &[u8], value: crate::wire::Payload) {
+        let s = self.router.route(key);
+        self.engines[s].put_payload(key, value);
+    }
+
     pub fn delete(&mut self, key: &[u8]) {
         let s = self.router.route(key);
         self.engines[s].delete(key);
     }
 
-    pub fn get(&mut self, key: &[u8]) -> Option<Vec<u8>> {
+    pub fn get(&mut self, key: &[u8]) -> Option<crate::wire::Payload> {
         let s = self.router.route(key);
         self.engines[s].get(key)
     }
@@ -200,6 +205,7 @@ impl ShardedEngine {
 mod tests {
     use super::*;
     use crate::policy::HhzsPolicy;
+    use crate::wire::Payload;
     use crate::ycsb::{key_for, value_for};
 
     fn sharded(n: usize) -> ShardedEngine {
@@ -212,7 +218,7 @@ mod tests {
     fn routed_put_get_roundtrip() {
         let mut se = sharded(4);
         for i in 0..2_000u64 {
-            se.put(&key_for(i, 24), &value_for(i, 100));
+            se.put_payload(&key_for(i, 24), value_for(i, 100));
         }
         se.quiesce();
         for i in (0..2_000u64).step_by(31) {
@@ -222,7 +228,7 @@ mod tests {
         // Overwrite + delete stay on the owning shard.
         let k = key_for(7, 24);
         se.put(&k, b"fresh");
-        assert_eq!(se.get(&k).as_deref(), Some(b"fresh".as_slice()));
+        assert_eq!(se.get(&k), Some(Payload::from_bytes(b"fresh")));
         se.delete(&k);
         assert_eq!(se.get(&k), None);
     }
@@ -231,7 +237,7 @@ mod tests {
     fn data_lands_on_multiple_shards_with_disjoint_file_ids() {
         let mut se = sharded(4);
         for i in 0..8_000u64 {
-            se.put(&key_for(i, 24), &value_for(i, 500));
+            se.put_payload(&key_for(i, 24), value_for(i, 500));
         }
         se.quiesce();
         let mut seen = std::collections::HashSet::new();
@@ -253,7 +259,7 @@ mod tests {
     fn merged_metrics_sum_per_shard_ops() {
         let mut se = sharded(2);
         for i in 0..500u64 {
-            se.put(&key_for(i, 24), &value_for(i, 64));
+            se.put_payload(&key_for(i, 24), value_for(i, 64));
         }
         let per: u64 = se.engines.iter().map(|e| e.metrics.writes_done).sum();
         assert_eq!(per, 500);
@@ -264,7 +270,7 @@ mod tests {
     fn rebalanced_budgets_follow_data_demand() {
         let mut se = sharded(2);
         for i in 0..6_000u64 {
-            se.put(&key_for(i, 24), &value_for(i, 500));
+            se.put_payload(&key_for(i, 24), value_for(i, 500));
         }
         se.flush_all();
         se.quiesce();

@@ -97,12 +97,13 @@ mod tests {
         let r = Router::new(8);
         let key = crate::ycsb::key_for(42, 24);
         let home = r.route(&key);
+        let p = crate::wire::Payload::from_bytes(b"v");
         let ops = [
-            Op::Insert { key: key.clone(), value: vec![1] },
-            Op::Update { key: key.clone(), value: vec![2] },
+            Op::Insert { key: key.clone(), value: p },
+            Op::Update { key: key.clone(), value: p },
             Op::Read { key: key.clone() },
             Op::Scan { key: key.clone(), len: 10 },
-            Op::ReadModifyWrite { key: key.clone(), value: vec![3] },
+            Op::ReadModifyWrite { key: key.clone(), value: p },
         ];
         for op in &ops {
             assert_eq!(r.route_op(op), home);

@@ -1,0 +1,485 @@
+//! Zero-materialization wire buffers — the data-plane representation that
+//! makes simulator cost proportional to *entry count* instead of payload
+//! bytes.
+//!
+//! A [`WireBuf`] is a byte string with two lengths:
+//!
+//! * a **logical** length — the exact number of bytes the materialized
+//!   encoding would occupy. Every size, offset, block handle, zone write
+//!   pointer, device-time charge, and metric in the simulator is computed
+//!   from logical lengths, so the whole DES behaves bit-identically to an
+//!   engine that stores real payload bytes;
+//! * a **physical** length — what is actually resident in RAM. Entry
+//!   headers and keys are stored physically; value payloads are carried as
+//!   [`SynthRun`]s (logical length + 32-bit content fingerprint) occupying
+//!   zero physical bytes.
+//!
+//! The logical layout of one encoded entry is byte-compatible with the
+//! seed engine's on-disk format:
+//!
+//! ```text
+//! [klen u16][vlen u32][seq u64][key: klen bytes][value: vlen bytes]
+//! ```
+//!
+//! where `vlen == u32::MAX` marks a tombstone. Physically the value bytes
+//! are elided; their identity survives as the run's fingerprint, so
+//! decode returns the exact [`Payload`] that was written (WAL replay, SST
+//! reads, and SSD-cache round trips are loss-free).
+//!
+//! Buffers can be sliced at *arbitrary* logical offsets (zenfs splits
+//! files at HDD zone-capacity boundaries that may fall inside a value):
+//! a run is then split into partial runs that each carry the full value's
+//! fingerprint, and decoding re-assembles them transparently.
+
+use crate::sim::rng::fingerprint32;
+
+/// Logical size of an encoded entry header (klen + vlen + seq).
+pub const ENTRY_HEADER: usize = 14;
+
+/// Compact stand-in for value bytes: logical length plus a 32-bit content
+/// fingerprint. Payload equality is only meaningful between payloads built
+/// by the same constructor ([`Payload::from_bytes`] fingerprints real
+/// bytes; [`Payload::fill`] fingerprints the `(byte, len)` fill pattern in
+/// O(1) without materializing it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Payload {
+    /// Logical value size in bytes (drives all size accounting).
+    pub len: u32,
+    /// 32-bit content fingerprint (identity only, not invertible).
+    pub fingerprint: u32,
+}
+
+impl Payload {
+    /// Fingerprint real bytes (API boundary: `Engine::put`, tests).
+    pub fn from_bytes(bytes: &[u8]) -> Payload {
+        Payload { len: bytes.len() as u32, fingerprint: fingerprint32(bytes) }
+    }
+
+    /// Fingerprint the fill pattern "`len` copies of `byte`" in O(1) —
+    /// the YCSB value generator's shape (`vec![b; value_size]` in the
+    /// seed engine) without touching `len` bytes.
+    pub fn fill(byte: u8, len: usize) -> Payload {
+        if len == 0 {
+            return Payload::from_bytes(&[]);
+        }
+        // splitmix64 over (len, byte).
+        let mut z = (((len as u64) << 8) | byte as u64).wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^= z >> 31;
+        Payload { len: len as u32, fingerprint: ((z >> 32) ^ z) as u32 }
+    }
+}
+
+/// One synthetic (payload) run inside a [`WireBuf`]: `len` logical bytes
+/// at `log_off`, zero physical bytes, identified by the value fingerprint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SynthRun {
+    /// Logical offset of the run within its buffer.
+    pub log_off: u64,
+    /// Logical bytes covered by this run.
+    pub len: u32,
+    /// Fingerprint of the (whole) value this run belongs to. Partial runs
+    /// produced by slicing carry the full value's fingerprint.
+    pub fp: u32,
+    /// Synthetic bytes in all earlier runs (prefix sum for O(log n)
+    /// logical→physical offset translation).
+    synth_before: u64,
+}
+
+/// A decoded entry borrowing its key from the buffer it was decoded from
+/// (the zero-copy view used by point lookups, scans, and the streaming
+/// compaction merge).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EntryRef<'a> {
+    pub key: &'a [u8],
+    pub seq: u64,
+    /// `None` is a tombstone.
+    pub value: Option<Payload>,
+}
+
+impl EntryRef<'_> {
+    /// Logical encoded size of this entry.
+    pub fn encoded_len(&self) -> usize {
+        ENTRY_HEADER + self.key.len() + self.value.map_or(0, |p| p.len as usize)
+    }
+}
+
+/// Raw decode result carrying buffer positions instead of borrows (used by
+/// cursors that own their buffer, e.g. the compaction block streams).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct RawEntry {
+    pub key_off: usize,
+    pub key_len: usize,
+    pub seq: u64,
+    pub value: Option<Payload>,
+    pub next_log: u64,
+    pub next_phys: usize,
+    pub next_run: usize,
+}
+
+/// The zero-materialization byte buffer. See the module docs.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WireBuf {
+    phys: Vec<u8>,
+    /// Synthetic runs sorted by `log_off`; runs never overlap and always
+    /// lie inside the value region of exactly one encoded entry.
+    runs: Vec<SynthRun>,
+    log_len: u64,
+}
+
+impl WireBuf {
+    pub fn new() -> WireBuf {
+        WireBuf::default()
+    }
+
+    /// A buffer of real bytes only (no synthetic runs).
+    pub fn from_bytes(bytes: &[u8]) -> WireBuf {
+        WireBuf { phys: bytes.to_vec(), runs: Vec::new(), log_len: bytes.len() as u64 }
+    }
+
+    /// Logical length — the materialized encoding's byte count.
+    pub fn len(&self) -> u64 {
+        self.log_len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.log_len == 0
+    }
+
+    /// Physically resident bytes (headers + keys + padding).
+    pub fn phys_len(&self) -> usize {
+        self.phys.len()
+    }
+
+    /// The physical bytes (raw-byte buffers: identical to the content).
+    pub fn phys_bytes(&self) -> &[u8] {
+        &self.phys
+    }
+
+    pub fn runs(&self) -> &[SynthRun] {
+        &self.runs
+    }
+
+    pub fn clear(&mut self) {
+        self.phys.clear();
+        self.runs.clear();
+        self.log_len = 0;
+    }
+
+    pub fn reserve_phys(&mut self, additional: usize) {
+        self.phys.reserve(additional);
+    }
+
+    fn total_synth(&self) -> u64 {
+        self.runs.last().map_or(0, |r| r.synth_before + r.len as u64)
+    }
+
+    /// Append real bytes.
+    pub fn push_bytes(&mut self, bytes: &[u8]) {
+        self.phys.extend_from_slice(bytes);
+        self.log_len += bytes.len() as u64;
+    }
+
+    /// Append `n` zero bytes (SST index/bloom padding).
+    pub fn push_zeros(&mut self, n: usize) {
+        self.phys.extend(std::iter::repeat(0u8).take(n));
+        self.log_len += n as u64;
+    }
+
+    /// Append a value payload as a synthetic run (`p.len` logical bytes,
+    /// zero physical).
+    pub fn push_payload(&mut self, p: Payload) {
+        if p.len == 0 {
+            return;
+        }
+        let synth_before = self.total_synth();
+        self.runs.push(SynthRun {
+            log_off: self.log_len,
+            len: p.len,
+            fp: p.fingerprint,
+            synth_before,
+        });
+        self.log_len += p.len as u64;
+    }
+
+    /// Append one encoded entry (header + key physically, value as a run).
+    pub fn push_entry(&mut self, key: &[u8], seq: u64, value: Option<Payload>) {
+        let mut hdr = [0u8; ENTRY_HEADER];
+        hdr[0..2].copy_from_slice(&(key.len() as u16).to_le_bytes());
+        let vlen = match value {
+            Some(p) => p.len,
+            None => u32::MAX,
+        };
+        hdr[2..6].copy_from_slice(&vlen.to_le_bytes());
+        hdr[6..14].copy_from_slice(&seq.to_le_bytes());
+        self.push_bytes(&hdr);
+        self.push_bytes(key);
+        if let Some(p) = value {
+            self.push_payload(p);
+        }
+    }
+
+    /// Physical offset of logical position `log`. Positions strictly
+    /// inside a synthetic run map to the run's physical start.
+    fn phys_of(&self, log: u64) -> usize {
+        let idx = self.runs.partition_point(|r| r.log_off < log);
+        let synth = if idx == 0 {
+            0
+        } else {
+            let r = &self.runs[idx - 1];
+            r.synth_before + (r.len as u64).min(log - r.log_off)
+        };
+        (log - synth) as usize
+    }
+
+    /// Copy out the logical range `[off, off + len)` as an owned buffer.
+    /// Slicing may split a synthetic run; each part keeps the full value's
+    /// fingerprint, and decoding re-joins adjacent parts.
+    pub fn slice_to_buf(&self, off: u64, len: u64) -> WireBuf {
+        let end = off + len;
+        assert!(end <= self.log_len, "slice [{off}, {end}) outside len {}", self.log_len);
+        let ps = self.phys_of(off);
+        let pe = self.phys_of(end);
+        let first = self.runs.partition_point(|r| r.log_off + r.len as u64 <= off);
+        let mut runs = Vec::new();
+        let mut synth_acc = 0u64;
+        for r in &self.runs[first..] {
+            if r.log_off >= end {
+                break;
+            }
+            let s = r.log_off.max(off);
+            let e = (r.log_off + r.len as u64).min(end);
+            runs.push(SynthRun {
+                log_off: s - off,
+                len: (e - s) as u32,
+                fp: r.fp,
+                synth_before: synth_acc,
+            });
+            synth_acc += e - s;
+        }
+        WireBuf { phys: self.phys[ps..pe].to_vec(), runs, log_len: len }
+    }
+
+    /// Append another buffer's content (logical concatenation).
+    pub fn append_buf(&mut self, other: &WireBuf) {
+        let base_log = self.log_len;
+        let base_synth = self.total_synth();
+        self.phys.extend_from_slice(&other.phys);
+        for r in &other.runs {
+            self.runs.push(SynthRun {
+                log_off: base_log + r.log_off,
+                len: r.len,
+                fp: r.fp,
+                synth_before: base_synth + r.synth_before,
+            });
+        }
+        self.log_len += other.log_len;
+    }
+
+    /// Decode the entry at the given cursor positions. Returns `None` at
+    /// end-of-buffer or on truncation/malformation (mirrors the seed
+    /// decoder's truncation semantics).
+    pub(crate) fn decode_entry_raw(&self, log: u64, phys: usize, run: usize) -> Option<RawEntry> {
+        if log >= self.log_len || phys + ENTRY_HEADER > self.phys.len() {
+            return None;
+        }
+        let klen = u16::from_le_bytes(self.phys[phys..phys + 2].try_into().unwrap()) as usize;
+        let vlen_raw = u32::from_le_bytes(self.phys[phys + 2..phys + 6].try_into().unwrap());
+        let seq = u64::from_le_bytes(self.phys[phys + 6..phys + 14].try_into().unwrap());
+        let key_off = phys + ENTRY_HEADER;
+        if key_off + klen > self.phys.len() {
+            return None;
+        }
+        let mut next_log = log + (ENTRY_HEADER + klen) as u64;
+        let next_phys = key_off + klen;
+        let mut next_run = run;
+        let value = if vlen_raw == u32::MAX {
+            None
+        } else if vlen_raw == 0 {
+            Some(Payload::from_bytes(&[]))
+        } else {
+            let vlen = vlen_raw as u64;
+            if next_log + vlen > self.log_len {
+                return None;
+            }
+            let mut covered = 0u64;
+            let mut fp: Option<u32> = None;
+            while covered < vlen {
+                let r = self.runs.get(next_run)?;
+                if r.log_off != next_log + covered || covered + r.len as u64 > vlen {
+                    return None; // run/value mismatch: malformed buffer
+                }
+                fp.get_or_insert(r.fp);
+                covered += r.len as u64;
+                next_run += 1;
+            }
+            next_log += vlen;
+            Some(Payload { len: vlen_raw, fingerprint: fp.unwrap_or(0) })
+        };
+        if next_log > self.log_len {
+            return None;
+        }
+        Some(RawEntry { key_off, key_len: klen, seq, value, next_log, next_phys, next_run })
+    }
+
+    pub(crate) fn key_at(&self, key_off: usize, key_len: usize) -> &[u8] {
+        &self.phys[key_off..key_off + key_len]
+    }
+
+    /// Iterate the encoded entries (zero-copy keys).
+    pub fn entries(&self) -> EntryCursor<'_> {
+        EntryCursor { buf: self, log: 0, phys: 0, run: 0 }
+    }
+}
+
+/// Sequential zero-copy decoder over a [`WireBuf`].
+pub struct EntryCursor<'a> {
+    buf: &'a WireBuf,
+    log: u64,
+    phys: usize,
+    run: usize,
+}
+
+impl<'a> Iterator for EntryCursor<'a> {
+    type Item = EntryRef<'a>;
+
+    fn next(&mut self) -> Option<EntryRef<'a>> {
+        let raw = self.buf.decode_entry_raw(self.log, self.phys, self.run)?;
+        self.log = raw.next_log;
+        self.phys = raw.next_phys;
+        self.run = raw.next_run;
+        Some(EntryRef {
+            key: self.buf.key_at(raw.key_off, raw.key_len),
+            seq: raw.seq,
+            value: raw.value,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logical_layout_matches_materialized_format() {
+        let mut b = WireBuf::new();
+        b.push_entry(b"user123", 42, Some(Payload::fill(7, 100)));
+        // 14-byte header + 7-byte key + 100 value bytes, logically.
+        assert_eq!(b.len(), 14 + 7 + 100);
+        // Physically only header + key are resident.
+        assert_eq!(b.phys_len(), 14 + 7);
+        let e = b.entries().next().unwrap();
+        assert_eq!(e.key, b"user123");
+        assert_eq!(e.seq, 42);
+        assert_eq!(e.value, Some(Payload::fill(7, 100)));
+        assert_eq!(e.encoded_len() as u64, b.len());
+    }
+
+    #[test]
+    fn tombstone_and_empty_value_roundtrip() {
+        let mut b = WireBuf::new();
+        b.push_entry(b"k", 1, None);
+        b.push_entry(b"l", 2, Some(Payload::from_bytes(&[])));
+        let es: Vec<_> = b.entries().collect();
+        assert_eq!(es.len(), 2);
+        assert_eq!(es[0].value, None);
+        assert_eq!(es[1].value, Some(Payload::from_bytes(&[])));
+        assert_eq!(b.len(), 14 + 1 + 14 + 1);
+    }
+
+    #[test]
+    fn many_entries_decode_in_order() {
+        let mut b = WireBuf::new();
+        let payloads: Vec<Payload> =
+            (0..50u64).map(|i| Payload::fill((i % 251) as u8, 64 + i as usize)).collect();
+        for (i, p) in payloads.iter().enumerate() {
+            b.push_entry(format!("key{i:03}").as_bytes(), i as u64, Some(*p));
+        }
+        let decoded: Vec<_> = b.entries().collect();
+        assert_eq!(decoded.len(), 50);
+        for (i, e) in decoded.iter().enumerate() {
+            assert_eq!(e.key, format!("key{i:03}").as_bytes());
+            assert_eq!(e.seq, i as u64);
+            assert_eq!(e.value, Some(payloads[i]));
+        }
+    }
+
+    #[test]
+    fn slice_at_entry_boundaries_preserves_entries() {
+        let mut b = WireBuf::new();
+        let mut offsets = vec![0u64];
+        for i in 0..10u64 {
+            b.push_entry(format!("k{i}").as_bytes(), i, Some(Payload::fill(1, 500)));
+            offsets.push(b.len());
+        }
+        for w in offsets.windows(2) {
+            let s = b.slice_to_buf(w[0], w[1] - w[0]);
+            let es: Vec<_> = s.entries().collect();
+            assert_eq!(es.len(), 1);
+            assert_eq!(es[0].value, Some(Payload::fill(1, 500)));
+        }
+    }
+
+    #[test]
+    fn arbitrary_split_and_reassembly_is_lossless() {
+        // Split the buffer at every possible logical offset (including
+        // inside headers, keys, and synthetic runs) and re-concatenate:
+        // the result must decode identically.
+        let mut b = WireBuf::new();
+        for i in 0..8u64 {
+            let v = if i % 3 == 0 { None } else { Some(Payload::fill(i as u8, 37)) };
+            b.push_entry(format!("key{i}").as_bytes(), i, v);
+        }
+        let want: Vec<(Vec<u8>, u64, Option<Payload>)> =
+            b.entries().map(|e| (e.key.to_vec(), e.seq, e.value)).collect();
+        for cut in 0..=b.len() {
+            let mut joined = b.slice_to_buf(0, cut);
+            joined.append_buf(&b.slice_to_buf(cut, b.len() - cut));
+            assert_eq!(joined.len(), b.len());
+            let got: Vec<(Vec<u8>, u64, Option<Payload>)> =
+                joined.entries().map(|e| (e.key.to_vec(), e.seq, e.value)).collect();
+            assert_eq!(got, want, "lossy split at {cut}");
+        }
+    }
+
+    #[test]
+    fn truncated_buffer_stops_decoding() {
+        let mut b = WireBuf::new();
+        b.push_entry(b"abc", 3, Some(Payload::fill(1, 50)));
+        // Cut one logical byte off the value.
+        let t = b.slice_to_buf(0, b.len() - 1);
+        assert_eq!(t.entries().count(), 0);
+        // Cut into the key.
+        let t = b.slice_to_buf(0, 15);
+        assert_eq!(t.entries().count(), 0);
+    }
+
+    #[test]
+    fn raw_byte_buffers_behave_like_vecs() {
+        let mut b = WireBuf::from_bytes(b"hello");
+        b.push_bytes(b" world");
+        assert_eq!(b.len(), 11);
+        assert_eq!(b.phys_bytes(), b"hello world");
+        let s = b.slice_to_buf(6, 5);
+        assert_eq!(s.phys_bytes(), b"world");
+        assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn fill_payload_is_deterministic_and_len_aware() {
+        assert_eq!(Payload::fill(7, 100), Payload::fill(7, 100));
+        assert_ne!(Payload::fill(7, 100), Payload::fill(7, 101));
+        assert_ne!(Payload::fill(7, 100), Payload::fill(8, 100));
+        assert_eq!(Payload::fill(9, 0), Payload::from_bytes(&[]));
+    }
+
+    #[test]
+    fn zeros_padding_is_physical() {
+        let mut b = WireBuf::new();
+        b.push_zeros(128);
+        assert_eq!(b.len(), 128);
+        assert_eq!(b.phys_len(), 128);
+        assert!(b.phys_bytes().iter().all(|&x| x == 0));
+    }
+}

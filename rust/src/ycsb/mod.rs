@@ -5,11 +5,13 @@
 //! distribution are FNV-hashed onto the key space, so popularity is
 //! scattered across SSTs — the effect behind the paper's "hot SSTs on the
 //! HDD" observation (O4). Keys are `user` + 20 hashed digits = 24 bytes;
-//! values are `value_size` deterministic bytes.
+//! values are synthetic `value_size`-byte fill payloads (deterministic
+//! per item), carried as [`Payload`]s so generation costs O(1) per op.
 
 use crate::coordinator::{Op, OpSource};
 use crate::sim::rng::{fnv1a_u64, Rng};
 use crate::sim::zipf::{KeyChooser, Latest, Uniform, Zipf};
+use crate::wire::Payload;
 
 /// Which workload to generate.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -74,18 +76,37 @@ impl Spec {
     }
 }
 
+/// Maximum generated key length: `"user"` + 20 decimal digits.
+pub const MAX_KEY_LEN: usize = 24;
+
+/// Write the deterministic key for item `i` into a caller-provided stack
+/// buffer (no heap allocation — the hot-path form). Returns the key
+/// length: `min(24, max(8, key_size))`, matching the seed generator's
+/// `format!("user{:020}", hash)` + truncate semantics byte-for-byte.
+#[inline]
+pub fn key_into(i: u64, key_size: usize, buf: &mut [u8; MAX_KEY_LEN]) -> usize {
+    buf[..4].copy_from_slice(b"user");
+    let mut h = fnv1a_u64(i);
+    for slot in buf[4..MAX_KEY_LEN].iter_mut().rev() {
+        *slot = b'0' + (h % 10) as u8;
+        h /= 10;
+    }
+    key_size.clamp(8, MAX_KEY_LEN)
+}
+
 /// Deterministic 24-byte key for item `i` (hashed digits — YCSB order
 /// scrambling, so loads insert in key-random order).
 pub fn key_for(i: u64, key_size: usize) -> Vec<u8> {
-    let mut k = format!("user{:020}", fnv1a_u64(i));
-    k.truncate(key_size.max(8));
-    k.into_bytes()
+    let mut buf = [0u8; MAX_KEY_LEN];
+    let n = key_into(i, key_size, &mut buf);
+    buf[..n].to_vec()
 }
 
-/// Deterministic value bytes for item `i`.
-pub fn value_for(i: u64, value_size: usize) -> Vec<u8> {
+/// Deterministic value payload for item `i`: the synthetic form of the
+/// seed generator's `vec![b; value_size]` fill bytes.
+pub fn value_for(i: u64, value_size: usize) -> Payload {
     let b = (fnv1a_u64(i ^ 0xA1B2_C3D4) % 251) as u8;
-    vec![b; value_size]
+    Payload::fill(b, value_size)
 }
 
 enum Chooser {
@@ -153,13 +174,19 @@ impl YcsbSource {
     }
 
     /// Scrambled-Zipf key choice: rank → hash → existing item index.
+    ///
+    /// Key bytes are rendered into a stack buffer (`key_into`); the single
+    /// remaining allocation is the `Vec` the [`Op`] must own — the seed's
+    /// `format!` + `String` + truncate machinery is gone.
     fn choose_key(&mut self, c: usize) -> Vec<u8> {
         let rank = self.chooser.next(&mut self.rngs[c]);
         let idx = match self.spec.kind {
             Kind::D => rank, // latest: ranks ARE recency-ordered indices
             _ => fnv1a_u64(rank) % self.n_keys,
         };
-        key_for(idx, self.spec.key_size)
+        let mut buf = [0u8; MAX_KEY_LEN];
+        let n = key_into(idx, self.spec.key_size, &mut buf);
+        buf[..n].to_vec()
     }
 
     fn insert_new(&mut self) -> Op {
@@ -405,10 +432,12 @@ mod tests {
                 total += 1;
                 // Recover recency only statistically: the key of a recent
                 // item equals key_for(i) for some i near n. Compare against
-                // the most recent 2000 items.
+                // the most recent 2000 items (stack-rendered, no allocs).
                 let n = src.n_keys;
+                let mut buf = [0u8; MAX_KEY_LEN];
                 for i in (n.saturating_sub(2000))..n {
-                    if key == &key_for(i, 24) {
+                    let klen = key_into(i, 24, &mut buf);
+                    if key.as_slice() == &buf[..klen] {
                         recent += 1;
                         break;
                     }

@@ -1,12 +1,13 @@
 //! A zoned device = an array of zones + the QD1 timing server.
 //!
 //! Data-path methods (`append`, `read_random`, `read_seq`, `reset`) both
-//! move real bytes and charge virtual service time, returning the access
-//! `(start, finish)` window so callers can thread completion times through
-//! the DES.
+//! move (wire-form) data and charge virtual service time, returning the
+//! access `(start, finish)` window so callers can thread completion times
+//! through the DES. All service times are charged on *logical* lengths.
 
 use crate::config::DeviceProfile;
 use crate::sim::{AccessKind, DeviceTimer, Ns};
+use crate::wire::WireBuf;
 
 use super::{Dev, Zone, ZoneError, ZoneId, ZoneState};
 
@@ -85,10 +86,10 @@ impl ZonedDevice {
         &mut self,
         now: Ns,
         zone: ZoneId,
-        buf: &[u8],
+        buf: &WireBuf,
     ) -> Result<(u64, Ns, Ns), ZoneError> {
-        let off = self.zones[zone as usize].append(buf)?;
-        let (s, f) = self.timer.access(now, AccessKind::SeqWrite, buf.len() as u64);
+        let off = self.zones[zone as usize].append_wire(buf)?;
+        let (s, f) = self.timer.access(now, AccessKind::SeqWrite, buf.len());
         Ok((off, s, f))
     }
 
@@ -99,8 +100,8 @@ impl ZonedDevice {
         zone: ZoneId,
         offset: u64,
         len: u64,
-    ) -> Result<(Vec<u8>, Ns, Ns), ZoneError> {
-        let data = self.zones[zone as usize].read(offset, len)?.to_vec();
+    ) -> Result<(WireBuf, Ns, Ns), ZoneError> {
+        let data = self.zones[zone as usize].read(offset, len)?;
         let (s, f) = self.timer.access(now, AccessKind::RandRead, len);
         Ok((data, s, f))
     }
@@ -112,8 +113,8 @@ impl ZonedDevice {
         zone: ZoneId,
         offset: u64,
         len: u64,
-    ) -> Result<(Vec<u8>, Ns, Ns), ZoneError> {
-        let data = self.zones[zone as usize].read(offset, len)?.to_vec();
+    ) -> Result<(WireBuf, Ns, Ns), ZoneError> {
+        let data = self.zones[zone as usize].read(offset, len)?;
         let (s, f) = self.timer.access(now, AccessKind::SeqRead, len);
         Ok((data, s, f))
     }
@@ -125,8 +126,8 @@ impl ZonedDevice {
     }
 
     /// Append without charging time (the caller charges chunked I/O itself).
-    pub fn append_untimed(&mut self, zone: ZoneId, buf: &[u8]) -> Result<u64, ZoneError> {
-        self.zones[zone as usize].append(buf)
+    pub fn append_untimed(&mut self, zone: ZoneId, buf: &WireBuf) -> Result<u64, ZoneError> {
+        self.zones[zone as usize].append_wire(buf)
     }
 
     /// Read without charging time.
@@ -135,8 +136,8 @@ impl ZonedDevice {
         zone: ZoneId,
         offset: u64,
         len: u64,
-    ) -> Result<Vec<u8>, ZoneError> {
-        Ok(self.zones[zone as usize].read(offset, len)?.to_vec())
+    ) -> Result<WireBuf, ZoneError> {
+        self.zones[zone as usize].read(offset, len)
     }
 
     /// Reset a zone (instantaneous in the model, as on real devices the
@@ -149,9 +150,16 @@ impl ZonedDevice {
         self.zones[zone as usize].finish();
     }
 
-    /// Bytes of live (written) data summed over all zones.
+    /// Bytes of live (written) data summed over all zones — *logical*
+    /// bytes, as a byte-backed device would report.
     pub fn written_bytes(&self) -> u64 {
         self.zones.iter().map(|z| z.wp()).sum()
+    }
+
+    /// Physically resident bytes across all zones (the O(entries) RAM
+    /// footprint the zero-materialization data path is pinned on).
+    pub fn phys_bytes(&self) -> u64 {
+        self.zones.iter().map(|z| z.phys_bytes()).sum()
     }
 }
 
@@ -164,14 +172,18 @@ mod tests {
         ZonedDevice::new(Dev::Ssd, 4 * MIB, 8, DeviceProfile::zn540_ssd())
     }
 
+    fn wire(bytes: &[u8]) -> WireBuf {
+        WireBuf::from_bytes(bytes)
+    }
+
     #[test]
     fn allocate_append_read_roundtrip() {
         let mut d = ssd();
         let z = d.find_empty_zone().unwrap();
-        let (off, _, f1) = d.append(0, z, b"zoned-data").unwrap();
+        let (off, _, f1) = d.append(0, z, &wire(b"zoned-data")).unwrap();
         assert_eq!(off, 0);
         let (data, s2, _) = d.read_random(0, z, 0, 10).unwrap();
-        assert_eq!(&data, b"zoned-data");
+        assert_eq!(data.phys_bytes(), b"zoned-data");
         // Second access queued behind the first (QD1).
         assert_eq!(s2, f1);
     }
@@ -181,7 +193,7 @@ mod tests {
         let mut d = ssd();
         assert_eq!(d.empty_zone_count(), 8);
         let z = d.find_empty_zone().unwrap();
-        d.append(0, z, &[0u8; 100]).unwrap();
+        d.append(0, z, &wire(&[0u8; 100])).unwrap();
         assert_eq!(d.empty_zone_count(), 7);
         d.reset(z);
         assert_eq!(d.empty_zone_count(), 8);
@@ -193,7 +205,7 @@ mod tests {
         let ids = d.find_empty_zones(4).unwrap();
         assert_eq!(ids.len(), 4);
         for id in &ids {
-            d.append(0, *id, &[1u8; 8]).unwrap();
+            d.append(0, *id, &wire(&[1u8; 8])).unwrap();
         }
         assert!(d.find_empty_zones(5).is_none() || d.empty_zone_count() >= 5);
         assert_eq!(d.empty_zone_count(), 4);
@@ -203,7 +215,7 @@ mod tests {
     fn sequential_write_discipline_enforced() {
         let mut d = ssd();
         let z = d.find_empty_zone().unwrap();
-        d.append(0, z, &[0u8; 4096]).unwrap();
+        d.append(0, z, &wire(&[0u8; 4096])).unwrap();
         // Reading past wp fails.
         assert!(d.read_random(0, z, 4000, 200).is_err());
     }
@@ -213,8 +225,8 @@ mod tests {
         let mut d = ssd();
         let z0 = 0;
         let z1 = 1;
-        d.append(0, z0, &[0u8; 100]).unwrap();
-        d.append(0, z1, &[0u8; 50]).unwrap();
+        d.append(0, z0, &wire(&[0u8; 100])).unwrap();
+        d.append(0, z1, &wire(&[0u8; 50])).unwrap();
         assert_eq!(d.written_bytes(), 150);
     }
 }

@@ -7,12 +7,17 @@
 //! and must be reset before its space is reused. Violations are hard errors
 //! — the LSM/zenfs layers above are required to be zone-correct, exactly as
 //! a host-managed device would require.
+//!
+//! Zone contents are [`WireBuf`]s: the write pointer, capacities, and all
+//! states advance by *logical* bytes (bit-identical to byte-backed zones),
+//! while resident memory is the compact physical form — value payloads
+//! cost zero bytes of RAM no matter the configured value size.
 
 mod device;
 
 pub use device::{ZoneStats, ZonedDevice};
 
-
+use crate::wire::WireBuf;
 
 /// Which physical device a zone (or file extent) lives on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -40,13 +45,13 @@ pub enum ZoneState {
     Full,
 }
 
-/// One append-only zone with RAM-backed contents.
+/// One append-only zone with RAM-backed (compact) contents.
 #[derive(Clone, Debug)]
 pub struct Zone {
     pub capacity: u64,
     wp: u64,
     state: ZoneState,
-    data: Vec<u8>,
+    data: WireBuf,
     /// Number of resets this zone has seen (wear accounting).
     pub reset_count: u64,
 }
@@ -80,7 +85,7 @@ impl std::error::Error for ZoneError {}
 
 impl Zone {
     pub fn new(capacity: u64) -> Self {
-        Zone { capacity, wp: 0, state: ZoneState::Empty, data: Vec::new(), reset_count: 0 }
+        Zone { capacity, wp: 0, state: ZoneState::Empty, data: WireBuf::new(), reset_count: 0 }
     }
 
     pub fn wp(&self) -> u64 {
@@ -99,25 +104,42 @@ impl Zone {
         self.state == ZoneState::Empty
     }
 
-    /// Append at the write pointer. Returns the offset the data landed at.
-    pub fn append(&mut self, buf: &[u8]) -> Result<u64, ZoneError> {
-        let len = buf.len() as u64;
-        if self.state == ZoneState::Full {
-            return Err(ZoneError::CapacityExceeded { wp: self.wp, len, capacity: self.capacity });
+    /// Physically resident bytes of this zone's contents.
+    pub fn phys_bytes(&self) -> u64 {
+        self.data.phys_len() as u64
+    }
+
+    fn check_append(&self, len: u64) -> Result<(), ZoneError> {
+        if self.state == ZoneState::Full || self.wp + len > self.capacity {
+            return Err(ZoneError::CapacityExceeded {
+                wp: self.wp,
+                len,
+                capacity: self.capacity,
+            });
         }
-        if self.wp + len > self.capacity {
-            return Err(ZoneError::CapacityExceeded { wp: self.wp, len, capacity: self.capacity });
-        }
+        Ok(())
+    }
+
+    fn commit_append(&mut self, len: u64) -> u64 {
         let off = self.wp;
-        if self.data.capacity() == 0 {
-            // Reserve the zone once: WAL-style many-small-appends would
-            // otherwise pay O(log n) grow-and-copy cycles per zone.
-            self.data.reserve_exact(self.capacity as usize);
-        }
-        self.data.extend_from_slice(buf);
         self.wp += len;
         self.state = if self.wp == self.capacity { ZoneState::Full } else { ZoneState::Open };
-        Ok(off)
+        off
+    }
+
+    /// Append raw bytes at the write pointer. Returns the landing offset.
+    pub fn append(&mut self, buf: &[u8]) -> Result<u64, ZoneError> {
+        self.check_append(buf.len() as u64)?;
+        self.data.push_bytes(buf);
+        Ok(self.commit_append(buf.len() as u64))
+    }
+
+    /// Append a wire buffer (its *logical* length advances the write
+    /// pointer; only its physical bytes land in RAM).
+    pub fn append_wire(&mut self, buf: &WireBuf) -> Result<u64, ZoneError> {
+        self.check_append(buf.len())?;
+        self.data.append_buf(buf);
+        Ok(self.commit_append(buf.len()))
     }
 
     /// Explicitly transition Open → Full (the ZNS "finish zone" command).
@@ -128,18 +150,18 @@ impl Zone {
     }
 
     /// Read any range below the write pointer.
-    pub fn read(&self, offset: u64, len: u64) -> Result<&[u8], ZoneError> {
+    pub fn read(&self, offset: u64, len: u64) -> Result<WireBuf, ZoneError> {
         if offset + len > self.wp {
             return Err(ZoneError::ReadPastWp { wp: self.wp, offset, len });
         }
-        Ok(&self.data[offset as usize..(offset + len) as usize])
+        Ok(self.data.slice_to_buf(offset, len))
     }
 
     /// Reset: rewind the write pointer, discard contents, free RAM.
     pub fn reset(&mut self) {
         self.wp = 0;
         self.state = ZoneState::Empty;
-        self.data = Vec::new();
+        self.data = WireBuf::new();
         self.reset_count += 1;
     }
 }
@@ -147,6 +169,7 @@ impl Zone {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::wire::Payload;
 
     #[test]
     fn append_advances_wp() {
@@ -170,8 +193,8 @@ mod tests {
     fn read_below_wp_only() {
         let mut z = Zone::new(16);
         z.append(b"hello").unwrap();
-        assert_eq!(z.read(0, 5).unwrap(), b"hello");
-        assert_eq!(z.read(1, 3).unwrap(), b"ell");
+        assert_eq!(z.read(0, 5).unwrap().phys_bytes(), b"hello");
+        assert_eq!(z.read(1, 3).unwrap().phys_bytes(), b"ell");
         assert!(z.read(0, 6).is_err());
     }
 
@@ -186,7 +209,7 @@ mod tests {
         assert_eq!(z.reset_count, 1);
         // Space reusable after reset.
         z.append(b"x").unwrap();
-        assert_eq!(z.read(0, 1).unwrap(), b"x");
+        assert_eq!(z.read(0, 1).unwrap().phys_bytes(), b"x");
     }
 
     #[test]
@@ -197,6 +220,26 @@ mod tests {
         assert_eq!(z.state(), ZoneState::Full);
         assert!(z.append(b"d").is_err());
         // Reads of written data still work on a finished zone.
-        assert_eq!(z.read(0, 3).unwrap(), b"abc");
+        assert_eq!(z.read(0, 3).unwrap().phys_bytes(), b"abc");
+    }
+
+    #[test]
+    fn wire_append_advances_wp_logically_but_stores_compactly() {
+        let mut z = Zone::new(10_000);
+        let mut rec = WireBuf::new();
+        rec.push_entry(b"user00000001", 7, Some(Payload::fill(3, 1000)));
+        let off = z.append_wire(&rec).unwrap();
+        assert_eq!(off, 0);
+        assert_eq!(z.wp(), rec.len(), "wp advances by logical bytes");
+        assert!(z.phys_bytes() < 64, "payload bytes must not be resident");
+        // Round trip through a zone read.
+        let back = z.read(0, rec.len()).unwrap();
+        let e = back.entries().next().unwrap();
+        assert_eq!(e.key, b"user00000001");
+        assert_eq!(e.value, Some(Payload::fill(3, 1000)));
+        // Capacity is enforced on logical size.
+        let mut big = WireBuf::new();
+        big.push_entry(b"k", 8, Some(Payload::fill(0, 20_000)));
+        assert!(z.append_wire(&big).is_err());
     }
 }

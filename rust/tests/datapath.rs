@@ -1,0 +1,268 @@
+//! Equivalence pinning for the zero-materialization data path.
+//!
+//! The streaming compaction merge and the synthetic-payload wire format
+//! must be *observably identical* to the seed engine's materialized
+//! pipeline: same output SST bytes (ids, sizes, block handles, bloom
+//! words), same DES timeline, same metrics. The reference pipeline
+//! (`merge_entries` + `split_outputs` + full decode) is retained in-tree
+//! behind `Engine::reference_datapath`, and these tests pin the two paths
+//! against each other — entry-level (randomized streams with tombstones
+//! and shadowed versions) and end-to-end (full YCSB-A protocol digests at
+//! shards ∈ {1, 4}).
+
+use std::sync::Arc;
+
+use hhzs::config::Config;
+use hhzs::coordinator::Engine;
+use hhzs::lsm::compaction::{merge_entries, split_outputs, streaming_merge, OutputShape};
+use hhzs::lsm::sst::{build_sst, SstBuilder, SstMeta};
+use hhzs::lsm::{Entry, Payload};
+use hhzs::shard::ShardedEngine;
+use hhzs::sim::rng::Rng;
+use hhzs::wire::WireBuf;
+use hhzs::ycsb::{Kind, RoutedSource, Spec, YcsbSource};
+
+// ---------------------------------------------------------------------
+// Streaming merge ≡ reference pipeline (entry level)
+// ---------------------------------------------------------------------
+
+/// Random sorted streams sharing a key population: shadowed versions and
+/// tombstones included. Seqs are globally unique (monotone counter).
+fn random_streams(rng: &mut Rng) -> Vec<Vec<Entry>> {
+    let n_streams = 1 + rng.next_below(5) as usize;
+    let mut seq = 0u64;
+    (0..n_streams)
+        .map(|_| {
+            let mut m: std::collections::BTreeMap<Vec<u8>, Entry> = Default::default();
+            for _ in 0..rng.next_below(120) {
+                let key = format!("user{:06}", rng.next_below(90)).into_bytes();
+                seq += 1;
+                let value = if rng.next_below(8) == 0 {
+                    None // tombstone
+                } else {
+                    Some(Payload::fill(
+                        rng.next_below(256) as u8,
+                        rng.next_below(300) as usize, // includes 0-length
+                    ))
+                };
+                m.insert(key.clone(), Entry { key, seq, value });
+            }
+            m.into_values().collect()
+        })
+        .collect()
+}
+
+fn assert_same_sst(a: &SstMeta, da: &WireBuf, b: &SstMeta, db: &WireBuf, ctx: &str) {
+    assert_eq!(a.id, b.id, "{ctx}: id");
+    assert_eq!(a.level, b.level, "{ctx}: level");
+    assert_eq!(a.smallest, b.smallest, "{ctx}: smallest");
+    assert_eq!(a.largest, b.largest, "{ctx}: largest");
+    assert_eq!(a.file_size, b.file_size, "{ctx}: file_size");
+    assert_eq!(a.num_entries, b.num_entries, "{ctx}: num_entries");
+    assert_eq!(a.blocks, b.blocks, "{ctx}: block handles");
+    assert_eq!(a.bloom.words(), b.bloom.words(), "{ctx}: bloom words");
+    assert_eq!(a.bloom.nbits(), b.bloom.nbits(), "{ctx}: bloom nbits");
+    assert_eq!(a.bloom.k(), b.bloom.k(), "{ctx}: bloom k");
+    assert_eq!(da, db, "{ctx}: serialized data");
+}
+
+#[test]
+fn streaming_merge_outputs_are_byte_identical_to_reference() {
+    for case in 0..40u64 {
+        let mut rng = Rng::new(0xDA7A ^ case);
+        let streams = random_streams(&mut rng);
+        let in_block = 256 + rng.next_below(4096);
+        let out_block = 256 + rng.next_below(4096);
+        let sst_size = 512 + rng.next_below(16_384);
+        let drop_tombstones = rng.next_below(2) == 1;
+
+        // Build one input SST per non-empty stream.
+        let mut inputs: Vec<(Arc<SstMeta>, WireBuf)> = Vec::new();
+        for (i, entries) in streams.iter().enumerate() {
+            if entries.is_empty() {
+                continue;
+            }
+            let (meta, data) = build_sst(entries, 1 + i as u64, 1, in_block, 10, 0);
+            inputs.push((meta, data));
+        }
+        let metas: Vec<Arc<SstMeta>> = inputs.iter().map(|(m, _)| m.clone()).collect();
+
+        // Streaming path: block-cursor merge over the built SSTs.
+        let shape =
+            OutputShape { sst_size, block_size: out_block, bloom_bits_per_key: 10 };
+        let builders = streaming_merge(&metas, Vec::new(), drop_tombstones, shape, |m, h| {
+            let (_, data) =
+                inputs.iter().find(|(im, _)| im.id == m.id).expect("fetch known SST");
+            data.slice_to_buf(h.offset, h.len as u64)
+        });
+        let streaming: Vec<(SstMeta, WireBuf)> = builders
+            .into_iter()
+            .enumerate()
+            .map(|(k, b)| b.finish(100 + k as u64, 2, 7))
+            .collect();
+
+        // Reference path: materialize, merge, split, rebuild.
+        let merged = merge_entries(streams.clone(), drop_tombstones);
+        let ranges = split_outputs(&merged, sst_size);
+        let reference: Vec<(SstMeta, WireBuf)> = ranges
+            .into_iter()
+            .enumerate()
+            .map(|(k, r)| {
+                let mut b = SstBuilder::new(out_block, 10);
+                for e in &merged[r] {
+                    b.add(e);
+                }
+                b.finish(100 + k as u64, 2, 7)
+            })
+            .collect();
+
+        assert_eq!(
+            streaming.len(),
+            reference.len(),
+            "case {case}: output SST count (drop={drop_tombstones})"
+        );
+        for ((ma, da), (mb, db)) in streaming.iter().zip(reference.iter()) {
+            assert_same_sst(ma, da, mb, db, &format!("case {case}"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// End-to-end digest: streaming engine ≡ reference engine, shards ∈ {1, 4}
+// ---------------------------------------------------------------------
+
+fn proto_cfg(shards: usize) -> Config {
+    let mut cfg = Config::paper_scaled(2048);
+    cfg.workload.load_objects = 20_000;
+    cfg.workload.ops = 5_000;
+    cfg.shards = shards;
+    cfg
+}
+
+/// Everything observable about a finished run, per shard: virtual clock,
+/// metrics, the full SST layout (ids, sizes, block offsets), and the
+/// zenfs file map (sizes, devices, extents).
+fn digest(se: &ShardedEngine) -> Vec<String> {
+    let mut out = Vec::new();
+    for (s, e) in se.engines.iter().enumerate() {
+        let m = &e.metrics;
+        out.push(format!(
+            "shard{s} now={} ops={} tput={:x} stalls={} flushes={} compactions={} \
+             migr={} wal_over={} p999={}",
+            e.now,
+            m.ops_done,
+            m.ops_per_sec().to_bits(),
+            m.stalls,
+            m.flushes,
+            m.compactions,
+            m.migration_bytes,
+            e.pool.wal_overflows,
+            m.read_lat.quantile(0.999),
+        ));
+        for lvl in 0..e.version.num_levels() {
+            for sst in e.version.level(lvl) {
+                let blocks: Vec<String> =
+                    sst.blocks.iter().map(|h| format!("{}+{}", h.offset, h.len)).collect();
+                out.push(format!(
+                    "shard{s} L{lvl} sst={} size={} n={} blocks=[{}]",
+                    sst.id,
+                    sst.file_size,
+                    sst.num_entries,
+                    blocks.join(",")
+                ));
+            }
+        }
+        for f in e.fs.files() {
+            let extents: Vec<String> = f
+                .extents
+                .iter()
+                .map(|x| format!("{}:{}+{}", x.zone, x.offset, x.len))
+                .collect();
+            out.push(format!(
+                "shard{s} file={} dev={} size={} extents=[{}]",
+                f.id,
+                f.dev.name(),
+                f.size,
+                extents.join(",")
+            ));
+        }
+    }
+    out
+}
+
+fn run_protocol(shards: usize, reference: bool) -> Vec<String> {
+    let cfg = proto_cfg(shards);
+    let clients = cfg.workload.clients;
+    let mut se = ShardedEngine::new(&cfg, |c| hhzs::exp::common::make_policy("HHZS", c));
+    for e in &mut se.engines {
+        e.reference_datapath = reference;
+    }
+    let router = se.router;
+    let load = Spec::from_config(&cfg, Kind::Load);
+    se.run(
+        |s| Box::new(RoutedSource::new(YcsbSource::new(load.clone(), clients), router, s)),
+        clients,
+        None,
+        false,
+    );
+    se.flush_all();
+    let a = Spec::from_config(&cfg, Kind::A);
+    se.run(
+        |s| Box::new(RoutedSource::new(YcsbSource::new(a.clone(), clients), router, s)),
+        clients,
+        None,
+        false,
+    );
+    se.quiesce();
+    digest(&se)
+}
+
+#[test]
+fn e2e_digest_streaming_equals_reference_engine() {
+    for shards in [1usize, 4] {
+        let streaming = run_protocol(shards, false);
+        let reference = run_protocol(shards, true);
+        assert_eq!(
+            streaming.len(),
+            reference.len(),
+            "{shards} shard(s): digest length"
+        );
+        for (a, b) in streaming.iter().zip(reference.iter()) {
+            assert_eq!(a, b, "{shards} shard(s): digest line diverged");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// O(entries) memory: resident bytes do not scale with value_size
+// ---------------------------------------------------------------------
+
+#[test]
+fn resident_bytes_track_entries_not_payload_bytes() {
+    let run = |value_size: usize| {
+        let mut cfg = Config::paper_scaled(2048);
+        cfg.workload.load_objects = 20_000;
+        cfg.workload.value_size = value_size;
+        let mut e = Engine::new(
+            cfg.clone(),
+            Box::new(hhzs::policy::HhzsPolicy::new(cfg.lsm.num_levels)),
+        );
+        let clients = cfg.workload.clients;
+        let mut src = YcsbSource::new(Spec::from_config(&cfg, Kind::Load), clients);
+        e.run(&mut src, clients, None, false);
+        e.quiesce();
+        (e.fs.phys_bytes(), e.fs.ssd.written_bytes() + e.fs.hdd.written_bytes())
+    };
+    let (phys_small, logical_small) = run(100);
+    let (phys_big, logical_big) = run(2000);
+    // Logical (accounted) bytes scale with the payload...
+    assert!(
+        logical_big > logical_small * 5,
+        "logical bytes must scale with value_size: {logical_small} -> {logical_big}"
+    );
+    // ...resident bytes do not (headers + keys + index/bloom only).
+    assert!(
+        phys_big < phys_small * 3 / 2,
+        "resident bytes must not scale with value_size: {phys_small} -> {phys_big}"
+    );
+}

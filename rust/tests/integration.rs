@@ -225,13 +225,14 @@ fn auto_space_cutoffs_steer_ssts_to_hdd() {
 fn crash_recovery_replays_wal() {
     use hhzs::coordinator::Engine;
     use hhzs::policy::HhzsPolicy;
+    use hhzs::wire::Payload;
     use hhzs::ycsb::{key_for, value_for};
     let mut cfg = Config::paper_scaled(2048);
     cfg.workload.load_objects = 0;
     let mut e = Engine::new(cfg.clone(), Box::new(HhzsPolicy::new(cfg.lsm.num_levels)));
     // Enough writes to span flushed SSTs AND a live tail in the WAL.
     for i in 0..3_000u64 {
-        e.put(&key_for(i, 24), &value_for(i, 1000));
+        e.put_payload(&key_for(i, 24), value_for(i, 1000));
     }
     // Overwrite a few keys so recovery must respect seqno ordering.
     for i in 0..50u64 {
@@ -241,13 +242,13 @@ fn crash_recovery_replays_wal() {
     assert!(replayed > 0, "a live WAL tail must exist and be replayed");
     // Every key readable after recovery, with the latest value winning.
     for i in (0..3_000u64).step_by(37) {
-        let want: Vec<u8> =
-            if i < 50 { b"post-overwrite".to_vec() } else { value_for(i, 1000) };
+        let want =
+            if i < 50 { Payload::from_bytes(b"post-overwrite") } else { value_for(i, 1000) };
         assert_eq!(e.get(&key_for(i, 24)), Some(want), "key {i} lost in crash");
     }
     // The store keeps working after recovery.
     e.put(b"post-crash-key", b"v");
-    assert_eq!(e.get(b"post-crash-key"), Some(b"v".to_vec()));
+    assert_eq!(e.get(b"post-crash-key"), Some(Payload::from_bytes(b"v")));
     e.quiesce();
     for lvl in 1..e.version.num_levels() {
         assert!(e.version.disjoint(lvl));
@@ -263,7 +264,7 @@ fn crash_recovery_mid_compaction_discards_orphans() {
     cfg.workload.load_objects = 0;
     let mut e = Engine::new(cfg.clone(), Box::new(HhzsPolicy::new(cfg.lsm.num_levels)));
     for i in 0..8_000u64 {
-        e.put(&key_for(i, 24), &value_for(i, 1000));
+        e.put_payload(&key_for(i, 24), value_for(i, 1000));
     }
     // Crash with background work likely in flight (no quiesce).
     e.crash_and_recover();

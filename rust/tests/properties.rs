@@ -9,9 +9,9 @@ use hhzs::config::Config;
 use hhzs::coordinator::Engine;
 use hhzs::lsm::compaction::{merge_entries, split_outputs};
 use hhzs::lsm::sst::{build_sst, search_block};
-use hhzs::lsm::{Bloom, Entry, MemTable};
+use hhzs::lsm::{Bloom, Entry, MemTable, Payload};
 use hhzs::policy::HhzsPolicy;
-use hhzs::sim::rng::{fingerprint32, Rng};
+use hhzs::sim::rng::Rng;
 use hhzs::zone::{Dev, Zone, ZoneState};
 
 /// Run `cases` random trials of `prop`, reporting the failing seed.
@@ -96,10 +96,10 @@ fn prop_merge_is_sorted_deduped_and_newest_wins() {
                     let val = if rng.next_below(10) == 0 {
                         None
                     } else {
-                        Some(vec![rng.next_below(256) as u8; 4])
+                        Some(Payload::fill(rng.next_below(256) as u8, 4))
                     };
                     // within a stream, last write wins (BTreeMap keyed by key)
-                    let e = m.entry(k.clone()).or_insert((seq, val.clone()));
+                    let e = m.entry(k.clone()).or_insert((seq, val));
                     if seq > e.0 {
                         *e = (seq, val);
                     }
@@ -110,13 +110,13 @@ fn prop_merge_is_sorted_deduped_and_newest_wins() {
             })
             .collect();
         // Expected winner per key: max seq across streams.
-        let mut expect: std::collections::BTreeMap<Vec<u8>, (u64, Option<Vec<u8>>)> =
+        let mut expect: std::collections::BTreeMap<Vec<u8>, (u64, Option<Payload>)> =
             Default::default();
         for st in &streams {
             for e in st {
-                let slot = expect.entry(e.key.clone()).or_insert((e.seq, e.value.clone()));
+                let slot = expect.entry(e.key.clone()).or_insert((e.seq, e.value));
                 if e.seq > slot.0 {
-                    *slot = (e.seq, e.value.clone());
+                    *slot = (e.seq, e.value);
                 }
             }
         }
@@ -141,7 +141,7 @@ fn prop_split_outputs_partition_exactly() {
             .map(|i| Entry {
                 key: format!("k{i:06}").into_bytes(),
                 seq: i as u64,
-                value: Some(vec![0u8; rng.next_below(200) as usize]),
+                value: Some(Payload::fill(0, rng.next_below(200) as usize)),
             })
             .collect();
         let target = 256 + rng.next_below(4096);
@@ -174,15 +174,15 @@ fn prop_sst_lookup_finds_every_key_and_only_those() {
             .map(|(i, k)| Entry {
                 key: k.clone(),
                 seq: i as u64,
-                value: Some(vec![(i % 255) as u8; 1 + rng.next_below(64) as usize]),
+                value: Some(Payload::fill((i % 255) as u8, 1 + rng.next_below(64) as usize)),
             })
             .collect();
         let (meta, data) = build_sst(&entries, 7, 1, 512 + rng.next_below(4096), 10, 0);
         for e in &entries {
             let bi = meta.find_block(&e.key).expect("key within range");
             let h = &meta.blocks[bi];
-            let block = &data[h.offset as usize..(h.offset + h.len as u64) as usize];
-            assert_eq!(search_block(block, &e.key).as_ref(), Some(e));
+            let block = data.slice_to_buf(h.offset, h.len as u64);
+            assert_eq!(search_block(&block, &e.key).map(|r| r.to_entry()).as_ref(), Some(e));
         }
         // Keys not in the SST are never *returned* (bloom may pass, the
         // block search must still reject).
@@ -193,8 +193,8 @@ fn prop_sst_lookup_finds_every_key_and_only_those() {
             }
             if let Some(bi) = meta.find_block(&probe) {
                 let h = &meta.blocks[bi];
-                let block = &data[h.offset as usize..(h.offset + h.len as u64) as usize];
-                assert!(search_block(block, &probe).is_none());
+                let block = data.slice_to_buf(h.offset, h.len as u64);
+                assert!(search_block(&block, &probe).is_none());
             }
         }
     });
@@ -221,20 +221,20 @@ fn prop_bloom_never_false_negative() {
 fn prop_memtable_matches_btreemap_model() {
     forall("memtable-model", 30, |rng| {
         let mut mem = MemTable::new();
-        let mut model: std::collections::BTreeMap<Vec<u8>, Option<Vec<u8>>> = Default::default();
+        let mut model: std::collections::BTreeMap<Vec<u8>, Option<Payload>> = Default::default();
         for seq in 0..400u64 {
             let k = format!("k{:02}", rng.next_below(40)).into_bytes();
             if rng.next_below(5) == 0 {
                 mem.insert(k.clone(), seq, None);
                 model.insert(k, None);
             } else {
-                let v = vec![rng.next_below(256) as u8; 8];
-                mem.insert(k.clone(), seq, Some(v.clone()));
+                let v = Payload::fill(rng.next_below(256) as u8, 8);
+                mem.insert(k.clone(), seq, Some(v));
                 model.insert(k, Some(v));
             }
         }
         for (k, v) in &model {
-            assert_eq!(mem.get(k), Some(v.as_ref()), "model divergence at {k:?}");
+            assert_eq!(mem.get(k), Some(*v), "model divergence at {k:?}");
         }
         assert_eq!(mem.len(), model.len());
     });
@@ -250,7 +250,7 @@ fn prop_engine_read_your_writes_and_zone_consistency() {
         let mut cfg = Config::tiny();
         cfg.workload.load_objects = 0;
         let mut e = Engine::new(cfg.clone(), Box::new(HhzsPolicy::new(cfg.lsm.num_levels)));
-        let mut model: std::collections::HashMap<Vec<u8>, Option<Vec<u8>>> = Default::default();
+        let mut model: std::collections::HashMap<Vec<u8>, Option<Payload>> = Default::default();
         for i in 0..12_000u64 {
             let k = format!("user{:016}", rng.next_below(4_000)).into_bytes();
             match rng.next_below(10) {
@@ -261,11 +261,11 @@ fn prop_engine_read_your_writes_and_zone_consistency() {
                 1..=6 => {
                     let v = format!("v{i}").into_bytes();
                     e.put(&k, &v);
-                    model.insert(k, Some(v));
+                    model.insert(k, Some(Payload::from_bytes(&v)));
                 }
                 _ => {
                     let got = e.get(&k);
-                    let want = model.get(&k).cloned().flatten();
+                    let want = model.get(&k).copied().flatten();
                     assert_eq!(got, want, "read-your-writes violated for {k:?}");
                 }
             }
@@ -274,7 +274,7 @@ fn prop_engine_read_your_writes_and_zone_consistency() {
         // Final audit: every model key reads back correctly after all
         // background reorganization.
         for (k, want) in model.iter().take(500) {
-            assert_eq!(e.get(k), want.clone(), "post-quiesce divergence at {k:?}");
+            assert_eq!(e.get(k), *want, "post-quiesce divergence at {k:?}");
         }
         // Zone-level audit: every live SST has a file; SSD SSTs sit in
         // exactly one zone; levels ≥1 are disjoint.

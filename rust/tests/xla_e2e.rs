@@ -12,6 +12,7 @@ use hhzs::config::Config;
 use hhzs::coordinator::Engine;
 use hhzs::policy::HhzsPolicy;
 use hhzs::runtime::XlaKernels;
+use hhzs::wire::Payload;
 use hhzs::ycsb::{key_for, value_for};
 
 fn kernels() -> Option<Rc<XlaKernels>> {
@@ -29,7 +30,7 @@ fn loaded_engine(k: Rc<XlaKernels>) -> Engine {
     let mut e = Engine::new(cfg, Box::new(policy));
     e.attach_xla(k);
     for i in 0..20_000u64 {
-        e.put(&key_for(i, 24), &value_for(i, 1000));
+        e.put_payload(&key_for(i, 24), value_for(i, 1000));
     }
     e.quiesce();
     e
@@ -52,7 +53,7 @@ fn multi_get_parity_with_native_gets() {
     let batched = e.multi_get(&keys);
     assert!(k.bloom_calls.get() > 0, "XLA bloom kernel must be dispatched");
     e.xla = None; // native path
-    let native: Vec<Option<Vec<u8>>> = keys.iter().map(|key| e.get(key)).collect();
+    let native: Vec<Option<Payload>> = keys.iter().map(|key| e.get(key)).collect();
     assert_eq!(batched, native, "XLA-batched and native reads must agree");
     // Present keys found, missing keys absent.
     for (i, key) in keys.iter().enumerate() {
@@ -96,7 +97,7 @@ fn xla_and_native_policies_make_same_decisions() {
         }
         let mut e = Engine::new(cfg, Box::new(policy));
         for i in 0..15_000u64 {
-            e.put(&key_for(i, 24), &value_for(i, 1000));
+            e.put_payload(&key_for(i, 24), value_for(i, 1000));
         }
         for i in 0..3_000u64 {
             e.get(&key_for(i * 31 % 15_000, 24));
