@@ -19,6 +19,7 @@ use std::time::Instant;
 use crate::config::Config;
 use crate::coordinator::Engine;
 use crate::policy::HhzsPolicy;
+use crate::shard::ShardedEngine;
 use crate::ycsb::{Kind, Spec, YcsbSource};
 
 /// One measured run.
@@ -111,6 +112,50 @@ pub fn run_one(
     }
 }
 
+/// Run load + YCSB-A through the sharded async frontend (one shared
+/// clock + device pair over `shards` engines) and measure it. Tracks the
+/// new path's DES wall-clock cost next to the single-engine rows.
+pub fn run_one_sharded(
+    label: &str,
+    objects: u64,
+    ops: u64,
+    value_size: usize,
+    shards: usize,
+) -> WallclockRun {
+    let mut cfg = bench_cfg(objects, ops, value_size);
+    cfg.shards = shards;
+    let mut se = ShardedEngine::new(&cfg, |c| Box::new(HhzsPolicy::new(c.lsm.num_levels)));
+    let clients = cfg.workload.clients;
+    let t0 = Instant::now();
+    let mut load = YcsbSource::new(Spec::from_config(&cfg, Kind::Load), clients);
+    se.run_shared(&mut load, clients, None, false);
+    let load_virtual = se.aggregate_ops_per_sec();
+    se.flush_all();
+    let mut a = YcsbSource::new(Spec::from_config(&cfg, Kind::A), clients);
+    se.run_shared(&mut a, clients, None, false);
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let total_ops = objects + ops;
+    let a_virtual = se.aggregate_ops_per_sec();
+    let (mut phys, mut logical) = (0u64, 0u64);
+    for e in &se.engines {
+        phys += e.fs.phys_bytes();
+        logical += e.fs.ssd.written_bytes() + e.fs.hdd.written_bytes();
+    }
+    WallclockRun {
+        label: label.to_string(),
+        objects,
+        ops,
+        value_size,
+        reference_datapath: false,
+        wall_secs: wall,
+        sim_ops_per_wall_sec: total_ops as f64 / wall,
+        virtual_ops_per_sec: if a_virtual > 0.0 { a_virtual } else { load_virtual },
+        peak_rss_bytes: peak_rss_bytes(),
+        zone_phys_bytes: phys,
+        zone_logical_bytes: logical,
+    }
+}
+
 fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
@@ -146,9 +191,63 @@ fn run_to_json(r: &WallclockRun) -> String {
     )
 }
 
+/// Extract `(label, sim_ops_per_wall_sec)` pairs from a previously written
+/// BENCH_2.json. Hand-rolled scanner over our own stable schema (no JSON
+/// crate in this offline build). Returns `None` for the committed
+/// placeholder (no measurements) or anything unparsable — the gate then
+/// skips with a note instead of failing the build.
+fn parse_baseline(json: &str) -> Option<Vec<(String, f64)>> {
+    if json.contains("\"placeholder\": true") {
+        return None;
+    }
+    let mut out = Vec::new();
+    let mut rest = json;
+    while let Some(i) = rest.find("\"label\": \"") {
+        rest = &rest[i + "\"label\": \"".len()..];
+        let end = rest.find('"')?;
+        let label = rest[..end].to_string();
+        let j = rest.find("\"sim_ops_per_wall_sec\": ")?;
+        let num = &rest[j + "\"sim_ops_per_wall_sec\": ".len()..];
+        let num_end = num.find([',', '\n', '}'])?;
+        let value: f64 = num[..num_end].trim().parse().ok()?;
+        out.push((label, value));
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// Allowed wall-clock throughput regression before the gate trips: a run's
+/// sim-ops/wall-sec may not drop below 70% of the committed baseline's.
+/// The 30% margin is deliberately wide because the baseline is an absolute
+/// number measured on whatever machine committed it — CI runners are
+/// heterogeneous, so a tight margin would trip on runner variance rather
+/// than code. Commit baselines from the same runner class CI uses; if the
+/// gate still proves noisy, move it to same-run relative ratios (e.g.
+/// streaming vs reference rows) instead of cross-run absolutes.
+const GATE_MIN_RATIO: f64 = 0.7;
+
 /// The `hhzs bench wallclock` driver. `quick` runs the CI-sized dataset.
-/// Writes `out` (JSON) and prints a human summary.
-pub fn run_wallclock(quick: bool, out: &str) -> std::io::Result<()> {
+/// Writes `out` (JSON) and prints a human summary. With `gate`, the file
+/// at `out` is first read as the committed baseline and the process fails
+/// if any matching row's sim-ops/wall-sec regressed by more than 30%.
+pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> {
+    let baseline = if gate {
+        match std::fs::read_to_string(out).ok().as_deref().and_then(parse_baseline) {
+            Some(b) => Some(b),
+            None => {
+                eprintln!(
+                    "[bench] gate: no measured baseline in {out} (placeholder or missing) — \
+                     recording only, not gating"
+                );
+                None
+            }
+        }
+    } else {
+        None
+    };
     // "1×" is the test-default dataset (Config::tiny): 60k objects.
     let (objects, ops, scale_label) = if quick {
         (60_000u64, 20_000u64, "1x")
@@ -181,6 +280,19 @@ pub fn run_wallclock(quick: bool, out: &str) -> std::io::Result<()> {
         let label = format!("reference-{scale_label}-v1000");
         eprintln!("[bench] {label}: reference merge pipeline ...");
         let r = run_one(&label, objects, ops, 1000, true);
+        eprintln!(
+            "[bench] {label}: {:.1}s wall, {:.0} sim-ops/s",
+            r.wall_secs, r.sim_ops_per_wall_sec
+        );
+        runs.push(r);
+    }
+
+    // The sharded frontend row: same protocol at 4 shards over one shared
+    // clock + device pair, so the new path's wall cost is tracked.
+    {
+        let label = format!("sharded4-{scale_label}-v1000");
+        eprintln!("[bench] {label}: 4-shard frontend ...");
+        let r = run_one_sharded(&label, objects, ops, 1000, 4);
         eprintln!(
             "[bench] {label}: {:.1}s wall, {:.0} sim-ops/s",
             r.wall_secs, r.sim_ops_per_wall_sec
@@ -224,5 +336,36 @@ pub fn run_wallclock(quick: bool, out: &str) -> std::io::Result<()> {
     );
     std::fs::write(out, json)?;
     eprintln!("[bench] wrote {out}");
+
+    // Regression gate: compare against the committed baseline (read before
+    // the overwrite above). Labels present in only one side are ignored so
+    // adding/renaming rows never wedges CI.
+    if let Some(base) = baseline {
+        let mut regressions = Vec::new();
+        for r in &runs {
+            if let Some((_, old)) = base.iter().find(|(l, _)| *l == r.label) {
+                let ratio = r.sim_ops_per_wall_sec / old.max(1e-9);
+                eprintln!(
+                    "[bench] gate: {} {:.0} vs baseline {:.0} sim-ops/s ({:.2}x)",
+                    r.label, r.sim_ops_per_wall_sec, old, ratio
+                );
+                if ratio < GATE_MIN_RATIO {
+                    regressions.push(format!(
+                        "{}: {:.0} -> {:.0} sim-ops/s ({:.0}% of baseline)",
+                        r.label,
+                        old,
+                        r.sim_ops_per_wall_sec,
+                        ratio * 100.0
+                    ));
+                }
+            }
+        }
+        if !regressions.is_empty() {
+            return Err(std::io::Error::other(format!(
+                "wallclock regression gate: sim-ops/wall-sec dropped >30% vs baseline: {}",
+                regressions.join("; ")
+            )));
+        }
+    }
     Ok(())
 }

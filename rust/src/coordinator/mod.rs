@@ -12,7 +12,9 @@
 
 pub mod walcache;
 
+use std::cell::Cell;
 use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
+use std::rc::Rc;
 use std::sync::Arc;
 
 use crate::config::Config;
@@ -67,6 +69,15 @@ struct Ev {
     at: Ns,
     seq: u64,
     kind: EventKind,
+}
+
+/// What [`Engine::frontend_client_op`] did with a routed client op.
+pub(crate) enum FrontendOp {
+    /// Writes are blocked; the op is handed back and the client is parked
+    /// on this engine (an `EventKind::Client` fires when it unblocks).
+    Parked(Op),
+    /// Executed; the op completes at this virtual time.
+    Done(Ns),
 }
 
 impl Ord for Ev {
@@ -126,15 +137,11 @@ struct MigrationTask {
     from: Dev,
 }
 
-struct ClientState {
-    pending: Option<Op>,
-    issued_at: Ns,
-    done: bool,
-    next_allowed: Ns,
-}
-
 /// The engine. Construct with [`Engine::new`], drive with [`Engine::run`]
 /// (workload mode) or the synchronous `put`/`get`/`scan` API (DB mode).
+/// Workload mode is served by the async frontend ([`crate::shard`]): the
+/// engine exposes a step-one-event API and executes ops the frontend
+/// routes to it on a frontend-owned virtual clock.
 pub struct Engine {
     pub cfg: Config,
     pub fs: ZenFs,
@@ -151,7 +158,12 @@ pub struct Engine {
     /// stay globally unique across engines sharing the substrate.
     file_id_stride: u64,
     next_job_id: u64,
-    ev_seq: u64,
+    /// Event sequence counter — the deterministic tie-break of the DES
+    /// heap. A shared handle: every engine on a frontend's clock (and the
+    /// frontend itself) draws from ONE counter, so events carry globally
+    /// unique, push-ordered sequence numbers and the merged event order is
+    /// exactly the seed single-heap order at `shards = 1`.
+    event_seq: Rc<Cell<u64>>,
     mem: MemTable,
     immutables: VecDeque<(u64, MemTable)>,
     events: BinaryHeap<Ev>,
@@ -162,11 +174,9 @@ pub struct Engine {
     busy_levels: HashSet<usize>,
     migration_queue: VecDeque<MigrationTask>,
     migration_active: bool,
+    /// Frontend client ids parked on this engine (blocked writes).
     parked: Vec<usize>,
-    clients: Vec<ClientState>,
-    done_clients: usize,
     sampling: bool,
-    throttle_interval: Option<Ns>,
     /// Reused WAL-record encode buffer (hot path: one put per record).
     wal_buf: WireBuf,
     /// Route flush/compaction merges through the seed engine's
@@ -216,7 +226,7 @@ impl Engine {
             next_file_id: 1,
             file_id_stride: 1,
             next_job_id: 1,
-            ev_seq: 0,
+            event_seq: Rc::new(Cell::new(0)),
             mem: MemTable::new(),
             immutables: VecDeque::new(),
             events: BinaryHeap::new(),
@@ -228,10 +238,7 @@ impl Engine {
             migration_queue: VecDeque::new(),
             migration_active: false,
             parked: Vec::new(),
-            clients: Vec::new(),
-            done_clients: 0,
             sampling: false,
-            throttle_interval: None,
             wal_buf: WireBuf::new(),
             reference_datapath: false,
             xla: None,
@@ -257,8 +264,22 @@ impl Engine {
     }
 
     fn push_event(&mut self, at: Ns, kind: EventKind) {
-        self.ev_seq += 1;
-        self.events.push(Ev { at, seq: self.ev_seq, kind });
+        let seq = self.event_seq.get() + 1;
+        self.event_seq.set(seq);
+        self.events.push(Ev { at, seq, kind });
+    }
+
+    /// Handle to this engine's event-sequence counter (for the frontend).
+    pub(crate) fn event_seq_handle(&self) -> Rc<Cell<u64>> {
+        self.event_seq.clone()
+    }
+
+    /// Join a shared event-sequence counter (the frontend's clock domain).
+    /// The shared counter must be at least as advanced as this engine's so
+    /// already-queued events keep unique sequence numbers.
+    pub(crate) fn share_event_seq(&mut self, seq: Rc<Cell<u64>>) {
+        seq.set(seq.get().max(self.event_seq.get()));
+        self.event_seq = seq;
     }
 
     // ------------------------------------------------------------------
@@ -408,19 +429,21 @@ impl Engine {
         let use_ssd_cache = self.policy.ssd_cache_enabled() && dev == Dev::Hdd;
         let (data, finish, served_by) = if use_ssd_cache {
             if let Some((data, f)) = {
-                let Engine { pool, fs, .. } = &mut *self;
-                pool.cache_lookup(fs, now, meta.id, offset)
+                let Engine { pool, fs, metrics, .. } = &mut *self;
+                pool.cache_lookup(fs, metrics, now, meta.id, offset)
             } {
                 self.metrics.ssd_cache_hits += 1;
                 (data, f, Dev::Ssd)
             } else {
                 self.metrics.ssd_cache_misses += 1;
-                let (data, _, f) =
+                let (data, s, f) =
                     self.fs.read_file(now, meta.id, offset, len).expect("block read");
+                self.metrics.record_queue_wait(dev, s.saturating_sub(now));
                 (data, f, dev)
             }
         } else {
-            let (data, _, f) = self.fs.read_file(now, meta.id, offset, len).expect("block read");
+            let (data, s, f) = self.fs.read_file(now, meta.id, offset, len).expect("block read");
+            self.metrics.record_queue_wait(dev, s.saturating_sub(now));
             (data, f, dev)
         };
         self.metrics.record_read(served_by, len);
@@ -460,6 +483,24 @@ impl Engine {
     /// `fill_cache = false`). Returns (#entries, completion time).
     fn do_scan(&mut self, start: &[u8], n: usize) -> (usize, Ns) {
         self.metrics.scans_done += 1;
+        let (merged, finish) = self.scan_entries(start, n);
+        (merged.len(), finish)
+    }
+
+    /// The scan body: collect up to `n` distinct live entries ≥ `start`,
+    /// merged (newest version wins, tombstones dropped) across MemTables
+    /// and every level. Shared by [`Engine::scan`]/workload scans and the
+    /// cross-shard scatter-gather frontend, which merges the per-shard
+    /// results itself.
+    ///
+    /// Known bounded-read limitation: each source's `n`-live budget counts
+    /// entries that a tombstone in a *newer* source may later shadow, so a
+    /// scan over heavily-deleted ranges can still return fewer than
+    /// `min(n, live keys)` — resolving that exactly needs a global
+    /// streaming merge over cursors, not per-source budgets (RocksDB's
+    /// iterator model). With no cross-source tombstone shadowing the count
+    /// is exact, which is what the regression tests pin.
+    pub(crate) fn scan_entries(&mut self, start: &[u8], n: usize) -> (Vec<Entry>, Ns) {
         let mut sources: Vec<Vec<Entry>> = Vec::new();
         let mem_src: Vec<Entry> = self
             .mem
@@ -477,55 +518,87 @@ impl Engine {
             );
         }
         let mut finish = self.now;
-        // L0 files all overlap; deeper levels contribute a run of files.
-        let metas: Vec<Arc<SstMeta>> = {
-            let mut v: Vec<Arc<SstMeta>> = Vec::new();
-            for m in self.version.level(0) {
-                if m.largest.as_slice() >= start {
-                    v.push(m.clone());
-                }
-            }
-            for lvl in 1..self.version.num_levels() {
-                let files = self.version.level(lvl);
-                let i = files.partition_point(|m| m.largest.as_slice() < start);
-                for m in files.iter().skip(i).take(3) {
-                    v.push(m.clone());
-                }
-            }
-            v
-        };
-        for meta in metas {
-            let dev = self.fs.file_dev(meta.id).expect("scan SST exists");
-            let mut collected = Vec::new();
-            let from_block = meta.find_block(start).unwrap_or(0);
-            for (i, h) in meta.blocks.iter().enumerate().skip(from_block) {
-                // First block random, subsequent sequential.
-                let kind = if i == from_block { AccessKind::RandRead } else { AccessKind::SeqRead };
-                let data = self
-                    .fs
-                    .read_file_untimed(meta.id, h.offset, h.len as u64)
-                    .expect("scan block");
-                let (_, f) = self.fs.charge(self.now, dev, kind, h.len as u64);
-                self.metrics.record_read(dev, h.len as u64);
-                finish = finish.max(f);
-                // Zero-copy block walk: only qualifying entries are cloned
-                // into the merge sources.
-                for e in data.entries() {
-                    if e.key >= start {
-                        collected.push(e.to_entry());
-                    }
-                }
-                if collected.len() >= n {
-                    break;
-                }
-            }
-            self.metrics.record_sst_read(meta.id, meta.level, dev);
-            self.policy.on_sst_read(meta.id, dev, self.now);
-            sources.push(collected);
+        // L0 files all overlap: each one is its own sorted source. (L0 is
+        // bounded by `l0_stop_files`, so cloning the metas is cheap.)
+        let l0: Vec<Arc<SstMeta>> = self
+            .version
+            .level(0)
+            .iter()
+            .filter(|m| m.largest.as_slice() >= start)
+            .cloned()
+            .collect();
+        for meta in l0 {
+            let mut src = Vec::new();
+            let mut live = 0usize;
+            self.scan_sst_file(&meta, start, n, &mut live, &mut src, &mut finish);
+            sources.push(src);
         }
-        let merged = merge_entries(sources, true);
-        let got = merged.len().min(n);
-        (got, finish.max(self.now + CPU_BLOCK_SEARCH_NS))
+        // Deeper levels are key-disjoint: the files from the partition
+        // point onward form ONE sorted run, read file by file until `n`
+        // live keys are in hand or the run is exhausted. (The seed capped
+        // each level at 3 files and broke on raw — tombstone-inflated —
+        // entry counts, silently dropping qualifying entries from long
+        // scans.) Short scans stop after the first file, so no O(level)
+        // work happens for them.
+        for lvl in 1..self.version.num_levels() {
+            let mut fi = self.version.level(lvl).partition_point(|m| m.largest.as_slice() < start);
+            let mut src = Vec::new();
+            let mut live = 0usize;
+            while live < n {
+                let Some(meta) = self.version.level(lvl).get(fi).cloned() else { break };
+                self.scan_sst_file(&meta, start, n, &mut live, &mut src, &mut finish);
+                fi += 1;
+            }
+            sources.push(src);
+        }
+        let mut merged = merge_entries(sources, true);
+        merged.truncate(n);
+        (merged, finish.max(self.now + CPU_BLOCK_SEARCH_NS))
+    }
+
+    /// Read one SST's qualifying blocks into `collected`, counting *live*
+    /// (non-tombstone) entries ≥ `start` toward the caller's budget and
+    /// stopping early once `n` live keys are in hand. Within one sorted
+    /// run keys are distinct, so counting live entries counts distinct
+    /// live keys.
+    fn scan_sst_file(
+        &mut self,
+        meta: &Arc<SstMeta>,
+        start: &[u8],
+        n: usize,
+        live: &mut usize,
+        collected: &mut Vec<Entry>,
+        finish: &mut Ns,
+    ) {
+        let dev = self.fs.file_dev(meta.id).expect("scan SST exists");
+        let from_block = meta.find_block(start).unwrap_or(0);
+        for (i, h) in meta.blocks.iter().enumerate().skip(from_block) {
+            // First block of a file random (seek), subsequent sequential.
+            let kind = if i == from_block { AccessKind::RandRead } else { AccessKind::SeqRead };
+            let data = self
+                .fs
+                .read_file_untimed(meta.id, h.offset, h.len as u64)
+                .expect("scan block");
+            let (s, f) = self.fs.charge(self.now, dev, kind, h.len as u64);
+            self.metrics.record_queue_wait(dev, s.saturating_sub(self.now));
+            self.metrics.record_read(dev, h.len as u64);
+            *finish = (*finish).max(f);
+            // Zero-copy block walk: only qualifying entries are cloned
+            // into the merge sources.
+            for e in data.entries() {
+                if e.key >= start {
+                    if e.value.is_some() {
+                        *live += 1;
+                    }
+                    collected.push(e.to_entry());
+                }
+            }
+            if *live >= n {
+                break;
+            }
+        }
+        self.metrics.record_sst_read(meta.id, meta.level, dev);
+        self.policy.on_sst_read(meta.id, dev, self.now);
     }
 
     // ------------------------------------------------------------------
@@ -537,10 +610,20 @@ impl Engine {
     }
 
     /// Two of the `bg_threads` slots are dedicated to flushes (RocksDB's
-    /// separate flush pool) so compaction backlogs cannot starve flushing.
+    /// separate flush pool) so compaction backlogs cannot starve flushing
+    /// — but never the *whole* pool: with `bg_threads <= 2` a full
+    /// reservation left zero compaction-eligible slots, so L0 grew to
+    /// `l0_stop_files` and parked writers livelocked. Now every non-empty
+    /// pool keeps at least one slot compaction can use: at `bg_threads =
+    /// 1` the single thread serves both roles (flush checked first, so it
+    /// keeps priority), at 2 the reservation shrinks to 1, and from 3 up
+    /// the original two-slot reservation applies.
     fn maybe_schedule_jobs(&mut self) {
         let total = self.cfg.lsm.bg_threads;
-        let flush_reserved = 2.min(total);
+        let flush_reserved = match total {
+            0 | 1 => 0,
+            t => 2.min(t - 1),
+        };
         if self.flush_wanted() && self.busy_threads < total {
             self.start_flush();
         }
@@ -738,7 +821,8 @@ impl Engine {
                         let n = chunk.min(slot.1);
                         slot.1 -= n;
                         let dev = slot.0;
-                        let (_, f) = self.fs.charge(self.now, dev, AccessKind::SeqRead, n);
+                        let (s, f) = self.fs.charge(self.now, dev, AccessKind::SeqRead, n);
+                        self.metrics.record_queue_wait(dev, s.saturating_sub(self.now));
                         self.metrics.compaction_read_bytes += n;
                         self.jobs.insert(id, Job::Compaction(j));
                         self.push_event(f, EventKind::JobStep(id));
@@ -805,7 +889,8 @@ impl Engine {
         let dev = out.dev.unwrap();
         let remaining = out.data.len() - out.written;
         let n = chunk.min(remaining);
-        let (_, f) = self.fs.charge(self.now, dev, AccessKind::SeqWrite, n);
+        let (s, f) = self.fs.charge(self.now, dev, AccessKind::SeqWrite, n);
+        self.metrics.record_queue_wait(dev, s.saturating_sub(self.now));
         self.metrics.record_write(WriteCategory::Sst(level), dev, n);
         if origin == SstOrigin::Compaction {
             self.metrics.compaction_write_bytes += n;
@@ -964,8 +1049,10 @@ impl Engine {
         let chunk = self.cfg.hhzs.chunk_bytes.min(task.remaining);
         task.remaining -= chunk;
         let (from, to) = (task.from, task.to);
-        let (_, f1) = self.fs.charge(self.now, from, AccessKind::SeqRead, chunk);
-        let (_, f2) = self.fs.charge(self.now, to, AccessKind::SeqWrite, chunk);
+        let (s1, f1) = self.fs.charge(self.now, from, AccessKind::SeqRead, chunk);
+        let (s2, f2) = self.fs.charge(self.now, to, AccessKind::SeqWrite, chunk);
+        self.metrics.record_queue_wait(from, s1.saturating_sub(self.now));
+        self.metrics.record_queue_wait(to, s2.saturating_sub(self.now));
         self.metrics.migration_bytes += chunk;
         self.metrics.record_write(WriteCategory::Migration, to, chunk);
         // Rate limiting (§3.4): chunks are spaced at chunk / rate.
@@ -1008,38 +1095,34 @@ impl Engine {
         matches!(op, Op::Insert { .. } | Op::Update { .. } | Op::ReadModifyWrite { .. })
     }
 
-    fn handle_client(&mut self, c: usize, source: &mut dyn OpSource) {
-        if self.clients[c].done {
-            return;
-        }
-        let op = match self.clients[c].pending.take() {
-            Some(op) => op,
-            None => {
-                self.clients[c].issued_at = self.now;
-                match source.next_op(c) {
-                    Some(op) => op,
-                    None => {
-                        self.clients[c].done = true;
-                        self.done_clients += 1;
-                        return;
-                    }
-                }
-            }
-        };
+    /// Execute one client op the frontend routed here, on the frontend's
+    /// clock (`at` = the global event time; `issued_at` = when the client
+    /// first pulled the op — earlier than `at` if it was parked).
+    ///
+    /// Blocked writes park: this engine records the stall, remembers the
+    /// client id, and re-arms it (via [`Engine::unpark_writers`] pushing an
+    /// `EventKind::Client` event) once background work unblocks writes.
+    pub(crate) fn frontend_client_op(
+        &mut self,
+        c: usize,
+        op: Op,
+        issued_at: Ns,
+        at: Ns,
+    ) -> FrontendOp {
+        debug_assert!(at >= self.now, "frontend time went backwards");
+        self.now = at;
         if Self::op_kind_is_write(&op) && self.write_blocked() {
             // Park until a flush/compaction unblocks writes.
             self.metrics.stalls += 1;
-            self.clients[c].pending = Some(op);
             self.parked.push(c);
-            return;
+            return FrontendOp::Parked(op);
         }
         let is_write = Self::op_kind_is_write(&op);
         let is_scan = matches!(op, Op::Scan { .. });
         let finish = self.execute_op(op);
-        let issued = self.clients[c].issued_at;
-        let lat = finish.saturating_sub(issued);
-        if issued < self.now {
-            self.metrics.stall_ns += self.now - issued;
+        let lat = finish.saturating_sub(issued_at);
+        if issued_at < self.now {
+            self.metrics.stall_ns += self.now - issued_at;
         }
         if is_write {
             self.metrics.write_lat.record(lat);
@@ -1049,14 +1132,90 @@ impl Engine {
             self.metrics.read_lat.record(lat);
         }
         self.metrics.ops_done += 1;
-        // Closed loop: next op at completion (or throttled pace).
-        let mut next = finish;
-        if let Some(interval) = self.throttle_interval {
-            let na = self.clients[c].next_allowed.max(self.now) + interval;
-            self.clients[c].next_allowed = na;
-            next = next.max(na);
+        FrontendOp::Done(finish)
+    }
+
+    /// One shard's share of a scatter-gathered scan, charged at the global
+    /// event time. `count_op` attributes the scan to this shard's
+    /// `scans_done` (the frontend sets it on the home shard only, so
+    /// merged op counts stay exact).
+    pub(crate) fn frontend_scan(
+        &mut self,
+        at: Ns,
+        start: &[u8],
+        n: usize,
+        count_op: bool,
+    ) -> (Vec<Entry>, Ns) {
+        debug_assert!(at >= self.now, "frontend time went backwards");
+        self.now = at;
+        if count_op {
+            self.metrics.scans_done += 1;
         }
-        self.push_event(next, EventKind::Client(c));
+        self.scan_entries(start, n)
+    }
+
+    /// `(time, sequence)` of this engine's earliest pending event.
+    pub(crate) fn next_event_at(&self) -> Option<(Ns, u64)> {
+        self.events.peek().map(|e| (e.at, e.seq))
+    }
+
+    /// Pop and process this engine's earliest event (the frontend already
+    /// established it is the global minimum). Background events are
+    /// handled here exactly as the workload loop always did; a client
+    /// readiness event (an unparked writer) is returned to the frontend,
+    /// which owns the clients.
+    pub(crate) fn step_event(&mut self) -> Option<usize> {
+        let ev = self.events.pop()?;
+        debug_assert!(ev.at >= self.now, "time went backwards");
+        self.now = ev.at;
+        match ev.kind {
+            EventKind::Client(c) => return Some(c),
+            EventKind::JobStep(id) => self.handle_job_step(id),
+            EventKind::MigrationStep => self.handle_migration_step(),
+            EventKind::PolicyTick => {
+                self.with_view(|p, v| p.tick(v.now, v));
+                self.start_migration_if_idle();
+                // Safety net: if writers are parked, re-check
+                // schedulability so no ordering of job/migration
+                // completions can strand them.
+                if !self.parked.is_empty() {
+                    self.maybe_schedule_jobs();
+                    self.unpark_writers();
+                }
+                let next = self.now + self.cfg.hhzs.scan_interval_ns;
+                self.push_event(next, EventKind::PolicyTick);
+            }
+            EventKind::Sample => {
+                if self.sampling {
+                    self.take_level_sample();
+                    self.push_event(self.now + self.cfg.hhzs.sample_interval_ns, EventKind::Sample);
+                }
+            }
+        }
+        None
+    }
+
+    /// Start a measured phase: reset metrics, stamp the shared-clock start,
+    /// and arm the level sampler.
+    ///
+    /// Faithful to the seed loop, a residual `Sample` event from an
+    /// earlier sampled phase is NOT drained — two back-to-back sampled
+    /// phases on one engine would sample at double cadence (latent: every
+    /// in-tree caller samples only the first phase of a fresh engine).
+    pub(crate) fn begin_phase(&mut self, start_ns: Ns, sample: bool) {
+        self.metrics = Metrics::default();
+        self.metrics.start_ns = start_ns;
+        self.parked.clear();
+        self.sampling = sample;
+        if sample {
+            self.push_event(self.now + self.cfg.hhzs.sample_interval_ns, EventKind::Sample);
+        }
+    }
+
+    /// End a measured phase at the shared clock's final time.
+    pub(crate) fn end_phase(&mut self, finished_at: Ns) {
+        self.sampling = false;
+        self.metrics.finished_at = finished_at;
     }
 
     fn take_level_sample(&mut self) {
@@ -1073,6 +1232,10 @@ impl Engine {
     /// Drive a workload: `clients` closed-loop clients pulling ops from
     /// `source`, optionally throttled to `target_ops_per_sec` (Fig 2(d–f))
     /// and sampling level sizes every virtual minute (Fig 2(a)/(d)).
+    ///
+    /// The loop itself lives in the async frontend ([`crate::shard`]):
+    /// a standalone engine is the 1-shard special case of the same event
+    /// loop, which is what pins `shards = 1` to the seed system.
     pub fn run(
         &mut self,
         source: &mut dyn OpSource,
@@ -1080,77 +1243,13 @@ impl Engine {
         target_ops_per_sec: Option<f64>,
         sample_levels: bool,
     ) {
-        self.metrics = Metrics::default();
-        self.metrics.start_ns = self.now;
-        self.clients = (0..clients)
-            .map(|_| ClientState {
-                pending: None,
-                issued_at: self.now,
-                done: false,
-                next_allowed: self.now,
-            })
-            .collect();
-        self.done_clients = 0;
-        self.parked.clear();
-        self.throttle_interval =
-            target_ops_per_sec.map(|t| (clients as f64 / t * 1e9) as Ns);
-        self.sampling = sample_levels;
-        if sample_levels {
-            self.push_event(self.now + self.cfg.hhzs.sample_interval_ns, EventKind::Sample);
-        }
-        for c in 0..clients {
-            self.push_event(self.now, EventKind::Client(c));
-        }
-        let diag = std::env::var("HHZS_DIAG").is_ok();
-        let mut processed: u64 = 0;
-        while self.done_clients < clients {
-            let Some(ev) = self.events.pop() else { break };
-            debug_assert!(ev.at >= self.now, "time went backwards");
-            processed += 1;
-            if diag && processed % 5_000_000 == 0 {
-                eprintln!(
-                    "[diag] ev={}M now={} ops={} parked={} jobs={} migr_active={} migr_q={} imm={} mem={}B blocked={} heap={}",
-                    processed / 1_000_000,
-                    crate::sim::fmt_ns(self.now),
-                    self.metrics.ops_done,
-                    self.parked.len(),
-                    self.jobs.len(),
-                    self.migration_active,
-                    self.migration_queue.len(),
-                    self.immutables.len(),
-                    self.mem.approx_bytes(),
-                    self.write_blocked(),
-                    self.events.len(),
-                );
-            }
-            self.now = ev.at;
-            match ev.kind {
-                EventKind::Client(c) => self.handle_client(c, source),
-                EventKind::JobStep(id) => self.handle_job_step(id),
-                EventKind::MigrationStep => self.handle_migration_step(),
-                EventKind::PolicyTick => {
-                    self.with_view(|p, v| p.tick(v.now, v));
-                    self.start_migration_if_idle();
-                    // Safety net: if writers are parked, re-check
-                    // schedulability so no ordering of job/migration
-                    // completions can strand them.
-                    if !self.parked.is_empty() {
-                        self.maybe_schedule_jobs();
-                        self.unpark_writers();
-                    }
-                    let next = self.now + self.cfg.hhzs.scan_interval_ns;
-                    self.push_event(next, EventKind::PolicyTick);
-                }
-                EventKind::Sample => {
-                    if self.sampling {
-                        self.take_level_sample();
-                        self.push_event(self.now + self.cfg.hhzs.sample_interval_ns, EventKind::Sample);
-                    }
-                }
-            }
-        }
-        self.sampling = false;
-        self.metrics.finished_at = self.now;
+        let seq = self.event_seq.clone();
+        let router = crate::shard::Router::new(1);
+        crate::shard::Frontend::new(std::slice::from_mut(self), router, seq, source).run(
+            clients,
+            target_ops_per_sec,
+            sample_levels,
+        );
     }
 
     // ------------------------------------------------------------------
@@ -1222,6 +1321,20 @@ impl Engine {
         let (got, f) = self.do_scan(start, n);
         self.drain_until(f);
         got
+    }
+
+    /// Synchronous scan returning the collected entries — the per-shard
+    /// half of [`crate::shard::ShardedEngine::scan`]'s scatter-gather (the
+    /// shard layer k-way merges the parts). `count_op` attributes the scan
+    /// to this shard's `scans_done`; the shard layer sets it on the home
+    /// shard only, so one logical scan counts once in merged metrics.
+    pub fn scan_collect(&mut self, start: &[u8], n: usize, count_op: bool) -> Vec<Entry> {
+        if count_op {
+            self.metrics.scans_done += 1;
+        }
+        let (entries, f) = self.scan_entries(start, n);
+        self.drain_until(f);
+        entries
     }
 
     /// Flush every MemTable (including the active one) and wait for the
@@ -1311,8 +1424,8 @@ impl Engine {
         // 2. Replay live WAL segments oldest-first (seqnos in the records
         // restore the exact ordering).
         let segments = {
-            let Engine { pool, fs, now, .. } = &mut *self;
-            pool.recover_segments(fs, *now)
+            let Engine { pool, fs, metrics, now, .. } = &mut *self;
+            pool.recover_segments(fs, metrics, *now)
         };
         let mut replayed = 0usize;
         let mut max_seq = self.seq;

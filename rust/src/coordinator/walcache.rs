@@ -156,14 +156,16 @@ impl PoolManager {
             // Nowhere to put WAL data at all (pathological) — charge the
             // preferred device anyway so time advances, and count it.
             self.wal_overflows += 1;
-            let (_, f) = fs.charge(now, preferred, crate::sim::AccessKind::SeqWrite, len);
+            let (s, f) = fs.charge(now, preferred, crate::sim::AccessKind::SeqWrite, len);
+            metrics.record_queue_wait(preferred, s.saturating_sub(now));
             metrics.record_write(WriteCategory::Wal, preferred, len);
             return f;
         };
-        let (offset, _, finish) = fs
+        let (offset, start, finish) = fs
             .device(dev)
             .append(now, z, record)
             .expect("WAL append within checked capacity");
+        metrics.record_queue_wait(dev, start.saturating_sub(now));
         metrics.record_write(WriteCategory::Wal, dev, len);
         let seg = self.segments.entry(self.cur_segment).or_default();
         if !seg.zones.contains(&(dev, z)) {
@@ -184,7 +186,12 @@ impl PoolManager {
     /// Read back the wire-form records of every live (unflushed) WAL
     /// segment, oldest first — the crash-recovery input. Charges
     /// sequential reads for the replayed (logical) bytes.
-    pub fn recover_segments(&self, fs: &mut ZenFs, now: Ns) -> Vec<(u64, WireBuf)> {
+    pub fn recover_segments(
+        &self,
+        fs: &mut ZenFs,
+        metrics: &mut Metrics,
+        now: Ns,
+    ) -> Vec<(u64, WireBuf)> {
         let mut ids: Vec<u64> = self.segments.keys().copied().collect();
         ids.sort_unstable();
         let mut out = Vec::new();
@@ -196,7 +203,8 @@ impl PoolManager {
                     .device(*dev)
                     .read_untimed(*zone, *offset, *len)
                     .expect("live WAL run readable");
-                fs.charge(now, *dev, crate::sim::AccessKind::SeqRead, *len);
+                let (s, _) = fs.charge(now, *dev, crate::sim::AccessKind::SeqRead, *len);
+                metrics.record_queue_wait(*dev, s.saturating_sub(now));
                 bytes.append_buf(&data);
             }
             out.push((id, bytes));
@@ -279,13 +287,15 @@ impl PoolManager {
     pub fn cache_lookup(
         &mut self,
         fs: &mut ZenFs,
+        metrics: &mut Metrics,
         now: Ns,
         sst: SstId,
         block_offset: u64,
     ) -> Option<(WireBuf, Ns)> {
         let loc = *self.mapping.get(&(sst, block_offset))?;
-        let (data, _, finish) =
+        let (data, start, finish) =
             fs.ssd.read_random(now, loc.zone, loc.offset, loc.len as u64).ok()?;
+        metrics.record_queue_wait(Dev::Ssd, start.saturating_sub(now));
         Some((data, finish))
     }
 
@@ -333,7 +343,8 @@ impl PoolManager {
             }
         }
         let zone = *self.cache_zones.back().expect("active cache zone");
-        let (offset, _, _) = fs.ssd.append(now, zone, data).expect("cache append fits");
+        let (offset, start, _) = fs.ssd.append(now, zone, data).expect("cache append fits");
+        metrics.record_queue_wait(Dev::Ssd, start.saturating_sub(now));
         metrics.record_write(WriteCategory::CacheZone, Dev::Ssd, len);
         self.mapping
             .insert((sst, block_offset), CacheLoc { zone, offset, len: len as u32 });
@@ -436,9 +447,9 @@ mod tests {
         let block = wire(&[7u8; 4096]);
         assert!(pm.cache_admit(&mut fs, &mut m, 0, 42, 8192, &block));
         assert!(pm.cache_contains(42, 8192));
-        let (data, _) = pm.cache_lookup(&mut fs, 0, 42, 8192).unwrap();
+        let (data, _) = pm.cache_lookup(&mut fs, &mut m, 0, 42, 8192).unwrap();
         assert_eq!(data, block);
-        assert!(pm.cache_lookup(&mut fs, 0, 42, 0).is_none());
+        assert!(pm.cache_lookup(&mut fs, &mut m, 0, 42, 0).is_none());
     }
 
     #[test]

@@ -1,16 +1,18 @@
-//! Exp#7 (beyond the paper): shard-count scalability.
+//! Exp#7 (beyond the paper): shard-count behaviour on the shared pair.
 //!
 //! Runs the §4.1 protocol (fresh load, then YCSB A) with the full HHZS
-//! policy at 1/2/4/8 shards over the same substrate totals, and reports
-//! aggregate throughput (total ops over the slowest shard — shards run
-//! concurrently in deployment), merged tail latencies, load balance, and
-//! the arbiter's migration-budget split. Deterministic for a fixed seed:
-//! shard streams are router-filtered views of one global op stream, and
-//! each shard is a seed-identical DES engine on its lease.
+//! policy at 1/2/4/8 shards through the async frontend: one client pool,
+//! one virtual clock, and ONE shared SSD/HDD pair — every shard's
+//! flush/compaction/migration traffic lands on the same device FIFOs, so
+//! what this experiment now measures is cross-shard device contention
+//! (aggregate queue wait) and how partitioning reshapes the tree (smaller
+//! per-shard trees, shallower reads), not the PR 1 fiction of `n`
+//! independent device pairs. Deterministic for a fixed seed: the frontend
+//! routes one global op stream over seed-identical DES engines.
 
 use crate::report::Table;
 use crate::shard::ShardedEngine;
-use crate::ycsb::{Kind, RoutedSource, Spec, YcsbSource};
+use crate::ycsb::{Kind, Spec, YcsbSource};
 
 use super::common::{make_policy, ExpOpts};
 
@@ -25,27 +27,16 @@ pub fn run_one(
     let mut cfg = cfg.clone();
     cfg.shards = n;
     let mut se = ShardedEngine::new(&cfg, |c| make_policy("HHZS", c));
-    let router = se.router;
     let clients = cfg.workload.clients;
 
-    let load = Spec::from_config(&cfg, Kind::Load);
-    se.run(
-        |s| Box::new(RoutedSource::new(YcsbSource::new(load.clone(), clients), router, s)),
-        clients,
-        None,
-        false,
-    );
+    let mut load = YcsbSource::new(Spec::from_config(&cfg, Kind::Load), clients);
+    se.run_shared(&mut load, clients, None, false);
     let load_tput = se.aggregate_ops_per_sec();
     se.flush_all();
     se.rebalance_migration_budgets();
 
-    let a = Spec::from_config(&cfg, Kind::A);
-    se.run(
-        |s| Box::new(RoutedSource::new(YcsbSource::new(a.clone(), clients), router, s)),
-        clients,
-        None,
-        false,
-    );
+    let mut a = YcsbSource::new(Spec::from_config(&cfg, Kind::A), clients);
+    se.run_shared(&mut a, clients, None, false);
     let a_tput = se.aggregate_ops_per_sec();
     (load_tput, a_tput, se.merged_metrics(), se.ops_per_shard())
 }
@@ -53,14 +44,15 @@ pub fn run_one(
 pub fn run(opts: &ExpOpts) {
     let csv = opts.csv_dir.as_deref();
     let mut t = Table::new(
-        "Exp#7: shard-count scalability (HHZS, fresh load + YCSB A per count)",
+        "Exp#7: shard count on one shared SSD/HDD pair (HHZS, fresh load + YCSB A per count)",
         &[
             "shards",
             "load ops/s",
             "A ops/s",
-            "A speedup",
+            "A vs 1-shard",
             "A read p99 ns",
             "A read p99.9 ns",
+            "queue wait ms",
             "balance max/min",
             "migrations",
         ],
@@ -85,6 +77,7 @@ pub fn run(opts: &ExpOpts) {
             format!("{speedup:.2}x"),
             m.read_lat.quantile(0.99).to_string(),
             m.read_lat.quantile(0.999).to_string(),
+            format!("{:.1}", m.total_queue_wait_ns() as f64 / 1e6),
             format!("{:.2}", max_ops as f64 / (min_ops.max(1)) as f64),
             (m.migrations_cap + m.migrations_pop).to_string(),
         ]);

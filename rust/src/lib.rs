@@ -10,8 +10,10 @@
 //!   independent engines sharing the hybrid substrate: a deterministic
 //!   hash router, a substrate lease layer (zone quotas, per-shard
 //!   WAL/cache pool reservations, strided file-id namespaces), a
-//!   cross-shard migration-budget arbiter (§3.4 split), and merged
-//!   metrics. `shards = 1` reproduces the single-engine system
+//!   cross-shard migration-budget arbiter (§3.4 split), an async request
+//!   frontend (ONE virtual clock and ONE shared SSD/HDD FIFO pair for
+//!   all shards, cross-shard scatter-gather scans, global pacing), and
+//!   merged metrics. `shards = 1` reproduces the single-engine system
 //!   bit-for-bit.
 //! * **Layer 3 (this crate)** — the coordinator: a discrete-event-simulated
 //!   hybrid zoned-storage substrate ([`zone`], [`sim`]), a zone-aware file
@@ -28,7 +30,7 @@
 //!
 //! The experiment harness in [`exp`] regenerates every table and figure of
 //! the paper's evaluation (Table 1, Figure 2, Exp#1–Exp#6) plus the
-//! beyond-paper Exp#7 shard-scalability study.
+//! beyond-paper Exp#7 shard study on the shared device pair.
 
 pub mod bench;
 pub mod config;

@@ -221,11 +221,15 @@ impl Version {
         if busy(pick.id) {
             return None;
         }
-        self.cursors[level] = pick.largest.clone();
         let inputs_hi = self.overlapping(level + 1, &pick.smallest, &pick.largest);
         if inputs_hi.iter().any(|m| busy(m.id)) {
             return None;
         }
+        // Commit the round-robin cursor only once the pick is actually
+        // returned: an abandoned pick (busy L+1 inputs) must retry the
+        // same file on the next attempt, not skip it until the cursor
+        // wraps.
+        self.cursors[level] = pick.largest.clone();
         Some(CompactionPick { level, inputs_lo: vec![pick], inputs_hi })
     }
 
@@ -359,6 +363,44 @@ mod tests {
         let first = p1.inputs_lo[0].id;
         let p2 = v.pick_compaction(&|_| false, &|_| false).unwrap();
         assert_ne!(p2.inputs_lo[0].id, first, "cursor should advance");
+    }
+
+    #[test]
+    fn abandoned_pick_does_not_advance_the_cursor() {
+        // Regression: the round-robin cursor used to advance BEFORE the
+        // `inputs_hi` busy check, so a pick abandoned because its L+1
+        // input was mid-compaction skipped that file until the cursor
+        // wrapped. An abandoned pick must retry the same file.
+        let mut v = version();
+        let big: Vec<Entry> = (0..3000u64)
+            .map(|i| Entry {
+                key: format!("user{i:08}").into_bytes(),
+                seq: i,
+                value: Some(crate::lsm::Payload::fill(0, 400)),
+            })
+            .collect();
+        let (m1, _) = build_sst(&big[..1500], 1, 1, 4096, 10, 0);
+        let (m2, _) = build_sst(&big[1500..], 2, 1, 4096, 10, 0);
+        v.apply_compaction(0, &[], vec![m1, m2]);
+        assert!(v.score(1) >= 1.0);
+        // An L2 file overlapping file 1's range, currently busy.
+        let l2: Vec<Entry> = (0..1000u64)
+            .map(|i| Entry {
+                key: format!("user{i:08}").into_bytes(),
+                seq: 10_000 + i,
+                value: Some(crate::lsm::Payload::fill(0, 16)),
+            })
+            .collect();
+        let (l2_sst, _) = build_sst(&l2, 30, 2, 4096, 10, 0);
+        v.apply_compaction(1, &[], vec![l2_sst]);
+        // The pick of file 1 is abandoned: its L2 overlap is busy.
+        assert!(v.pick_compaction(&|id| id == 30, &|_| false).is_none());
+        // Once the L2 input frees up, the SAME file must be picked —
+        // before the fix the cursor had moved on and file 2 was returned.
+        let p = v.pick_compaction(&|_| false, &|_| false).unwrap();
+        assert_eq!(p.inputs_lo[0].id, 1, "abandoned pick skipped its file");
+        assert_eq!(p.inputs_hi.len(), 1);
+        assert_eq!(p.inputs_hi[0].id, 30);
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //! hhzs exp <table1|fig2|exp1..exp7|all> [--profile quick|default|full]
 //!          [--config FILE] [--csv DIR] [--objects N] [--ops N]
 //!          [--ssd-zones N] [--alpha F] [--seed N]
-//! hhzs bench wallclock [--quick] [--out BENCH_2.json]
-//!                                     # DES wall-clock + memory benchmark
+//! hhzs bench wallclock [--quick] [--out BENCH_2.json] [--gate]
+//!                                     # DES wall-clock + memory benchmark;
+//!                                     # --gate fails on >30% sim-ops/wall-sec
+//!                                     # regression vs the committed baseline
 //! hhzs bench-devices                  # Table 1 microbench only
 //! hhzs demo [--n N] [--shards N]      # tiny put/get/scan smoke demo
 //! hhzs config [--profile P]           # print the effective config TOML
@@ -115,7 +117,10 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
 fn cmd_bench_wallclock(args: &Args) -> anyhow::Result<()> {
     let quick = args.flags.contains_key("quick");
     let out = args.flags.get("out").cloned().unwrap_or_else(|| "BENCH_2.json".to_string());
-    hhzs::bench::run_wallclock(quick, &out)?;
+    // --gate: read the committed file at --out as the baseline first and
+    // fail if sim-ops/wall-sec regressed >30% on any matching row.
+    let gate = args.flags.contains_key("gate");
+    hhzs::bench::run_wallclock(quick, &out, gate)?;
     Ok(())
 }
 

@@ -59,6 +59,11 @@ pub struct Metrics {
     pub write_traffic: BTreeMap<(WriteCategory, Dev), Cell>,
     /// Read traffic split by device (data-block reads only).
     pub read_traffic: BTreeMap<Dev, Cell>,
+    /// Virtual time spent queued behind the per-device FIFO before service
+    /// started, by device. With shards sharing one SSD/HDD pair on one
+    /// clock, cross-shard device contention lands here (Exp#6-style
+    /// interference, now across engines too).
+    pub queue_wait: BTreeMap<Dev, Ns>,
     /// SSD-cache effectiveness (§3.5).
     pub ssd_cache_hits: u64,
     pub ssd_cache_misses: u64,
@@ -97,6 +102,18 @@ impl Metrics {
         let c = self.read_traffic.entry(dev).or_default();
         c.bytes += bytes;
         c.ios += 1;
+    }
+
+    /// Account FIFO queue wait (`service start - issue time`) on `dev`.
+    pub fn record_queue_wait(&mut self, dev: Dev, wait_ns: Ns) {
+        if wait_ns > 0 {
+            *self.queue_wait.entry(dev).or_default() += wait_ns;
+        }
+    }
+
+    /// Total device queue wait across both devices.
+    pub fn total_queue_wait_ns(&self) -> Ns {
+        self.queue_wait.values().sum()
     }
 
     pub fn record_sst_read(&mut self, sst: u64, level: usize, dev: Dev) {
@@ -164,6 +181,9 @@ impl Metrics {
             c.bytes += cell.bytes;
             c.ios += cell.ios;
         }
+        for (dev, w) in &other.queue_wait {
+            *self.queue_wait.entry(*dev).or_default() += w;
+        }
         self.ssd_cache_hits += other.ssd_cache_hits;
         self.ssd_cache_misses += other.ssd_cache_misses;
         self.block_cache_hits += other.block_cache_hits;
@@ -186,8 +206,9 @@ impl Metrics {
         self.compactions += other.compactions;
         self.compaction_read_bytes += other.compaction_read_bytes;
         self.compaction_write_bytes += other.compaction_write_bytes;
-        // Shard clocks are independent; the merged window spans all of
-        // them so `ops_per_sec` stays a (conservative) aggregate rate.
+        // Shards run on one shared clock (the async frontend), so per-shard
+        // windows coincide; taking the envelope also keeps the merge
+        // correct for runs recorded on separate clocks.
         self.start_ns = self.start_ns.min(other.start_ns);
         self.finished_at = self.finished_at.max(other.finished_at);
     }

@@ -92,7 +92,12 @@ impl Policy for AutoPolicy {
     }
 
     fn tick(&mut self, now: Ns, view: &View) {
-        let written = view.fs.ssd.timer.traffic.write_bytes;
+        // Cumulative SSD write traffic from the device's timing server.
+        // Under the shard tier this server is shared substrate-wide, so
+        // the estimate would be the aggregate of all shards — AUTO is a
+        // §4.1 single-engine baseline and is not used by the shard tier;
+        // a per-shard monotone write counter is needed before it is.
+        let written = view.fs.ssd.timer.traffic().write_bytes;
         if let Some((t0, b0)) = self.last_sample {
             let dt = now.saturating_sub(t0);
             // Tune at ~1-virtual-second granularity.

@@ -13,27 +13,38 @@
 //!   budget slices that make `N` engines safe on the shared substrate;
 //! * [`arbiter`] — splits the paper's global migration-rate budget
 //!   (§3.4) across shards proportionally to their storage demand;
+//! * [`frontend`] — the async request frontend: ONE global event loop
+//!   (single virtual clock, globally ordered event heap) that owns the
+//!   closed-loop clients, routes each op to its home shard, and drives
+//!   every engine's background jobs interleaved in timestamp order;
 //! * [`ShardedEngine`] — owns the engines, routes synchronous ops, drives
-//!   workload phases, and merges per-shard metrics into one report.
+//!   workload phases through the frontend, and merges per-shard metrics
+//!   into one report.
 //!
-//! Two deliberate simplifications, both recorded as ROADMAP open items:
-//! each shard runs its own virtual clock (cross-shard device-queue
-//! contention is not modeled — zoned devices serve concurrent per-zone
-//! streams largely in parallel, which is what independent clocks
-//! approximate), and scans are served by the start key's home shard
-//! (no scatter-gather).
+//! All shards charge their I/O against ONE [`crate::sim::SharedTimer`]
+//! per physical device — the paper's single SSD/HDD pair — so cross-shard
+//! device-queue contention shows up in every latency (Exp#6's
+//! interference, now across engines). Scans scatter-gather over all
+//! shards; throttling is global pacing in the frontend.
 //!
 //! `shards = 1` is bit-for-bit the seed single-engine system: the lease
-//! is the identity, the router maps everything to shard 0, and the
-//! arbiter returns the untouched budget. Tests pin this.
+//! is the identity, the router maps everything to shard 0, the arbiter
+//! returns the untouched budget, and the frontend *is* the engine's own
+//! workload loop. Tests pin this.
 
 pub mod arbiter;
+mod frontend;
 pub mod lease;
 pub mod router;
 
 pub use arbiter::MigrationArbiter;
+pub(crate) use frontend::merge_gather;
+pub(crate) use frontend::Frontend;
 pub use lease::{carve, ShardLease};
 pub use router::Router;
+
+use std::cell::Cell;
+use std::rc::Rc;
 
 use crate::config::Config;
 use crate::coordinator::{Engine, OpSource};
@@ -47,6 +58,8 @@ pub struct ShardedEngine {
     pub router: Router,
     /// The global §3.4 budget the arbiter re-splits.
     total_migration_rate_bps: f64,
+    /// The shared event-sequence counter of the frontend's clock domain.
+    event_seq: Rc<Cell<u64>>,
 }
 
 impl ShardedEngine {
@@ -57,7 +70,7 @@ impl ShardedEngine {
     pub fn new(cfg: &Config, mut policy_fn: impl FnMut(&Config) -> Box<dyn Policy>) -> Self {
         let leases = carve(cfg);
         let router = Router::new(leases.len());
-        let engines = leases
+        let mut engines: Vec<Engine> = leases
             .into_iter()
             .map(|l| {
                 let policy = policy_fn(&l.cfg);
@@ -66,10 +79,23 @@ impl ShardedEngine {
                 e
             })
             .collect();
+        // One physical device pair and one clock domain for the whole
+        // system: every shard's zoned devices charge the SAME per-device
+        // FIFO server, and all engines draw event sequence numbers from
+        // shard 0's counter. With one shard both are the identity.
+        let event_seq = engines[0].event_seq_handle();
+        let ssd_timer = engines[0].fs.ssd.timer.clone();
+        let hdd_timer = engines[0].fs.hdd.timer.clone();
+        for e in engines.iter_mut().skip(1) {
+            e.fs.ssd.set_timer(ssd_timer.clone());
+            e.fs.hdd.set_timer(hdd_timer.clone());
+            e.share_event_seq(event_seq.clone());
+        }
         ShardedEngine {
             engines,
             router,
             total_migration_rate_bps: cfg.hhzs.migration_rate_bps,
+            event_seq,
         }
     }
 
@@ -81,15 +107,19 @@ impl ShardedEngine {
     // Workload mode
     // ------------------------------------------------------------------
 
-    /// Drive one workload phase on every shard. `make_source` builds the
-    /// shard-local op stream (normally a router-filtered view of the same
-    /// deterministic global stream — see `ycsb::RoutedSource`); each shard
-    /// serves `clients` closed-loop clients of its own frontend.
+    /// Drive one workload phase through the async frontend: `clients`
+    /// closed-loop clients pull from ONE shared stream, every op routes to
+    /// its home shard, and all engines' background jobs interleave on the
+    /// shared clock.
     ///
-    /// `target_ops_per_sec` is a *global* budget: it is split evenly
-    /// across shards so the aggregate pace matches what a single engine
-    /// would be throttled to (`t / 1` is exact, preserving the
-    /// single-shard reproduction).
+    /// `make_source` is called once, with shard 0, and must yield the
+    /// *global* stream — `ycsb::RoutedSource` is a transparent view of it
+    /// (the frontend routes; source-side filtering would drop ops). The
+    /// closure signature is kept so PR 1 callers compile unchanged.
+    ///
+    /// `target_ops_per_sec` is global pacing in the frontend: one paced
+    /// client pool over the whole system (hot shards under Zipf draw more
+    /// of the budget than cold ones), not the old even `t / n` split.
     pub fn run(
         &mut self,
         mut make_source: impl FnMut(usize) -> Box<dyn OpSource>,
@@ -97,12 +127,23 @@ impl ShardedEngine {
         target_ops_per_sec: Option<f64>,
         sample_levels: bool,
     ) {
-        let n = self.engines.len() as f64;
-        let per_shard_target = target_ops_per_sec.map(|t| t / n);
-        for (shard, e) in self.engines.iter_mut().enumerate() {
-            let mut src = make_source(shard);
-            e.run(&mut *src, clients, per_shard_target, sample_levels);
-        }
+        let mut src = make_source(0);
+        self.run_shared(&mut *src, clients, target_ops_per_sec, sample_levels);
+    }
+
+    /// [`ShardedEngine::run`] with the shared stream passed directly.
+    pub fn run_shared(
+        &mut self,
+        source: &mut dyn OpSource,
+        clients: usize,
+        target_ops_per_sec: Option<f64>,
+        sample_levels: bool,
+    ) {
+        Frontend::new(&mut self.engines, self.router, self.event_seq.clone(), source).run(
+            clients,
+            target_ops_per_sec,
+            sample_levels,
+        );
     }
 
     /// Flush every shard's MemTables (the between-phases reopen of §4.1).
@@ -146,9 +187,9 @@ impl ShardedEngine {
         m
     }
 
-    /// Aggregate throughput of the last phase: total ops over the slowest
-    /// shard's duration (shards run concurrently in deployment, so the
-    /// straggler bounds the wall time).
+    /// Aggregate throughput of the last phase: total ops over the shared
+    /// virtual window. All shards run on one frontend clock, so their
+    /// phase windows coincide and the max below is that common window.
     pub fn aggregate_ops_per_sec(&self) -> f64 {
         let total_ops: u64 = self.engines.iter().map(|e| e.metrics.ops_done).sum();
         let max_dur: Ns = self
@@ -193,11 +234,28 @@ impl ShardedEngine {
         self.engines[s].get(key)
     }
 
-    /// Scan served by the start key's home shard (hash partitioning
-    /// scatters ranges; cross-shard scatter-gather is an open item).
+    /// Scatter-gather scan: hash partitioning scatters ranges over every
+    /// shard, so the range fans out to all of them and the sorted partial
+    /// results k-way merge (shards hold disjoint key sets). Returns the
+    /// number of distinct live entries gathered, exactly what a single
+    /// engine holding the union of the data would return. The op counts
+    /// once (home shard) in merged metrics. Note: in this DB-style sync
+    /// mode each engine charges the shared device FIFO at its own local
+    /// clock (workload mode runs all shards on one frontend clock), so
+    /// per-shard timing here includes cross-clock skew — use the frontend
+    /// (`run`/`run_shared`) for contention measurements.
     pub fn scan(&mut self, start: &[u8], n: usize) -> usize {
-        let s = self.router.route(start);
-        self.engines[s].scan(start, n)
+        if self.engines.len() == 1 {
+            return self.engines[0].scan(start, n);
+        }
+        let home = self.router.route(start);
+        let parts: Vec<_> = self
+            .engines
+            .iter_mut()
+            .enumerate()
+            .map(|(s, e)| e.scan_collect(start, n, s == home))
+            .collect();
+        merge_gather(parts, n).len()
     }
 }
 

@@ -6,6 +6,9 @@
 //! latency, which is how compaction/migration interference with foreground
 //! reads materializes (paper Exp#6).
 
+use std::cell::RefCell;
+use std::rc::Rc;
+
 use crate::config::DeviceProfile;
 
 
@@ -96,6 +99,53 @@ impl DeviceTimer {
 
     pub fn reset_traffic(&mut self) {
         self.traffic = Traffic::default();
+    }
+}
+
+/// A shareable handle to one [`DeviceTimer`].
+///
+/// A standalone engine owns one handle per device; the shard layer points
+/// every shard's device at the *same* handle, so all shards' accesses
+/// serialize through one physical FIFO and cross-shard queue wait is part
+/// of every caller's latency (the paper's single shared SSD/HDD pair).
+/// With a single owner this is behaviour-identical to an inline timer.
+#[derive(Clone, Debug)]
+pub struct SharedTimer(Rc<RefCell<DeviceTimer>>);
+
+impl SharedTimer {
+    pub fn new(profile: DeviceProfile) -> Self {
+        SharedTimer(Rc::new(RefCell::new(DeviceTimer::new(profile))))
+    }
+
+    /// Perform an access: `(start, finish)`; `start - now` is queue wait.
+    pub fn access(&self, now: Ns, kind: AccessKind, bytes: u64) -> (Ns, Ns) {
+        self.0.borrow_mut().access(now, kind, bytes)
+    }
+
+    pub fn service_ns(&self, kind: AccessKind, bytes: u64) -> Ns {
+        self.0.borrow().service_ns(kind, bytes)
+    }
+
+    pub fn free_at(&self) -> Ns {
+        self.0.borrow().free_at()
+    }
+
+    pub fn utilization(&self, now: Ns) -> f64 {
+        self.0.borrow().utilization(now)
+    }
+
+    /// Snapshot of the cumulative traffic counters.
+    pub fn traffic(&self) -> Traffic {
+        self.0.borrow().traffic
+    }
+
+    pub fn reset_traffic(&self) {
+        self.0.borrow_mut().reset_traffic()
+    }
+
+    /// Do two handles refer to the same physical FIFO server?
+    pub fn shares_with(&self, other: &SharedTimer) -> bool {
+        Rc::ptr_eq(&self.0, &other.0)
     }
 }
 

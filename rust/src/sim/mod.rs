@@ -10,7 +10,7 @@ pub mod device;
 pub mod rng;
 pub mod zipf;
 
-pub use device::{AccessKind, DeviceTimer};
+pub use device::{AccessKind, DeviceTimer, SharedTimer};
 pub use rng::Rng;
 pub use zipf::{KeyChooser, Latest, Uniform, Zipf};
 

@@ -276,26 +276,20 @@ impl OpSource for YcsbSource {
     }
 }
 
-/// Router-aware view of an op stream for one shard of the
-/// [`crate::shard`] subsystem.
+/// The shared frontend stream: a transparent, router-carrying view of the
+/// global op stream for the [`crate::shard`] subsystem.
 ///
-/// Every shard wraps its *own instance* of the same deterministic global
-/// generator and executes exactly the ops the router assigns to it,
-/// skipping the rest. Shards therefore agree on the global op order
-/// without any shared state or materialized queues, the union of all
-/// shards' streams is exactly the global stream (each op appears on
-/// precisely one shard), and `shards = 1` degenerates to a pass-through —
-/// the property the seed-reproduction regression test pins.
-///
-/// Exactness caveat: for the insert-free workloads (A/B/C/F and the
-/// `Mixed` sweeps) per-client streams are pure functions of the
-/// per-client RNGs, so every shard's instance generates the identical
-/// global stream no matter how its DES interleaves clients. The load
-/// phase partitions exactly as a *set* (each of the `records` keys is
-/// generated once per instance). D/E grow the key population through
-/// shared generator state, so their cross-shard partition is
-/// per-instance-consistent but not globally exact — acceptable for
-/// throughput studies; route-aware D/E is future work.
+/// PR 1 ran one closed-loop client set *per shard*, each filtering its own
+/// instance of the global generator down to its shard's ops; `RoutedSource`
+/// was that filter. The async frontend owns the clients and routes every
+/// op to its home shard itself, so the stream it pulls from is simply the
+/// global one — source-side filtering would now *drop* ops (the frontend
+/// pulls each op exactly once). `RoutedSource` therefore passes the inner
+/// stream through untouched; it keeps its constructor shape (router +
+/// shard index, bounds-checked) so PR 1 call sites compile unchanged, and
+/// because the view is shard-independent every deterministic property of
+/// the inner generator — including D/E population growth, which the old
+/// per-shard filtering only approximated — now holds exactly.
 pub struct RoutedSource<S: OpSource> {
     inner: S,
     router: crate::shard::Router,
@@ -307,16 +301,23 @@ impl<S: OpSource> RoutedSource<S> {
         assert!(shard < router.shards(), "shard index outside the router");
         RoutedSource { inner, router, shard }
     }
+
+    /// The router this view was built for (the frontend's routing is the
+    /// authority; this is carried for introspection).
+    pub fn router(&self) -> crate::shard::Router {
+        self.router
+    }
+
+    /// The shard index this view was built with (unused by the
+    /// pass-through; kept for API compatibility and debugging).
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
 }
 
 impl<S: OpSource> OpSource for RoutedSource<S> {
     fn next_op(&mut self, client: usize) -> Option<Op> {
-        loop {
-            let op = self.inner.next_op(client)?;
-            if self.router.route_op(&op) == self.shard {
-                return Some(op);
-            }
-        }
+        self.inner.next_op(client)
     }
 }
 
@@ -479,64 +480,33 @@ mod tests {
     }
 
     #[test]
-    fn routed_sources_partition_the_global_stream() {
+    fn routed_source_is_the_shared_global_stream_at_any_shard_count() {
+        // The frontend pulls each op exactly once and routes it itself, so
+        // the view must emit the identical global stream no matter which
+        // shard index it was built with.
         use crate::shard::Router;
         let clients = 3;
-        let n = 4;
-        let router = Router::new(n);
-        // The global stream, per client.
-        let mut global = YcsbSource::new(spec(Kind::A), clients);
-        let mut global_ops: Vec<Vec<Op>> = vec![Vec::new(); clients];
-        for c in 0..clients {
-            while let Some(op) = global.next_op(c) {
-                global_ops[c].push(op);
-            }
-        }
-        // Each shard's routed view of its own generator instance.
-        let mut shard_ops: Vec<Vec<Vec<Op>>> = Vec::new();
-        for s in 0..n {
-            let mut src = RoutedSource::new(YcsbSource::new(spec(Kind::A), clients), router, s);
-            let mut per_client: Vec<Vec<Op>> = vec![Vec::new(); clients];
-            for (c, ops) in per_client.iter_mut().enumerate() {
-                while let Some(op) = src.next_op(c) {
-                    assert_eq!(router.route_op(&op), s, "foreign op leaked to shard {s}");
-                    ops.push(op);
+        for n in [1usize, 4] {
+            let router = Router::new(n);
+            for s in 0..n {
+                let mut global = YcsbSource::new(spec(Kind::A), clients);
+                let mut view =
+                    RoutedSource::new(YcsbSource::new(spec(Kind::A), clients), router, s);
+                assert_eq!(view.shard(), s);
+                assert_eq!(view.router().shards(), n);
+                for c in [0usize, 1, 2, 0, 1, 2, 2, 1, 0] {
+                    let (x, y) = (global.next_op(c), view.next_op(c));
+                    assert_eq!(format!("{x:?}"), format!("{y:?}"), "shard {s} of {n} diverged");
                 }
             }
-            shard_ops.push(per_client);
         }
-        // Partition: replaying the global stream and popping from the
-        // owning shard's queue reconstructs every shard stream exactly.
-        let mut cursors = vec![vec![0usize; clients]; n];
-        for c in 0..clients {
-            for op in &global_ops[c] {
-                let s = router.route_op(op);
-                let i = cursors[s][c];
-                let got = &shard_ops[s][c][i];
-                assert_eq!(format!("{got:?}"), format!("{op:?}"), "order broken");
-                cursors[s][c] += 1;
-            }
-        }
-        for s in 0..n {
-            for c in 0..clients {
-                assert_eq!(cursors[s][c], shard_ops[s][c].len(), "extra ops on shard {s}");
-            }
-        }
-        let total: usize = shard_ops.iter().flatten().map(|v| v.len()).sum();
-        let global_total: usize = global_ops.iter().map(|v| v.len()).sum();
-        assert_eq!(total, global_total, "ops lost or duplicated by routing");
     }
 
     #[test]
-    fn single_shard_routed_source_is_a_passthrough() {
+    #[should_panic(expected = "shard index outside the router")]
+    fn routed_source_rejects_out_of_range_shard() {
         use crate::shard::Router;
-        let clients = 2;
-        let mut a = YcsbSource::new(spec(Kind::A), clients);
-        let mut b = RoutedSource::new(YcsbSource::new(spec(Kind::A), clients), Router::new(1), 0);
-        for c in [0usize, 1, 0, 1, 1, 0] {
-            let (x, y) = (a.next_op(c), b.next_op(c));
-            assert_eq!(format!("{x:?}"), format!("{y:?}"));
-        }
+        RoutedSource::new(YcsbSource::new(spec(Kind::A), 1), Router::new(2), 2);
     }
 
     #[test]

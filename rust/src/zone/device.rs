@@ -6,7 +6,7 @@
 //! through the DES. All service times are charged on *logical* lengths.
 
 use crate::config::DeviceProfile;
-use crate::sim::{AccessKind, DeviceTimer, Ns};
+use crate::sim::{AccessKind, Ns, SharedTimer};
 use crate::wire::WireBuf;
 
 use super::{Dev, Zone, ZoneError, ZoneId, ZoneState};
@@ -24,7 +24,10 @@ pub struct ZonedDevice {
     pub dev: Dev,
     pub zone_cap: u64,
     zones: Vec<Zone>,
-    pub timer: DeviceTimer,
+    /// FIFO timing server. A handle, not an inline value: the shard layer
+    /// rebinds all shards' devices to one shared server per physical
+    /// device (see [`ZonedDevice::set_timer`]).
+    pub timer: SharedTimer,
 }
 
 impl ZonedDevice {
@@ -33,8 +36,16 @@ impl ZonedDevice {
             dev,
             zone_cap,
             zones: (0..num_zones).map(|_| Zone::new(zone_cap)).collect(),
-            timer: DeviceTimer::new(profile),
+            timer: SharedTimer::new(profile),
         }
+    }
+
+    /// Rebind this device's FIFO timing server. The shard layer points all
+    /// shards' SSDs (and HDDs) at one shared server each, so cross-shard
+    /// device queueing is modeled; must be called before any access is
+    /// charged.
+    pub fn set_timer(&mut self, timer: SharedTimer) {
+        self.timer = timer;
     }
 
     pub fn num_zones(&self) -> u32 {

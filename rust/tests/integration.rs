@@ -343,11 +343,17 @@ fn sharded_one_shard_reproduces_single_engine_bit_for_bit() {
 }
 
 #[test]
-fn sharding_scales_aggregate_throughput() {
-    // Exp#7's acceptance property at test scale: aggregate simulated
-    // throughput on workload A is non-decreasing from 1 → 4 shards over
-    // the same substrate totals (each count is deterministic, so this is
-    // a fixed comparison, not a statistical one).
+fn sharded_frontend_conserves_ops_on_the_shared_device_pair() {
+    // Exp#7's acceptance property at test scale. PR 1 asserted
+    // near-linear scaling here, which was an artifact of each shard
+    // owning a private virtual clock and device pair; the async frontend
+    // models the paper's actual testbed — one shared SSD/HDD pair behind
+    // one clock — so aggregate throughput is bounded by the shared
+    // devices. What must hold now: exact op conservation at every shard
+    // count, every shard participating, cross-shard device contention
+    // actually modeled (non-zero merged queue wait), and no pathological
+    // collapse from sharding (each count is deterministic, so these are
+    // fixed comparisons, not statistical ones).
     let mut cfg = Config::paper_scaled(1024);
     cfg.workload.load_objects = 60_000;
     cfg.workload.ops = 15_000;
@@ -356,23 +362,22 @@ fn sharding_scales_aggregate_throughput() {
         let (_, a_tput, m, per_shard) = hhzs::exp::exp7::run_one(&cfg, n);
         assert_eq!(m.ops_done, 15_000, "{n} shards lost ops");
         assert_eq!(per_shard.len(), n);
+        assert!(
+            per_shard.iter().all(|&ops| ops > 0),
+            "an idle shard at n={n}: {per_shard:?}"
+        );
+        assert!(a_tput > 0.0);
+        if n == 4 {
+            assert!(
+                m.total_queue_wait_ns() > 0,
+                "4 shards hammering one device pair must queue"
+            );
+        }
         tputs.push(a_tput);
     }
     assert!(
-        tputs[1] >= tputs[0],
-        "2 shards must not be slower than 1 ({:.0} vs {:.0})",
-        tputs[1],
-        tputs[0]
-    );
-    assert!(
-        tputs[2] >= tputs[1],
-        "4 shards must not be slower than 2 ({:.0} vs {:.0})",
-        tputs[2],
-        tputs[1]
-    );
-    assert!(
-        tputs[2] > tputs[0] * 1.5,
-        "4-way sharding should scale aggregate throughput ({:.0} vs {:.0})",
+        tputs[2] > tputs[0] * 0.3,
+        "sharing one device pair must not collapse throughput ({:.0} vs {:.0})",
         tputs[2],
         tputs[0]
     );
