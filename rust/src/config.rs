@@ -92,6 +92,37 @@ pub struct Geometry {
     pub wal_cache_zones: u32,
 }
 
+/// How the shared background-CPU pool arbitrates flush/compaction slots
+/// across shards (see [`crate::sim::CpuPool`]). With one shard both modes
+/// are the identity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CpuSched {
+    /// Per-shard fair-share cap: no shard may hold more than
+    /// `ceil(bg_threads / shards)` compaction slots, so a backlogged shard
+    /// cannot monopolize the pool (flushes are exempt — they only contend
+    /// for the global slot count).
+    Fair,
+    /// Free-for-all: any shard may grab any compaction-eligible slot.
+    WorkConserving,
+}
+
+impl CpuSched {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CpuSched::Fair => "fair",
+            CpuSched::WorkConserving => "work_conserving",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fair" => Some(CpuSched::Fair),
+            "work_conserving" => Some(CpuSched::WorkConserving),
+            _ => None,
+        }
+    }
+}
+
 /// LSM-tree store parameters (§4.1 setup).
 #[derive(Clone, Debug, PartialEq)]
 pub struct LsmConfig {
@@ -107,8 +138,13 @@ pub struct LsmConfig {
     pub l0_target: u64,
     pub level_multiplier: u64,
     pub num_levels: usize,
-    /// Background flush+compaction thread slots (§4.1: 12).
+    /// Background flush+compaction thread slots (§4.1: 12). This is a
+    /// *global* budget: with `shards > 1` every engine draws from ONE
+    /// shared [`crate::sim::CpuPool`] of this many slots (the substrate
+    /// lease layer deliberately does not split it).
     pub bg_threads: usize,
+    /// Cross-shard arbitration policy for the shared CPU pool.
+    pub cpu_sched: CpuSched,
     /// Hard write stall when L0 reaches this many files.
     pub l0_stop_files: usize,
     /// L0→L1 compaction trigger (number of L0 files).
@@ -205,6 +241,7 @@ impl Config {
                 level_multiplier: 10,
                 num_levels: 7,
                 bg_threads: 12,
+                cpu_sched: CpuSched::WorkConserving,
                 l0_stop_files: 64,
                 l0_compaction_trigger: 4,
             },
@@ -269,7 +306,7 @@ impl Config {
              memtable_size = {}\nmax_memtables = {}\nmin_flush_memtables = {}\n\
              block_size = {}\nblock_cache_bytes = {}\nbloom_bits_per_key = {}\n\
              l0_target = {}\nlevel_multiplier = {}\nnum_levels = {}\n\
-             bg_threads = {}\nl0_stop_files = {}\nl0_compaction_trigger = {}\n\n\
+             bg_threads = {}\ncpu_sched = \"{}\"\nl0_stop_files = {}\nl0_compaction_trigger = {}\n\n\
              [hhzs]\n\
              migration_rate_bps = {}\nhdd_rate_threshold = {}\n\
              scan_interval_ns = {}\nchunk_bytes = {}\nsample_interval_ns = {}\n\n\
@@ -282,7 +319,8 @@ impl Config {
             g.hdd_zones, g.wal_cache_zones,
             l.memtable_size, l.max_memtables, l.min_flush_memtables, l.block_size,
             l.block_cache_bytes, l.bloom_bits_per_key, l.l0_target, l.level_multiplier,
-            l.num_levels, l.bg_threads, l.l0_stop_files, l.l0_compaction_trigger,
+            l.num_levels, l.bg_threads, l.cpu_sched.as_str(), l.l0_stop_files,
+            l.l0_compaction_trigger,
             h.migration_rate_bps, h.hdd_rate_threshold, h.scan_interval_ns, h.chunk_bytes,
             h.sample_interval_ns,
             w.key_size, w.value_size, w.load_objects, w.ops, w.clients, w.zipf_alpha, w.seed,
@@ -318,6 +356,10 @@ impl Config {
             doc.get_u64("lsm", "level_multiplier", &mut l.level_multiplier);
             doc.get_usize("lsm", "num_levels", &mut l.num_levels);
             doc.get_usize("lsm", "bg_threads", &mut l.bg_threads);
+            let mut sched = l.cpu_sched.as_str().to_string();
+            doc.get_str("lsm", "cpu_sched", &mut sched);
+            l.cpu_sched = CpuSched::parse(&sched)
+                .ok_or_else(|| anyhow::anyhow!("bad lsm.cpu_sched {sched:?}"))?;
             doc.get_usize("lsm", "l0_stop_files", &mut l.l0_stop_files);
             doc.get_usize("lsm", "l0_compaction_trigger", &mut l.l0_compaction_trigger);
         }
@@ -411,6 +453,14 @@ mod tests {
         // A zero in a config file degrades to the single-engine system.
         let c = Config::from_toml_str("[sharding]\nshards = 0\n").unwrap();
         assert_eq!(c.shards, 1);
+    }
+
+    #[test]
+    fn cpu_sched_knob_round_trips() {
+        assert_eq!(Config::small().lsm.cpu_sched, CpuSched::WorkConserving);
+        let c = Config::from_toml_str("[lsm]\ncpu_sched = \"fair\"\n").unwrap();
+        assert_eq!(c.lsm.cpu_sched, CpuSched::Fair);
+        assert!(Config::from_toml_str("[lsm]\ncpu_sched = \"nope\"\n").is_err());
     }
 
     #[test]

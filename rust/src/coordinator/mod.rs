@@ -12,7 +12,7 @@
 
 pub mod walcache;
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
 use std::rc::Rc;
 use std::sync::Arc;
@@ -20,11 +20,12 @@ use std::sync::Arc;
 use crate::config::Config;
 use crate::hints::{CacheEvictHint, CompactionHint, FlushHint, Hint};
 use crate::lsm::block_cache::BlockKey;
-use crate::lsm::compaction::{merge_entries, split_outputs, streaming_merge, OutputShape};
-use crate::lsm::sst::{decode_block, search_block, SstBuilder};
+use crate::lsm::compaction::{merge_entries, streaming_merge, OutputShape};
+use crate::lsm::sst::{search_block, SstBuilder};
 use crate::lsm::{BlockCache, Entry, MemTable, Payload, SstId, SstMeta, Version, WireBuf};
 use crate::metrics::{LevelSizeSample, Metrics, WriteCategory};
 use crate::policy::{MigrationKind, Policy, SstOrigin, View};
+use crate::sim::cpu::{CpuPool, CpuPoolStats};
 use crate::sim::rng::fingerprint32;
 use crate::sim::{AccessKind, Ns};
 use crate::zenfs::ZenFs;
@@ -169,7 +170,19 @@ pub struct Engine {
     events: BinaryHeap<Ev>,
     jobs: HashMap<u64, Job>,
     flush_active: bool,
-    busy_threads: usize,
+    /// The background-CPU slot pool. A standalone engine owns its own;
+    /// [`crate::shard::ShardedEngine`] rebinds every shard's engine to ONE
+    /// shared pool of `bg_threads` slots, so background CPU is arbitrated
+    /// globally in `(time, seq)` event order exactly like the device
+    /// FIFOs (the seed's `busy_threads` counter is this pool at 1 shard).
+    cpu: Rc<RefCell<CpuPool>>,
+    /// This engine's shard index in the pool's domain (0 standalone).
+    cpu_shard: usize,
+    /// When this engine's pending flush first lost a slot race (drives the
+    /// `Metrics::cpu_wait` sample recorded at flush start).
+    flush_ready_since: Option<Ns>,
+    /// When an eligible compaction first went CPU-starved.
+    comp_ready_since: Option<Ns>,
     busy_ssts: HashSet<SstId>,
     busy_levels: HashSet<usize>,
     migration_queue: VecDeque<MigrationTask>,
@@ -179,12 +192,6 @@ pub struct Engine {
     sampling: bool,
     /// Reused WAL-record encode buffer (hot path: one put per record).
     wal_buf: WireBuf,
-    /// Route flush/compaction merges through the seed engine's
-    /// materialize-everything pipeline instead of the streaming merge.
-    /// The two paths produce byte-identical outputs (pinned by
-    /// `tests/datapath.rs`); the reference path exists for those tests
-    /// and for `hhzs bench wallclock`'s merge-path comparison.
-    pub reference_datapath: bool,
     /// Optional XLA-backed bloom prober for the batched read path
     /// (`multi_get`); also attachable to the HHZS migration scorer.
     pub xla: Option<std::rc::Rc<crate::runtime::XlaKernels>>,
@@ -213,6 +220,7 @@ impl Engine {
             cfg.lsm.l0_compaction_trigger,
         );
         let cache = BlockCache::new(cfg.lsm.block_cache_bytes);
+        let cpu = Rc::new(RefCell::new(CpuPool::new(cfg.lsm.bg_threads, 1, cfg.lsm.cpu_sched)));
         let mut e = Engine {
             cfg,
             fs,
@@ -232,7 +240,10 @@ impl Engine {
             events: BinaryHeap::new(),
             jobs: HashMap::new(),
             flush_active: false,
-            busy_threads: 0,
+            cpu,
+            cpu_shard: 0,
+            flush_ready_since: None,
+            comp_ready_since: None,
             busy_ssts: HashSet::new(),
             busy_levels: HashSet::new(),
             migration_queue: VecDeque::new(),
@@ -240,7 +251,6 @@ impl Engine {
             parked: Vec::new(),
             sampling: false,
             wal_buf: WireBuf::new(),
-            reference_datapath: false,
             xla: None,
         };
         let tick = e.cfg.hhzs.scan_interval_ns;
@@ -280,6 +290,39 @@ impl Engine {
     pub(crate) fn share_event_seq(&mut self, seq: Rc<Cell<u64>>) {
         seq.set(seq.get().max(self.event_seq.get()));
         self.event_seq = seq;
+    }
+
+    /// Handle to this engine's CPU pool (for the shard layer / frontend).
+    pub(crate) fn cpu_pool_handle(&self) -> Rc<RefCell<CpuPool>> {
+        self.cpu.clone()
+    }
+
+    /// Join a shared CPU pool as shard `shard` of its domain. Must happen
+    /// before any background job exists — slots held by the private pool
+    /// would leak.
+    pub(crate) fn share_cpu_pool(&mut self, pool: Rc<RefCell<CpuPool>>, shard: usize) {
+        assert!(self.jobs.is_empty(), "CPU pool must be shared before any job runs");
+        self.cpu = pool;
+        self.cpu_shard = shard;
+    }
+
+    /// Snapshot of the (possibly shared) CPU pool's bookkeeping.
+    pub fn cpu_pool_stats(&self) -> CpuPoolStats {
+        self.cpu.borrow().stats()
+    }
+
+    /// Do two engines draw background-CPU slots from the same pool?
+    pub fn shares_cpu_pool_with(&self, other: &Engine) -> bool {
+        Rc::ptr_eq(&self.cpu, &other.cpu)
+    }
+
+    /// Re-run the background scheduler because another shard released a
+    /// CPU slot this engine was starved for. `at` is the (frontend) event
+    /// time of the release; in sync mode callers pass 0 and the local
+    /// clock stands.
+    pub(crate) fn poll_cpu(&mut self, at: Ns) {
+        self.now = self.now.max(at);
+        self.maybe_schedule_jobs();
     }
 
     // ------------------------------------------------------------------
@@ -330,7 +373,7 @@ impl Engine {
     // Write path
     // ------------------------------------------------------------------
 
-    fn write_blocked(&self) -> bool {
+    pub(crate) fn write_blocked(&self) -> bool {
         let seal_needed = self.mem.approx_bytes() as u64 >= self.cfg.lsm.memtable_size;
         let mem_full = self.immutables.len() + 1 >= self.cfg.lsm.max_memtables;
         let l0_stop = self.version.level(0).len() >= self.cfg.lsm.l0_stop_files;
@@ -609,32 +652,70 @@ impl Engine {
         !self.flush_active && self.immutables.len() + 1 >= self.cfg.lsm.min_flush_memtables
     }
 
-    /// Two of the `bg_threads` slots are dedicated to flushes (RocksDB's
-    /// separate flush pool) so compaction backlogs cannot starve flushing
-    /// — but never the *whole* pool: with `bg_threads <= 2` a full
-    /// reservation left zero compaction-eligible slots, so L0 grew to
-    /// `l0_stop_files` and parked writers livelocked. Now every non-empty
-    /// pool keeps at least one slot compaction can use: at `bg_threads =
-    /// 1` the single thread serves both roles (flush checked first, so it
-    /// keeps priority), at 2 the reservation shrinks to 1, and from 3 up
-    /// the original two-slot reservation applies.
+    /// Schedule background work against the shared CPU pool. The pool
+    /// enforces every slot rule globally: the total `bg_threads` bound,
+    /// the flush reservation (`min(2, bg_threads - 1)` — the anti-livelock
+    /// shape that keeps ≥ 1 compaction-eligible slot in every non-empty
+    /// pool), flush priority over freed slots, and the per-shard fair cap
+    /// when `cpu_sched = fair`. Flush is attempted first (RocksDB's flush
+    /// priority; at `bg_threads = 1` the lone thread serves both roles).
+    ///
+    /// A denied-but-ready job registers as a pool waiter: the event loop
+    /// re-polls this engine when another shard releases a slot, and the
+    /// time from first denial to job start is recorded in
+    /// [`Metrics::cpu_wait`].
     fn maybe_schedule_jobs(&mut self) {
-        let total = self.cfg.lsm.bg_threads;
-        let flush_reserved = match total {
-            0 | 1 => 0,
-            t => 2.min(t - 1),
-        };
-        if self.flush_wanted() && self.busy_threads < total {
+        if self.flush_wanted() {
             self.start_flush();
+        } else {
+            self.cpu.borrow_mut().clear_flush_waiter(self.cpu_shard);
+            self.flush_ready_since = None;
         }
-        while self.busy_threads < total - flush_reserved {
+        loop {
+            if !self.cpu.borrow().can_admit_compaction(self.cpu_shard) {
+                break;
+            }
             if !self.start_compaction() {
                 break;
             }
         }
+        // Compaction-starvation bookkeeping: an eligible pick without an
+        // admissible slot claims a wake-up (and starts the cpu_wait
+        // clock). The probe is read-only — the round-robin cursor moves
+        // only on real picks — and runs once per starvation episode: an
+        // existing claim is kept without re-probing (O(1) on the hot
+        // path); a stale claim costs one harmless no-op re-poll and is
+        // cleared the first time admission succeeds again.
+        let starved = if self.cpu.borrow().can_admit_compaction(self.cpu_shard) {
+            false
+        } else {
+            self.cpu.borrow().is_comp_waiter(self.cpu_shard) || self.compaction_ready()
+        };
+        self.cpu.borrow_mut().set_comp_waiter(self.cpu_shard, starved);
+        if starved {
+            self.comp_ready_since.get_or_insert(self.now);
+        } else {
+            self.comp_ready_since = None;
+        }
+    }
+
+    /// Read-only: does an admissible compaction pick exist right now?
+    fn compaction_ready(&self) -> bool {
+        let busy_ssts = &self.busy_ssts;
+        let busy_levels = &self.busy_levels;
+        self.version
+            .compaction_ready(&|id| busy_ssts.contains(&id), &|l| busy_levels.contains(&l))
     }
 
     fn start_flush(&mut self) {
+        // CPU first: a ready flush denied a slot registers its claim (so
+        // no compaction can steal the next freed slot pool-wide) and
+        // starts the cpu_wait clock.
+        if !self.cpu.borrow().can_admit_flush() {
+            self.cpu.borrow_mut().flush_denied(self.cpu_shard);
+            self.flush_ready_since.get_or_insert(self.now);
+            return;
+        }
         // Merge ALL pending immutable MemTables into one stream (RocksDB
         // merges immutables on flush).
         let mut segs = Vec::new();
@@ -646,27 +727,27 @@ impl Engine {
         if streams.is_empty() {
             return;
         }
-        let outputs = if self.reference_datapath {
-            let entries = merge_entries(streams, false);
-            self.build_outputs(&entries, 0)
-        } else {
-            let builders = streaming_merge(&[], streams, false, self.output_shape(), |_, _| {
-                unreachable!("flush has no SST inputs")
-            });
-            self.finish_builders(builders, 0)
-        };
+        let builders = streaming_merge(&[], streams, false, self.output_shape(), |_, _| {
+            unreachable!("flush has no SST inputs")
+        });
+        let outputs = self.finish_builders(builders, 0);
         if outputs.is_empty() {
             for seg in segs {
                 let Engine { pool, fs, .. } = &mut *self;
                 pool.release_segment(fs, seg);
             }
+            self.cpu.borrow_mut().clear_flush_waiter(self.cpu_shard);
+            self.flush_ready_since = None;
             return;
         }
+        let acquired = self.cpu.borrow_mut().acquire_flush(self.cpu_shard);
+        debug_assert!(acquired, "admission re-check cannot fail within one call");
+        let wait = self.flush_ready_since.take().map_or(0, |t| self.now.saturating_sub(t));
+        self.metrics.cpu_wait.record(wait);
         let id = self.next_job_id;
         self.next_job_id += 1;
         self.jobs.insert(id, Job::Flush(FlushJob { segs, outputs, cur: 0 }));
         self.flush_active = true;
-        self.busy_threads += 1;
         self.push_event(self.now, EventKind::JobStep(id));
         self.metrics.flushes += 1;
     }
@@ -684,31 +765,6 @@ impl Engine {
     fn finish_builders(&mut self, builders: Vec<SstBuilder>, level: usize) -> Vec<PendingOutput> {
         let mut outputs = Vec::with_capacity(builders.len());
         for b in builders {
-            if b.is_empty() {
-                continue;
-            }
-            let id = self.next_file_id;
-            self.next_file_id += self.file_id_stride;
-            let (meta, data) = b.finish(id, level, self.now);
-            outputs.push(PendingOutput { meta: Arc::new(meta), data, dev: None, written: 0 });
-        }
-        outputs
-    }
-
-    /// Serialize merged entries into pending output SSTs (split at the
-    /// target SST size) — the reference (materialized) pipeline.
-    fn build_outputs(&mut self, entries: &[Entry], level: usize) -> Vec<PendingOutput> {
-        let ranges = split_outputs(entries, self.cfg.geometry.sst_size);
-        let mut outputs = Vec::with_capacity(ranges.len());
-        for r in ranges {
-            let mut b = SstBuilder::with_capacity(
-                self.cfg.lsm.block_size,
-                self.cfg.lsm.bloom_bits_per_key,
-                self.cfg.geometry.sst_size + self.cfg.geometry.sst_size / 8,
-            );
-            for e in &entries[r] {
-                b.add(e);
-            }
             if b.is_empty() {
                 continue;
             }
@@ -752,22 +808,13 @@ impl Engine {
             *read_plan.entry(dev).or_insert(0) += m.file_size;
         }
         let last_level = pick.output_level() == self.version.num_levels() - 1;
-        let outputs = if self.reference_datapath {
-            // Reference pipeline: decode every input fully, materialize
-            // the merged stream, then split and rebuild.
-            let mut streams = Vec::new();
-            for m in &inputs {
-                let data_end = m.blocks.last().map_or(0, |h| h.offset + h.len as u64);
-                let data =
-                    self.fs.read_file_untimed(m.id, 0, data_end).expect("compaction read");
-                streams.push(decode_block(&data));
-            }
-            let merged = merge_entries(streams, last_level);
-            self.build_outputs(&merged, pick.output_level())
-        } else {
-            // Streaming pipeline: cursor-based k-way merge over per-SST
-            // block readers feeding the builders incrementally — memory is
-            // O(one block per input), not O(total input bytes).
+        // Streaming pipeline: cursor-based k-way merge over per-SST block
+        // readers feeding the builders incrementally — memory is O(one
+        // block per input), not O(total input bytes). (The seed's
+        // materialize-everything pipeline is retired from the engine; the
+        // merge equivalence lives on in `lsm::compaction` and the
+        // `tests/datapath.rs` property + golden digests.)
+        let outputs = {
             let shape = self.output_shape();
             let builders = {
                 let Engine { fs, .. } = self;
@@ -784,7 +831,10 @@ impl Engine {
         }
         self.busy_levels.insert(pick.level);
         self.busy_levels.insert(pick.output_level());
-        self.busy_threads += 1;
+        let acquired = self.cpu.borrow_mut().acquire_compaction(self.cpu_shard);
+        debug_assert!(acquired, "caller checked admission within this call");
+        let wait = self.comp_ready_since.take().map_or(0, |t| self.now.saturating_sub(t));
+        self.metrics.cpu_wait.record(wait);
         self.jobs.insert(
             job,
             Job::Compaction(CompactionJob {
@@ -927,7 +977,7 @@ impl Engine {
             pool.release_segment(fs, seg);
         }
         self.flush_active = false;
-        self.busy_threads -= 1;
+        self.cpu.borrow_mut().release_flush(self.cpu_shard);
         self.unpark_writers();
         self.maybe_schedule_jobs();
     }
@@ -951,7 +1001,7 @@ impl Engine {
             outputs,
             output_level: j.level + 1,
         }));
-        self.busy_threads -= 1;
+        self.cpu.borrow_mut().release_compaction(self.cpu_shard);
         self.unpark_writers();
         self.maybe_schedule_jobs();
     }
@@ -1354,16 +1404,47 @@ impl Engine {
             // force it.
             if !self.flush_active && !self.immutables.is_empty() {
                 self.start_flush();
+                if !self.flush_active && self.jobs.is_empty() {
+                    // CPU-starved from outside: the slots are held by other
+                    // shards' jobs and nothing local can free one. Return
+                    // and let the shard layer drive the holder forward
+                    // (`ShardedEngine::flush_all`); a standalone engine
+                    // can never hit this (denial implies local jobs).
+                    break;
+                }
             }
             let Some(next) = self.events.peek().map(|e| e.at) else { break };
             self.drain_until(next);
         }
     }
 
+    /// Is [`Engine::flush_all`]'s goal state reached? (Used by the shard
+    /// layer to drive cross-shard progress when the shared CPU pool keeps
+    /// one shard's flush waiting on another shard's slots.)
+    pub(crate) fn flush_settled(&self) -> bool {
+        self.mem.is_empty() && self.immutables.is_empty() && !self.flush_active
+    }
+
+    /// Is [`Engine::quiesce`]'s goal state reached (modulo a policy that
+    /// would start fresh migrations — callers re-run `quiesce` to probe)?
+    pub(crate) fn background_settled(&self) -> bool {
+        self.jobs.is_empty()
+            && !self.migration_active
+            && self.migration_queue.is_empty()
+            && !self.flush_wanted()
+    }
+
     /// Let all background work (flushes, compactions, and any migrations
     /// the policy still wants) finish.
     pub fn quiesce(&mut self) {
         loop {
+            // A flush that was CPU-starved earlier retries here once other
+            // shards' releases free slots (sync mode has no event-loop
+            // wake; for a standalone engine this is a no-op — a denied
+            // flush implies local jobs whose finish reschedules it).
+            if self.flush_wanted() {
+                self.maybe_schedule_jobs();
+            }
             let has_work = !self.jobs.is_empty()
                 || self.migration_active
                 || self.flush_wanted()
@@ -1375,6 +1456,17 @@ impl Engine {
                 if !self.migration_active {
                     break;
                 }
+            }
+            if self.jobs.is_empty()
+                && !self.migration_active
+                && self.migration_queue.is_empty()
+                && self.flush_wanted()
+                && !self.cpu.borrow().can_admit_flush()
+            {
+                // CPU-starved from outside (slots held by other shards,
+                // nothing local to drain but the eternal PolicyTick):
+                // return and let the shard layer advance the slot holder.
+                break;
             }
             let Some(next) = self.events.peek().map(|e| e.at) else { break };
             self.drain_until(next);
@@ -1403,7 +1495,7 @@ impl Engine {
                 match job {
                     Job::Flush(_) => {
                         self.flush_active = false;
-                        self.busy_threads -= 1;
+                        self.cpu.borrow_mut().release_flush(self.cpu_shard);
                     }
                     Job::Compaction(j) => {
                         for m in &j.installed {
@@ -1414,11 +1506,16 @@ impl Engine {
                         }
                         self.busy_levels.remove(&j.level);
                         self.busy_levels.remove(&(j.level + 1));
-                        self.busy_threads -= 1;
+                        self.cpu.borrow_mut().release_compaction(self.cpu_shard);
                     }
                 }
             }
         }
+        // The restart drops any CPU claims with the in-flight jobs.
+        self.cpu.borrow_mut().clear_flush_waiter(self.cpu_shard);
+        self.cpu.borrow_mut().set_comp_waiter(self.cpu_shard, false);
+        self.flush_ready_since = None;
+        self.comp_ready_since = None;
         self.migration_queue.clear();
         self.migration_active = false;
         // 2. Replay live WAL segments oldest-first (seqnos in the records

@@ -5,10 +5,13 @@
 //! one virtual clock, and ONE shared SSD/HDD pair — every shard's
 //! flush/compaction/migration traffic lands on the same device FIFOs, so
 //! what this experiment now measures is cross-shard device contention
-//! (aggregate queue wait) and how partitioning reshapes the tree (smaller
-//! per-shard trees, shallower reads), not the PR 1 fiction of `n`
-//! independent device pairs. Deterministic for a fixed seed: the frontend
-//! routes one global op stream over seed-identical DES engines.
+//! (aggregate queue wait), cross-shard background-CPU contention (all
+//! shards draw flush/compaction slots from ONE `bg_threads` pool; the
+//! `cpu wait` column is the virtual time ready jobs spent waiting for a
+//! slot), and how partitioning reshapes the tree (smaller per-shard
+//! trees, shallower reads) — not the PR 1 fiction of `n` independent
+//! device pairs and thread pools. Deterministic for a fixed seed: the
+//! frontend routes one global op stream over seed-identical DES engines.
 
 use crate::report::Table;
 use crate::shard::ShardedEngine;
@@ -53,6 +56,7 @@ pub fn run(opts: &ExpOpts) {
             "A read p99 ns",
             "A read p99.9 ns",
             "queue wait ms",
+            "cpu wait ms",
             "balance max/min",
             "migrations",
         ],
@@ -78,6 +82,7 @@ pub fn run(opts: &ExpOpts) {
             m.read_lat.quantile(0.99).to_string(),
             m.read_lat.quantile(0.999).to_string(),
             format!("{:.1}", m.total_queue_wait_ns() as f64 / 1e6),
+            format!("{:.1}", m.cpu_wait.sum as f64 / 1e6),
             format!("{:.2}", max_ops as f64 / (min_ops.max(1)) as f64),
             (m.migrations_cap + m.migrations_pop).to_string(),
         ]);

@@ -11,10 +11,10 @@
 //!   hash router, a substrate lease layer (zone quotas, per-shard
 //!   WAL/cache pool reservations, strided file-id namespaces), a
 //!   cross-shard migration-budget arbiter (§3.4 split), an async request
-//!   frontend (ONE virtual clock and ONE shared SSD/HDD FIFO pair for
-//!   all shards, cross-shard scatter-gather scans, global pacing), and
-//!   merged metrics. `shards = 1` reproduces the single-engine system
-//!   bit-for-bit.
+//!   frontend (ONE virtual clock, ONE shared SSD/HDD FIFO pair, and ONE
+//!   shared `bg_threads` CPU pool for all shards, cross-shard
+//!   scatter-gather scans, global pacing), and merged metrics.
+//!   `shards = 1` reproduces the single-engine system bit-for-bit.
 //! * **Layer 3 (this crate)** — the coordinator: a discrete-event-simulated
 //!   hybrid zoned-storage substrate ([`zone`], [`sim`]), a zone-aware file
 //!   layer ([`zenfs`]), a from-scratch LSM-tree KV store ([`lsm`]), the

@@ -178,9 +178,41 @@ impl Version {
     }
 
     /// Pick the highest-score compaction, excluding SSTs in `busy` (already
-    /// being compacted) and levels in `busy_levels`.
+    /// being compacted) and levels in `busy_levels`. Commits the
+    /// round-robin cursor (see [`Version::select_compaction`] for the
+    /// read-only selection).
     pub fn pick_compaction(
         &mut self,
+        busy: &dyn Fn(SstId) -> bool,
+        busy_level: &dyn Fn(usize) -> bool,
+    ) -> Option<CompactionPick> {
+        let pick = self.select_compaction(busy, busy_level)?;
+        if pick.level > 0 {
+            // Commit the round-robin cursor only once the pick is actually
+            // returned: an abandoned pick (busy L+1 inputs) must retry the
+            // same file on the next attempt, not skip it until the cursor
+            // wraps.
+            self.cursors[pick.level] = pick.inputs_lo[0].largest.clone();
+        }
+        Some(pick)
+    }
+
+    /// Would [`Version::pick_compaction`] return a pick right now? Pure
+    /// probe — no cursor commit — used by the scheduler to detect (and
+    /// meter) compactions starved of a CPU slot without perturbing the
+    /// round-robin state.
+    pub fn compaction_ready(
+        &self,
+        busy: &dyn Fn(SstId) -> bool,
+        busy_level: &dyn Fn(usize) -> bool,
+    ) -> bool {
+        self.select_compaction(busy, busy_level).is_some()
+    }
+
+    /// The selection body of [`Version::pick_compaction`], side-effect
+    /// free: what would be compacted, with the cursor untouched.
+    fn select_compaction(
+        &self,
         busy: &dyn Fn(SstId) -> bool,
         busy_level: &dyn Fn(usize) -> bool,
     ) -> Option<CompactionPick> {
@@ -225,11 +257,6 @@ impl Version {
         if inputs_hi.iter().any(|m| busy(m.id)) {
             return None;
         }
-        // Commit the round-robin cursor only once the pick is actually
-        // returned: an abandoned pick (busy L+1 inputs) must retry the
-        // same file on the next attempt, not skip it until the cursor
-        // wraps.
-        self.cursors[level] = pick.largest.clone();
         Some(CompactionPick { level, inputs_lo: vec![pick], inputs_hi })
     }
 
@@ -401,6 +428,33 @@ mod tests {
         assert_eq!(p.inputs_lo[0].id, 1, "abandoned pick skipped its file");
         assert_eq!(p.inputs_hi.len(), 1);
         assert_eq!(p.inputs_hi[0].id, 30);
+    }
+
+    #[test]
+    fn ready_probe_does_not_move_the_cursor() {
+        // The scheduler probes for starved compactions on every denied
+        // slot; the probe must leave the round-robin state untouched.
+        let mut v = version();
+        let big: Vec<Entry> = (0..3000u64)
+            .map(|i| Entry {
+                key: format!("user{i:08}").into_bytes(),
+                seq: i,
+                value: Some(crate::lsm::Payload::fill(0, 400)),
+            })
+            .collect();
+        let (m1, _) = build_sst(&big[..1500], 1, 1, 4096, 10, 0);
+        let (m2, _) = build_sst(&big[1500..], 2, 1, 4096, 10, 0);
+        v.apply_compaction(0, &[], vec![m1, m2]);
+        for _ in 0..3 {
+            assert!(v.compaction_ready(&|_| false, &|_| false));
+        }
+        let p1 = v.pick_compaction(&|_| false, &|_| false).unwrap();
+        assert_eq!(p1.inputs_lo[0].id, 1, "probes must not advance the cursor");
+        for _ in 0..3 {
+            assert!(v.compaction_ready(&|_| false, &|_| false));
+        }
+        let p2 = v.pick_compaction(&|_| false, &|_| false).unwrap();
+        assert_eq!(p2.inputs_lo[0].id, 2, "cursor advances only on real picks");
     }
 
     #[test]

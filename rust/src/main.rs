@@ -6,10 +6,13 @@
 //!          [--ssd-zones N] [--alpha F] [--seed N]
 //! hhzs bench wallclock [--quick] [--out BENCH_2.json] [--gate]
 //!                                     # DES wall-clock + memory benchmark;
-//!                                     # --gate fails on >30% sim-ops/wall-sec
-//!                                     # regression vs the committed baseline
+//!                                     # --gate enforces the always-armed
+//!                                     # invariant gates and, with a measured
+//!                                     # committed baseline, fails on >30%
+//!                                     # sim-ops/wall-sec per-row regression
 //! hhzs bench-devices                  # Table 1 microbench only
-//! hhzs demo [--n N] [--shards N]      # tiny put/get/scan smoke demo
+//! hhzs demo [--n N] [--shards N] [--cpu-sched fair|work_conserving]
+//!                                     # tiny put/get/scan smoke demo
 //! hhzs config [--profile P]           # print the effective config TOML
 //! hhzs xla-check                      # load + smoke the AOT kernels
 //! ```
@@ -80,6 +83,10 @@ fn build_config(args: &Args) -> anyhow::Result<Config> {
     }
     if let Some(v) = args.flags.get("shards") {
         cfg.shards = v.parse::<usize>()?.max(1);
+    }
+    if let Some(v) = args.flags.get("cpu-sched") {
+        cfg.lsm.cpu_sched = hhzs::config::CpuSched::parse(v)
+            .ok_or_else(|| anyhow::anyhow!("bad --cpu-sched {v:?} (fair|work_conserving)"))?;
     }
     Ok(cfg)
 }

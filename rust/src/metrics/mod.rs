@@ -64,6 +64,12 @@ pub struct Metrics {
     /// clock, cross-shard device contention lands here (Exp#6-style
     /// interference, now across engines too).
     pub queue_wait: BTreeMap<Dev, Ns>,
+    /// Virtual time a *ready* background job (flush or compaction) waited
+    /// for a slot of the shared CPU pool before it could start; one sample
+    /// per job start (0 when a slot was free immediately). With shards
+    /// sharing one `bg_threads` pool, cross-shard CPU contention lands
+    /// here — the scheduling analogue of `queue_wait`.
+    pub cpu_wait: LogHistogram,
     /// SSD-cache effectiveness (§3.5).
     pub ssd_cache_hits: u64,
     pub ssd_cache_misses: u64,
@@ -184,6 +190,7 @@ impl Metrics {
         for (dev, w) in &other.queue_wait {
             *self.queue_wait.entry(*dev).or_default() += w;
         }
+        self.cpu_wait.merge(&other.cpu_wait);
         self.ssd_cache_hits += other.ssd_cache_hits;
         self.ssd_cache_misses += other.ssd_cache_misses;
         self.block_cache_hits += other.block_cache_hits;
@@ -262,6 +269,19 @@ mod tests {
         m.ops_done = 5000;
         m.finished_at = 2_000_000_000; // 2 virtual seconds
         assert!((m.ops_per_sec() - 2500.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cpu_wait_merges_across_shards() {
+        let mut a = Metrics::default();
+        a.cpu_wait.record(0);
+        a.cpu_wait.record(5_000);
+        let mut b = Metrics::default();
+        b.cpu_wait.record(7_000);
+        a.merge(&b);
+        assert_eq!(a.cpu_wait.n, 3);
+        assert_eq!(a.cpu_wait.sum, 12_000);
+        assert_eq!(a.cpu_wait.max, 7_000);
     }
 
     #[test]

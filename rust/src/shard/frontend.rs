@@ -28,12 +28,13 @@
 //! shards under Zipf draw more of the budget than cold ones instead of the
 //! old even `target / N` split.
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::collections::BinaryHeap;
 use std::rc::Rc;
 
 use crate::coordinator::{Engine, FrontendOp, Op, OpSource};
 use crate::lsm::Entry;
+use crate::sim::cpu::CpuPool;
 use crate::sim::Ns;
 
 use super::Router;
@@ -78,6 +79,11 @@ pub struct Frontend<'a> {
     router: Router,
     source: &'a mut dyn OpSource,
     event_seq: Rc<Cell<u64>>,
+    /// The shared background-CPU pool (shard 0's handle; all engines on
+    /// this frontend share it). The event loop drains its wake requests
+    /// so a slot released by one shard re-schedules the shards starved
+    /// for it at the same `(time, seq)` point of the merged order.
+    cpu: Rc<RefCell<CpuPool>>,
     events: BinaryHeap<FrontEv>,
     clients: Vec<FrontClient>,
     done_clients: usize,
@@ -94,11 +100,13 @@ impl<'a> Frontend<'a> {
     ) -> Self {
         assert!(!engines.is_empty(), "a frontend needs at least one engine");
         assert_eq!(router.shards(), engines.len(), "router does not match the engines");
+        let cpu = engines[0].cpu_pool_handle();
         Frontend {
             engines,
             router,
             source,
             event_seq,
+            cpu,
             events: BinaryHeap::new(),
             clients: Vec::new(),
             done_clients: 0,
@@ -180,6 +188,18 @@ impl<'a> Frontend<'a> {
                 NextEvent::Client => {
                     let ev = self.events.pop().expect("peeked event exists");
                     self.ready(ev.client, ev.at);
+                }
+            }
+            // CPU handoff: if this event released pool slots that other
+            // shards' ready flushes/compactions were starved for, re-poll
+            // those shards NOW (same virtual time, flush waiters first) so
+            // a freed slot never idles past an event boundary. At one
+            // shard this is a no-op: the releasing engine already
+            // rescheduled itself inside its finish path.
+            if self.cpu.borrow().wake_pending() {
+                let wake = self.cpu.borrow_mut().take_wake_list();
+                for s in wake {
+                    self.engines[s].poll_cpu(at);
                 }
             }
         }

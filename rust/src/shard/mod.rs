@@ -24,12 +24,16 @@
 //! All shards charge their I/O against ONE [`crate::sim::SharedTimer`]
 //! per physical device — the paper's single SSD/HDD pair — so cross-shard
 //! device-queue contention shows up in every latency (Exp#6's
-//! interference, now across engines). Scans scatter-gather over all
-//! shards; throttling is global pacing in the frontend.
+//! interference, now across engines), and draw background-CPU slots from
+//! ONE [`crate::sim::CpuPool`] of `bg_threads` threads, so flush and
+//! compaction contend for host CPU across shards too (the time a ready
+//! job waits for a slot is `Metrics::cpu_wait`). Scans scatter-gather
+//! over all shards; throttling is global pacing in the frontend.
 //!
 //! `shards = 1` is bit-for-bit the seed single-engine system: the lease
 //! is the identity, the router maps everything to shard 0, the arbiter
-//! returns the untouched budget, and the frontend *is* the engine's own
+//! returns the untouched budget, the CPU pool is the engine's own
+//! `busy_threads` arithmetic, and the frontend *is* the engine's own
 //! workload loop. Tests pin this.
 
 pub mod arbiter;
@@ -43,14 +47,22 @@ pub(crate) use frontend::Frontend;
 pub use lease::{carve, ShardLease};
 pub use router::Router;
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 
 use crate::config::Config;
 use crate::coordinator::{Engine, OpSource};
 use crate::metrics::Metrics;
 use crate::policy::Policy;
+use crate::sim::cpu::{CpuPool, CpuPoolStats};
 use crate::sim::Ns;
+
+/// Consecutive drive rounds with an unchanged progress signature before
+/// the settle loops declare a stall. Legitimate long waits (deep device
+/// queues, paced migration) move bytes every few events, resetting the
+/// count; only a genuine scheduling bug (e.g. a leaked CPU slot) leaves
+/// the signature frozen while PolicyTicks spin.
+const STALL_ROUNDS: u32 = 100_000;
 
 /// `N` engines + a router over the shared substrate.
 pub struct ShardedEngine {
@@ -60,6 +72,8 @@ pub struct ShardedEngine {
     total_migration_rate_bps: f64,
     /// The shared event-sequence counter of the frontend's clock domain.
     event_seq: Rc<Cell<u64>>,
+    /// The shared background-CPU pool every shard draws slots from.
+    cpu: Rc<RefCell<CpuPool>>,
 }
 
 impl ShardedEngine {
@@ -79,24 +93,38 @@ impl ShardedEngine {
                 e
             })
             .collect();
-        // One physical device pair and one clock domain for the whole
-        // system: every shard's zoned devices charge the SAME per-device
-        // FIFO server, and all engines draw event sequence numbers from
-        // shard 0's counter. With one shard both are the identity.
+        // One physical device pair, one clock domain, and ONE background
+        // thread pool for the whole system: every shard's zoned devices
+        // charge the SAME per-device FIFO server, all engines draw event
+        // sequence numbers from shard 0's counter, and all engines take
+        // flush/compaction slots from shard 0's CPU pool — `bg_threads`
+        // is a global budget, not a per-shard one (a 4-shard run used to
+        // simulate 4 × 12 phantom threads). With one shard all three are
+        // the identity.
         let event_seq = engines[0].event_seq_handle();
         let ssd_timer = engines[0].fs.ssd.timer.clone();
         let hdd_timer = engines[0].fs.hdd.timer.clone();
-        for e in engines.iter_mut().skip(1) {
+        let cpu = engines[0].cpu_pool_handle();
+        cpu.borrow_mut().configure(engines.len(), cfg.lsm.cpu_sched);
+        for (s, e) in engines.iter_mut().enumerate().skip(1) {
             e.fs.ssd.set_timer(ssd_timer.clone());
             e.fs.hdd.set_timer(hdd_timer.clone());
             e.share_event_seq(event_seq.clone());
+            e.share_cpu_pool(cpu.clone(), s);
         }
         ShardedEngine {
             engines,
             router,
             total_migration_rate_bps: cfg.hhzs.migration_rate_bps,
             event_seq,
+            cpu,
         }
+    }
+
+    /// Snapshot of the shared CPU pool's bookkeeping (slot bound, high
+    /// water, conservation counters) — what `tests/cpu_pool.rs` pins.
+    pub fn cpu_pool_stats(&self) -> CpuPoolStats {
+        self.cpu.borrow().stats()
     }
 
     pub fn num_shards(&self) -> usize {
@@ -147,16 +175,121 @@ impl ShardedEngine {
     }
 
     /// Flush every shard's MemTables (the between-phases reopen of §4.1).
+    ///
+    /// With the shared CPU pool one shard's flush can wait on slots held
+    /// by another shard's jobs, so this drives *global* progress: each
+    /// round lets every engine flush as far as it can, then steps the
+    /// globally earliest pending event to free slots, until every shard
+    /// settles. With one shard this is exactly `Engine::flush_all`.
     pub fn flush_all(&mut self) {
-        for e in &mut self.engines {
-            e.flush_all();
+        self.settle("flush_all", Engine::flush_all, Engine::flush_settled);
+    }
+
+    /// Let all shards' background work settle (cross-shard CPU handoffs
+    /// included, like [`ShardedEngine::flush_all`]).
+    pub fn quiesce(&mut self) {
+        self.settle("quiesce", Engine::quiesce, Engine::background_settled);
+    }
+
+    /// Drive every engine with `drive` until all satisfy `settled`,
+    /// stepping the globally earliest event between rounds so cross-shard
+    /// CPU handoffs happen. Stall detection cannot use heap emptiness —
+    /// every engine re-arms an eternal PolicyTick — so it watches the
+    /// [`ShardedEngine::progress_sig`] observables instead: if nothing
+    /// observable changes across many rounds while shards stay unsettled
+    /// (e.g. a leaked CPU slot), this panics loudly instead of spinning
+    /// on self-perpetuating ticks forever.
+    fn settle(
+        &mut self,
+        what: &str,
+        mut drive: impl FnMut(&mut Engine),
+        settled: impl Fn(&Engine) -> bool,
+    ) {
+        let mut last_sig = None;
+        let mut idle_rounds = 0u32;
+        loop {
+            for e in &mut self.engines {
+                drive(e);
+            }
+            self.poll_cpu_wakes();
+            if self.engines.iter().all(|e| settled(e)) {
+                break;
+            }
+            idle_rounds = self.bump_idle_rounds(&mut last_sig, idle_rounds);
+            assert!(
+                idle_rounds < STALL_ROUNDS,
+                "{what} stalled: shards unsettled with no observable background progress"
+            );
+            if !self.step_earliest() {
+                panic!("{what} stalled: pending work but no events anywhere");
+            }
         }
     }
 
-    /// Let all shards' background work settle.
-    pub fn quiesce(&mut self) {
-        for e in &mut self.engines {
-            e.quiesce();
+    /// Everything background progress must move: the pool's ledger and
+    /// each engine's cumulative I/O / job counters (metrics are not reset
+    /// outside measured phases, so between phases these are monotone).
+    fn progress_sig(&self) -> (u64, u64, Vec<(u64, u64, u64, u64, u64)>) {
+        let st = self.cpu.borrow().stats();
+        let per = self
+            .engines
+            .iter()
+            .map(|e| {
+                let m = &e.metrics;
+                let w: u64 = m.write_traffic.values().map(|c| c.bytes).sum();
+                let r: u64 = m.read_traffic.values().map(|c| c.bytes).sum();
+                (w, r, m.migration_bytes, m.flushes, m.compactions)
+            })
+            .collect();
+        (st.acquires, st.releases, per)
+    }
+
+    /// One round of stall accounting: returns the updated idle-round
+    /// count (0 whenever the progress signature moved).
+    fn bump_idle_rounds(
+        &self,
+        last_sig: &mut Option<(u64, u64, Vec<(u64, u64, u64, u64, u64)>)>,
+        idle_rounds: u32,
+    ) -> u32 {
+        let sig = self.progress_sig();
+        if last_sig.as_ref() == Some(&sig) {
+            idle_rounds + 1
+        } else {
+            *last_sig = Some(sig);
+            0
+        }
+    }
+
+    /// Process the globally earliest pending engine event (sync-mode
+    /// analogue of the frontend's merged pop; engines keep their own
+    /// clocks here). Returns false when no engine has events.
+    fn step_earliest(&mut self) -> bool {
+        let mut best: Option<(Ns, u64, usize)> = None;
+        for (s, e) in self.engines.iter().enumerate() {
+            if let Some((at, seq)) = e.next_event_at() {
+                if best.map_or(true, |(ba, bs, _)| (at, seq) < (ba, bs)) {
+                    best = Some((at, seq, s));
+                }
+            }
+        }
+        let Some((_, _, s)) = best else { return false };
+        // Client readiness events are frontend-mode only; ignore the id.
+        let _ = self.engines[s].step_event();
+        self.poll_cpu_wakes();
+        true
+    }
+
+    /// Re-poll shards whose background work was starved of a CPU slot
+    /// another shard just released (sync-mode wake; the frontend does the
+    /// same inside its event loop on the shared clock).
+    fn poll_cpu_wakes(&mut self) {
+        if !self.cpu.borrow().wake_pending() {
+            return;
+        }
+        let list = self.cpu.borrow_mut().take_wake_list();
+        for s in list {
+            // Sync mode: each engine stays on its local clock.
+            self.engines[s].poll_cpu(0);
         }
     }
 
@@ -214,18 +347,43 @@ impl ShardedEngine {
     // Synchronous DB-style API (routed)
     // ------------------------------------------------------------------
 
+    /// Drive other shards' events until writes on shard `s` unblock — a
+    /// blocked write may be waiting on a flush whose CPU slot is held by
+    /// another shard's job (the engine's own loop can only drain its local
+    /// events). Same progress-based stall guard as [`ShardedEngine::settle`]
+    /// (heap emptiness can never signal a stall: PolicyTicks are eternal).
+    fn unblock_writes(&mut self, s: usize) {
+        let mut last_sig = None;
+        let mut idle_rounds = 0u32;
+        while self.engines[s].write_blocked() {
+            idle_rounds = self.bump_idle_rounds(&mut last_sig, idle_rounds);
+            assert!(
+                idle_rounds < STALL_ROUNDS,
+                "shard {s}: writes blocked with no observable background progress"
+            );
+            if !self.step_earliest() {
+                // No events anywhere: let the engine's own loop surface
+                // the (pre-existing) "background progress" diagnostic.
+                break;
+            }
+        }
+    }
+
     pub fn put(&mut self, key: &[u8], value: &[u8]) {
         let s = self.router.route(key);
+        self.unblock_writes(s);
         self.engines[s].put(key, value);
     }
 
     pub fn put_payload(&mut self, key: &[u8], value: crate::wire::Payload) {
         let s = self.router.route(key);
+        self.unblock_writes(s);
         self.engines[s].put_payload(key, value);
     }
 
     pub fn delete(&mut self, key: &[u8]) {
         let s = self.router.route(key);
+        self.unblock_writes(s);
         self.engines[s].delete(key);
     }
 

@@ -1,0 +1,346 @@
+//! Background-CPU service model: ONE pool of `bg_threads` slots shared by
+//! every engine on the substrate.
+//!
+//! The paper's testbed runs flush and compaction over a single host thread
+//! pool (§4.1: 12 threads); sharded runs used to give every shard a
+//! private copy of that pool, so a 4-shard simulation modeled 48 phantom
+//! threads. This mirrors the [`super::device::SharedTimer`] pattern for the
+//! last unshared resource: the shard layer points every engine at one
+//! `Rc<RefCell<CpuPool>>`, and acquire/release happen in the frontend's
+//! global `(time, seq)` event order, so background-CPU contention is as
+//! real (and as measurable — [`crate::metrics::Metrics::cpu_wait`]) as
+//! device-queue contention.
+//!
+//! Admission rules, all enforced **pool-wide**:
+//!
+//! * slots-in-use never exceeds `bg_threads`;
+//! * the flush reservation keeps `min(2, bg_threads - 1)` slots that
+//!   compactions may not take (RocksDB's separate flush pool), preserving
+//!   the `bg_threads <= 2` anti-livelock invariant globally: every
+//!   non-empty pool keeps at least one compaction-eligible slot;
+//! * flush priority: a compaction grant must leave at least one free slot
+//!   per *waiting* flush, so a shard finishing a job cannot steal the slot
+//!   another shard's ready flush is blocked on;
+//! * under [`CpuSched::Fair`], a per-shard cap of
+//!   `ceil(bg_threads / shards)` bounds how many compaction slots one
+//!   shard may hold; [`CpuSched::WorkConserving`] is free-for-all.
+//!
+//! With a single shard every rule degenerates to the seed engine's
+//! `busy_threads` arithmetic — that identity is what keeps `shards = 1`
+//! bit-for-bit (pinned by `tests/integration.rs` and `tests/frontend.rs`).
+
+use crate::config::CpuSched;
+
+/// Copyable snapshot of the pool's bookkeeping, for tests and reports.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CpuPoolStats {
+    pub total: usize,
+    pub in_use: usize,
+    /// High-water mark of slots-in-use — `<= total` at every DES event is
+    /// the global-bound invariant `tests/cpu_pool.rs` pins.
+    pub high_water: usize,
+    pub acquires: u64,
+    pub releases: u64,
+    /// Times a compaction grant left a waiting flush without a free slot.
+    /// Unreachable by construction; counted (not just debug-asserted) so
+    /// the property suite can pin it at zero in release builds too.
+    pub flush_priority_violations: u64,
+}
+
+/// The shared pool of background-CPU slots. Time-free by design: the DES
+/// clock lives with the callers; the pool only arbitrates *who may start*,
+/// and engines measure how long a ready job waited.
+#[derive(Debug)]
+pub struct CpuPool {
+    total: usize,
+    sched: CpuSched,
+    in_use: usize,
+    /// Slots held per shard (`len` = shard count of the pool's domain).
+    per_shard: Vec<usize>,
+    /// Compaction slots held per shard — the fair cap binds on THESE
+    /// only, so an active flush never shrinks its shard's compaction
+    /// entitlement (flushes are exempt from the cap by design).
+    per_shard_comp: Vec<usize>,
+    /// Shards with a ready flush that was denied a slot.
+    flush_waiter: Vec<bool>,
+    /// Shards with an eligible compaction that was denied a slot.
+    comp_waiter: Vec<bool>,
+    /// Set on release while any waiter is registered; the frontend drains
+    /// it to re-poll starved shards at the release's event time.
+    wake_pending: bool,
+    stats: CpuPoolStats,
+}
+
+impl CpuPool {
+    pub fn new(total: usize, shards: usize, sched: CpuSched) -> Self {
+        assert!(shards >= 1, "a CPU pool needs at least one shard");
+        CpuPool {
+            total,
+            sched,
+            in_use: 0,
+            per_shard: vec![0; shards],
+            per_shard_comp: vec![0; shards],
+            flush_waiter: vec![false; shards],
+            comp_waiter: vec![false; shards],
+            wake_pending: false,
+            stats: CpuPoolStats { total, ..Default::default() },
+        }
+    }
+
+    /// Rebind the pool to a sharded domain (called by the shard layer
+    /// before any background work exists).
+    pub fn configure(&mut self, shards: usize, sched: CpuSched) {
+        assert!(shards >= 1);
+        assert_eq!(self.in_use, 0, "cannot reshape a pool with slots in use");
+        self.sched = sched;
+        self.per_shard = vec![0; shards];
+        self.per_shard_comp = vec![0; shards];
+        self.flush_waiter = vec![false; shards];
+        self.comp_waiter = vec![false; shards];
+    }
+
+    /// Slots compactions may never take (RocksDB's flush pool), shrunk so
+    /// every non-empty pool keeps ≥ 1 compaction-eligible slot — the
+    /// `bg_threads <= 2` anti-livelock invariant, now pool-wide.
+    pub fn flush_reserved(&self) -> usize {
+        match self.total {
+            0 | 1 => 0,
+            t => 2.min(t - 1),
+        }
+    }
+
+    /// Per-shard ceiling on *compaction* slots.
+    pub fn compaction_cap(&self) -> usize {
+        match self.sched {
+            CpuSched::WorkConserving => self.total,
+            CpuSched::Fair => self.total.div_ceil(self.per_shard.len()).max(1),
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.in_use
+    }
+
+    pub fn shard_in_use(&self, shard: usize) -> usize {
+        self.per_shard[shard]
+    }
+
+    /// Compaction slots a shard currently holds (what the fair cap binds).
+    pub fn shard_compactions(&self, shard: usize) -> usize {
+        self.per_shard_comp[shard]
+    }
+
+    /// Shards whose ready flush is currently blocked on a slot.
+    pub fn waiting_flushes(&self) -> usize {
+        self.flush_waiter.iter().filter(|&&w| w).count()
+    }
+
+    /// Flushes only contend for the global slot count — never the fair cap
+    /// and never the reservation (the reservation exists *for* them).
+    pub fn can_admit_flush(&self) -> bool {
+        self.in_use < self.total
+    }
+
+    /// Compaction admission: global count behind the flush reservation,
+    /// the per-shard cap, and first claim of free slots by waiting flushes.
+    pub fn can_admit_compaction(&self, shard: usize) -> bool {
+        self.in_use + self.flush_reserved() < self.total
+            && self.per_shard_comp[shard] < self.compaction_cap()
+            && self.waiting_flushes() + 1 <= self.total - self.in_use
+    }
+
+    fn grab(&mut self, shard: usize) {
+        self.in_use += 1;
+        self.per_shard[shard] += 1;
+        self.stats.acquires += 1;
+        self.stats.in_use = self.in_use;
+        self.stats.high_water = self.stats.high_water.max(self.in_use);
+        debug_assert!(self.in_use <= self.total, "slot bound violated");
+    }
+
+    /// Take a slot for a flush. On denial the shard is registered as a
+    /// flush waiter — the claim that blocks compactions from stealing the
+    /// next freed slot.
+    pub fn acquire_flush(&mut self, shard: usize) -> bool {
+        if self.can_admit_flush() {
+            self.flush_waiter[shard] = false;
+            self.grab(shard);
+            true
+        } else {
+            self.flush_waiter[shard] = true;
+            false
+        }
+    }
+
+    /// Register a ready-but-denied flush without attempting the grab.
+    pub fn flush_denied(&mut self, shard: usize) {
+        self.flush_waiter[shard] = true;
+    }
+
+    pub fn clear_flush_waiter(&mut self, shard: usize) {
+        self.flush_waiter[shard] = false;
+    }
+
+    /// Take a slot for a compaction, subject to every pool-wide rule.
+    pub fn acquire_compaction(&mut self, shard: usize) -> bool {
+        if !self.can_admit_compaction(shard) {
+            return false;
+        }
+        self.comp_waiter[shard] = false;
+        self.per_shard_comp[shard] += 1;
+        self.grab(shard);
+        if self.waiting_flushes() > self.total - self.in_use {
+            // Unreachable: can_admit_compaction reserves a free slot per
+            // waiting flush. Counted so tests pin it.
+            self.stats.flush_priority_violations += 1;
+        }
+        true
+    }
+
+    /// Mark/unmark a shard as having an eligible compaction starved of CPU.
+    pub fn set_comp_waiter(&mut self, shard: usize, waiting: bool) {
+        self.comp_waiter[shard] = waiting;
+    }
+
+    /// Is this shard currently claiming a compaction wake-up?
+    pub fn is_comp_waiter(&self, shard: usize) -> bool {
+        self.comp_waiter[shard]
+    }
+
+    /// Return a flush's slot. Flags a wake if any shard is starved, so
+    /// the event loop re-polls it at this release's event time.
+    pub fn release_flush(&mut self, shard: usize) {
+        self.release(shard);
+    }
+
+    /// Return a compaction's slot (also credits the shard's fair cap).
+    pub fn release_compaction(&mut self, shard: usize) {
+        debug_assert!(self.per_shard_comp[shard] > 0, "compaction release without acquire");
+        self.per_shard_comp[shard] -= 1;
+        self.release(shard);
+    }
+
+    fn release(&mut self, shard: usize) {
+        debug_assert!(self.in_use > 0 && self.per_shard[shard] > 0, "release without acquire");
+        self.in_use -= 1;
+        self.per_shard[shard] -= 1;
+        self.stats.releases += 1;
+        self.stats.in_use = self.in_use;
+        if self.flush_waiter.iter().any(|&w| w) || self.comp_waiter.iter().any(|&w| w) {
+            self.wake_pending = true;
+        }
+    }
+
+    pub fn wake_pending(&self) -> bool {
+        self.wake_pending
+    }
+
+    /// Drain the wake flag and list the starved shards, flush waiters
+    /// first (in shard order) so the re-poll order respects flush priority
+    /// deterministically. Waiter flags stay set — a re-poll that is denied
+    /// again keeps its claim.
+    pub fn take_wake_list(&mut self) -> Vec<usize> {
+        self.wake_pending = false;
+        let n = self.per_shard.len();
+        let mut out: Vec<usize> = (0..n).filter(|&s| self.flush_waiter[s]).collect();
+        out.extend((0..n).filter(|&s| self.comp_waiter[s] && !self.flush_waiter[s]));
+        out
+    }
+
+    pub fn stats(&self) -> CpuPoolStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_shard_pool_matches_seed_arithmetic() {
+        // total = 12, reserved = 2: flush admitted while in_use < 12,
+        // compaction while in_use < 10 — exactly the seed engine's
+        // busy_threads checks.
+        let mut p = CpuPool::new(12, 1, CpuSched::WorkConserving);
+        for _ in 0..10 {
+            assert!(p.acquire_compaction(0));
+        }
+        assert!(!p.can_admit_compaction(0), "reservation must hold the last 2 slots");
+        assert!(p.acquire_flush(0));
+        assert!(p.acquire_flush(0));
+        assert!(!p.acquire_flush(0), "pool exhausted");
+        assert_eq!(p.stats().high_water, 12);
+        p.release_flush(0);
+        p.release_flush(0);
+        for _ in 0..10 {
+            p.release_compaction(0);
+        }
+        assert_eq!(p.in_use(), 0);
+        assert_eq!(p.shard_compactions(0), 0);
+        assert_eq!(p.stats().acquires, p.stats().releases);
+    }
+
+    #[test]
+    fn tiny_pools_keep_a_compaction_slot() {
+        // The anti-livelock invariant, pool-wide: reserved = 0 at 1 thread,
+        // 1 at 2 threads.
+        let p1 = CpuPool::new(1, 4, CpuSched::WorkConserving);
+        assert_eq!(p1.flush_reserved(), 0);
+        assert!(p1.can_admit_compaction(3));
+        let p2 = CpuPool::new(2, 4, CpuSched::WorkConserving);
+        assert_eq!(p2.flush_reserved(), 1);
+        assert!(p2.can_admit_compaction(0));
+    }
+
+    #[test]
+    fn waiting_flush_blocks_compaction_from_stealing_the_freed_slot() {
+        let mut p = CpuPool::new(1, 2, CpuSched::WorkConserving);
+        assert!(p.acquire_compaction(0));
+        // Shard 1's flush is ready but denied → registered waiter.
+        assert!(!p.acquire_flush(1));
+        p.release_compaction(0);
+        assert!(p.wake_pending(), "release with waiters must request a wake");
+        assert_eq!(p.take_wake_list(), vec![1], "the starved shard gets the wake");
+        // Shard 0 may NOT grab the freed slot for another compaction: the
+        // waiting flush has first claim.
+        assert!(!p.can_admit_compaction(0));
+        assert!(p.acquire_flush(1));
+        assert_eq!(p.waiting_flushes(), 0, "the claim clears on grant");
+        assert_eq!(p.stats().flush_priority_violations, 0);
+    }
+
+    #[test]
+    fn fair_cap_bounds_one_shards_compactions_but_not_flushes() {
+        let mut p = CpuPool::new(8, 2, CpuSched::Fair);
+        assert_eq!(p.compaction_cap(), 4);
+        // An active flush must NOT shrink the shard's compaction
+        // entitlement: the cap binds on compaction slots only.
+        assert!(p.acquire_flush(0));
+        for _ in 0..3 {
+            assert!(p.acquire_compaction(0));
+        }
+        // 1 flush + 3 compactions held: a 4th compaction must still admit
+        // (with a cap on total held slots this would wrongly be denied).
+        assert!(p.can_admit_compaction(0), "flush slot must not count against the cap");
+        assert!(p.acquire_compaction(0));
+        assert_eq!(p.shard_compactions(0), 4);
+        assert!(!p.can_admit_compaction(0), "fair cap reached");
+        assert!(p.can_admit_compaction(1), "the other shard still admits");
+        // Flushes ignore the cap entirely.
+        assert!(p.acquire_flush(0));
+        assert_eq!(p.in_use(), 6);
+    }
+
+    #[test]
+    fn reshaping_an_idle_pool() {
+        let mut p = CpuPool::new(3, 1, CpuSched::WorkConserving);
+        p.configure(4, CpuSched::Fair);
+        assert_eq!(p.compaction_cap(), 1);
+        assert!(p.acquire_compaction(3));
+        p.release_compaction(3);
+    }
+}

@@ -5,11 +5,16 @@
 //! Device accesses charge service time against a QD1 FIFO server per device
 //! (`DeviceTimer`), which is how contention — compaction vs. foreground
 //! reads, migration interference (Exp#6) — emerges without real hardware.
+//! Background CPU is the same kind of resource: flush/compaction jobs take
+//! slots from one shared [`CpuPool`] of `bg_threads` threads (§4.1: 12),
+//! so cross-shard scheduling contention emerges — and is measured — too.
 
+pub mod cpu;
 pub mod device;
 pub mod rng;
 pub mod zipf;
 
+pub use cpu::{CpuPool, CpuPoolStats};
 pub use device::{AccessKind, DeviceTimer, SharedTimer};
 pub use rng::Rng;
 pub use zipf::{KeyChooser, Latest, Uniform, Zipf};

@@ -1,7 +1,8 @@
 //! Async-frontend integration tests: one shared virtual clock, one shared
-//! SSD/HDD FIFO pair for all shards, cross-shard scatter-gather scans, and
-//! global pacing. (`shards = 1` ≡ seed engine is pinned bit-for-bit in
-//! `tests/integration.rs`.)
+//! SSD/HDD FIFO pair and ONE shared `bg_threads` CPU pool for all shards,
+//! cross-shard scatter-gather scans, and global pacing. (`shards = 1` ≡
+//! seed engine is pinned bit-for-bit in `tests/integration.rs`, including
+//! the CPU pool's ledger.)
 
 use hhzs::config::Config;
 use hhzs::coordinator::Engine;
@@ -85,6 +86,76 @@ fn scatter_gather_scan_matches_the_single_engine() {
         assert_eq!(single.scan(&start, n), expected, "single engine, rank {rank}, n {n}");
         assert_eq!(sharded.scan(&start, n), expected, "scatter-gather, rank {rank}, n {n}");
     }
+}
+
+#[test]
+fn four_shards_share_one_cpu_pool_and_contend_for_two_threads() {
+    // The phantom-thread fix, observably: 4 shards over bg_threads = 2
+    // used to simulate 8 background threads (each shard privately assumed
+    // the full pool). Now the pool is global: the run must terminate with
+    // slots-in-use never exceeding 2 at any DES event, and with ready
+    // jobs measurably *waiting* for CPU (merged cpu_wait > 0).
+    let mut cfg = small_cfg(4);
+    cfg.lsm.bg_threads = 2;
+    let clients = cfg.workload.clients;
+    let mut se = ShardedEngine::new(&cfg, |c| make_policy("HHZS", c));
+    // The pool is genuinely shared: every engine draws from shard 0's.
+    for e in &se.engines[1..] {
+        assert!(e.shares_cpu_pool_with(&se.engines[0]));
+    }
+    let mut load = YcsbSource::new(Spec::from_config(&cfg, Kind::Load), clients);
+    se.run_shared(&mut load, clients, None, false);
+    let m = se.merged_metrics();
+    assert_eq!(m.ops_done, 20_000, "4-shard bg_threads=2 run must terminate cleanly");
+    assert!(m.flushes > 0 && m.compactions > 0, "background work must run");
+    assert!(
+        m.cpu_wait.sum > 0,
+        "4 shards contending for 2 threads must wait for CPU (sum = {})",
+        m.cpu_wait.sum
+    );
+    let st = se.cpu_pool_stats();
+    assert!(
+        st.high_water <= 2,
+        "global slot bound violated: {} slots in use at some event",
+        st.high_water
+    );
+    assert_eq!(st.flush_priority_violations, 0);
+    se.quiesce();
+    let st = se.cpu_pool_stats();
+    assert_eq!(st.in_use, 0, "slots leaked");
+    assert_eq!(st.acquires, st.releases);
+}
+
+#[test]
+fn one_shard_frontend_runs_identically_with_private_or_shared_pool_path() {
+    // `ShardedEngine::new` at shards = 1 reconfigures the engine's own
+    // pool in place (the identity); a raw Engine never goes through that
+    // call. Both paths must produce the same DES timeline AND the same
+    // CPU-pool ledger — the shared-pool extension of the bit-for-bit pin
+    // (the full protocol pin lives in tests/integration.rs).
+    let cfg = small_cfg(1);
+    let clients = cfg.workload.clients;
+
+    let mut raw = hhzs::coordinator::Engine::new(
+        cfg.clone(),
+        Box::new(HhzsPolicy::new(cfg.lsm.num_levels)),
+    );
+    let mut load = YcsbSource::new(Spec::from_config(&cfg, Kind::Load), clients);
+    raw.run(&mut load, clients, None, false);
+
+    let mut se = ShardedEngine::new(&cfg, |c| make_policy("HHZS", c));
+    let mut load = YcsbSource::new(Spec::from_config(&cfg, Kind::Load), clients);
+    se.run_shared(&mut load, clients, None, false);
+
+    assert_eq!(raw.now, se.engines[0].now, "virtual clocks diverged");
+    let (a, b) = (&raw.metrics, &se.engines[0].metrics);
+    assert_eq!(a.flushes, b.flushes);
+    assert_eq!(a.compactions, b.compactions);
+    assert_eq!(a.cpu_wait.n, b.cpu_wait.n, "cpu_wait sample counts diverged");
+    assert_eq!(a.cpu_wait.sum, b.cpu_wait.sum, "cpu_wait totals diverged");
+    let (sa, sb) = (raw.cpu_pool_stats(), se.cpu_pool_stats());
+    assert_eq!(sa.acquires, sb.acquires, "pool ledgers diverged");
+    assert_eq!(sa.high_water, sb.high_water);
 }
 
 #[test]

@@ -339,7 +339,16 @@ fn sharded_one_shard_reproduces_single_engine_bit_for_bit() {
             m.read_lat.quantile(0.999),
             "{name}: read tail"
         );
+        // The shared CPU pool at shards = 1 is the seed's busy_threads
+        // arithmetic: identical slot-wait accounting, sample for sample.
+        assert_eq!(s.cpu_wait.n, m.cpu_wait.n, "{name}: cpu_wait samples");
+        assert_eq!(s.cpu_wait.sum, m.cpu_wait.sum, "{name}: cpu_wait total");
     }
+    // And the pool ledgers themselves agree (acquires, high water).
+    let (ss, ms) = (single.cpu_pool_stats(), se.cpu_pool_stats());
+    assert_eq!(ss.acquires, ms.acquires, "pool acquire ledgers diverged");
+    assert_eq!(ss.releases, ms.releases, "pool release ledgers diverged");
+    assert_eq!(ss.high_water, ms.high_water, "pool high-water marks diverged");
 }
 
 #[test]
