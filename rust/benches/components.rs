@@ -42,7 +42,7 @@ fn main() {
     let mut seq = 0u64;
     bench_fn("memtable::insert(1KiB value)", 200_000, || {
         seq += 1;
-        mem.insert(key_for(seq % 50_000, 24), seq, Some(value_for(seq, 1000)));
+        mem.insert(key_for(seq % 50_000, 24).into(), seq, Some(value_for(seq, 1000)));
     });
     bench_fn("memtable::get", 500_000, || {
         seq += 1;
@@ -51,7 +51,7 @@ fn main() {
 
     // SST block search.
     let entries: Vec<Entry> = (0..4000u64)
-        .map(|i| Entry { key: key_for(i, 24), seq: i, value: Some(value_for(i, 1000)) })
+        .map(|i| Entry { key: key_for(i, 24).into(), seq: i, value: Some(value_for(i, 1000)) })
         .collect();
     let mut sorted = entries.clone();
     sorted.sort_by(|a, b| a.key.cmp(&b.key));

@@ -21,9 +21,12 @@
 //!
 //! * **Invariant gates — always armed.** Machine-independent same-run
 //!   checks: the value-size sweep's resident-byte ratio must stay flat
-//!   (the O(entries) claim), the 4-shard frontend may not be
-//!   catastrophically slower than the single-engine run on the same
-//!   machine, and every row must clear an absolute sanity floor in
+//!   (the O(entries) claim), the key-length sweep's resident-byte ratio
+//!   must stay within the same runs' logical ratio + slack (the
+//!   O(unique-key-bytes) claim of the interned-key arena and the
+//!   restart-point prefix-compressed blocks), the 4-shard frontend may
+//!   not be catastrophically slower than the single-engine run on the
+//!   same machine, and every row must clear an absolute sanity floor in
 //!   sim-ops/wall-sec (set so only a pathological slowdown — not runner
 //!   variance — trips it). Thresholds live in the committed file's
 //!   `gates` section; built-in defaults apply if absent.
@@ -49,6 +52,7 @@ pub struct WallclockRun {
     pub objects: u64,
     pub ops: u64,
     pub value_size: usize,
+    pub key_size: usize,
     pub shards: usize,
     pub wall_secs: f64,
     /// Simulated operations executed per wall-clock second.
@@ -64,6 +68,9 @@ pub struct WallclockRun {
     pub zone_phys_bytes: u64,
     /// Logical (accounted) zone bytes at the end of the run.
     pub zone_logical_bytes: u64,
+    /// Resident interned-key bytes of the key arena at the end of the
+    /// measured phase (the `Metrics::key_arena_bytes` gauge).
+    pub key_arena_bytes: u64,
 }
 
 /// Peak resident set size of this process (VmHWM), or 0 if unavailable.
@@ -85,19 +92,26 @@ pub fn peak_rss_bytes() -> u64 {
     0
 }
 
-fn bench_cfg(objects: u64, ops: u64, value_size: usize) -> Config {
+fn bench_cfg(objects: u64, ops: u64, value_size: usize, key_size: usize) -> Config {
     // 1/512 paper scale: ~42 MiB SSD, ~4 GiB HDD — holds the 10× dataset
     // at every swept value size.
     let mut cfg = Config::paper_scaled(512);
     cfg.workload.load_objects = objects;
     cfg.workload.ops = ops;
     cfg.workload.value_size = value_size;
+    cfg.workload.key_size = key_size;
     cfg
 }
 
 /// Run load + YCSB-A once and measure it.
-pub fn run_one(label: &str, objects: u64, ops: u64, value_size: usize) -> WallclockRun {
-    let cfg = bench_cfg(objects, ops, value_size);
+pub fn run_one(
+    label: &str,
+    objects: u64,
+    ops: u64,
+    value_size: usize,
+    key_size: usize,
+) -> WallclockRun {
+    let cfg = bench_cfg(objects, ops, value_size, key_size);
     let mut e = Engine::new(cfg.clone(), Box::new(HhzsPolicy::new(cfg.lsm.num_levels)));
     let clients = cfg.workload.clients;
     let t0 = Instant::now();
@@ -114,6 +128,7 @@ pub fn run_one(label: &str, objects: u64, ops: u64, value_size: usize) -> Wallcl
         objects,
         ops,
         value_size,
+        key_size,
         shards: 1,
         wall_secs: wall,
         sim_ops_per_wall_sec: total_ops as f64 / wall,
@@ -126,6 +141,7 @@ pub fn run_one(label: &str, objects: u64, ops: u64, value_size: usize) -> Wallcl
         peak_rss_bytes: peak_rss_bytes(),
         zone_phys_bytes: e.fs.phys_bytes(),
         zone_logical_bytes: e.fs.ssd.written_bytes() + e.fs.hdd.written_bytes(),
+        key_arena_bytes: e.metrics.key_arena_bytes,
     }
 }
 
@@ -139,7 +155,7 @@ pub fn run_one_sharded(
     value_size: usize,
     shards: usize,
 ) -> WallclockRun {
-    let mut cfg = bench_cfg(objects, ops, value_size);
+    let mut cfg = bench_cfg(objects, ops, value_size, 24);
     cfg.shards = shards;
     let mut se = ShardedEngine::new(&cfg, |c| Box::new(HhzsPolicy::new(c.lsm.num_levels)));
     let clients = cfg.workload.clients;
@@ -164,6 +180,7 @@ pub fn run_one_sharded(
         objects,
         ops,
         value_size,
+        key_size: 24,
         shards,
         wall_secs: wall,
         sim_ops_per_wall_sec: total_ops as f64 / wall,
@@ -172,6 +189,7 @@ pub fn run_one_sharded(
         peak_rss_bytes: peak_rss_bytes(),
         zone_phys_bytes: phys,
         zone_logical_bytes: logical,
+        key_arena_bytes: merged.key_arena_bytes,
     }
 }
 
@@ -187,6 +205,7 @@ fn run_to_json(r: &WallclockRun) -> String {
             "      \"objects\": {},\n",
             "      \"ops\": {},\n",
             "      \"value_size\": {},\n",
+            "      \"key_size\": {},\n",
             "      \"shards\": {},\n",
             "      \"wall_secs\": {:.3},\n",
             "      \"sim_ops_per_wall_sec\": {:.1},\n",
@@ -194,13 +213,15 @@ fn run_to_json(r: &WallclockRun) -> String {
             "      \"cpu_wait_ns\": {},\n",
             "      \"peak_rss_bytes\": {},\n",
             "      \"zone_phys_bytes\": {},\n",
-            "      \"zone_logical_bytes\": {}\n",
+            "      \"zone_logical_bytes\": {},\n",
+            "      \"key_arena_bytes\": {}\n",
             "    }}"
         ),
         json_escape(&r.label),
         r.objects,
         r.ops,
         r.value_size,
+        r.key_size,
         r.shards,
         r.wall_secs,
         r.sim_ops_per_wall_sec,
@@ -209,6 +230,7 @@ fn run_to_json(r: &WallclockRun) -> String {
         r.peak_rss_bytes,
         r.zone_phys_bytes,
         r.zone_logical_bytes,
+        r.key_arena_bytes,
     )
 }
 
@@ -265,6 +287,14 @@ pub struct GateThresholds {
     /// committed `gates` section once a measured baseline establishes
     /// the runner class's real range.
     pub min_sim_ops_per_wall_sec: f64,
+    /// Key-length sweep gate: the k128/k24 resident-zone-byte ratio may
+    /// exceed the same runs' *logical* byte ratio by at most this slack.
+    /// With prefix-compressed blocks the physical ratio sits near 1
+    /// (suffixes don't grow with zero-padded key length); storing full
+    /// keys per entry would push it toward (14+128)/(14+24) ≈ 3.7 and
+    /// trip the gate. Machine-independent: both ratios come from one
+    /// process on one machine.
+    pub key_phys_ratio_slack: f64,
 }
 
 impl Default for GateThresholds {
@@ -273,6 +303,7 @@ impl Default for GateThresholds {
             zone_phys_ratio_max: 1.35,
             sharded4_slowdown_max: 12.0,
             min_sim_ops_per_wall_sec: 250.0,
+            key_phys_ratio_slack: 0.5,
         }
     }
 }
@@ -288,6 +319,9 @@ impl GateThresholds {
         }
         if let Some(v) = scan_f64(json, "min_sim_ops_per_wall_sec") {
             g.min_sim_ops_per_wall_sec = v;
+        }
+        if let Some(v) = scan_f64(json, "key_phys_ratio_slack") {
+            g.key_phys_ratio_slack = v;
         }
         g
     }
@@ -337,7 +371,7 @@ pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> 
     for value_size in [4000usize, 1000] {
         let label = format!("streaming-{scale_label}-v{value_size}");
         eprintln!("[bench] {label}: {objects} objects + {ops} YCSB-A ops ...");
-        let r = run_one(&label, objects, ops, value_size);
+        let r = run_one(&label, objects, ops, value_size, 24);
         eprintln!(
             "[bench] {label}: {:.1}s wall, {:.0} sim-ops/s, rss {} MiB, zone phys {} MiB / logical {} MiB",
             r.wall_secs,
@@ -363,17 +397,39 @@ pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> 
         );
         runs.push(r);
     }
+    // Key-length sweep: resident bytes must track *unique suffix* bytes,
+    // not entries × key_len — the interned-arena + restart-point-prefix
+    // claim. Small values sharpen the signal (keys dominate the physical
+    // form; values are synthetic either way).
+    for key_size in [24usize, 128] {
+        let label = format!("streaming-{scale_label}-k{key_size}-v100");
+        eprintln!("[bench] {label}: key_len {key_size} sweep ...");
+        let r = run_one(&label, objects, ops, 100, key_size);
+        eprintln!(
+            "[bench] {label}: {:.1}s wall, {:.0} sim-ops/s, zone phys {} KiB, key arena {} KiB",
+            r.wall_secs,
+            r.sim_ops_per_wall_sec,
+            r.zone_phys_bytes >> 10,
+            r.key_arena_bytes >> 10,
+        );
+        runs.push(r);
+    }
 
-    // runs[0] = streaming v4000, runs[1] = streaming v1000, runs[2] = sharded4 v1000.
+    // runs[0] = streaming v4000, runs[1] = streaming v1000, runs[2] = sharded4 v1000,
+    // runs[3] = streaming k24 v100, runs[4] = streaming k128 v100.
     let phys_ratio = runs[0].zone_phys_bytes as f64 / runs[1].zone_phys_bytes.max(1) as f64;
     let logical_ratio =
         runs[0].zone_logical_bytes as f64 / runs[1].zone_logical_bytes.max(1) as f64;
     let sharded4_slowdown =
         runs[1].sim_ops_per_wall_sec / runs[2].sim_ops_per_wall_sec.max(1e-9);
+    let key_phys_ratio = runs[4].zone_phys_bytes as f64 / runs[3].zone_phys_bytes.max(1) as f64;
+    let key_logical_ratio =
+        runs[4].zone_logical_bytes as f64 / runs[3].zone_logical_bytes.max(1) as f64;
     eprintln!(
         "[bench] value-size 4x sweep: zone phys ratio {phys_ratio:.2} (flat = O(entries)), \
          logical ratio {logical_ratio:.2}; 4-shard frontend slowdown vs single: \
-         {sharded4_slowdown:.2}x"
+         {sharded4_slowdown:.2}x; key-length 24→128 sweep: phys ratio {key_phys_ratio:.2} \
+         vs logical {key_logical_ratio:.2} (flat = O(unique-key-bytes))"
     );
 
     let runs_json: Vec<String> = runs.iter().map(run_to_json).collect();
@@ -384,7 +440,10 @@ pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> 
             "  \"quick\": {},\n",
             "  \"note\": \"sim_ops_per_wall_sec = simulated client ops executed per wall-clock ",
             "second (load + YCSB-A). zone_phys_bytes must stay flat across the value_size ",
-            "sweep (O(entries) memory); zone_logical_bytes scales with payload bytes. ",
+            "sweep (O(entries) memory) AND across the key_size sweep relative to the logical ",
+            "ratio (O(unique-key-bytes) memory: interned keys + restart-point prefix-compressed ",
+            "blocks); zone_logical_bytes scales with payload bytes. key_arena_bytes is the ",
+            "resident interned-key gauge at the end of the measured phase. ",
             "peak_rss_bytes is the process-wide VmHWM and is monotone across runs (the ",
             "4x-payload run executes first so its mark bounds that footprint); use ",
             "zone_phys_bytes for per-run comparisons. cpu_wait_ns is the merged virtual time ",
@@ -394,9 +453,11 @@ pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> 
             "  \"gates\": {{\n",
             "    \"zone_phys_ratio_max\": {:.3},\n",
             "    \"sharded4_slowdown_max\": {:.3},\n",
-            "    \"min_sim_ops_per_wall_sec\": {:.1}\n",
+            "    \"min_sim_ops_per_wall_sec\": {:.1},\n",
+            "    \"key_phys_ratio_slack\": {:.3}\n",
             "  }},\n",
             "  \"value_size_sweep\": {{ \"zone_phys_ratio\": {:.3}, \"zone_logical_ratio\": {:.3} }},\n",
+            "  \"key_size_sweep\": {{ \"zone_phys_ratio\": {:.3}, \"zone_logical_ratio\": {:.3} }},\n",
             "  \"sharded4_slowdown\": {:.3},\n",
             "  \"runs\": [\n{}\n  ]\n",
             "}}\n"
@@ -405,8 +466,11 @@ pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> 
         thresholds.zone_phys_ratio_max,
         thresholds.sharded4_slowdown_max,
         thresholds.min_sim_ops_per_wall_sec,
+        thresholds.key_phys_ratio_slack,
         phys_ratio,
         logical_ratio,
+        key_phys_ratio,
+        key_logical_ratio,
         sharded4_slowdown,
         runs_json.join(",\n"),
     );
@@ -429,6 +493,13 @@ pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> 
         failures.push(format!(
             "4-shard frontend {:.2}x slower than single-engine (max {:.2}x)",
             sharded4_slowdown, thresholds.sharded4_slowdown_max
+        ));
+    }
+    if key_phys_ratio > key_logical_ratio + thresholds.key_phys_ratio_slack {
+        failures.push(format!(
+            "key-length sweep: zone phys ratio {:.3} exceeds logical ratio {:.3} + {:.3} \
+             (resident key bytes scale with key_len — interning/prefix compression regressed)",
+            key_phys_ratio, key_logical_ratio, thresholds.key_phys_ratio_slack
         ));
     }
     for r in &runs {
@@ -481,14 +552,17 @@ mod tests {
         assert!(d.zone_phys_ratio_max > 1.0);
         let json = "{\n  \"gates\": {\n    \"zone_phys_ratio_max\": 1.5,\n    \
                     \"sharded4_slowdown_max\": 9.0,\n    \
-                    \"min_sim_ops_per_wall_sec\": 123.0\n  }\n}\n";
+                    \"min_sim_ops_per_wall_sec\": 123.0,\n    \
+                    \"key_phys_ratio_slack\": 0.7\n  }\n}\n";
         let g = GateThresholds::from_json(json);
         assert_eq!(g.zone_phys_ratio_max, 1.5);
         assert_eq!(g.sharded4_slowdown_max, 9.0);
         assert_eq!(g.min_sim_ops_per_wall_sec, 123.0);
+        assert_eq!(g.key_phys_ratio_slack, 0.7);
         // Missing keys keep defaults.
         let g = GateThresholds::from_json("{}");
         assert_eq!(g.sharded4_slowdown_max, d.sharded4_slowdown_max);
+        assert_eq!(g.key_phys_ratio_slack, d.key_phys_ratio_slack);
     }
 
     #[test]

@@ -22,7 +22,9 @@ use crate::hints::{CacheEvictHint, CompactionHint, FlushHint, Hint};
 use crate::lsm::block_cache::BlockKey;
 use crate::lsm::compaction::{merge_entries, streaming_merge, OutputShape};
 use crate::lsm::sst::{search_block, SstBuilder};
-use crate::lsm::{BlockCache, Entry, MemTable, Payload, SstId, SstMeta, Version, WireBuf};
+use crate::lsm::{
+    BlockCache, Entry, KeyArena, MemTable, Payload, SstId, SstMeta, Version, WireBuf,
+};
 use crate::metrics::{LevelSizeSample, Metrics, WriteCategory};
 use crate::policy::{MigrationKind, Policy, SstOrigin, View};
 use crate::sim::cpu::{CpuPool, CpuPoolStats};
@@ -178,6 +180,13 @@ pub struct Engine {
     cpu: Rc<RefCell<CpuPool>>,
     /// This engine's shard index in the pool's domain (0 standalone).
     cpu_shard: usize,
+    /// The interned-key arena. Like the CPU pool: a standalone engine owns
+    /// its own; [`crate::shard::ShardedEngine`] rebinds every shard to ONE
+    /// shared arena per frontend domain, so a unique key costs its bytes
+    /// once no matter how many layers (MemTable, SST bounds, cursors)
+    /// reference it. Reclamation is epoch-based, retired on Version GC
+    /// (see [`KeyArena::retire_epoch`]).
+    arena: KeyArena,
     /// When this engine's pending flush first lost a slot race (drives the
     /// `Metrics::cpu_wait` sample recorded at flush start).
     flush_ready_since: Option<Ns>,
@@ -242,6 +251,7 @@ impl Engine {
             flush_active: false,
             cpu,
             cpu_shard: 0,
+            arena: KeyArena::new(),
             flush_ready_since: None,
             comp_ready_since: None,
             busy_ssts: HashSet::new(),
@@ -309,6 +319,33 @@ impl Engine {
     /// Snapshot of the (possibly shared) CPU pool's bookkeeping.
     pub fn cpu_pool_stats(&self) -> CpuPoolStats {
         self.cpu.borrow().stats()
+    }
+
+    /// This engine's interned-key arena (shared across the frontend
+    /// domain once [`crate::shard::ShardedEngine`] rebinds it).
+    pub fn key_arena(&self) -> &KeyArena {
+        &self.arena
+    }
+
+    /// Handle to this engine's key arena (for the shard layer).
+    pub(crate) fn key_arena_handle(&self) -> KeyArena {
+        self.arena.clone()
+    }
+
+    /// Join a shared key arena (the frontend's clock domain). Must happen
+    /// before any key is interned — refs held in the private arena would
+    /// escape dedup and the gauge.
+    pub(crate) fn share_key_arena(&mut self, arena: KeyArena) {
+        assert!(
+            self.seq == 0 && self.version.total_ssts() == 0,
+            "key arena must be shared before any key is interned"
+        );
+        self.arena = arena;
+    }
+
+    /// Do two engines intern keys into the same arena?
+    pub fn shares_key_arena_with(&self, other: &Engine) -> bool {
+        self.arena.shares_with(&other.arena)
     }
 
     /// Do two engines draw background-CPU slots from the same pool?
@@ -380,12 +417,14 @@ impl Engine {
         (seal_needed && mem_full) || l0_stop
     }
 
-    /// Append WAL + MemTable insert. Returns completion time.
-    fn do_put(&mut self, key: Vec<u8>, value: Option<Payload>) -> Ns {
+    /// Append WAL + MemTable insert. The key is interned here — the WAL
+    /// record carries the bytes, every in-memory layer shares one
+    /// allocation per unique key. Returns completion time.
+    fn do_put(&mut self, key: &[u8], value: Option<Payload>) -> Ns {
         self.seq += 1;
         let seq = self.seq;
         self.wal_buf.clear();
-        self.wal_buf.push_entry(&key, seq, value);
+        self.wal_buf.push_entry(key, seq, value);
         let preferred = if self.pool.is_reserved_mode() {
             Dev::Ssd
         } else {
@@ -394,6 +433,7 @@ impl Engine {
         let Engine { fs, metrics, pool, now, wal_buf, .. } = self;
         let wal_finish = pool.append_wal(fs, metrics, *now, wal_buf, preferred);
         let record_len = self.wal_buf.len();
+        let key = self.arena.intern(key);
         self.mem.insert(key, seq, value);
         self.mem.wal_bytes += record_len;
         if self.mem.approx_bytes() as u64 >= self.cfg.lsm.memtable_size {
@@ -439,7 +479,7 @@ impl Engine {
                 continue;
             }
             let Some(bi) = meta.find_block(key) else { continue };
-            let handle = meta.blocks[bi].clone();
+            let handle = meta.blocks[bi];
             let (block, f) = self.fetch_block(&meta, handle.offset, handle.len as u64, finish);
             finish = finish.max(f) + CPU_BLOCK_SEARCH_NS;
             if let Some(e) = search_block(&block, key) {
@@ -626,10 +666,10 @@ impl Engine {
             self.metrics.record_queue_wait(dev, s.saturating_sub(self.now));
             self.metrics.record_read(dev, h.len as u64);
             *finish = (*finish).max(f);
-            // Zero-copy block walk: only qualifying entries are cloned
-            // into the merge sources.
+            // Zero-copy block walk (prefix-shared keys compare in place);
+            // only qualifying entries are cloned into the merge sources.
             for e in data.entries() {
-                if e.key >= start {
+                if e.key.cmp_bytes(start) != std::cmp::Ordering::Less {
                     if e.value.is_some() {
                         *live += 1;
                     }
@@ -761,7 +801,9 @@ impl Engine {
     }
 
     /// Assign file ids to sealed builders and finish them into pending
-    /// outputs (streaming path).
+    /// outputs (streaming path). The metas' `smallest`/`largest` bounds
+    /// are canonicalized through the key arena so they share allocations
+    /// with the MemTable/other metas instead of duplicating the bytes.
     fn finish_builders(&mut self, builders: Vec<SstBuilder>, level: usize) -> Vec<PendingOutput> {
         let mut outputs = Vec::with_capacity(builders.len());
         for b in builders {
@@ -770,7 +812,9 @@ impl Engine {
             }
             let id = self.next_file_id;
             self.next_file_id += self.file_id_stride;
-            let (meta, data) = b.finish(id, level, self.now);
+            let (mut meta, data) = b.finish(id, level, self.now);
+            meta.smallest = self.arena.intern_ref(&meta.smallest);
+            meta.largest = self.arena.intern_ref(&meta.largest);
             outputs.push(PendingOutput { meta: Arc::new(meta), data, dev: None, written: 0 });
         }
         outputs
@@ -1002,6 +1046,10 @@ impl Engine {
             output_level: j.level + 1,
         }));
         self.cpu.borrow_mut().release_compaction(self.cpu_shard);
+        // Version GC just deleted SSTs — the bulk-death point for key
+        // references. Retire an arena epoch so dead interned keys are
+        // reclaimed on the sweep cadence.
+        self.arena.retire_epoch();
         self.unpark_writers();
         self.maybe_schedule_jobs();
     }
@@ -1128,14 +1176,14 @@ impl Engine {
     fn execute_op(&mut self, op: Op) -> Ns {
         match op {
             Op::Insert { key, value } | Op::Update { key, value } => {
-                self.do_put(key, Some(value))
+                self.do_put(&key, Some(value))
             }
             Op::Read { key } => self.do_get(&key).1,
             Op::Scan { key, len } => self.do_scan(&key, len).1,
             Op::ReadModifyWrite { key, value } => {
                 let (_, f1) = self.do_get(&key);
                 let dt = f1 - self.now;
-                let f2 = self.do_put(key, Some(value));
+                let f2 = self.do_put(&key, Some(value));
                 f2 + dt
             }
         }
@@ -1262,10 +1310,21 @@ impl Engine {
         }
     }
 
-    /// End a measured phase at the shared clock's final time.
+    /// End a measured phase at the shared clock's final time. Sweeps the
+    /// key arena (no virtual-time cost) and stamps the `key_arena_bytes`
+    /// gauge — with a shared arena every shard stamps the same
+    /// domain-level value, which the metrics merge takes the max of.
     pub(crate) fn end_phase(&mut self, finished_at: Ns) {
         self.sampling = false;
         self.metrics.finished_at = finished_at;
+        // One sweep per domain per phase end: shard 0 sweeps the (shared)
+        // arena, the other shards just stamp the post-sweep gauge — the
+        // frontend ends phases in shard order, so a redundant full-table
+        // scan per extra shard is avoided.
+        if self.cpu_shard == 0 {
+            self.arena.sweep();
+        }
+        self.metrics.key_arena_bytes = self.arena.bytes();
     }
 
     fn take_level_sample(&mut self) {
@@ -1343,7 +1402,7 @@ impl Engine {
             let next = self.events.peek().map(|e| e.at).expect("background progress");
             self.drain_until(next);
         }
-        let f = self.do_put(key.to_vec(), Some(value));
+        let f = self.do_put(key, Some(value));
         self.drain_until(f);
     }
 
@@ -1353,7 +1412,7 @@ impl Engine {
             let next = self.events.peek().map(|e| e.at).expect("background progress");
             self.drain_until(next);
         }
-        let f = self.do_put(key.to_vec(), None);
+        let f = self.do_put(key, None);
         self.drain_until(f);
     }
 
@@ -1526,10 +1585,13 @@ impl Engine {
         };
         let mut replayed = 0usize;
         let mut max_seq = self.seq;
+        let mut key_buf: Vec<u8> = Vec::new();
         for (_, buf) in segments {
             for e in buf.entries() {
                 max_seq = max_seq.max(e.seq);
-                self.mem.insert(e.key.to_vec(), e.seq, e.value);
+                e.key.copy_into(&mut key_buf);
+                let key = self.arena.intern(&key_buf);
+                self.mem.insert(key, e.seq, e.value);
                 replayed += 1;
             }
         }
@@ -1573,6 +1635,16 @@ impl Engine {
                 }
             }
         }
+        // One fingerprint per UNRESOLVED key for the whole batch: the
+        // bloom probes (native fallback + kernel chunks) and the
+        // post-probe fallback below all reuse it. (The seed hashed each
+        // key once per probing site — twice or more per key on the common
+        // path; memtable hits never needed a hash at all.)
+        let fps_by_key: Vec<u32> = keys
+            .iter()
+            .enumerate()
+            .map(|(i, k)| if resolved[i] { 0 } else { fingerprint32(k) })
+            .collect();
         // 2. Group (key → candidate SSTs) by SST and batch-probe blooms.
         let mut per_sst: std::collections::HashMap<SstId, Vec<usize>> = Default::default();
         let mut candidates: Vec<Vec<Arc<SstMeta>>> = vec![Vec::new(); keys.len()];
@@ -1592,15 +1664,14 @@ impl Engine {
                 // Filter too large for the AOT shape — treat as pass and
                 // let the block search decide (native path would probe).
                 for &i in key_idxs {
-                    if meta.bloom.may_contain(fingerprint32(&keys[i])) {
+                    if meta.bloom.may_contain(fps_by_key[i]) {
                         bloom_pass.insert((*sst, i));
                     }
                 }
                 continue;
             }
             for chunk in key_idxs.chunks(crate::runtime::BLOOM_BATCH) {
-                let fps: Vec<u32> =
-                    chunk.iter().map(|&i| fingerprint32(&keys[i])).collect();
+                let fps: Vec<u32> = chunk.iter().map(|&i| fps_by_key[i]).collect();
                 let hits = xla
                     .bloom_probe(&fps, meta.bloom.words(), meta.bloom.nbits(), meta.bloom.k())
                     .expect("bloom kernel");
@@ -1626,13 +1697,13 @@ impl Engine {
                 let passed = if per_sst.contains_key(&meta.id) {
                     bloom_pass.contains(&(meta.id, i))
                 } else {
-                    meta.bloom.may_contain(fingerprint32(key))
+                    meta.bloom.may_contain(fps_by_key[i])
                 };
                 if !passed {
                     continue;
                 }
                 let Some(bi) = meta.find_block(key) else { continue };
-                let handle = meta.blocks[bi].clone();
+                let handle = meta.blocks[bi];
                 let (block, f) =
                     self.fetch_block(&meta, handle.offset, handle.len as u64, finish);
                 finish = finish.max(f) + CPU_BLOCK_SEARCH_NS;

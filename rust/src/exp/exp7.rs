@@ -57,6 +57,7 @@ pub fn run(opts: &ExpOpts) {
             "A read p99.9 ns",
             "queue wait ms",
             "cpu wait ms",
+            "key arena KiB",
             "balance max/min",
             "migrations",
         ],
@@ -83,6 +84,7 @@ pub fn run(opts: &ExpOpts) {
             m.read_lat.quantile(0.999).to_string(),
             format!("{:.1}", m.total_queue_wait_ns() as f64 / 1e6),
             format!("{:.1}", m.cpu_wait.sum as f64 / 1e6),
+            format!("{:.1}", m.key_arena_bytes as f64 / 1024.0),
             format!("{:.2}", max_ops as f64 / (min_ops.max(1)) as f64),
             (m.migrations_cap + m.migrations_pop).to_string(),
         ]);

@@ -5,8 +5,10 @@
 //!
 //! * [`streaming_merge`] — the production path: a cursor-based k-way merge
 //!   over per-SST block readers that feeds [`SstBuilder`]s incrementally.
-//!   Memory is bounded by O(one block per input) plus the (compact)
-//!   output buffers; nothing is materialized per entry.
+//!   Memory is bounded by O(one block per input) plus the (compact,
+//!   prefix-compressed) output buffers; nothing is materialized per
+//!   entry, and keys flow through as zero-copy [`KeyView`]s borrowing the
+//!   resident blocks' prefix-shared bytes.
 //! * [`merge_entries`] + [`split_outputs`] — the seed engine's
 //!   materialize-everything pipeline, retained as the reference
 //!   implementation for the scan path and the equivalence tests that pin
@@ -14,10 +16,10 @@
 
 use std::sync::Arc;
 
-use crate::wire::WireBuf;
+use crate::wire::{KeyView, WireBuf};
 
 use super::sst::{BlockHandle, SstBuilder, SstMeta};
-use super::{Entry, Payload};
+use super::{Entry, Key, Payload};
 
 /// Merge sorted entry streams into one deduplicated sorted stream.
 ///
@@ -66,13 +68,14 @@ pub fn merge_entries(streams: Vec<Vec<Entry>>, drop_tombstones: bool) -> Vec<Ent
         }
     }
     let mut out: Vec<Entry> = Vec::with_capacity(total);
-    let mut last_key: Option<Vec<u8>> = None;
+    // Interned keys make the dedup cursor a refcount bump, not a byte copy.
+    let mut last_key: Option<Key> = None;
     while let Some(Item { e, src }) = heap.pop() {
         if let Some(next) = iters[src].next() {
             debug_assert!(next.key >= e.key, "input stream not sorted");
             heap.push(Item { e: next, src });
         }
-        let dup = last_key.as_deref() == Some(e.key.as_slice());
+        let dup = last_key.as_ref() == Some(&e.key);
         if dup {
             continue; // older version of a key we already emitted
         }
@@ -115,11 +118,14 @@ pub struct OutputShape {
 }
 
 /// The decoded-but-not-copied current entry of one SST block stream:
-/// positions into the stream's resident block.
+/// positions into the stream's resident block (two-part key — shared
+/// prefix at the block's restart key, plus the stored suffix).
 #[derive(Clone, Copy)]
 struct RawCur {
-    key_off: usize,
-    key_len: usize,
+    pre_off: usize,
+    pre_len: usize,
+    suf_off: usize,
+    suf_len: usize,
     seq: u64,
     value: Option<Payload>,
 }
@@ -132,6 +138,7 @@ struct SstStream {
     log: u64,
     phys: usize,
     run: usize,
+    prun: usize,
     cur: Option<RawCur>,
 }
 
@@ -144,6 +151,7 @@ impl SstStream {
             log: 0,
             phys: 0,
             run: 0,
+            prun: 0,
             cur: None,
         }
     }
@@ -153,13 +161,17 @@ impl SstStream {
         F: FnMut(&SstMeta, &BlockHandle) -> WireBuf,
     {
         loop {
-            if let Some(raw) = self.block.decode_entry_raw(self.log, self.phys, self.run) {
+            if let Some(raw) = self.block.decode_entry_raw(self.log, self.phys, self.run, self.prun)
+            {
                 self.log = raw.next_log;
                 self.phys = raw.next_phys;
                 self.run = raw.next_run;
+                self.prun = raw.next_prun;
                 self.cur = Some(RawCur {
-                    key_off: raw.key_off,
-                    key_len: raw.key_len,
+                    pre_off: raw.pre_off,
+                    pre_len: raw.pre_len,
+                    suf_off: raw.suf_off,
+                    suf_len: raw.suf_len,
                     seq: raw.seq,
                     value: raw.value,
                 });
@@ -171,12 +183,13 @@ impl SstStream {
             }
             // Exhausted the resident block — fetch the next one. Memory
             // stays bounded at one block per input stream.
-            let h = self.meta.blocks[self.next_block].clone();
+            let h = self.meta.blocks[self.next_block];
             self.block = fetch(&self.meta, &h);
             self.next_block += 1;
             self.log = 0;
             self.phys = 0;
             self.run = 0;
+            self.prun = 0;
         }
     }
 }
@@ -190,12 +203,13 @@ enum Source {
 }
 
 impl Source {
-    fn key(&self) -> Option<&[u8]> {
+    fn key(&self) -> Option<KeyView<'_>> {
         match self {
-            Source::Mem { entries, pos } => entries.get(*pos).map(|e| e.key.as_slice()),
-            Source::Sst(s) => {
-                s.cur.as_ref().map(|c| s.block.key_at(c.key_off, c.key_len))
-            }
+            Source::Mem { entries, pos } => entries.get(*pos).map(|e| e.key.view()),
+            Source::Sst(s) => s
+                .cur
+                .as_ref()
+                .map(|c| s.block.key_view_at(c.pre_off, c.pre_len, c.suf_off, c.suf_len)),
         }
     }
 
@@ -281,7 +295,7 @@ where
                 None => Some(i),
                 Some(j) => {
                     let kj = sources[j].key().expect("best has a key");
-                    match k.cmp(kj) {
+                    match k.cmp(&kj) {
                         std::cmp::Ordering::Less => Some(i),
                         std::cmp::Ordering::Greater => Some(j),
                         std::cmp::Ordering::Equal => {
@@ -298,10 +312,9 @@ where
         let Some(i) = best else { break };
         {
             let key = sources[i].key().expect("picked source has a key");
-            let dup = have_last && last_key.as_slice() == key;
+            let dup = have_last && key.eq_bytes(&last_key);
             if !dup {
-                last_key.clear();
-                last_key.extend_from_slice(key);
+                key.copy_into(&mut last_key);
                 have_last = true;
                 let value = sources[i].value();
                 if !(value.is_none() && drop_tombstones) {
@@ -330,7 +343,7 @@ mod tests {
 
     fn e(key: &str, seq: u64, val: Option<&str>) -> Entry {
         Entry {
-            key: key.as_bytes().to_vec(),
+            key: Key::new(key.as_bytes()),
             seq,
             value: val.map(|v| Payload::from_bytes(v.as_bytes())),
         }
@@ -437,6 +450,7 @@ mod tests {
             assert_eq!(d1, d2, "drop={drop}");
             assert_eq!(m1.num_entries, m2.num_entries);
             assert_eq!(m1.blocks, m2.blocks);
+            assert_eq!(m1.index, m2.index);
         }
     }
 }

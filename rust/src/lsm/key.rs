@@ -1,0 +1,586 @@
+//! Interned keys and compact key storage.
+//!
+//! Three pieces, all aimed at one invariant: resident key memory is
+//! O(unique-key-bytes), not O(entries × key_len × duplication-factor):
+//!
+//! * [`KeyRef`] — a ref-counted immutable key (`Rc<[u8]>`). Every layer
+//!   that used to own a `Vec<u8>` copy of a key (MemTable nodes, `SstMeta`
+//!   bounds, compaction cursors, scan results) now shares one allocation
+//!   per unique key; cloning a `KeyRef` is a refcount bump.
+//! * [`KeyArena`] — the per-clock-domain interner backing those refs: an
+//!   append-only logical arena of unique key bytes with a hash table for
+//!   dedup and **epoch-based reclamation tied to Version GC** — the engine
+//!   retires an epoch whenever compaction deletes SSTs (the only point
+//!   where key references die in bulk), and every few epochs the arena
+//!   sweeps entries whose only remaining reference is the arena itself.
+//!   Shards of one frontend share ONE arena (rebound in
+//!   `ShardedEngine::new` exactly like the shared `CpuPool`).
+//! * [`KeyIndex`] — restart-point prefix-compressed storage for the SST
+//!   index's separator keys: every [`RESTART_INTERVAL`]-th first-key is
+//!   stored whole, the rest store only the suffix after their restart
+//!   key's shared prefix (the bytes physically kept *are* the truncated
+//!   separators). Lookups compare the exact reconstructed key, so block
+//!   selection is bit-identical to an index of full `Vec<u8>` first-keys
+//!   — which is what keeps the DES timeline and the golden e2e digests
+//!   unchanged — while resident index bytes shrink to
+//!   O(restarts × key_len + entries × suffix_len).
+//!
+//! The same restart-point scheme compresses the *data blocks* themselves;
+//! that half lives in [`crate::wire`] (`WireBuf::push_entry_shared`)
+//! because it has to survive arbitrary logical slicing at zone
+//! boundaries.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::sim::rng::fnv1a;
+use crate::wire::KeyView;
+
+/// Per-interned-key bookkeeping overhead charged to the arena gauge (and
+/// by the MemTable byte budget): the `Rc` header plus the dedup-table
+/// slot, rounded to a small constant.
+pub const KEY_OVERHEAD: usize = 16;
+
+/// Restart-point interval shared by the data-block and index compressors:
+/// one fully-stored key every `RESTART_INTERVAL` entries, suffix-only
+/// entries in between (RocksDB's default block restart interval).
+pub const RESTART_INTERVAL: usize = 16;
+
+/// Minimum shared-prefix length worth eliding from a data-block entry: a
+/// `PrefixRun` costs ~32 resident bytes of run metadata that the
+/// byte-vector gauges (`phys_len`, `zone_phys_bytes`) do not count, so
+/// eliding fewer bytes than that would *grow* real memory while
+/// reporting shrinkage. Entries whose shared prefix is shorter (e.g. the
+/// default 24-byte hashed YCSB keys, which share only ~8-12 bytes with
+/// their restart key) are stored whole — exactly the seed's residency.
+pub const MIN_SHARED_PREFIX: usize = 32;
+
+/// Sweep cadence: the arena scans for dead entries every this many
+/// retired epochs (an epoch retires on every Version GC).
+const SWEEP_EPOCHS: u64 = 8;
+
+// ---------------------------------------------------------------------
+// KeyRef
+// ---------------------------------------------------------------------
+
+/// A ref-counted immutable user key. Order, equality, and hashing are
+/// all over the key *bytes*, so `KeyRef` is a drop-in map key wherever
+/// `Vec<u8>` was one (including `&[u8]` lookups via `Borrow`).
+#[derive(Clone)]
+pub struct KeyRef(Rc<[u8]>);
+
+impl KeyRef {
+    /// An owned (not interned) key — one allocation, shared by clones.
+    pub fn new(bytes: &[u8]) -> KeyRef {
+        KeyRef(Rc::from(bytes))
+    }
+
+    /// Materialize a (possibly two-part) borrowed [`KeyView`] — two slice
+    /// copies, one allocation. (Intern through a [`KeyArena`] instead
+    /// when the key should be shared/deduplicated.)
+    pub fn from_view(v: KeyView<'_>) -> KeyRef {
+        KeyRef(Rc::from(v.to_vec()))
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.0
+    }
+
+    pub fn view(&self) -> KeyView<'_> {
+        KeyView::from_slice(&self.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.0.to_vec()
+    }
+
+    /// Do two refs share one allocation? (Interning diagnostic.)
+    pub fn ptr_eq(a: &KeyRef, b: &KeyRef) -> bool {
+        Rc::ptr_eq(&a.0, &b.0)
+    }
+
+    /// Number of live references, the arena's among them.
+    fn refcount(&self) -> usize {
+        Rc::strong_count(&self.0)
+    }
+}
+
+impl Default for KeyRef {
+    fn default() -> KeyRef {
+        KeyRef(Rc::from(&b""[..]))
+    }
+}
+
+impl std::ops::Deref for KeyRef {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.0
+    }
+}
+
+impl std::borrow::Borrow<[u8]> for KeyRef {
+    fn borrow(&self) -> &[u8] {
+        &self.0
+    }
+}
+
+impl PartialEq for KeyRef {
+    fn eq(&self, other: &KeyRef) -> bool {
+        self.0 == other.0
+    }
+}
+impl Eq for KeyRef {}
+
+impl PartialOrd for KeyRef {
+    fn partial_cmp(&self, other: &KeyRef) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for KeyRef {
+    fn cmp(&self, other: &KeyRef) -> std::cmp::Ordering {
+        self.0.cmp(&other.0)
+    }
+}
+
+impl std::hash::Hash for KeyRef {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        // Hash the bytes (consistent with `Borrow<[u8]>`).
+        self.0.hash(state)
+    }
+}
+
+impl std::fmt::Debug for KeyRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KeyRef({:?})", String::from_utf8_lossy(&self.0))
+    }
+}
+
+impl From<Vec<u8>> for KeyRef {
+    fn from(v: Vec<u8>) -> KeyRef {
+        KeyRef(Rc::from(v))
+    }
+}
+
+impl From<&[u8]> for KeyRef {
+    fn from(v: &[u8]) -> KeyRef {
+        KeyRef::new(v)
+    }
+}
+
+// ---------------------------------------------------------------------
+// KeyArena
+// ---------------------------------------------------------------------
+
+/// Snapshot of the arena's bookkeeping.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KeyArenaStats {
+    /// Resident unique-key bytes + [`KEY_OVERHEAD`] each — the
+    /// `key_arena_bytes` gauge.
+    pub bytes: u64,
+    /// Live interned keys.
+    pub unique: u64,
+    /// Total intern calls.
+    pub interns: u64,
+    /// Intern calls satisfied by an existing entry.
+    pub hits: u64,
+    /// Epochs retired (one per Version GC).
+    pub epochs: u64,
+    /// Keys reclaimed by sweeps so far.
+    pub reclaimed: u64,
+}
+
+struct ArenaInner {
+    /// fnv1a(key) → interned keys with that hash (collisions chained).
+    table: HashMap<u64, Vec<KeyRef>>,
+    stats: KeyArenaStats,
+}
+
+/// The interner. Cheap to clone — clones share one arena (the handle is
+/// an `Rc`), which is how every shard of a frontend domain binds to the
+/// same key storage.
+#[derive(Clone)]
+pub struct KeyArena {
+    inner: Rc<RefCell<ArenaInner>>,
+}
+
+impl Default for KeyArena {
+    fn default() -> Self {
+        KeyArena::new()
+    }
+}
+
+impl KeyArena {
+    pub fn new() -> KeyArena {
+        KeyArena {
+            inner: Rc::new(RefCell::new(ArenaInner {
+                table: HashMap::new(),
+                stats: KeyArenaStats::default(),
+            })),
+        }
+    }
+
+    /// Do two handles share one arena?
+    pub fn shares_with(&self, other: &KeyArena) -> bool {
+        Rc::ptr_eq(&self.inner, &other.inner)
+    }
+
+    /// The shared lookup-or-insert body: `make` supplies the ref to adopt
+    /// on a miss (a fresh copy for [`KeyArena::intern`], the caller's own
+    /// allocation for [`KeyArena::intern_ref`]).
+    fn intern_with(&self, bytes: &[u8], make: impl FnOnce() -> KeyRef) -> KeyRef {
+        let h = fnv1a(bytes);
+        let inner = &mut *self.inner.borrow_mut();
+        inner.stats.interns += 1;
+        let bucket = inner.table.entry(h).or_default();
+        if let Some(k) = bucket.iter().find(|k| k.as_slice() == bytes) {
+            let k = k.clone();
+            inner.stats.hits += 1;
+            return k;
+        }
+        let k = make();
+        debug_assert_eq!(k.as_slice(), bytes);
+        bucket.push(k.clone());
+        inner.stats.unique += 1;
+        inner.stats.bytes += (bytes.len() + KEY_OVERHEAD) as u64;
+        k
+    }
+
+    /// Intern `key`: return the canonical [`KeyRef`] for these bytes,
+    /// storing them once on first sight.
+    pub fn intern(&self, key: &[u8]) -> KeyRef {
+        self.intern_with(key, || KeyRef::new(key))
+    }
+
+    /// Canonicalize an already-owned ref: if the bytes are interned,
+    /// return the canonical ref; otherwise adopt THIS allocation into the
+    /// arena (no copy) and return it.
+    pub fn intern_ref(&self, key: &KeyRef) -> KeyRef {
+        self.intern_with(key.as_slice(), || key.clone())
+    }
+
+    /// Retire an epoch. Called by the engine whenever Version GC deletes
+    /// SSTs (the bulk-death point for key references); every
+    /// [`SWEEP_EPOCHS`] retirements the arena sweeps dead entries so
+    /// reclamation cost amortizes to O(live) per GC wave.
+    pub fn retire_epoch(&self) {
+        let due = {
+            let inner = &mut *self.inner.borrow_mut();
+            inner.stats.epochs += 1;
+            inner.stats.epochs % SWEEP_EPOCHS == 0
+        };
+        if due {
+            self.sweep();
+        }
+    }
+
+    /// Drop every interned key whose only remaining reference is the
+    /// arena itself. Returns the number reclaimed.
+    pub fn sweep(&self) -> u64 {
+        let inner = &mut *self.inner.borrow_mut();
+        let mut reclaimed = 0u64;
+        let mut bytes_freed = 0u64;
+        inner.table.retain(|_, bucket| {
+            bucket.retain(|k| {
+                if k.refcount() > 1 {
+                    true
+                } else {
+                    reclaimed += 1;
+                    bytes_freed += (k.len() + KEY_OVERHEAD) as u64;
+                    false
+                }
+            });
+            !bucket.is_empty()
+        });
+        inner.stats.unique -= reclaimed;
+        inner.stats.bytes -= bytes_freed;
+        inner.stats.reclaimed += reclaimed;
+        reclaimed
+    }
+
+    /// Resident unique-key bytes (incl. per-key overhead) — the
+    /// `key_arena_bytes` gauge.
+    pub fn bytes(&self) -> u64 {
+        self.inner.borrow().stats.bytes
+    }
+
+    pub fn stats(&self) -> KeyArenaStats {
+        self.inner.borrow().stats
+    }
+}
+
+// ---------------------------------------------------------------------
+// KeyIndex
+// ---------------------------------------------------------------------
+
+/// One index entry: where its (truncated) stored bytes live in the
+/// shared byte pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct IndexEntry {
+    /// Byte-pool offset of this entry's restart key (itself when
+    /// `shared == 0`).
+    restart_off: u32,
+    /// Bytes shared with the restart key (0 at restarts).
+    shared: u16,
+    /// Byte-pool offset of the stored suffix.
+    suffix_off: u32,
+    suffix_len: u16,
+}
+
+/// Restart-point prefix-compressed first-key index of one SST. Stores the
+/// truncated separators physically while exposing the exact full keys for
+/// comparison, so `find_block` behaves bit-for-bit like the old
+/// `Vec<BlockHandle { first_key: Vec<u8> }>` index.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct KeyIndex {
+    bytes: Vec<u8>,
+    entries: Vec<IndexEntry>,
+}
+
+impl KeyIndex {
+    pub fn new() -> KeyIndex {
+        KeyIndex::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Append the next separator key (keys MUST arrive in ascending
+    /// order — they are block first-keys of one SST).
+    pub fn push(&mut self, key: &[u8]) {
+        assert!(key.len() <= u16::MAX as usize, "separator key too long");
+        if self.entries.len() % RESTART_INTERVAL == 0 {
+            let off = self.bytes.len() as u32;
+            self.bytes.extend_from_slice(key);
+            self.entries.push(IndexEntry {
+                restart_off: off,
+                shared: 0,
+                suffix_off: off,
+                suffix_len: key.len() as u16,
+            });
+            return;
+        }
+        // The restart key of the running interval.
+        let restart_idx = (self.entries.len() / RESTART_INTERVAL) * RESTART_INTERVAL;
+        let restart = self.entries[restart_idx];
+        debug_assert_eq!(restart.shared, 0);
+        let restart_len = restart.suffix_len as usize;
+        let restart_bytes =
+            &self.bytes[restart.restart_off as usize..restart.restart_off as usize + restart_len];
+        let shared = common_prefix_len(restart_bytes, key);
+        let off = self.bytes.len() as u32;
+        self.bytes.extend_from_slice(&key[shared..]);
+        self.entries.push(IndexEntry {
+            restart_off: restart.restart_off,
+            shared: shared as u16,
+            suffix_off: off,
+            suffix_len: (key.len() - shared) as u16,
+        });
+    }
+
+    /// The exact `i`-th separator key as a zero-copy two-part view.
+    pub fn key(&self, i: usize) -> KeyView<'_> {
+        let e = self.entries[i];
+        KeyView::new(
+            &self.bytes[e.restart_off as usize..e.restart_off as usize + e.shared as usize],
+            &self.bytes[e.suffix_off as usize..e.suffix_off as usize + e.suffix_len as usize],
+        )
+    }
+
+    /// Full (logical) length of the `i`-th separator — what the
+    /// serialized index charges, independent of truncation.
+    pub fn key_len(&self, i: usize) -> usize {
+        let e = self.entries[i];
+        e.shared as usize + e.suffix_len as usize
+    }
+
+    /// Physically resident bytes of this index (truncated separators).
+    pub fn stored_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Number of entries whose key is `<= key` — exactly
+    /// `partition_point(|e| e.first_key <= key)` over the full keys.
+    pub fn partition_point_leq(&self, key: &[u8]) -> usize {
+        let mut lo = 0usize;
+        let mut hi = self.entries.len();
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if self.key(mid).cmp_bytes(key) != std::cmp::Ordering::Greater {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+}
+
+/// Length of the longest common prefix of two byte strings.
+pub fn common_prefix_len(a: &[u8], b: &[u8]) -> usize {
+    a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keyref_orders_and_borrows_like_bytes() {
+        let a = KeyRef::new(b"abc");
+        let b = KeyRef::new(b"abd");
+        assert!(a < b);
+        assert_eq!(a, KeyRef::from(b"abc".to_vec()));
+        let mut m: std::collections::BTreeMap<KeyRef, u32> = Default::default();
+        m.insert(a.clone(), 1);
+        assert_eq!(m.get(b"abc".as_slice()), Some(&1));
+        assert_eq!(m.range::<[u8], _>(b"ab".as_slice()..).count(), 1);
+    }
+
+    #[test]
+    fn intern_dedups_to_one_allocation() {
+        let arena = KeyArena::new();
+        let a = arena.intern(b"user0001");
+        let b = arena.intern(b"user0001");
+        assert!(KeyRef::ptr_eq(&a, &b));
+        let s = arena.stats();
+        assert_eq!(s.unique, 1);
+        assert_eq!(s.interns, 2);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.bytes, (8 + KEY_OVERHEAD) as u64);
+    }
+
+    #[test]
+    fn intern_ref_adopts_without_copy() {
+        let arena = KeyArena::new();
+        let k = KeyRef::new(b"bound");
+        let c = arena.intern_ref(&k);
+        assert!(KeyRef::ptr_eq(&k, &c));
+        // A later intern of the same bytes returns the adopted ref.
+        let again = arena.intern(b"bound");
+        assert!(KeyRef::ptr_eq(&k, &again));
+        assert_eq!(arena.stats().unique, 1);
+    }
+
+    #[test]
+    fn sweep_reclaims_dead_keys_only() {
+        let arena = KeyArena::new();
+        let live = arena.intern(b"live-key");
+        {
+            let _dead = arena.intern(b"dead-key");
+        }
+        assert_eq!(arena.stats().unique, 2);
+        let reclaimed = arena.sweep();
+        assert_eq!(reclaimed, 1);
+        let s = arena.stats();
+        assert_eq!(s.unique, 1);
+        assert_eq!(s.bytes, (live.len() + KEY_OVERHEAD) as u64);
+        // The live key is still canonical.
+        assert!(KeyRef::ptr_eq(&live, &arena.intern(b"live-key")));
+    }
+
+    #[test]
+    fn epochs_sweep_on_cadence() {
+        let arena = KeyArena::new();
+        {
+            let _k = arena.intern(b"transient");
+        }
+        for _ in 0..SWEEP_EPOCHS - 1 {
+            arena.retire_epoch();
+        }
+        assert_eq!(arena.stats().unique, 1, "not yet swept");
+        arena.retire_epoch();
+        assert_eq!(arena.stats().unique, 0, "sweep on the cadence epoch");
+        assert_eq!(arena.stats().reclaimed, 1);
+    }
+
+    #[test]
+    fn shared_handles_see_one_arena() {
+        let a = KeyArena::new();
+        let b = a.clone();
+        assert!(a.shares_with(&b));
+        let k1 = a.intern(b"k");
+        let k2 = b.intern(b"k");
+        assert!(KeyRef::ptr_eq(&k1, &k2));
+        assert!(!a.shares_with(&KeyArena::new()));
+    }
+
+    #[test]
+    fn key_index_reconstructs_exact_keys() {
+        let keys: Vec<Vec<u8>> =
+            (0..100u64).map(|i| format!("user{i:012}").into_bytes()).collect();
+        let mut idx = KeyIndex::new();
+        for k in &keys {
+            idx.push(k);
+        }
+        assert_eq!(idx.len(), keys.len());
+        for (i, k) in keys.iter().enumerate() {
+            assert_eq!(idx.key(i).to_vec(), *k, "entry {i}");
+            assert_eq!(idx.key_len(i), k.len());
+        }
+        // Truncation actually happened: shared "user0000000" prefixes are
+        // stored once per restart interval, not per entry.
+        assert!(
+            idx.stored_bytes() < keys.iter().map(|k| k.len()).sum::<usize>() / 2,
+            "stored {} of {} raw bytes",
+            idx.stored_bytes(),
+            keys.iter().map(|k| k.len()).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn key_index_partition_matches_full_key_partition() {
+        let keys: Vec<Vec<u8>> =
+            (0..200u64).map(|i| format!("user{:06}", i * 3).into_bytes()).collect();
+        let mut idx = KeyIndex::new();
+        for k in &keys {
+            idx.push(k);
+        }
+        // Probe every present key, every gap neighbour, and the extremes:
+        // the compressed partition must equal the full-key partition.
+        let mut probes: Vec<Vec<u8>> = keys.clone();
+        probes.push(b"user".to_vec());
+        probes.push(b"zzz".to_vec());
+        for i in 0..200u64 {
+            probes.push(format!("user{:06}", i * 3 + 1).into_bytes());
+        }
+        for p in &probes {
+            let want = keys.partition_point(|k| k.as_slice() <= p.as_slice());
+            assert_eq!(idx.partition_point_leq(p), want, "probe {p:?}");
+        }
+    }
+
+    #[test]
+    fn key_index_handles_unrelated_keys() {
+        let keys: Vec<&[u8]> = vec![b"a", b"ab", b"b", b"ba", b"c", b"ca"];
+        let mut idx = KeyIndex::new();
+        for k in &keys {
+            idx.push(k);
+        }
+        for (i, k) in keys.iter().enumerate() {
+            assert_eq!(idx.key(i).to_vec(), k.to_vec());
+        }
+    }
+
+    #[test]
+    fn common_prefix() {
+        assert_eq!(common_prefix_len(b"abcd", b"abxy"), 2);
+        assert_eq!(common_prefix_len(b"abc", b"abc"), 3);
+        assert_eq!(common_prefix_len(b"abc", b"abcd"), 3);
+        assert_eq!(common_prefix_len(b"x", b"y"), 0);
+        assert_eq!(common_prefix_len(b"", b"y"), 0);
+    }
+}

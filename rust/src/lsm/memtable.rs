@@ -2,12 +2,18 @@
 //! until it reaches the configured size, becomes immutable, and is flushed
 //! to an L0 SSTable by a background job.
 //!
-//! Values are synthetic [`Payload`]s; the byte budget charges their
-//! *logical* length, so seal/flush timing is identical to a memtable
-//! holding real bytes.
+//! Values are synthetic [`Payload`]s and keys are interned [`Key`]s; the
+//! byte budget charges the values' *logical* length plus each resident
+//! key's bytes and arena bookkeeping ([`KEY_OVERHEAD`]), so seal/flush
+//! timing matches a memtable holding real bytes. Accounting is
+//! *symmetric*: an overwrite charges only the value-length delta — the
+//! replaced version's key bytes and node overhead are not re-charged (the
+//! seed double-charged them and never credited the replaced key, so
+//! `approx_bytes` drifted high under update-heavy YCSB-A).
 
 use std::collections::BTreeMap;
 
+use super::key::KEY_OVERHEAD;
 use super::{Entry, Key, Payload};
 
 /// Per-entry bookkeeping overhead charged against the memtable budget
@@ -27,14 +33,25 @@ impl MemTable {
         Self::default()
     }
 
-    /// Insert a put or delete. Returns the net byte growth.
-    pub fn insert(&mut self, key: Key, seq: u64, value: Option<Payload>) -> usize {
-        let add = key.len() + value.map_or(0, |p| p.len as usize) + ENTRY_OVERHEAD;
-        let old = self.map.insert(key, (seq, value));
-        let sub = old.map_or(0, |(_, v)| v.map_or(0, |p| p.len as usize));
-        self.approx_bytes += add;
-        self.approx_bytes = self.approx_bytes.saturating_sub(sub);
-        add
+    /// Insert a put or delete; `approx_bytes` moves by the exact budget
+    /// delta (callers read [`MemTable::approx_bytes`] for seal decisions).
+    pub fn insert(&mut self, key: Key, seq: u64, value: Option<Payload>) {
+        let klen = key.len();
+        let vlen = value.map_or(0, |p| p.len as usize);
+        match self.map.insert(key, (seq, value)) {
+            None => {
+                // New key: charge key bytes + arena bookkeeping + node
+                // overhead + value bytes.
+                self.approx_bytes += klen + KEY_OVERHEAD + ENTRY_OVERHEAD + vlen;
+            }
+            Some((_, old)) => {
+                // Overwrite: the key, its arena slot, and the node are
+                // reused — only the value length moves.
+                let sub = old.map_or(0, |p| p.len as usize);
+                self.approx_bytes += vlen;
+                self.approx_bytes = self.approx_bytes.saturating_sub(sub);
+            }
+        }
     }
 
     /// Point lookup. `Some(None)` means "deleted here" (tombstone).
@@ -54,7 +71,7 @@ impl MemTable {
         self.map.is_empty()
     }
 
-    /// Drain into sorted entries for flushing.
+    /// Drain into sorted entries for flushing (key refs move, no copies).
     pub fn into_entries(self) -> Vec<Entry> {
         self.map
             .into_iter()
@@ -65,7 +82,7 @@ impl MemTable {
     /// Range scan within the memtable (used by the merged scan path).
     pub fn range(&self, from: &[u8], limit: usize) -> Vec<(&Key, u64, Option<Payload>)> {
         self.map
-            .range(from.to_vec()..)
+            .range::<[u8], _>(from..)
             .take(limit)
             .map(|(k, (s, v))| (k, *s, *v))
             .collect()
@@ -80,10 +97,14 @@ mod tests {
         Payload::from_bytes(bytes)
     }
 
+    fn k(bytes: &[u8]) -> Key {
+        Key::new(bytes)
+    }
+
     #[test]
     fn put_get() {
         let mut m = MemTable::new();
-        m.insert(b"a".to_vec(), 1, Some(p(b"va")));
+        m.insert(k(b"a"), 1, Some(p(b"va")));
         assert_eq!(m.get(b"a"), Some(Some(p(b"va"))));
         assert_eq!(m.get(b"b"), None);
     }
@@ -91,8 +112,8 @@ mod tests {
     #[test]
     fn newer_overwrites() {
         let mut m = MemTable::new();
-        m.insert(b"k".to_vec(), 1, Some(p(b"v1")));
-        m.insert(b"k".to_vec(), 2, Some(p(b"v2")));
+        m.insert(k(b"k"), 1, Some(p(b"v1")));
+        m.insert(k(b"k"), 2, Some(p(b"v2")));
         assert_eq!(m.get(b"k"), Some(Some(p(b"v2"))));
         assert_eq!(m.len(), 1);
     }
@@ -100,8 +121,8 @@ mod tests {
     #[test]
     fn tombstone_visible() {
         let mut m = MemTable::new();
-        m.insert(b"k".to_vec(), 1, Some(p(b"v")));
-        m.insert(b"k".to_vec(), 2, None);
+        m.insert(k(b"k"), 1, Some(p(b"v")));
+        m.insert(k(b"k"), 2, None);
         assert_eq!(m.get(b"k"), Some(None));
     }
 
@@ -110,16 +131,41 @@ mod tests {
         let mut m = MemTable::new();
         let before = m.approx_bytes();
         for i in 0..100u32 {
-            m.insert(i.to_be_bytes().to_vec(), i as u64, Some(Payload::fill(0, 100)));
+            m.insert(i.to_be_bytes().to_vec().into(), i as u64, Some(Payload::fill(0, 100)));
         }
         assert!(m.approx_bytes() > before + 100 * 100);
     }
 
     #[test]
+    fn overwrite_accounting_is_symmetric() {
+        // Regression (seed bug): every overwrite re-charged the key bytes
+        // and node overhead but credited only the replaced payload, so
+        // `approx_bytes` drifted up by `klen + overhead` per update and
+        // update-heavy workloads sealed memtables early.
+        let mut m = MemTable::new();
+        let key = b"user00000000000000000007";
+        m.insert(k(key), 1, Some(Payload::fill(1, 500)));
+        let one = m.approx_bytes();
+        assert_eq!(one, key.len() + KEY_OVERHEAD + 48 + 500);
+        for seq in 2..200u64 {
+            m.insert(k(key), seq, Some(Payload::fill(seq as u8, 500)));
+        }
+        assert_eq!(m.approx_bytes(), one, "overwrites must not leak budget");
+        // Value growth/shrink moves the budget by exactly the delta.
+        m.insert(k(key), 200, Some(Payload::fill(0, 700)));
+        assert_eq!(m.approx_bytes(), one + 200);
+        m.insert(k(key), 201, Some(Payload::fill(0, 100)));
+        assert_eq!(m.approx_bytes(), one - 400);
+        // Tombstone overwrite credits the payload.
+        m.insert(k(key), 202, None);
+        assert_eq!(m.approx_bytes(), one - 500);
+    }
+
+    #[test]
     fn into_entries_sorted() {
         let mut m = MemTable::new();
-        for k in [b"c".to_vec(), b"a".to_vec(), b"b".to_vec()] {
-            m.insert(k, 1, Some(p(b"v")));
+        for key in [b"c", b"a", b"b"] {
+            m.insert(k(key), 1, Some(p(b"v")));
         }
         let es = m.into_entries();
         let keys: Vec<&[u8]> = es.iter().map(|e| e.key.as_slice()).collect();
@@ -130,11 +176,11 @@ mod tests {
     fn range_scan() {
         let mut m = MemTable::new();
         for i in 0..10u8 {
-            m.insert(vec![i], 1, Some(Payload::fill(i, 1)));
+            m.insert(k(&[i]), 1, Some(Payload::fill(i, 1)));
         }
         let r = m.range(&[5], 3);
         assert_eq!(r.len(), 3);
-        assert_eq!(r[0].0, &vec![5u8]);
-        assert_eq!(r[2].0, &vec![7u8]);
+        assert_eq!(r[0].0.as_slice(), &[5u8]);
+        assert_eq!(r[2].0.as_slice(), &[7u8]);
     }
 }

@@ -8,13 +8,17 @@
 //! of that shape.
 //!
 //! Values are carried as synthetic [`Payload`]s (length + fingerprint)
-//! rather than materialized bytes — see [`crate::wire`]. All on-disk
-//! sizes and offsets are computed from logical lengths and are therefore
-//! byte-identical to an engine storing real values.
+//! rather than materialized bytes — see [`crate::wire`]. Keys are
+//! ref-counted interned [`KeyRef`]s backed by a per-clock-domain
+//! [`KeyArena`] (see [`key`]), and SST blocks/indexes store them
+//! restart-point prefix-compressed. All on-disk sizes and offsets are
+//! computed from logical lengths and are therefore byte-identical to an
+//! engine storing real values and full keys.
 
 pub mod block_cache;
 pub mod bloom;
 pub mod compaction;
+pub mod key;
 pub mod memtable;
 pub mod sst;
 pub mod version;
@@ -22,17 +26,22 @@ pub mod version;
 pub use block_cache::BlockCache;
 pub use bloom::Bloom;
 pub use compaction::merge_entries;
+pub use key::{
+    KeyArena, KeyArenaStats, KeyIndex, KeyRef, KEY_OVERHEAD, MIN_SHARED_PREFIX, RESTART_INTERVAL,
+};
 pub use memtable::MemTable;
 pub use sst::{BlockHandle, SstBuilder, SstMeta};
 pub use version::{CompactionPick, Version};
 
-pub use crate::wire::{EntryCursor, EntryRef, Payload, WireBuf};
+pub use crate::wire::{EntryCursor, EntryRef, KeyView, Payload, WireBuf};
 
 /// SSTable identifier (also the zenfs file id of the SST).
 pub type SstId = u64;
 
-/// User key bytes (24 B in the paper's workloads, but arbitrary here).
-pub type Key = Vec<u8>;
+/// User key (24 B in the paper's workloads, but arbitrary here): a
+/// ref-counted interned key — cloning shares one allocation per unique
+/// key instead of copying the bytes.
+pub type Key = KeyRef;
 
 /// A versioned KV entry. `value == None` is a tombstone.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -54,9 +63,10 @@ impl Entry {
 }
 
 impl EntryRef<'_> {
-    /// Owned copy of a borrowed decoded entry.
+    /// Owned copy of a borrowed decoded entry (one key allocation; intern
+    /// through a [`KeyArena`] instead where the key should be shared).
     pub fn to_entry(&self) -> Entry {
-        Entry { key: self.key.to_vec(), seq: self.seq, value: self.value }
+        Entry { key: KeyRef::from_view(self.key), seq: self.seq, value: self.value }
     }
 }
 
@@ -66,7 +76,7 @@ mod tests {
 
     #[test]
     fn entry_roundtrip() {
-        let e = Entry { key: b"user123".to_vec(), seq: 42, value: Some(Payload::fill(7, 100)) };
+        let e = Entry { key: Key::new(b"user123"), seq: 42, value: Some(Payload::fill(7, 100)) };
         let mut buf = WireBuf::new();
         e.encode_into(&mut buf);
         assert_eq!(buf.len(), e.encoded_len() as u64);
@@ -76,7 +86,7 @@ mod tests {
 
     #[test]
     fn tombstone_roundtrip() {
-        let e = Entry { key: b"k".to_vec(), seq: 1, value: None };
+        let e = Entry { key: Key::new(b"k"), seq: 1, value: None };
         let mut buf = WireBuf::new();
         e.encode_into(&mut buf);
         let d = buf.entries().next().unwrap();
@@ -88,7 +98,7 @@ mod tests {
         let mut buf = WireBuf::new();
         let entries: Vec<Entry> = (0..10)
             .map(|i| Entry {
-                key: format!("key{i:03}").into_bytes(),
+                key: format!("key{i:03}").into_bytes().into(),
                 seq: i,
                 value: Some(Payload::fill(i as u8, 8)),
             })
@@ -102,7 +112,7 @@ mod tests {
 
     #[test]
     fn truncated_decode_returns_none() {
-        let e = Entry { key: b"abc".to_vec(), seq: 3, value: Some(Payload::fill(1, 50)) };
+        let e = Entry { key: Key::new(b"abc"), seq: 3, value: Some(Payload::fill(1, 50)) };
         let mut buf = WireBuf::new();
         e.encode_into(&mut buf);
         let truncated = buf.slice_to_buf(0, buf.len() - 1);
@@ -113,9 +123,9 @@ mod tests {
     fn encoded_len_matches_seed_on_disk_format() {
         // The accounting invariant: logical size == the seed engine's
         // materialized `2 + 4 + 8 + klen + vlen` encoding.
-        let e = Entry { key: vec![0u8; 24], seq: 9, value: Some(Payload::fill(3, 1000)) };
+        let e = Entry { key: vec![0u8; 24].into(), seq: 9, value: Some(Payload::fill(3, 1000)) };
         assert_eq!(e.encoded_len(), 2 + 4 + 8 + 24 + 1000);
-        let t = Entry { key: vec![0u8; 24], seq: 9, value: None };
+        let t = Entry { key: vec![0u8; 24].into(), seq: 9, value: None };
         assert_eq!(t.encoded_len(), 2 + 4 + 8 + 24);
     }
 }

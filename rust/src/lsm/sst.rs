@@ -8,22 +8,29 @@
 //!
 //! All offsets and sizes are *logical* ([`WireBuf`] lengths) — identical
 //! to a materialized encoding — while the resident bytes are the compact
-//! physical form (headers + keys + padding only).
+//! physical form. Since the key-interning refactor that compact form is
+//! restart-point prefix-compressed (RocksDB block restarts, interval
+//! [`RESTART_INTERVAL`]): every 16th entry of a data block stores its
+//! full key, the rest store only the suffix after the restart key's
+//! shared prefix, and the in-memory index keeps truncated separators in a
+//! [`KeyIndex`]. Lookup behaviour is bit-identical to full-key storage —
+//! comparisons always see the exact reconstructed key — so the DES
+//! timeline (and the golden e2e digests) do not move.
 
 use std::sync::Arc;
 
 use crate::sim::rng::fingerprint32;
-use crate::wire::{EntryRef, WireBuf};
+use crate::wire::{EntryRef, KeyView, WireBuf, ENTRY_HEADER};
 
+use super::key::{common_prefix_len, KeyIndex, MIN_SHARED_PREFIX, RESTART_INTERVAL};
 use super::{Bloom, Entry, Key, Payload, SstId};
 
-/// Location of one data block inside the SST file.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// Location of one data block inside the SST file. The block's first key
+/// lives in the owning [`SstMeta`]'s prefix-compressed [`KeyIndex`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BlockHandle {
     pub offset: u64,
     pub len: u32,
-    /// First user key in the block (index entry).
-    pub first_key: Key,
 }
 
 /// In-memory metadata for one immutable SSTable.
@@ -37,6 +44,9 @@ pub struct SstMeta {
     pub file_size: u64,
     pub num_entries: u64,
     pub blocks: Vec<BlockHandle>,
+    /// First key of every block, prefix-compressed (one entry per
+    /// [`BlockHandle`], same order).
+    pub index: KeyIndex,
     pub bloom: Bloom,
     /// Virtual creation time (ns) — the "age" input of SST priorities (§3.4).
     pub created_at: u64,
@@ -44,18 +54,24 @@ pub struct SstMeta {
 
 impl SstMeta {
     /// Binary-search the index for the block that may contain `key`.
+    /// Exactly `partition_point(first_key <= key) - 1` over the full
+    /// first-keys (the truncated index reconstructs them losslessly).
     pub fn find_block(&self, key: &[u8]) -> Option<usize> {
         if self.blocks.is_empty() || key < self.smallest.as_slice() || key > self.largest.as_slice()
         {
             return None;
         }
-        // partition_point: first block whose first_key > key, minus one.
-        let idx = self.blocks.partition_point(|b| b.first_key.as_slice() <= key);
+        let idx = self.index.partition_point_leq(key);
         if idx == 0 {
             None
         } else {
             Some(idx - 1)
         }
+    }
+
+    /// First key of block `i` (zero-copy view into the index).
+    pub fn block_first_key(&self, i: usize) -> KeyView<'_> {
+        self.index.key(i)
     }
 
     /// Key-range overlap test (used for compaction input selection).
@@ -64,17 +80,29 @@ impl SstMeta {
     }
 }
 
-/// Builds the serialized form of one SST from sorted entries.
+/// Builds the serialized form of one SST from sorted entries, restart-point
+/// prefix-compressing both the data blocks and the first-key index.
 pub struct SstBuilder {
     block_size: u64,
     bits_per_key: u32,
     data: WireBuf,
     blocks: Vec<BlockHandle>,
+    index: KeyIndex,
     cur_block_start: u64,
-    cur_block_first: Option<Key>,
+    /// First key of the open block (empty = no open block).
+    cur_block_first: Vec<u8>,
+    cur_block_open: bool,
+    /// The running restart key (fully stored in `data`) and the logical
+    /// offset of its key bytes.
+    restart_key: Vec<u8>,
+    restart_key_log: u64,
+    since_restart: usize,
+    /// Reused contiguous materialization of the incoming key.
+    key_buf: Vec<u8>,
+    /// The previous key (order assertion + `largest`).
+    last_key: Vec<u8>,
     fps: Vec<u32>,
     smallest: Option<Key>,
-    largest: Option<Key>,
     num_entries: u64,
 }
 
@@ -85,7 +113,7 @@ impl SstBuilder {
 
     /// Pre-reserve the physical buffer. `data_capacity` is the expected
     /// *logical* output size; the physical form is far smaller (headers +
-    /// keys), so a small fraction is reserved.
+    /// key suffixes), so a small fraction is reserved.
     pub fn with_capacity(block_size: u64, bits_per_key: u32, data_capacity: u64) -> Self {
         let mut data = WireBuf::new();
         data.reserve_phys((data_capacity / 16) as usize);
@@ -94,36 +122,63 @@ impl SstBuilder {
             bits_per_key,
             data,
             blocks: Vec::new(),
+            index: KeyIndex::new(),
             cur_block_start: 0,
-            cur_block_first: None,
+            cur_block_first: Vec::new(),
+            cur_block_open: false,
+            restart_key: Vec::new(),
+            restart_key_log: 0,
+            since_restart: 0,
+            key_buf: Vec::new(),
+            last_key: Vec::new(),
             fps: Vec::new(),
             smallest: None,
-            largest: None,
             num_entries: 0,
         }
     }
 
     /// Append one entry (entries MUST arrive in sorted key order).
     pub fn add(&mut self, e: &Entry) {
-        self.add_parts(&e.key, e.seq, e.value);
+        self.add_parts(e.key.view(), e.seq, e.value);
     }
 
-    /// Append one entry from borrowed parts (the streaming-merge feed).
-    pub fn add_parts(&mut self, key: &[u8], seq: u64, value: Option<Payload>) {
+    /// Append one entry from a borrowed (possibly two-part) key — the
+    /// streaming-merge feed.
+    pub fn add_parts(&mut self, key: KeyView<'_>, seq: u64, value: Option<Payload>) {
+        key.copy_into(&mut self.key_buf);
         debug_assert!(
-            self.largest.as_ref().map_or(true, |l| l.as_slice() < key),
+            self.num_entries == 0 || self.last_key.as_slice() < self.key_buf.as_slice(),
             "entries must be added in strictly increasing key order"
         );
-        if self.cur_block_first.is_none() {
-            self.cur_block_first = Some(key.to_vec());
+        if !self.cur_block_open {
+            self.cur_block_open = true;
+            self.cur_block_first.clone_from(&self.key_buf);
             self.cur_block_start = self.data.len();
+            self.since_restart = 0; // every block starts at a restart
         }
-        self.data.push_entry(key, seq, value);
-        self.fps.push(fingerprint32(key));
+        if self.since_restart == 0 || self.since_restart >= RESTART_INTERVAL {
+            // Restart point: full key physically; later entries in the
+            // interval reference it.
+            self.restart_key_log = self.data.len() + ENTRY_HEADER as u64;
+            self.data.push_entry(&self.key_buf, seq, value);
+            self.restart_key.clone_from(&self.key_buf);
+            self.since_restart = 1;
+        } else {
+            // Elide only prefixes long enough to pay for their run
+            // metadata (see [`MIN_SHARED_PREFIX`]); shorter ones store
+            // the key whole, which push_entry_shared does at shared = 0.
+            let mut shared = common_prefix_len(&self.restart_key, &self.key_buf);
+            if shared < MIN_SHARED_PREFIX {
+                shared = 0;
+            }
+            self.data.push_entry_shared(&self.key_buf, shared, self.restart_key_log, seq, value);
+            self.since_restart += 1;
+        }
+        self.fps.push(fingerprint32(&self.key_buf));
         if self.smallest.is_none() {
-            self.smallest = Some(key.to_vec());
+            self.smallest = Some(Key::new(&self.key_buf));
         }
-        self.largest = Some(key.to_vec());
+        std::mem::swap(&mut self.last_key, &mut self.key_buf);
         self.num_entries += 1;
         if self.data.len() - self.cur_block_start >= self.block_size {
             self.seal_block();
@@ -131,12 +186,13 @@ impl SstBuilder {
     }
 
     fn seal_block(&mut self) {
-        if let Some(first) = self.cur_block_first.take() {
+        if self.cur_block_open {
+            self.cur_block_open = false;
             self.blocks.push(BlockHandle {
                 offset: self.cur_block_start,
                 len: (self.data.len() - self.cur_block_start) as u32,
-                first_key: first,
             });
+            self.index.push(&self.cur_block_first);
         }
     }
 
@@ -153,19 +209,23 @@ impl SstBuilder {
     pub fn finish(mut self, id: SstId, level: usize, created_at: u64) -> (SstMeta, WireBuf) {
         self.seal_block();
         let bloom = Bloom::build(&self.fps, self.bits_per_key);
-        // Serialize index + bloom after the data so the file size is honest.
+        // Serialize index + bloom after the data so the file size is
+        // honest. The serialized index charges the FULL first-key lengths
+        // (12 + klen per block): truncation is a resident-memory
+        // optimization, never a logical-size change.
         let index_bytes: usize =
-            self.blocks.iter().map(|b| 12 + b.first_key.len()).sum::<usize>() + 8;
+            (0..self.index.len()).map(|i| 12 + self.index.key_len(i)).sum::<usize>() + 8;
         let mut data = self.data;
         data.push_zeros(index_bytes + bloom.byte_len());
         let meta = SstMeta {
             id,
             level,
             smallest: self.smallest.unwrap_or_default(),
-            largest: self.largest.unwrap_or_default(),
+            largest: Key::new(&self.last_key),
             file_size: data.len(),
             num_entries: self.num_entries,
             blocks: self.blocks,
+            index: self.index,
             bloom,
             created_at,
         };
@@ -176,7 +236,7 @@ impl SstBuilder {
 /// Search a data block for `key`, returning a zero-copy entry view.
 pub fn search_block<'a>(block: &'a WireBuf, key: &[u8]) -> Option<EntryRef<'a>> {
     for e in block.entries() {
-        match e.key.cmp(key) {
+        match e.key.cmp_bytes(key) {
             std::cmp::Ordering::Equal => return Some(e),
             std::cmp::Ordering::Greater => return None, // sorted — passed it
             std::cmp::Ordering::Less => {}
@@ -215,7 +275,7 @@ mod tests {
     fn entries(n: u64) -> Vec<Entry> {
         (0..n)
             .map(|i| Entry {
-                key: format!("user{i:08}").into_bytes(),
+                key: format!("user{i:08}").into_bytes().into(),
                 seq: i,
                 value: Some(Payload::fill((i % 251) as u8, 100)),
             })
@@ -271,11 +331,30 @@ mod tests {
         assert_eq!(meta.file_size, data.len());
         let data_bytes: u64 = meta.blocks.iter().map(|b| b.len as u64).sum();
         assert!(meta.file_size > data_bytes, "index/bloom accounted");
+        // The serialized index charges FULL first-key lengths even though
+        // the resident index is truncated.
+        let index_logical: u64 = (0..meta.index.len())
+            .map(|i| 12 + meta.index.key_len(i) as u64)
+            .sum::<u64>()
+            + 8;
+        assert_eq!(meta.file_size, data_bytes + index_logical + meta.bloom.byte_len() as u64);
+    }
+
+    /// Long zero-padded keys (48 B) whose shared prefixes clear
+    /// [`MIN_SHARED_PREFIX`], so the builder actually elides them.
+    fn long_key_entries(n: u64) -> Vec<Entry> {
+        (0..n)
+            .map(|i| Entry {
+                key: format!("user{i:044}").into_bytes().into(),
+                seq: i,
+                value: Some(Payload::fill((i % 251) as u8, 100)),
+            })
+            .collect()
     }
 
     #[test]
-    fn physical_size_excludes_payload_bytes() {
-        let es = entries(1000);
+    fn physical_size_excludes_payload_and_shared_prefix_bytes() {
+        let es = long_key_entries(1000);
         let (_, data) = build_sst(&es, 1, 0, 4096, 10, 0);
         // 1000 entries × 100-byte values are logical-only.
         assert!(data.len() > 100 * 1000, "logical size counts values");
@@ -285,14 +364,89 @@ mod tests {
             data.phys_len(),
             data.len()
         );
+        // Restart-point compression: dense zero-padded 48-byte keys share
+        // ≥ MIN_SHARED_PREFIX bytes with their restart key, so resident
+        // key bytes must be well under entries × key_len (48 KB full).
+        let plain: usize = es.iter().map(|e| ENTRY_HEADER + e.key.len()).sum();
+        assert!(
+            data.phys_len() < plain - 20_000,
+            "shared key prefixes must be elided: phys={} full={plain}",
+            data.phys_len()
+        );
+        // Short (12-byte) keys stay whole: eliding under MIN_SHARED_PREFIX
+        // bytes would cost more run metadata than it saves.
+        let short = entries(200);
+        let (_, sdata) = build_sst(&short, 2, 0, 4096, 10, 0);
+        assert!(sdata.prefix_runs().is_empty(), "short keys must not be compressed");
+    }
+
+    #[test]
+    fn prefix_compressed_blocks_decode_like_plain_encoding() {
+        let es = long_key_entries(300);
+        let (meta, data) = build_sst(&es, 1, 0, 2048, 10, 0);
+        // Every block decodes to exactly its slice of the input, and a
+        // plain (uncompressed) re-encoding of those entries has the SAME
+        // logical length as the block.
+        let mut at = 0usize;
+        for h in &meta.blocks {
+            let block = block_of(&data, h);
+            let decoded = decode_block(&block);
+            let n = decoded.len();
+            assert_eq!(&decoded[..], &es[at..at + n], "block at {}", h.offset);
+            let mut plain = WireBuf::new();
+            for e in &decoded {
+                e.encode_into(&mut plain);
+            }
+            assert_eq!(plain.len(), h.len as u64, "logical block size unchanged");
+            assert!(plain.phys_len() >= block.phys_len(), "compression never grows");
+            at += n;
+        }
+        assert_eq!(at, es.len());
+    }
+
+    #[test]
+    fn truncated_separator_index_matches_full_key_partition() {
+        let es = entries(400);
+        let (meta, data) = build_sst(&es, 1, 0, 1024, 10, 0);
+        // Reference: the actual first key of every block, read back from
+        // the data itself.
+        let firsts: Vec<Vec<u8>> = meta
+            .blocks
+            .iter()
+            .map(|h| block_of(&data, h).entries().next().unwrap().key.to_vec())
+            .collect();
+        for (i, f) in firsts.iter().enumerate() {
+            assert_eq!(meta.block_first_key(i).to_vec(), *f, "index key {i}");
+        }
+        // Present keys, absent gap keys, and off-by-one probes must all
+        // select the same block as a full-first-key partition would.
+        let mut probes: Vec<Vec<u8>> = es.iter().map(|e| e.key.to_vec()).collect();
+        for i in 0..400u64 {
+            probes.push(format!("user{:08}x", i).into_bytes());
+            probes.push(format!("user{:07}", i).into_bytes());
+        }
+        for p in &probes {
+            let want = if meta.blocks.is_empty()
+                || p.as_slice() < meta.smallest.as_slice()
+                || p.as_slice() > meta.largest.as_slice()
+            {
+                None
+            } else {
+                match firsts.partition_point(|f| f.as_slice() <= p.as_slice()) {
+                    0 => None,
+                    i => Some(i - 1),
+                }
+            };
+            assert_eq!(meta.find_block(p), want, "probe {:?}", String::from_utf8_lossy(p));
+        }
     }
 
     #[test]
     fn smallest_largest_and_overlap() {
         let es = entries(100);
         let (meta, _) = build_sst(&es, 1, 2, 4096, 10, 0);
-        assert_eq!(meta.smallest, b"user00000000".to_vec());
-        assert_eq!(meta.largest, b"user00000099".to_vec());
+        assert_eq!(meta.smallest.as_slice(), b"user00000000");
+        assert_eq!(meta.largest.as_slice(), b"user00000099");
         assert!(meta.overlaps(b"user00000050", b"user00000060"));
         assert!(meta.overlaps(b"user", b"user00000000"));
         assert!(!meta.overlaps(b"v", b"w"));

@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use super::{SstId, SstMeta};
+use super::{Key, SstId, SstMeta};
 
 /// A picked compaction: inputs from `level`, overlapping inputs from
 /// `level + 1`, outputs go to `level + 1`.
@@ -41,8 +41,10 @@ pub struct Version {
     l0_target: u64,
     level_multiplier: u64,
     l0_compaction_trigger: usize,
-    /// Round-robin compaction cursor per level (RocksDB-style).
-    cursors: Vec<Vec<u8>>,
+    /// Round-robin compaction cursor per level (RocksDB-style). Interned
+    /// keys: advancing the cursor shares the picked SST's `largest`
+    /// allocation instead of copying it.
+    cursors: Vec<Key>,
 }
 
 impl Version {
@@ -52,7 +54,7 @@ impl Version {
             l0_target,
             level_multiplier,
             l0_compaction_trigger: l0_trigger,
-            cursors: vec![Vec::new(); num_levels],
+            cursors: vec![Key::default(); num_levels],
         }
     }
 
@@ -275,7 +277,7 @@ mod tests {
     fn sst(id: SstId, level: usize, lo: u64, hi: u64) -> Arc<SstMeta> {
         let entries: Vec<Entry> = (lo..=hi)
             .map(|i| Entry {
-                key: format!("user{i:08}").into_bytes(),
+                key: format!("user{i:08}").into_bytes().into(),
                 seq: id * 1000 + i,
                 value: Some(crate::lsm::Payload::fill(0, 16)),
             })
@@ -377,7 +379,7 @@ mod tests {
         // Two oversized L1 files (target 1 MiB; each file has big values).
         let big: Vec<Entry> = (0..3000u64)
             .map(|i| Entry {
-                key: format!("user{i:08}").into_bytes(),
+                key: format!("user{i:08}").into_bytes().into(),
                 seq: i,
                 value: Some(crate::lsm::Payload::fill(0, 400)),
             })
@@ -401,7 +403,7 @@ mod tests {
         let mut v = version();
         let big: Vec<Entry> = (0..3000u64)
             .map(|i| Entry {
-                key: format!("user{i:08}").into_bytes(),
+                key: format!("user{i:08}").into_bytes().into(),
                 seq: i,
                 value: Some(crate::lsm::Payload::fill(0, 400)),
             })
@@ -413,7 +415,7 @@ mod tests {
         // An L2 file overlapping file 1's range, currently busy.
         let l2: Vec<Entry> = (0..1000u64)
             .map(|i| Entry {
-                key: format!("user{i:08}").into_bytes(),
+                key: format!("user{i:08}").into_bytes().into(),
                 seq: 10_000 + i,
                 value: Some(crate::lsm::Payload::fill(0, 16)),
             })
@@ -437,7 +439,7 @@ mod tests {
         let mut v = version();
         let big: Vec<Entry> = (0..3000u64)
             .map(|i| Entry {
-                key: format!("user{i:08}").into_bytes(),
+                key: format!("user{i:08}").into_bytes().into(),
                 seq: i,
                 value: Some(crate::lsm::Payload::fill(0, 400)),
             })

@@ -92,6 +92,12 @@ pub struct Metrics {
     pub compactions: u64,
     pub compaction_read_bytes: u64,
     pub compaction_write_bytes: u64,
+    /// Resident interned-key bytes (unique key bytes + per-key overhead)
+    /// of the engine's key arena at phase end. A *gauge*, not a counter —
+    /// and a domain-level one: shards of one frontend share ONE arena and
+    /// each stamps the same value, so the merge takes the max instead of
+    /// summing duplicates.
+    pub key_arena_bytes: u64,
     /// Start/end of run (virtual).
     pub start_ns: Ns,
     pub finished_at: Ns,
@@ -213,6 +219,9 @@ impl Metrics {
         self.compactions += other.compactions;
         self.compaction_read_bytes += other.compaction_read_bytes;
         self.compaction_write_bytes += other.compaction_write_bytes;
+        // Domain gauge: engines sharing one arena stamp the same value;
+        // max (not sum) keeps the merged number the domain's residency.
+        self.key_arena_bytes = self.key_arena_bytes.max(other.key_arena_bytes);
         // Shards run on one shared clock (the async frontend), so per-shard
         // windows coincide; taking the envelope also keeps the merge
         // correct for runs recorded on separate clocks.

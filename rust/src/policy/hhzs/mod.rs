@@ -374,7 +374,7 @@ mod tests {
             let lo = i as u64 * 1000;
             let entries: Vec<Entry> = (lo..lo + 10)
                 .map(|k| Entry {
-                    key: format!("user{k:012}").into_bytes(),
+                    key: format!("user{k:012}").into_bytes().into(),
                     seq: k,
                     value: Some(crate::lsm::Payload::fill(0, 64)),
                 })

@@ -93,24 +93,29 @@ impl ShardedEngine {
                 e
             })
             .collect();
-        // One physical device pair, one clock domain, and ONE background
-        // thread pool for the whole system: every shard's zoned devices
-        // charge the SAME per-device FIFO server, all engines draw event
-        // sequence numbers from shard 0's counter, and all engines take
-        // flush/compaction slots from shard 0's CPU pool — `bg_threads`
-        // is a global budget, not a per-shard one (a 4-shard run used to
-        // simulate 4 × 12 phantom threads). With one shard all three are
-        // the identity.
+        // One physical device pair, one clock domain, ONE background
+        // thread pool, and ONE interned-key arena for the whole system:
+        // every shard's zoned devices charge the SAME per-device FIFO
+        // server, all engines draw event sequence numbers from shard 0's
+        // counter, all engines take flush/compaction slots from shard 0's
+        // CPU pool — `bg_threads` is a global budget, not a per-shard one
+        // (a 4-shard run used to simulate 4 × 12 phantom threads) — and
+        // all engines intern keys into shard 0's arena, so the router and
+        // every shard hash/compare the same shared key bytes and a unique
+        // key costs its bytes once across the domain. With one shard all
+        // four are the identity.
         let event_seq = engines[0].event_seq_handle();
         let ssd_timer = engines[0].fs.ssd.timer.clone();
         let hdd_timer = engines[0].fs.hdd.timer.clone();
         let cpu = engines[0].cpu_pool_handle();
+        let arena = engines[0].key_arena_handle();
         cpu.borrow_mut().configure(engines.len(), cfg.lsm.cpu_sched);
         for (s, e) in engines.iter_mut().enumerate().skip(1) {
             e.fs.ssd.set_timer(ssd_timer.clone());
             e.fs.hdd.set_timer(hdd_timer.clone());
             e.share_event_seq(event_seq.clone());
             e.share_cpu_pool(cpu.clone(), s);
+            e.share_key_arena(arena.clone());
         }
         ShardedEngine {
             engines,

@@ -1,6 +1,7 @@
 //! Zero-materialization wire buffers — the data-plane representation that
 //! makes simulator cost proportional to *entry count* instead of payload
-//! bytes.
+//! bytes, and (since the key-interning refactor) proportional to *suffix
+//! bytes* instead of full key bytes inside prefix-compressed blocks.
 //!
 //! A [`WireBuf`] is a byte string with two lengths:
 //!
@@ -10,9 +11,11 @@
 //!   from logical lengths, so the whole DES behaves bit-identically to an
 //!   engine that stores real payload bytes;
 //! * a **physical** length — what is actually resident in RAM. Entry
-//!   headers and keys are stored physically; value payloads are carried as
-//!   [`SynthRun`]s (logical length + 32-bit content fingerprint) occupying
-//!   zero physical bytes.
+//!   headers and key *suffixes* are stored physically; value payloads are
+//!   carried as [`SynthRun`]s (logical length + 32-bit content
+//!   fingerprint) occupying zero physical bytes, and restart-point shared
+//!   key prefixes are carried as [`PrefixRun`]s that point back at the
+//!   restart key's bytes elsewhere in the same buffer.
 //!
 //! The logical layout of one encoded entry is byte-compatible with the
 //! seed engine's on-disk format:
@@ -22,14 +25,19 @@
 //! ```
 //!
 //! where `vlen == u32::MAX` marks a tombstone. Physically the value bytes
-//! are elided; their identity survives as the run's fingerprint, so
-//! decode returns the exact [`Payload`] that was written (WAL replay, SST
-//! reads, and SSD-cache round trips are loss-free).
+//! are elided (identity survives as the run's fingerprint) and, for
+//! entries pushed with [`WireBuf::push_entry_shared`], the first `shared`
+//! key bytes are elided too — they are recovered from the restart key the
+//! run references, so decode returns the exact key that was written.
+//! Decoded keys are [`KeyView`]s: a zero-copy two-part borrow
+//! (shared-prefix slice + suffix slice) comparing exactly like the
+//! contiguous key.
 //!
 //! Buffers can be sliced at *arbitrary* logical offsets (zenfs splits
-//! files at HDD zone-capacity boundaries that may fall inside a value):
-//! a run is then split into partial runs that each carry the full value's
-//! fingerprint, and decoding re-assembles them transparently.
+//! files at HDD zone-capacity boundaries that may fall inside a value or
+//! a shared prefix): runs are split into partial runs and re-assembled
+//! transparently on concatenation; a slice that severs a prefix run from
+//! its restart key simply stops decoding (the truncation contract).
 
 use crate::sim::rng::fingerprint32;
 
@@ -87,12 +95,140 @@ pub struct SynthRun {
     synth_before: u64,
 }
 
+/// One elided shared-key-prefix run: `len` logical key bytes at `log_off`
+/// that are not stored physically — they are the bytes at logical offset
+/// `src_log` (the restart key's prefix) of the SAME buffer. `src_log` is
+/// signed: slicing can strand a run after its source, leaving a negative
+/// (undecodable until re-joined) reference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrefixRun {
+    pub log_off: u64,
+    pub len: u32,
+    pub src_log: i64,
+    /// Prefix-elided bytes in all earlier prefix runs.
+    elided_before: u64,
+}
+
+/// A zero-copy decoded key: the restart key's shared prefix plus this
+/// entry's stored suffix, borrowed from the buffer. Compares exactly
+/// like the contiguous `prefix ++ suffix` byte string (equal views hash
+/// equal, but the hash is NOT interchangeable with `<[u8] as Hash>` —
+/// materialize through [`crate::lsm::KeyRef`] for byte-keyed maps); a
+/// non-compressed key is simply `(empty, full)`.
+#[derive(Clone, Copy)]
+pub struct KeyView<'a> {
+    pre: &'a [u8],
+    suf: &'a [u8],
+}
+
+impl<'a> KeyView<'a> {
+    pub fn new(pre: &'a [u8], suf: &'a [u8]) -> KeyView<'a> {
+        KeyView { pre, suf }
+    }
+
+    pub fn from_slice(s: &'a [u8]) -> KeyView<'a> {
+        KeyView { pre: &[], suf: s }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pre.len() + self.suf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The key bytes, in order.
+    pub fn bytes(&self) -> impl Iterator<Item = u8> + 'a {
+        self.pre.iter().chain(self.suf.iter()).copied()
+    }
+
+    pub fn to_vec(&self) -> Vec<u8> {
+        let mut v = Vec::with_capacity(self.len());
+        v.extend_from_slice(self.pre);
+        v.extend_from_slice(self.suf);
+        v
+    }
+
+    /// Overwrite `out` with this key's bytes (reused-buffer form).
+    pub fn copy_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.extend_from_slice(self.pre);
+        out.extend_from_slice(self.suf);
+    }
+
+    /// Lexicographic comparison against a contiguous key (the chunked
+    /// slice-compare loop of [`Ord`] — one code path for all orderings).
+    pub fn cmp_bytes(&self, other: &[u8]) -> std::cmp::Ordering {
+        self.cmp(&KeyView::from_slice(other))
+    }
+
+    pub fn eq_bytes(&self, other: &[u8]) -> bool {
+        self.len() == other.len() && self.cmp_bytes(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl PartialEq for KeyView<'_> {
+    fn eq(&self, other: &KeyView<'_>) -> bool {
+        self.len() == other.len() && self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for KeyView<'_> {}
+
+impl PartialOrd for KeyView<'_> {
+    fn partial_cmp(&self, other: &KeyView<'_>) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for KeyView<'_> {
+    /// Lexicographic over the concatenated segments, comparing aligned
+    /// chunks with slice (memcmp) compares.
+    fn cmp(&self, other: &KeyView<'_>) -> std::cmp::Ordering {
+        let (mut a0, mut a1) = (self.pre, self.suf);
+        let (mut b0, mut b1) = (other.pre, other.suf);
+        loop {
+            if a0.is_empty() {
+                a0 = std::mem::take(&mut a1);
+            }
+            if b0.is_empty() {
+                b0 = std::mem::take(&mut b1);
+            }
+            if a0.is_empty() || b0.is_empty() {
+                // One side exhausted: the longer remainder is greater.
+                return (a0.len() + a1.len()).cmp(&(b0.len() + b1.len()));
+            }
+            let n = a0.len().min(b0.len());
+            match a0[..n].cmp(&b0[..n]) {
+                std::cmp::Ordering::Equal => {
+                    a0 = &a0[n..];
+                    b0 = &b0[n..];
+                }
+                ord => return ord,
+            }
+        }
+    }
+}
+
+impl std::hash::Hash for KeyView<'_> {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        for b in self.bytes() {
+            state.write_u8(b);
+        }
+    }
+}
+
+impl std::fmt::Debug for KeyView<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KeyView({:?})", String::from_utf8_lossy(&self.to_vec()))
+    }
+}
+
 /// A decoded entry borrowing its key from the buffer it was decoded from
 /// (the zero-copy view used by point lookups, scans, and the streaming
 /// compaction merge).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct EntryRef<'a> {
-    pub key: &'a [u8],
+    pub key: KeyView<'a>,
     pub seq: u64,
     /// `None` is a tombstone.
     pub value: Option<Payload>,
@@ -106,25 +242,33 @@ impl EntryRef<'_> {
 }
 
 /// Raw decode result carrying buffer positions instead of borrows (used by
-/// cursors that own their buffer, e.g. the compaction block streams).
+/// cursors that own their buffer, e.g. the compaction block streams). The
+/// key is two physical ranges: the (possibly empty) shared prefix at the
+/// restart key, and the stored suffix.
 #[derive(Clone, Copy, Debug)]
 pub(crate) struct RawEntry {
-    pub key_off: usize,
-    pub key_len: usize,
+    pub pre_off: usize,
+    pub pre_len: usize,
+    pub suf_off: usize,
+    pub suf_len: usize,
     pub seq: u64,
     pub value: Option<Payload>,
     pub next_log: u64,
     pub next_phys: usize,
     pub next_run: usize,
+    pub next_prun: usize,
 }
 
 /// The zero-materialization byte buffer. See the module docs.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct WireBuf {
     phys: Vec<u8>,
-    /// Synthetic runs sorted by `log_off`; runs never overlap and always
-    /// lie inside the value region of exactly one encoded entry.
+    /// Synthetic (value) runs sorted by `log_off`; runs never overlap and
+    /// always lie inside the value region of exactly one encoded entry.
     runs: Vec<SynthRun>,
+    /// Elided shared-key-prefix runs sorted by `log_off`; each lies at the
+    /// start of exactly one encoded entry's key region.
+    prefix_runs: Vec<PrefixRun>,
     log_len: u64,
 }
 
@@ -135,7 +279,12 @@ impl WireBuf {
 
     /// A buffer of real bytes only (no synthetic runs).
     pub fn from_bytes(bytes: &[u8]) -> WireBuf {
-        WireBuf { phys: bytes.to_vec(), runs: Vec::new(), log_len: bytes.len() as u64 }
+        WireBuf {
+            phys: bytes.to_vec(),
+            runs: Vec::new(),
+            prefix_runs: Vec::new(),
+            log_len: bytes.len() as u64,
+        }
     }
 
     /// Logical length — the materialized encoding's byte count.
@@ -147,7 +296,7 @@ impl WireBuf {
         self.log_len == 0
     }
 
-    /// Physically resident bytes (headers + keys + padding).
+    /// Physically resident bytes (headers + key suffixes + padding).
     pub fn phys_len(&self) -> usize {
         self.phys.len()
     }
@@ -161,9 +310,14 @@ impl WireBuf {
         &self.runs
     }
 
+    pub fn prefix_runs(&self) -> &[PrefixRun] {
+        &self.prefix_runs
+    }
+
     pub fn clear(&mut self) {
         self.phys.clear();
         self.runs.clear();
+        self.prefix_runs.clear();
         self.log_len = 0;
     }
 
@@ -173,6 +327,10 @@ impl WireBuf {
 
     fn total_synth(&self) -> u64 {
         self.runs.last().map_or(0, |r| r.synth_before + r.len as u64)
+    }
+
+    fn total_elided(&self) -> u64 {
+        self.prefix_runs.last().map_or(0, |r| r.elided_before + r.len as u64)
     }
 
     /// Append real bytes.
@@ -203,10 +361,9 @@ impl WireBuf {
         self.log_len += p.len as u64;
     }
 
-    /// Append one encoded entry (header + key physically, value as a run).
-    pub fn push_entry(&mut self, key: &[u8], seq: u64, value: Option<Payload>) {
+    fn push_header(&mut self, klen: usize, seq: u64, value: Option<Payload>) {
         let mut hdr = [0u8; ENTRY_HEADER];
-        hdr[0..2].copy_from_slice(&(key.len() as u16).to_le_bytes());
+        hdr[0..2].copy_from_slice(&(klen as u16).to_le_bytes());
         let vlen = match value {
             Some(p) => p.len,
             None => u32::MAX,
@@ -214,14 +371,54 @@ impl WireBuf {
         hdr[2..6].copy_from_slice(&vlen.to_le_bytes());
         hdr[6..14].copy_from_slice(&seq.to_le_bytes());
         self.push_bytes(&hdr);
+    }
+
+    /// Append one encoded entry (header + full key physically, value as a
+    /// run).
+    pub fn push_entry(&mut self, key: &[u8], seq: u64, value: Option<Payload>) {
+        self.push_header(key.len(), seq, value);
         self.push_bytes(key);
         if let Some(p) = value {
             self.push_payload(p);
         }
     }
 
+    /// Append one encoded entry whose first `shared` key bytes equal the
+    /// bytes at logical offset `src_log` of THIS buffer (the restart key
+    /// of the running interval, which must be stored fully physically).
+    /// Logical layout and length are identical to [`WireBuf::push_entry`];
+    /// physically only the suffix after `shared` lands in RAM.
+    pub fn push_entry_shared(
+        &mut self,
+        key: &[u8],
+        shared: usize,
+        src_log: u64,
+        seq: u64,
+        value: Option<Payload>,
+    ) {
+        debug_assert!(shared <= key.len());
+        debug_assert!(src_log + shared as u64 <= self.log_len, "source must precede the entry");
+        if shared == 0 {
+            self.push_entry(key, seq, value);
+            return;
+        }
+        self.push_header(key.len(), seq, value);
+        let elided_before = self.total_elided();
+        self.prefix_runs.push(PrefixRun {
+            log_off: self.log_len,
+            len: shared as u32,
+            src_log: src_log as i64,
+            elided_before,
+        });
+        self.log_len += shared as u64;
+        self.push_bytes(&key[shared..]);
+        if let Some(p) = value {
+            self.push_payload(p);
+        }
+    }
+
     /// Physical offset of logical position `log`. Positions strictly
-    /// inside a synthetic run map to the run's physical start.
+    /// inside a synthetic or prefix run map to the run's physical start.
     fn phys_of(&self, log: u64) -> usize {
         let idx = self.runs.partition_point(|r| r.log_off < log);
         let synth = if idx == 0 {
@@ -230,12 +427,21 @@ impl WireBuf {
             let r = &self.runs[idx - 1];
             r.synth_before + (r.len as u64).min(log - r.log_off)
         };
-        (log - synth) as usize
+        let pidx = self.prefix_runs.partition_point(|r| r.log_off < log);
+        let elided = if pidx == 0 {
+            0
+        } else {
+            let r = &self.prefix_runs[pidx - 1];
+            r.elided_before + (r.len as u64).min(log - r.log_off)
+        };
+        (log - synth - elided) as usize
     }
 
     /// Copy out the logical range `[off, off + len)` as an owned buffer.
-    /// Slicing may split a synthetic run; each part keeps the full value's
-    /// fingerprint, and decoding re-joins adjacent parts.
+    /// Slicing may split runs; each synthetic part keeps the full value's
+    /// fingerprint, each prefix part keeps a source reference to its own
+    /// first byte (possibly negative when the source falls before the
+    /// slice), and decoding re-joins adjacent parts.
     pub fn slice_to_buf(&self, off: u64, len: u64) -> WireBuf {
         let end = off + len;
         assert!(end <= self.log_len, "slice [{off}, {end}) outside len {}", self.log_len);
@@ -258,13 +464,32 @@ impl WireBuf {
             });
             synth_acc += e - s;
         }
-        WireBuf { phys: self.phys[ps..pe].to_vec(), runs, log_len: len }
+        let pfirst = self.prefix_runs.partition_point(|r| r.log_off + r.len as u64 <= off);
+        let mut prefix_runs = Vec::new();
+        let mut elided_acc = 0u64;
+        for r in &self.prefix_runs[pfirst..] {
+            if r.log_off >= end {
+                break;
+            }
+            let s = r.log_off.max(off);
+            let e = (r.log_off + r.len as u64).min(end);
+            prefix_runs.push(PrefixRun {
+                log_off: s - off,
+                len: (e - s) as u32,
+                // Source of the part's FIRST byte, rebased to slice coords.
+                src_log: r.src_log + (s - r.log_off) as i64 - off as i64,
+                elided_before: elided_acc,
+            });
+            elided_acc += e - s;
+        }
+        WireBuf { phys: self.phys[ps..pe].to_vec(), runs, prefix_runs, log_len: len }
     }
 
     /// Append another buffer's content (logical concatenation).
     pub fn append_buf(&mut self, other: &WireBuf) {
         let base_log = self.log_len;
         let base_synth = self.total_synth();
+        let base_elided = self.total_elided();
         self.phys.extend_from_slice(&other.phys);
         for r in &other.runs {
             self.runs.push(SynthRun {
@@ -274,25 +499,78 @@ impl WireBuf {
                 synth_before: base_synth + r.synth_before,
             });
         }
+        for r in &other.prefix_runs {
+            self.prefix_runs.push(PrefixRun {
+                log_off: base_log + r.log_off,
+                len: r.len,
+                src_log: r.src_log + base_log as i64,
+                elided_before: base_elided + r.elided_before,
+            });
+        }
         self.log_len += other.log_len;
     }
 
     /// Decode the entry at the given cursor positions. Returns `None` at
     /// end-of-buffer or on truncation/malformation (mirrors the seed
-    /// decoder's truncation semantics).
-    pub(crate) fn decode_entry_raw(&self, log: u64, phys: usize, run: usize) -> Option<RawEntry> {
+    /// decoder's truncation semantics; a prefix run severed from its
+    /// restart key counts as truncation).
+    pub(crate) fn decode_entry_raw(
+        &self,
+        log: u64,
+        phys: usize,
+        run: usize,
+        prun: usize,
+    ) -> Option<RawEntry> {
         if log >= self.log_len || phys + ENTRY_HEADER > self.phys.len() {
             return None;
         }
         let klen = u16::from_le_bytes(self.phys[phys..phys + 2].try_into().unwrap()) as usize;
         let vlen_raw = u32::from_le_bytes(self.phys[phys + 2..phys + 6].try_into().unwrap());
         let seq = u64::from_le_bytes(self.phys[phys + 6..phys + 14].try_into().unwrap());
-        let key_off = phys + ENTRY_HEADER;
-        if key_off + klen > self.phys.len() {
+        let key_log = log + ENTRY_HEADER as u64;
+        // Collect the (contiguous) elided prefix of this key, if any.
+        let mut next_prun = prun;
+        let mut shared = 0usize;
+        let mut src_start: i64 = 0;
+        while let Some(r) = self.prefix_runs.get(next_prun) {
+            if r.log_off != key_log + shared as u64 || shared >= klen {
+                break;
+            }
+            if shared == 0 {
+                src_start = r.src_log;
+            } else if r.src_log != src_start + shared as i64 {
+                return None; // parts of one prefix must share one source
+            }
+            shared += r.len as usize;
+            next_prun += 1;
+        }
+        if shared > klen {
             return None;
         }
-        let mut next_log = log + (ENTRY_HEADER + klen) as u64;
-        let next_phys = key_off + klen;
+        let (pre_off, pre_len) = if shared > 0 {
+            if src_start < 0 {
+                return None; // source severed by slicing
+            }
+            let src = src_start as u64;
+            if src + shared as u64 > self.log_len {
+                return None;
+            }
+            let sp = self.phys_of(src);
+            let se = self.phys_of(src + shared as u64);
+            if se - sp != shared || se > self.phys.len() {
+                return None; // source region not fully physical
+            }
+            (sp, shared)
+        } else {
+            (0, 0)
+        };
+        let suf_len = klen - shared;
+        let suf_off = phys + ENTRY_HEADER;
+        if suf_off + suf_len > self.phys.len() {
+            return None;
+        }
+        let mut next_log = key_log + klen as u64;
+        let next_phys = suf_off + suf_len;
         let mut next_run = run;
         let value = if vlen_raw == u32::MAX {
             None
@@ -320,16 +598,37 @@ impl WireBuf {
         if next_log > self.log_len {
             return None;
         }
-        Some(RawEntry { key_off, key_len: klen, seq, value, next_log, next_phys, next_run })
+        Some(RawEntry {
+            pre_off,
+            pre_len,
+            suf_off,
+            suf_len,
+            seq,
+            value,
+            next_log,
+            next_phys,
+            next_run,
+            next_prun,
+        })
     }
 
-    pub(crate) fn key_at(&self, key_off: usize, key_len: usize) -> &[u8] {
-        &self.phys[key_off..key_off + key_len]
+    /// The two-part borrowed key of a decoded entry.
+    pub(crate) fn key_view_at(
+        &self,
+        pre_off: usize,
+        pre_len: usize,
+        suf_off: usize,
+        suf_len: usize,
+    ) -> KeyView<'_> {
+        KeyView::new(
+            &self.phys[pre_off..pre_off + pre_len],
+            &self.phys[suf_off..suf_off + suf_len],
+        )
     }
 
     /// Iterate the encoded entries (zero-copy keys).
     pub fn entries(&self) -> EntryCursor<'_> {
-        EntryCursor { buf: self, log: 0, phys: 0, run: 0 }
+        EntryCursor { buf: self, log: 0, phys: 0, run: 0, prun: 0 }
     }
 }
 
@@ -339,18 +638,20 @@ pub struct EntryCursor<'a> {
     log: u64,
     phys: usize,
     run: usize,
+    prun: usize,
 }
 
 impl<'a> Iterator for EntryCursor<'a> {
     type Item = EntryRef<'a>;
 
     fn next(&mut self) -> Option<EntryRef<'a>> {
-        let raw = self.buf.decode_entry_raw(self.log, self.phys, self.run)?;
+        let raw = self.buf.decode_entry_raw(self.log, self.phys, self.run, self.prun)?;
         self.log = raw.next_log;
         self.phys = raw.next_phys;
         self.run = raw.next_run;
+        self.prun = raw.next_prun;
         Some(EntryRef {
-            key: self.buf.key_at(raw.key_off, raw.key_len),
+            key: self.buf.key_view_at(raw.pre_off, raw.pre_len, raw.suf_off, raw.suf_len),
             seq: raw.seq,
             value: raw.value,
         })
@@ -370,7 +671,7 @@ mod tests {
         // Physically only header + key are resident.
         assert_eq!(b.phys_len(), 14 + 7);
         let e = b.entries().next().unwrap();
-        assert_eq!(e.key, b"user123");
+        assert_eq!(e.key.to_vec(), b"user123");
         assert_eq!(e.seq, 42);
         assert_eq!(e.value, Some(Payload::fill(7, 100)));
         assert_eq!(e.encoded_len() as u64, b.len());
@@ -399,7 +700,7 @@ mod tests {
         let decoded: Vec<_> = b.entries().collect();
         assert_eq!(decoded.len(), 50);
         for (i, e) in decoded.iter().enumerate() {
-            assert_eq!(e.key, format!("key{i:03}").as_bytes());
+            assert_eq!(e.key.to_vec(), format!("key{i:03}").as_bytes());
             assert_eq!(e.seq, i as u64);
             assert_eq!(e.value, Some(payloads[i]));
         }
@@ -441,6 +742,84 @@ mod tests {
                 joined.entries().map(|e| (e.key.to_vec(), e.seq, e.value)).collect();
             assert_eq!(got, want, "lossy split at {cut}");
         }
+    }
+
+    /// A restart-compressed stretch: entry 0 is the restart (full key),
+    /// entries 1.. share its prefix via `push_entry_shared`.
+    fn prefixed_buf() -> (WireBuf, Vec<(Vec<u8>, u64, Option<Payload>)>) {
+        let keys: Vec<Vec<u8>> = (0..8u64)
+            .map(|i| format!("user00000000{i:03}").into_bytes())
+            .collect();
+        let mut b = WireBuf::new();
+        let mut want = Vec::new();
+        let mut restart_log = 0u64;
+        for (i, k) in keys.iter().enumerate() {
+            let v = if i % 3 == 2 { None } else { Some(Payload::fill(i as u8, 29)) };
+            if i == 0 {
+                restart_log = b.len() + ENTRY_HEADER as u64;
+                b.push_entry(k, i as u64, v);
+            } else {
+                let shared = k.len() - 3; // "user00000000" + distinct tail
+                b.push_entry_shared(k, shared, restart_log, i as u64, v);
+            }
+            want.push((k.clone(), i as u64, v));
+        }
+        (b, want)
+    }
+
+    #[test]
+    fn shared_prefix_entries_decode_exactly_and_compactly() {
+        let (b, want) = prefixed_buf();
+        let got: Vec<(Vec<u8>, u64, Option<Payload>)> =
+            b.entries().map(|e| (e.key.to_vec(), e.seq, e.value)).collect();
+        assert_eq!(got, want);
+        // Logical length equals the uncompressed encoding's...
+        let mut plain = WireBuf::new();
+        for (k, s, v) in &want {
+            plain.push_entry(k, *s, *v);
+        }
+        assert_eq!(b.len(), plain.len(), "prefix elision must not change logical size");
+        // ...while the physical form drops the shared prefixes.
+        let elided: usize = (want.len() - 1) * (want[0].0.len() - 3);
+        assert_eq!(b.phys_len() + elided, plain.phys_len());
+    }
+
+    #[test]
+    fn shared_prefix_split_and_reassembly_is_lossless() {
+        let (b, want) = prefixed_buf();
+        for cut in 0..=b.len() {
+            let mut joined = b.slice_to_buf(0, cut);
+            joined.append_buf(&b.slice_to_buf(cut, b.len() - cut));
+            assert_eq!(joined.len(), b.len());
+            let got: Vec<(Vec<u8>, u64, Option<Payload>)> =
+                joined.entries().map(|e| (e.key.to_vec(), e.seq, e.value)).collect();
+            assert_eq!(got, want, "lossy split at {cut}");
+        }
+    }
+
+    #[test]
+    fn severed_prefix_source_stops_decoding() {
+        let (b, want) = prefixed_buf();
+        // A slice starting at the second entry keeps its prefix run but
+        // not the restart key it points at: decode must stop, not invent
+        // key bytes.
+        let second = (ENTRY_HEADER + want[0].0.len() + 29) as u64;
+        let tail = b.slice_to_buf(second, b.len() - second);
+        assert_eq!(tail.entries().count(), 0);
+    }
+
+    #[test]
+    fn key_view_orders_like_contiguous_bytes() {
+        let v = KeyView::new(b"user00", b"42");
+        assert_eq!(v.len(), 8);
+        assert_eq!(v.to_vec(), b"user0042");
+        assert_eq!(v.cmp_bytes(b"user0042"), std::cmp::Ordering::Equal);
+        assert!(v.eq_bytes(b"user0042"));
+        assert_eq!(v.cmp_bytes(b"user0041"), std::cmp::Ordering::Greater);
+        assert_eq!(v.cmp_bytes(b"user00421"), std::cmp::Ordering::Less);
+        assert_eq!(v, KeyView::from_slice(b"user0042"));
+        assert!(v < KeyView::new(b"user0", b"1"));
+        assert!(KeyView::from_slice(b"a") < KeyView::new(b"a", b"a"));
     }
 
     #[test]

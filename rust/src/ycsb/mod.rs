@@ -76,22 +76,30 @@ impl Spec {
     }
 }
 
-/// Maximum generated key length: `"user"` + 20 decimal digits.
-pub const MAX_KEY_LEN: usize = 24;
+/// Maximum generated key length: `"user"` + up to 124 decimal digits
+/// (zero-padded — the key-length sweeps of the bench/gates run at 24, 64,
+/// and 128). A ≥ 21-digit field zero-pads on the left, so longer keys
+/// share long prefixes exactly like YCSB's fixed-width hashed keys.
+pub const MAX_KEY_LEN: usize = 128;
 
 /// Write the deterministic key for item `i` into a caller-provided stack
 /// buffer (no heap allocation — the hot-path form). Returns the key
-/// length: `min(24, max(8, key_size))`, matching the seed generator's
-/// `format!("user{:020}", hash)` + truncate semantics byte-for-byte.
+/// length `key_size.clamp(8, MAX_KEY_LEN)`. For every `key_size <= 24`
+/// this matches the seed generator byte-for-byte (a 20-digit field at
+/// `buf[4..24]`, truncated to the key length — i.e. the HIGH digits
+/// survive truncation, exactly like `format!("user{:020}", hash)` +
+/// truncate); wider sizes widen the zero-padded digit field instead.
 #[inline]
 pub fn key_into(i: u64, key_size: usize, buf: &mut [u8; MAX_KEY_LEN]) -> usize {
+    let n = key_size.clamp(8, MAX_KEY_LEN);
+    let field_end = n.max(24);
     buf[..4].copy_from_slice(b"user");
     let mut h = fnv1a_u64(i);
-    for slot in buf[4..MAX_KEY_LEN].iter_mut().rev() {
+    for slot in buf[4..field_end].iter_mut().rev() {
         *slot = b'0' + (h % 10) as u8;
         h /= 10;
     }
-    key_size.clamp(8, MAX_KEY_LEN)
+    n
 }
 
 /// Deterministic 24-byte key for item `i` (hashed digits — YCSB order
@@ -368,6 +376,33 @@ mod tests {
             assert_eq!(k.len(), 24);
             assert!(seen.insert(k), "duplicate key for item {i}");
         }
+    }
+
+    #[test]
+    fn wider_keys_zero_pad_and_24_matches_seed_layout() {
+        // 24-byte keys: "user" + the 20 low decimal digits of the item
+        // hash — byte-identical to the pre-sweep generator (the default
+        // key_size timeline must not move).
+        let k24 = key_for(42, 24);
+        assert_eq!(k24.len(), 24);
+        assert_eq!(&k24[..4], b"user");
+        let digits = format!("{:020}", fnv1a_u64(42));
+        assert_eq!(&k24[4..], digits.as_bytes());
+        // Wider keys keep the same 20 significant digits behind a long
+        // zero-padded (hence heavily prefix-shared) run.
+        let k128 = key_for(42, 128);
+        assert_eq!(k128.len(), 128);
+        assert_eq!(&k128[..4], b"user");
+        assert!(k128[4..108].iter().all(|&b| b == b'0'), "left zero-padding");
+        assert_eq!(&k128[108..], &k24[4..]);
+        // Clamped at both ends.
+        assert_eq!(key_for(7, 2).len(), 8);
+        assert_eq!(key_for(7, 4096).len(), MAX_KEY_LEN);
+        // Sub-24 sizes truncate the 20-digit field exactly like the seed:
+        // the HIGH digits survive (prefix of the 24-byte key), not the
+        // low ones.
+        let k16 = key_for(42, 16);
+        assert_eq!(&k16[..], &k24[..16]);
     }
 
     #[test]

@@ -235,7 +235,7 @@ mod tests {
         // Round trip through a zone read.
         let back = z.read(0, rec.len()).unwrap();
         let e = back.entries().next().unwrap();
-        assert_eq!(e.key, b"user00000001");
+        assert_eq!(e.key.to_vec(), b"user00000001");
         assert_eq!(e.value, Some(Payload::fill(3, 1000)));
         // Capacity is enforced on logical size.
         let mut big = WireBuf::new();

@@ -9,7 +9,7 @@ use hhzs::config::Config;
 use hhzs::coordinator::Engine;
 use hhzs::lsm::compaction::{merge_entries, split_outputs};
 use hhzs::lsm::sst::{build_sst, search_block};
-use hhzs::lsm::{Bloom, Entry, MemTable, Payload};
+use hhzs::lsm::{Bloom, Entry, Key, MemTable, Payload};
 use hhzs::policy::HhzsPolicy;
 use hhzs::sim::rng::Rng;
 use hhzs::zone::{Dev, Zone, ZoneState};
@@ -105,12 +105,12 @@ fn prop_merge_is_sorted_deduped_and_newest_wins() {
                     }
                 }
                 m.into_iter()
-                    .map(|(key, (seq, value))| Entry { key, seq, value })
+                    .map(|(key, (seq, value))| Entry { key: Key::from(key), seq, value })
                     .collect()
             })
             .collect();
         // Expected winner per key: max seq across streams.
-        let mut expect: std::collections::BTreeMap<Vec<u8>, (u64, Option<Payload>)> =
+        let mut expect: std::collections::BTreeMap<Key, (u64, Option<Payload>)> =
             Default::default();
         for st in &streams {
             for e in st {
@@ -139,7 +139,7 @@ fn prop_split_outputs_partition_exactly() {
         let n = rng.next_below(500) as usize;
         let entries: Vec<Entry> = (0..n)
             .map(|i| Entry {
-                key: format!("k{i:06}").into_bytes(),
+                key: format!("k{i:06}").into_bytes().into(),
                 seq: i as u64,
                 value: Some(Payload::fill(0, rng.next_below(200) as usize)),
             })
@@ -172,7 +172,7 @@ fn prop_sst_lookup_finds_every_key_and_only_those() {
             .iter()
             .enumerate()
             .map(|(i, k)| Entry {
-                key: k.clone(),
+                key: k.clone().into(),
                 seq: i as u64,
                 value: Some(Payload::fill((i % 255) as u8, 1 + rng.next_below(64) as usize)),
             })
@@ -225,11 +225,11 @@ fn prop_memtable_matches_btreemap_model() {
         for seq in 0..400u64 {
             let k = format!("k{:02}", rng.next_below(40)).into_bytes();
             if rng.next_below(5) == 0 {
-                mem.insert(k.clone(), seq, None);
+                mem.insert(Key::new(&k), seq, None);
                 model.insert(k, None);
             } else {
                 let v = Payload::fill(rng.next_below(256) as u8, 8);
-                mem.insert(k.clone(), seq, Some(v));
+                mem.insert(Key::new(&k), seq, Some(v));
                 model.insert(k, Some(v));
             }
         }
