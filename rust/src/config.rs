@@ -187,6 +187,30 @@ pub struct WorkloadConfig {
     pub seed: u64,
 }
 
+/// Deterministic virtual-time tracing knobs (see [`crate::trace`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceConfig {
+    /// Buffer trace events (observation-only; golden digests are pinned
+    /// bit-identical with tracing on or off).
+    pub enabled: bool,
+    /// Export path for the Perfetto/JSON trace; empty = don't write a file
+    /// (the buffer is still exportable programmatically).
+    pub out: String,
+    /// Ring capacity in events; the ring drops oldest on overflow and
+    /// `hhzs trace check` refuses lossy traces.
+    pub buffer_events: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            enabled: false,
+            out: String::new(),
+            buffer_events: crate::trace::DEFAULT_BUFFER_EVENTS,
+        }
+    }
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct Config {
     pub geometry: Geometry,
@@ -195,6 +219,8 @@ pub struct Config {
     pub lsm: LsmConfig,
     pub hhzs: HhzsConfig,
     pub workload: WorkloadConfig,
+    /// Virtual-time tracing (off by default; zero-cost when off).
+    pub trace: TraceConfig,
     /// Number of independent LSM engines the key space is striped over
     /// (see [`crate::shard`]). `1` = the paper's single-engine system; the
     /// substrate lease layer splits zones/memory budgets for `> 1`.
@@ -262,6 +288,7 @@ impl Config {
                 zipf_alpha: 0.9,
                 seed: 42,
             },
+            trace: TraceConfig::default(),
             shards: 1,
             use_xla_kernels: false,
         }
@@ -313,6 +340,7 @@ impl Config {
              [workload]\n\
              key_size = {}\nvalue_size = {}\nload_objects = {}\nops = {}\n\
              clients = {}\nzipf_alpha = {}\nseed = {}\n\n\
+             [trace]\nenabled = {}\nout = \"{}\"\nbuffer_events = {}\n\n\
              [sharding]\nshards = {}\n\n\
              [runtime]\nuse_xla_kernels = {}\n",
             g.scale_denom, g.ssd_zone_cap, g.hdd_zone_cap, g.sst_size, g.ssd_zones,
@@ -324,6 +352,7 @@ impl Config {
             h.migration_rate_bps, h.hdd_rate_threshold, h.scan_interval_ns, h.chunk_bytes,
             h.sample_interval_ns,
             w.key_size, w.value_size, w.load_objects, w.ops, w.clients, w.zipf_alpha, w.seed,
+            self.trace.enabled, self.trace.out, self.trace.buffer_events,
             self.shards,
             self.use_xla_kernels,
         )
@@ -380,6 +409,12 @@ impl Config {
             doc.get_usize("workload", "clients", &mut w.clients);
             doc.get_f64("workload", "zipf_alpha", &mut w.zipf_alpha);
             doc.get_u64("workload", "seed", &mut w.seed);
+        }
+        {
+            let t = &mut c.trace;
+            doc.get_bool("trace", "enabled", &mut t.enabled);
+            doc.get_str("trace", "out", &mut t.out);
+            doc.get_usize("trace", "buffer_events", &mut t.buffer_events);
         }
         doc.get_usize("sharding", "shards", &mut c.shards);
         c.shards = c.shards.max(1);
@@ -461,6 +496,22 @@ mod tests {
         let c = Config::from_toml_str("[lsm]\ncpu_sched = \"fair\"\n").unwrap();
         assert_eq!(c.lsm.cpu_sched, CpuSched::Fair);
         assert!(Config::from_toml_str("[lsm]\ncpu_sched = \"nope\"\n").is_err());
+    }
+
+    #[test]
+    fn trace_knobs_default_off_and_round_trip() {
+        let c = Config::small();
+        assert!(!c.trace.enabled);
+        assert!(c.trace.out.is_empty());
+        let c = Config::from_toml_str(
+            "[trace]\nenabled = true\nout = \"t.json\"\nbuffer_events = 4096\n",
+        )
+        .unwrap();
+        assert!(c.trace.enabled);
+        assert_eq!(c.trace.out, "t.json");
+        assert_eq!(c.trace.buffer_events, 4096);
+        let c2 = Config::from_toml_str(&c.to_toml()).unwrap();
+        assert_eq!(c2, c);
     }
 
     #[test]

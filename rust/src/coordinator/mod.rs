@@ -30,6 +30,7 @@ use crate::policy::{MigrationKind, Policy, SstOrigin, View};
 use crate::sim::cpu::{CpuPool, CpuPoolStats};
 use crate::sim::rng::fingerprint32;
 use crate::sim::{AccessKind, Ns};
+use crate::trace::{hint_kind, Event, IoOp, JobKind, TraceSink};
 use crate::zenfs::ZenFs;
 use crate::zone::Dev;
 
@@ -153,6 +154,10 @@ pub struct Engine {
     pub pool: PoolManager,
     pub cache: BlockCache,
     pub metrics: Metrics,
+    /// Observation-only trace sink (disabled unless `cfg.trace.enabled`).
+    /// The shard layer rebinds every engine to ONE shared ring, so the
+    /// merged stream carries the global `(time, seq)` emission order.
+    pub trace: TraceSink,
     pub now: Ns,
     seq: u64,
     next_file_id: u64,
@@ -217,11 +222,18 @@ impl Engine {
             cfg.hdd.clone(),
         );
         let reserve = policy.reserved_pool_zones(&cfg);
-        let pool = if reserve > 0 {
+        let mut pool = if reserve > 0 {
             PoolManager::reserved(fs.reserve_ssd_zones(reserve))
         } else {
             PoolManager::dynamic()
         };
+        // Attach emission sites only when tracing is on: with the sink
+        // disabled the data path keeps its no-trace fast paths.
+        let trace = TraceSink::from_config(&cfg.trace);
+        if trace.is_enabled() {
+            fs.set_trace(&trace);
+            pool.set_trace(trace.clone(), 0);
+        }
         let version = Version::new(
             cfg.lsm.num_levels,
             cfg.lsm.l0_target,
@@ -238,6 +250,7 @@ impl Engine {
             pool,
             cache,
             metrics: Metrics::default(),
+            trace,
             now: 0,
             seq: 0,
             next_file_id: 1,
@@ -321,6 +334,92 @@ impl Engine {
         self.cpu.borrow().stats()
     }
 
+    /// Handle to this engine's trace sink (for the shard layer).
+    pub(crate) fn trace_handle(&self) -> TraceSink {
+        self.trace.clone()
+    }
+
+    /// Join a shared trace ring as shard `shard` of its domain, rebinding
+    /// every emission site (devices, WAL/cache pool) to it. The shard
+    /// layer's device/pool rebinding happens first, so re-attaching here
+    /// tags the *shared* timers exactly once per physical device.
+    pub(crate) fn share_trace(&mut self, trace: TraceSink, shard: usize) {
+        if trace.is_enabled() {
+            self.fs.set_trace(&trace);
+            self.pool.set_trace(trace.clone(), shard);
+        }
+        self.trace = trace;
+    }
+
+    /// Emit the wait/acquire/start triple for an admitted background job.
+    fn trace_job_start(&self, kind: JobKind, job: u64, wait: Ns) {
+        if !self.trace.is_enabled() {
+            return;
+        }
+        let (shard, at) = (self.cpu_shard, self.now);
+        let in_use = self.cpu.borrow().in_use();
+        self.trace.emit(|| Event::CpuWait { shard, kind, job, wait, at });
+        self.trace.emit(|| Event::CpuAcquire { shard, kind, job, at, in_use });
+        let queued = at.saturating_sub(wait);
+        self.trace.emit(|| Event::JobStart { shard, kind, job, queued, at });
+    }
+
+    /// Emit the release/end pair for a finished (or abandoned) job.
+    fn trace_job_end(&self, kind: JobKind, job: u64) {
+        if !self.trace.is_enabled() {
+            return;
+        }
+        let (shard, at) = (self.cpu_shard, self.now);
+        let in_use = self.cpu.borrow().in_use();
+        self.trace.emit(|| Event::CpuRelease { shard, kind, job, at, in_use });
+        self.trace.emit(|| Event::JobEnd { shard, kind, job, at });
+    }
+
+    /// Mirror one `Metrics::record_queue_wait` site into the trace: `start`
+    /// is the device-granted start time, `at` the issue time, so the event
+    /// carries the same wait the metrics accumulated.
+    #[allow(clippy::too_many_arguments)]
+    fn trace_io(
+        &self,
+        dev: Dev,
+        op: IoOp,
+        job: Option<u64>,
+        sst: Option<u64>,
+        bytes: u64,
+        start: Ns,
+        at: Ns,
+    ) {
+        let (shard, wait) = (self.cpu_shard, start.saturating_sub(at));
+        self.trace.emit(|| Event::Io { dev, op, shard, job, sst, bytes, wait, at });
+    }
+
+    /// Emit `UNWAIT` only when this shard actually held a flush claim, so
+    /// the stream stays transition-edged (no per-poll noise).
+    fn trace_flush_unwait(&self) {
+        if self.cpu.borrow().is_flush_waiter(self.cpu_shard) {
+            let (shard, at) = (self.cpu_shard, self.now);
+            self.trace.emit(|| Event::FlushUnwait { shard, at });
+        }
+    }
+
+    /// Emit a snapshot of the current (unreset) metrics — the record that
+    /// closes this shard's open checker segment. Exporters call this once
+    /// per engine right before serializing the ring.
+    pub fn trace_snapshot(&self) {
+        if self.trace.is_enabled() {
+            let ev = Event::snapshot(self.cpu_shard, self.now, &self.metrics);
+            self.trace.emit(|| ev);
+        }
+    }
+
+    /// Serialize this engine's trace ring (standalone; the shard layer
+    /// exports through [`crate::shard::ShardedEngine::export_trace_string`]
+    /// instead). Emits the closing snapshot first.
+    pub fn trace_export_string(&self) -> String {
+        self.trace_snapshot();
+        self.trace.export_string(1, self.cfg.lsm.bg_threads)
+    }
+
     /// This engine's interned-key arena (shared across the frontend
     /// domain once [`crate::shard::ShardedEngine`] rebinds it).
     pub fn key_arena(&self) -> &KeyArena {
@@ -382,6 +481,8 @@ impl Engine {
     }
 
     fn emit_hint(&mut self, hint: Hint) {
+        let (shard, kind, at) = (self.cpu_shard, hint_kind(&hint), self.now);
+        self.trace.emit(|| Event::HintIssued { shard, kind, at });
         self.with_view(|p, v| p.on_hint(&hint, v));
     }
 
@@ -522,11 +623,13 @@ impl Engine {
                 let (data, s, f) =
                     self.fs.read_file(now, meta.id, offset, len).expect("block read");
                 self.metrics.record_queue_wait(dev, s.saturating_sub(now));
+                self.trace_io(dev, IoOp::BlockRead, None, Some(meta.id), len, s, now);
                 (data, f, dev)
             }
         } else {
             let (data, s, f) = self.fs.read_file(now, meta.id, offset, len).expect("block read");
             self.metrics.record_queue_wait(dev, s.saturating_sub(now));
+            self.trace_io(dev, IoOp::BlockRead, None, Some(meta.id), len, s, now);
             (data, f, dev)
         };
         self.metrics.record_read(served_by, len);
@@ -664,6 +767,7 @@ impl Engine {
                 .expect("scan block");
             let (s, f) = self.fs.charge(self.now, dev, kind, h.len as u64);
             self.metrics.record_queue_wait(dev, s.saturating_sub(self.now));
+            self.trace_io(dev, IoOp::ScanRead, None, Some(meta.id), h.len as u64, s, self.now);
             self.metrics.record_read(dev, h.len as u64);
             *finish = (*finish).max(f);
             // Zero-copy block walk (prefix-shared keys compare in place);
@@ -708,6 +812,7 @@ impl Engine {
         if self.flush_wanted() {
             self.start_flush();
         } else {
+            self.trace_flush_unwait();
             self.cpu.borrow_mut().clear_flush_waiter(self.cpu_shard);
             self.flush_ready_since = None;
         }
@@ -753,6 +858,11 @@ impl Engine {
         // starts the cpu_wait clock.
         if !self.cpu.borrow().can_admit_flush() {
             self.cpu.borrow_mut().flush_denied(self.cpu_shard);
+            if self.flush_ready_since.is_none() {
+                // First denial of this starvation episode only.
+                let (shard, at) = (self.cpu_shard, self.now);
+                self.trace.emit(|| Event::FlushDenied { shard, at });
+            }
             self.flush_ready_since.get_or_insert(self.now);
             return;
         }
@@ -776,6 +886,7 @@ impl Engine {
                 let Engine { pool, fs, .. } = &mut *self;
                 pool.release_segment(fs, seg);
             }
+            self.trace_flush_unwait();
             self.cpu.borrow_mut().clear_flush_waiter(self.cpu_shard);
             self.flush_ready_since = None;
             return;
@@ -786,6 +897,7 @@ impl Engine {
         self.metrics.cpu_wait.record(wait);
         let id = self.next_job_id;
         self.next_job_id += 1;
+        self.trace_job_start(JobKind::Flush, id, wait);
         self.jobs.insert(id, Job::Flush(FlushJob { segs, outputs, cur: 0 }));
         self.flush_active = true;
         self.push_event(self.now, EventKind::JobStep(id));
@@ -879,6 +991,7 @@ impl Engine {
         debug_assert!(acquired, "caller checked admission within this call");
         let wait = self.comp_ready_since.take().map_or(0, |t| self.now.saturating_sub(t));
         self.metrics.cpu_wait.record(wait);
+        self.trace_job_start(JobKind::Compaction, job, wait);
         self.jobs.insert(
             job,
             Job::Compaction(CompactionJob {
@@ -901,7 +1014,7 @@ impl Engine {
         match job {
             Job::Flush(mut j) => {
                 if j.cur >= j.outputs.len() {
-                    self.finish_flush(j);
+                    self.finish_flush(id, j);
                     return;
                 }
                 let next_at = self.step_output(&mut j.outputs, &mut j.cur, 0, id, chunk, SstOrigin::Flush);
@@ -917,6 +1030,7 @@ impl Engine {
                         let dev = slot.0;
                         let (s, f) = self.fs.charge(self.now, dev, AccessKind::SeqRead, n);
                         self.metrics.record_queue_wait(dev, s.saturating_sub(self.now));
+                        self.trace_io(dev, IoOp::CompactionRead, Some(id), None, n, s, self.now);
                         self.metrics.compaction_read_bytes += n;
                         self.jobs.insert(id, Job::Compaction(j));
                         self.push_event(f, EventKind::JobStep(id));
@@ -985,6 +1099,7 @@ impl Engine {
         let n = chunk.min(remaining);
         let (s, f) = self.fs.charge(self.now, dev, AccessKind::SeqWrite, n);
         self.metrics.record_queue_wait(dev, s.saturating_sub(self.now));
+        self.trace_io(dev, IoOp::SstWrite, Some(job), Some(out.meta.id), n, s, self.now);
         self.metrics.record_write(WriteCategory::Sst(level), dev, n);
         if origin == SstOrigin::Compaction {
             self.metrics.compaction_write_bytes += n;
@@ -1015,13 +1130,14 @@ impl Engine {
         f
     }
 
-    fn finish_flush(&mut self, j: FlushJob) {
+    fn finish_flush(&mut self, job: u64, j: FlushJob) {
         for seg in j.segs {
             let Engine { pool, fs, .. } = &mut *self;
             pool.release_segment(fs, seg);
         }
         self.flush_active = false;
         self.cpu.borrow_mut().release_flush(self.cpu_shard);
+        self.trace_job_end(JobKind::Flush, job);
         self.unpark_writers();
         self.maybe_schedule_jobs();
     }
@@ -1046,6 +1162,7 @@ impl Engine {
             output_level: j.level + 1,
         }));
         self.cpu.borrow_mut().release_compaction(self.cpu_shard);
+        self.trace_job_end(JobKind::Compaction, job);
         // Version GC just deleted SSTs — the bulk-death point for key
         // references. Retire an arena epoch so dead interned keys are
         // reclaimed on the sweep cadence.
@@ -1075,6 +1192,9 @@ impl Engine {
                     from: f.dev,
                 };
                 self.busy_ssts.insert(victim);
+                let (shard, sst, from, to, at) =
+                    (self.cpu_shard, task.sst, task.from, task.to, self.now);
+                self.trace.emit(|| Event::MigStart { shard, sst, from, to, at });
                 self.migration_queue.push_back(task);
             }
         }
@@ -1087,6 +1207,9 @@ impl Engine {
                 from: f.dev,
             };
             self.busy_ssts.insert(op.sst);
+            let (shard, sst, from, to, at) =
+                (self.cpu_shard, task.sst, task.from, task.to, self.now);
+            self.trace.emit(|| Event::MigStart { shard, sst, from, to, at });
             self.migration_queue.push_back(task);
         }
         if !self.migration_queue.is_empty() {
@@ -1105,6 +1228,8 @@ impl Engine {
             let task = self.migration_queue.pop_front().unwrap();
             let ok = self.fs.relocate_file(task.sst, task.to).is_ok();
             self.busy_ssts.remove(&task.sst);
+            let (shard, sst, at) = (self.cpu_shard, task.sst, self.now);
+            self.trace.emit(|| Event::MigEnd { shard, sst, at });
             if ok {
                 match task.kind {
                     MigrationKind::Capacity => self.metrics.migrations_cap += 1,
@@ -1137,6 +1262,8 @@ impl Engine {
         if self.fs.file(task.sst).is_none() {
             let task = self.migration_queue.pop_front().unwrap();
             self.busy_ssts.remove(&task.sst);
+            let (shard, sst, at) = (self.cpu_shard, task.sst, self.now);
+            self.trace.emit(|| Event::MigEnd { shard, sst, at });
             if self.migration_queue.is_empty() {
                 self.migration_active = false;
             } else {
@@ -1146,11 +1273,13 @@ impl Engine {
         }
         let chunk = self.cfg.hhzs.chunk_bytes.min(task.remaining);
         task.remaining -= chunk;
-        let (from, to) = (task.from, task.to);
+        let (from, to, sst) = (task.from, task.to, task.sst);
         let (s1, f1) = self.fs.charge(self.now, from, AccessKind::SeqRead, chunk);
         let (s2, f2) = self.fs.charge(self.now, to, AccessKind::SeqWrite, chunk);
         self.metrics.record_queue_wait(from, s1.saturating_sub(self.now));
         self.metrics.record_queue_wait(to, s2.saturating_sub(self.now));
+        self.trace_io(from, IoOp::MigrationRead, None, Some(sst), chunk, s1, self.now);
+        self.trace_io(to, IoOp::MigrationWrite, None, Some(sst), chunk, s2, self.now);
         self.metrics.migration_bytes += chunk;
         self.metrics.record_write(WriteCategory::Migration, to, chunk);
         // Rate limiting (§3.4): chunks are spaced at chunk / rate.
@@ -1209,10 +1338,13 @@ impl Engine {
     ) -> FrontendOp {
         debug_assert!(at >= self.now, "frontend time went backwards");
         self.now = at;
+        self.trace.stamp(at);
         if Self::op_kind_is_write(&op) && self.write_blocked() {
             // Park until a flush/compaction unblocks writes.
             self.metrics.stalls += 1;
             self.parked.push(c);
+            let (shard, at) = (self.cpu_shard, self.now);
+            self.trace.emit(|| Event::Stall { shard, client: c, at });
             return FrontendOp::Parked(op);
         }
         let is_write = Self::op_kind_is_write(&op);
@@ -1221,6 +1353,8 @@ impl Engine {
         let lat = finish.saturating_sub(issued_at);
         if issued_at < self.now {
             self.metrics.stall_ns += self.now - issued_at;
+            let (shard, at, dur) = (self.cpu_shard, self.now, self.now - issued_at);
+            self.trace.emit(|| Event::Unstall { shard, client: c, at, dur });
         }
         if is_write {
             self.metrics.write_lat.record(lat);
@@ -1266,6 +1400,7 @@ impl Engine {
         let ev = self.events.pop()?;
         debug_assert!(ev.at >= self.now, "time went backwards");
         self.now = ev.at;
+        self.trace.stamp(self.now);
         match ev.kind {
             EventKind::Client(c) => return Some(c),
             EventKind::JobStep(id) => self.handle_job_step(id),
@@ -1301,6 +1436,9 @@ impl Engine {
     /// phases on one engine would sample at double cadence (latent: every
     /// in-tree caller samples only the first phase of a fresh engine).
     pub(crate) fn begin_phase(&mut self, start_ns: Ns, sample: bool) {
+        // Close the previous phase's checker segment BEFORE the reset wipes
+        // its accumulators — the snapshot is what the replay sums against.
+        self.trace_snapshot();
         self.metrics = Metrics::default();
         self.metrics.start_ns = start_ns;
         self.parked.clear();
@@ -1555,6 +1693,7 @@ impl Engine {
                     Job::Flush(_) => {
                         self.flush_active = false;
                         self.cpu.borrow_mut().release_flush(self.cpu_shard);
+                        self.trace_job_end(JobKind::Flush, id);
                     }
                     Job::Compaction(j) => {
                         for m in &j.installed {
@@ -1566,11 +1705,13 @@ impl Engine {
                         self.busy_levels.remove(&j.level);
                         self.busy_levels.remove(&(j.level + 1));
                         self.cpu.borrow_mut().release_compaction(self.cpu_shard);
+                        self.trace_job_end(JobKind::Compaction, id);
                     }
                 }
             }
         }
         // The restart drops any CPU claims with the in-flight jobs.
+        self.trace_flush_unwait();
         self.cpu.borrow_mut().clear_flush_waiter(self.cpu_shard);
         self.cpu.borrow_mut().set_comp_waiter(self.cpu_shard, false);
         self.flush_ready_since = None;

@@ -19,6 +19,7 @@ use std::collections::{HashMap, VecDeque};
 use crate::lsm::SstId;
 use crate::metrics::{Metrics, WriteCategory};
 use crate::sim::Ns;
+use crate::trace::{Event, IoOp, TraceSink};
 use crate::wire::WireBuf;
 use crate::zenfs::ZenFs;
 use crate::zone::{Dev, ZoneId};
@@ -72,6 +73,10 @@ pub struct PoolManager {
     /// stay 0 when the pool is sized per §3.2).
     pub wal_overflows: u64,
     pub cache_zone_evictions: u64,
+    /// Observation-only trace sink + the owning shard's id to stamp on
+    /// WAL/cache I/O events. Disabled by default.
+    trace: TraceSink,
+    trace_shard: usize,
 }
 
 impl PoolManager {
@@ -96,7 +101,21 @@ impl PoolManager {
             fifo: VecDeque::new(),
             wal_overflows: 0,
             cache_zone_evictions: 0,
+            trace: TraceSink::disabled(),
+            trace_shard: 0,
         }
+    }
+
+    /// Attach a trace sink; `shard` tags this pool's I/O events.
+    pub fn set_trace(&mut self, trace: TraceSink, shard: usize) {
+        self.trace = trace;
+        self.trace_shard = shard;
+    }
+
+    fn trace_io(&self, dev: Dev, op: IoOp, sst: Option<u64>, bytes: u64, wait: Ns, at: Ns) {
+        let shard = self.trace_shard;
+        self.trace
+            .emit(|| Event::Io { dev, op, shard, job: None, sst, bytes, wait, at });
     }
 
     pub fn is_reserved_mode(&self) -> bool {
@@ -159,6 +178,7 @@ impl PoolManager {
             let (s, f) = fs.charge(now, preferred, crate::sim::AccessKind::SeqWrite, len);
             metrics.record_queue_wait(preferred, s.saturating_sub(now));
             metrics.record_write(WriteCategory::Wal, preferred, len);
+            self.trace_io(preferred, IoOp::WalOverflow, None, len, s.saturating_sub(now), now);
             return f;
         };
         let (offset, start, finish) = fs
@@ -167,6 +187,7 @@ impl PoolManager {
             .expect("WAL append within checked capacity");
         metrics.record_queue_wait(dev, start.saturating_sub(now));
         metrics.record_write(WriteCategory::Wal, dev, len);
+        self.trace_io(dev, IoOp::Wal, None, len, start.saturating_sub(now), now);
         let seg = self.segments.entry(self.cur_segment).or_default();
         if !seg.zones.contains(&(dev, z)) {
             seg.zones.push((dev, z));
@@ -205,6 +226,7 @@ impl PoolManager {
                     .expect("live WAL run readable");
                 let (s, _) = fs.charge(now, *dev, crate::sim::AccessKind::SeqRead, *len);
                 metrics.record_queue_wait(*dev, s.saturating_sub(now));
+                self.trace_io(*dev, IoOp::WalRecover, None, *len, s.saturating_sub(now), now);
                 bytes.append_buf(&data);
             }
             out.push((id, bytes));
@@ -296,6 +318,14 @@ impl PoolManager {
         let (data, start, finish) =
             fs.ssd.read_random(now, loc.zone, loc.offset, loc.len as u64).ok()?;
         metrics.record_queue_wait(Dev::Ssd, start.saturating_sub(now));
+        self.trace_io(
+            Dev::Ssd,
+            IoOp::CacheRead,
+            Some(sst),
+            loc.len as u64,
+            start.saturating_sub(now),
+            now,
+        );
         Some((data, finish))
     }
 
@@ -346,6 +376,11 @@ impl PoolManager {
         let (offset, start, _) = fs.ssd.append(now, zone, data).expect("cache append fits");
         metrics.record_queue_wait(Dev::Ssd, start.saturating_sub(now));
         metrics.record_write(WriteCategory::CacheZone, Dev::Ssd, len);
+        self.trace_io(Dev::Ssd, IoOp::CacheWrite, Some(sst), len, start.saturating_sub(now), now);
+        {
+            let (shard, at) = (self.trace_shard, now);
+            self.trace.emit(|| Event::CacheAdmit { shard, sst, zone, bytes: len, at });
+        }
         self.mapping
             .insert((sst, block_offset), CacheLoc { zone, offset, len: len as u32 });
         self.fifo.push_back(FifoEntry { sst, block_offset, zone });
@@ -365,6 +400,8 @@ impl PoolManager {
         }
         fs.ssd.reset(zone);
         self.cache_zone_evictions += 1;
+        let (shard, at) = (self.trace_shard, self.trace.now_hint());
+        self.trace.emit(|| Event::CacheEvict { shard, zone, at });
         true
     }
 

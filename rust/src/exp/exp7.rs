@@ -16,17 +16,18 @@
 use crate::report::Table;
 use crate::shard::ShardedEngine;
 use crate::ycsb::{Kind, Spec, YcsbSource};
+use crate::zone::Dev;
 
 use super::common::{make_policy, ExpOpts};
 
 pub const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
 
 /// Load + YCSB A at `n` shards; returns (load ops/s, A ops/s, merged A
-/// metrics, per-shard A ops).
+/// metrics, per-shard A ops, per-shard A metrics).
 pub fn run_one(
     cfg: &crate::config::Config,
     n: usize,
-) -> (f64, f64, crate::metrics::Metrics, Vec<u64>) {
+) -> (f64, f64, crate::metrics::Metrics, Vec<u64>, Vec<crate::metrics::Metrics>) {
     let mut cfg = cfg.clone();
     cfg.shards = n;
     let mut se = ShardedEngine::new(&cfg, |c| make_policy("HHZS", c));
@@ -41,7 +42,7 @@ pub fn run_one(
     let mut a = YcsbSource::new(Spec::from_config(&cfg, Kind::A), clients);
     se.run_shared(&mut a, clients, None, false);
     let a_tput = se.aggregate_ops_per_sec();
-    (load_tput, a_tput, se.merged_metrics(), se.ops_per_shard())
+    (load_tput, a_tput, se.merged_metrics(), se.ops_per_shard(), se.per_shard_metrics())
 }
 
 pub fn run(opts: &ExpOpts) {
@@ -62,10 +63,38 @@ pub fn run(opts: &ExpOpts) {
             "migrations",
         ],
     );
+    // The stall/wait breakdown behind the aggregate columns: who stalls
+    // and who waits is uneven under Zipf (hot shards draw more CPU slots
+    // and queue more device time), which the merged row averages away.
+    let mut bt = Table::new(
+        "Exp#7 breakdown: per-shard write stalls and waits (YCSB A phase)",
+        &[
+            "shards",
+            "shard",
+            "ops",
+            "stalls",
+            "stall ms",
+            "ssd queue wait ms",
+            "hdd queue wait ms",
+            "cpu wait ms",
+        ],
+    );
     let mut base_a: Option<f64> = None;
     for &n in &SHARD_COUNTS {
         println!("exp7: {n} shard(s)...");
-        let (load_tput, a_tput, m, per_shard) = run_one(&opts.cfg, n);
+        let (load_tput, a_tput, m, per_shard, shard_m) = run_one(&opts.cfg, n);
+        for (s, sm) in shard_m.iter().enumerate() {
+            bt.row(vec![
+                n.to_string(),
+                s.to_string(),
+                sm.ops_done.to_string(),
+                sm.stalls.to_string(),
+                format!("{:.2}", sm.stall_ns as f64 / 1e6),
+                format!("{:.2}", sm.queue_wait.get(&Dev::Ssd).copied().unwrap_or(0) as f64 / 1e6),
+                format!("{:.2}", sm.queue_wait.get(&Dev::Hdd).copied().unwrap_or(0) as f64 / 1e6),
+                format!("{:.2}", sm.cpu_wait.sum as f64 / 1e6),
+            ]);
+        }
         let speedup = match base_a {
             None => {
                 base_a = Some(a_tput);
@@ -90,4 +119,5 @@ pub fn run(opts: &ExpOpts) {
         ]);
     }
     t.emit(csv, "exp7_shards");
+    bt.emit(csv, "exp7_shard_breakdown");
 }

@@ -44,6 +44,7 @@ pub mod report;
 pub mod runtime;
 pub mod shard;
 pub mod sim;
+pub mod trace;
 pub mod wire;
 pub mod ycsb;
 pub mod zenfs;

@@ -15,7 +15,17 @@
 //!                                     # tiny put/get/scan smoke demo
 //! hhzs config [--profile P]           # print the effective config TOML
 //! hhzs xla-check                      # load + smoke the AOT kernels
+//! hhzs trace run [--out FILE] [--shards N] [--profile P] ...
+//!                                     # traced load + YCSB A; writes a
+//!                                     # Chrome-trace JSON (open in Perfetto)
+//!                                     # and self-checks it
+//! hhzs trace check <FILE>             # replay a trace export, assert the
+//!                                     # DES invariants (exit 1 on violation)
 //! ```
+//!
+//! Any run-like command also takes `--trace FILE`: tracing is switched on
+//! and the export written to FILE when the command completes (demo only;
+//! `exp`/`bench` drive many runs and would overwrite the file per run).
 //!
 //! Argument parsing is hand-rolled (no external crates are available in
 //! this offline build environment).
@@ -87,6 +97,13 @@ fn build_config(args: &Args) -> anyhow::Result<Config> {
     if let Some(v) = args.flags.get("cpu-sched") {
         cfg.lsm.cpu_sched = hhzs::config::CpuSched::parse(v)
             .ok_or_else(|| anyhow::anyhow!("bad --cpu-sched {v:?} (fair|work_conserving)"))?;
+    }
+    if let Some(v) = args.flags.get("trace") {
+        cfg.trace.enabled = true;
+        cfg.trace.out = v.clone();
+    }
+    if let Some(v) = args.flags.get("trace-buffer") {
+        cfg.trace.buffer_events = v.parse()?;
     }
     Ok(cfg)
 }
@@ -167,6 +184,88 @@ fn cmd_demo(args: &Args) -> anyhow::Result<()> {
             }
         }
     }
+    if db.trace_enabled() && !cfg.trace.out.is_empty() {
+        db.export_trace(&cfg.trace.out)?;
+        println!("trace written to {}", cfg.trace.out);
+    }
+    Ok(())
+}
+
+/// `hhzs trace run`: the §4.1 protocol (fresh load, then YCSB A) with
+/// tracing forced on, export written to `--out` (default `trace.json`),
+/// then the invariant checker replayed over the fresh export. This is the
+/// CI entry point for the traced 4-shard workload.
+fn cmd_trace_run(args: &Args) -> anyhow::Result<()> {
+    use hhzs::policy::HhzsPolicy;
+    use hhzs::shard::ShardedEngine;
+    use hhzs::ycsb::{Kind, Spec, YcsbSource};
+    use hhzs::zone::Dev;
+
+    let mut cfg = build_config(args)?;
+    cfg.trace.enabled = true;
+    if let Some(out) = args.flags.get("out") {
+        cfg.trace.out = out.clone();
+    }
+    if cfg.trace.out.is_empty() {
+        cfg.trace.out = "trace.json".to_string();
+    }
+    let out = cfg.trace.out.clone();
+
+    let mut se = ShardedEngine::new(&cfg, |c| Box::new(HhzsPolicy::new(c.lsm.num_levels)));
+    let clients = cfg.workload.clients;
+    println!(
+        "trace run: {} shard(s), {} objects load + {} ops YCSB A, seed {}",
+        se.num_shards(),
+        cfg.workload.load_objects,
+        cfg.workload.ops,
+        cfg.workload.seed
+    );
+    let mut load = YcsbSource::new(Spec::from_config(&cfg, Kind::Load), clients);
+    se.run_shared(&mut load, clients, None, false);
+    se.flush_all();
+    se.rebalance_migration_budgets();
+    let mut a = YcsbSource::new(Spec::from_config(&cfg, Kind::A), clients);
+    se.run_shared(&mut a, clients, None, false);
+    se.quiesce();
+
+    for (s, m) in se.per_shard_metrics().iter().enumerate() {
+        println!(
+            "  shard {s}: {} ops, {} stalls ({:.2} ms), queue wait ssd {:.2} ms / \
+             hdd {:.2} ms, cpu wait {:.2} ms",
+            m.ops_done,
+            m.stalls,
+            m.stall_ns as f64 / 1e6,
+            m.queue_wait.get(&Dev::Ssd).copied().unwrap_or(0) as f64 / 1e6,
+            m.queue_wait.get(&Dev::Hdd).copied().unwrap_or(0) as f64 / 1e6,
+            m.cpu_wait.sum as f64 / 1e6,
+        );
+    }
+
+    let export = se.export_trace_string();
+    std::fs::write(&out, &export)?;
+    println!("trace written to {out} ({} bytes)", export.len());
+    let report = hhzs::trace::check_export(&export).map_err(anyhow::Error::msg)?;
+    println!("trace check: {}", report.summary());
+    for v in &report.violations {
+        eprintln!("  violation: {v}");
+    }
+    anyhow::ensure!(report.ok(), "trace check failed on the fresh export");
+    Ok(())
+}
+
+/// `hhzs trace check <FILE>`: replay an export and assert the DES
+/// invariants; exits nonzero when any violation is found.
+fn cmd_trace_check(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .get(2)
+        .ok_or_else(|| anyhow::anyhow!("usage: hhzs trace check <trace.json>"))?;
+    let report = hhzs::trace::check_file(path).map_err(anyhow::Error::msg)?;
+    println!("{path}: {}", report.summary());
+    for v in &report.violations {
+        eprintln!("  violation: {v}");
+    }
+    anyhow::ensure!(report.ok(), "{} violation(s) in {path}", report.violations.len());
     Ok(())
 }
 
@@ -188,9 +287,12 @@ fn cmd_xla_check() -> anyhow::Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: hhzs <exp|bench|bench-devices|demo|config|xla-check> [flags]\n\
+        "usage: hhzs <exp|bench|bench-devices|demo|config|xla-check|trace> [flags]\n\
          run `hhzs exp all --profile quick` for a fast full sweep\n\
-         run `hhzs bench wallclock --quick` for the BENCH_2 wall-clock bench"
+         run `hhzs bench wallclock --quick` for the BENCH_2 wall-clock bench\n\
+         run `hhzs trace run --profile quick --shards 4 --out trace.json` for a\n\
+         traced workload (Perfetto-loadable JSON), `hhzs trace check FILE` to\n\
+         replay its DES invariants, and add `--trace FILE` to `demo` to trace it"
     );
     std::process::exit(2);
 }
@@ -219,6 +321,11 @@ fn main() -> anyhow::Result<()> {
             Ok(())
         }
         Some("xla-check") => cmd_xla_check(),
+        Some("trace") => match args.positional.get(1).map(|s| s.as_str()) {
+            Some("run") => cmd_trace_run(&args),
+            Some("check") => cmd_trace_check(&args),
+            _ => usage(),
+        },
         _ => usage(),
     }
 }

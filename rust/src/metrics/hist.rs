@@ -84,6 +84,17 @@ impl LogHistogram {
         }
     }
 
+    /// Smallest recorded value, or 0 when the histogram is empty. The raw
+    /// `min` field starts at `u64::MAX` (the running-minimum sentinel) —
+    /// render through this accessor, never the field.
+    pub fn min(&self) -> u64 {
+        if self.n == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
     pub fn merge(&mut self, other: &LogHistogram) {
         for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
             *a += b;
@@ -155,6 +166,35 @@ mod tests {
         assert_eq!(a.n, 2);
         assert_eq!(a.max, 1_000_000);
         assert_eq!(a.min, 10);
+    }
+
+    #[test]
+    fn empty_min_is_zero_not_sentinel() {
+        let h = LogHistogram::new();
+        assert_eq!(h.min(), 0, "empty histogram must not leak the u64::MAX sentinel");
+        let mut h = LogHistogram::new();
+        h.record(42);
+        assert_eq!(h.min(), 42);
+    }
+
+    #[test]
+    fn merge_with_empty_is_sentinel_safe() {
+        // Non-empty ∪ empty keeps the real minimum.
+        let mut a = LogHistogram::new();
+        a.record(10);
+        a.merge(&LogHistogram::new());
+        assert_eq!(a.min(), 10);
+        // Empty ∪ non-empty adopts the other side's minimum.
+        let mut b = LogHistogram::new();
+        let mut c = LogHistogram::new();
+        c.record(7);
+        b.merge(&c);
+        assert_eq!(b.min(), 7);
+        // Empty ∪ empty still renders as 0.
+        let mut d = LogHistogram::new();
+        d.merge(&LogHistogram::new());
+        assert_eq!(d.n, 0);
+        assert_eq!(d.min(), 0);
     }
 
     #[test]

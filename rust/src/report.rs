@@ -56,11 +56,14 @@ impl Table {
     }
 
     pub fn to_csv(&self) -> String {
+        let line = |cells: &[String]| -> String {
+            cells.iter().map(|c| csv_escape(c)).collect::<Vec<_>>().join(",")
+        };
         let mut out = String::new();
-        out.push_str(&self.headers.join(","));
+        out.push_str(&line(&self.headers));
         out.push('\n');
         for r in &self.rows {
-            out.push_str(&r.join(","));
+            out.push_str(&line(r));
             out.push('\n');
         }
         out
@@ -76,6 +79,17 @@ impl Table {
                 println!("  [csv: {path}]");
             }
         }
+    }
+}
+
+/// RFC 4180 cell quoting: cells containing a comma, double quote, CR, or
+/// LF are wrapped in double quotes with embedded quotes doubled, so cells
+/// can never silently shift columns in the CSV exports.
+fn csv_escape(cell: &str) -> String {
+    if cell.contains([',', '"', '\n', '\r']) {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
     }
 }
 
@@ -118,6 +132,17 @@ mod tests {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["1".into(), "2".into()]);
         assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn csv_escapes_commas_quotes_and_newlines() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1,5".into(), "plain".into()]);
+        t.row(vec!["he said \"hi\"".into(), "two\nlines".into()]);
+        assert_eq!(
+            t.to_csv(),
+            "a,b\n\"1,5\",plain\n\"he said \"\"hi\"\"\",\"two\nlines\"\n"
+        );
     }
 
     #[test]

@@ -36,6 +36,7 @@ use crate::coordinator::{Engine, FrontendOp, Op, OpSource};
 use crate::lsm::Entry;
 use crate::sim::cpu::CpuPool;
 use crate::sim::Ns;
+use crate::trace::TraceSink;
 
 use super::Router;
 
@@ -84,6 +85,11 @@ pub struct Frontend<'a> {
     /// so a slot released by one shard re-schedules the shards starved
     /// for it at the same `(time, seq)` point of the merged order.
     cpu: Rc<RefCell<CpuPool>>,
+    /// The domain's shared trace ring (shard 0's handle). The frontend is
+    /// the authority on the merged clock, so it stamps the ring's time
+    /// hint once per popped event — clockless emission sites (zone
+    /// resets, cache-zone evictions) then carry the exact global time.
+    trace: TraceSink,
     events: BinaryHeap<FrontEv>,
     clients: Vec<FrontClient>,
     done_clients: usize,
@@ -101,12 +107,14 @@ impl<'a> Frontend<'a> {
         assert!(!engines.is_empty(), "a frontend needs at least one engine");
         assert_eq!(router.shards(), engines.len(), "router does not match the engines");
         let cpu = engines[0].cpu_pool_handle();
+        let trace = engines[0].trace_handle();
         Frontend {
             engines,
             router,
             source,
             event_seq,
             cpu,
+            trace,
             events: BinaryHeap::new(),
             clients: Vec::new(),
             done_clients: 0,
@@ -167,6 +175,7 @@ impl<'a> Frontend<'a> {
             }
             let Some((at, _, which)) = best else { break };
             self.now = at;
+            self.trace.stamp(at);
             processed += 1;
             if diag && processed % 5_000_000 == 0 {
                 eprintln!(

@@ -109,6 +109,7 @@ impl ShardedEngine {
         let hdd_timer = engines[0].fs.hdd.timer.clone();
         let cpu = engines[0].cpu_pool_handle();
         let arena = engines[0].key_arena_handle();
+        let trace = engines[0].trace_handle();
         cpu.borrow_mut().configure(engines.len(), cfg.lsm.cpu_sched);
         for (s, e) in engines.iter_mut().enumerate().skip(1) {
             e.fs.ssd.set_timer(ssd_timer.clone());
@@ -116,6 +117,10 @@ impl ShardedEngine {
             e.share_event_seq(event_seq.clone());
             e.share_cpu_pool(cpu.clone(), s);
             e.share_key_arena(arena.clone());
+            // ONE trace ring for the domain: rebinding AFTER the timer
+            // swap re-tags the shared per-device FIFOs, and events from
+            // every shard land in the shared buffer in emission order.
+            e.share_trace(trace.clone(), s);
         }
         ShardedEngine {
             engines,
@@ -346,6 +351,37 @@ impl ShardedEngine {
     /// Ops executed per shard in the last phase (load-balance reporting).
     pub fn ops_per_shard(&self) -> Vec<u64> {
         self.engines.iter().map(|e| e.metrics.ops_done).collect()
+    }
+
+    /// Per-shard metrics snapshots of the last phase (Exp#7 breakdown).
+    pub fn per_shard_metrics(&self) -> Vec<Metrics> {
+        self.engines.iter().map(|e| e.metrics.clone()).collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Trace export
+    // ------------------------------------------------------------------
+
+    /// Is the shared trace ring live?
+    pub fn trace_enabled(&self) -> bool {
+        self.engines[0].trace.is_enabled()
+    }
+
+    /// Serialize the domain's shared trace ring: every shard emits its
+    /// closing metrics snapshot (the record the checker sums each shard's
+    /// final segment against), then the one ring is exported with the
+    /// domain's shard count and CPU-slot total.
+    pub fn export_trace_string(&self) -> String {
+        for e in &self.engines {
+            e.trace_snapshot();
+        }
+        let bg = self.engines[0].cfg.lsm.bg_threads;
+        self.engines[0].trace.export_string(self.engines.len(), bg)
+    }
+
+    /// Write the trace export to `path` (Perfetto-loadable JSON).
+    pub fn export_trace(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.export_trace_string())
     }
 
     // ------------------------------------------------------------------

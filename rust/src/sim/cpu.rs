@@ -201,6 +201,12 @@ impl CpuPool {
         true
     }
 
+    /// Is this shard currently claiming a flush wake-up? (Read by the
+    /// tracer so "waiter cleared" events are emitted only on transitions.)
+    pub fn is_flush_waiter(&self, shard: usize) -> bool {
+        self.flush_waiter[shard]
+    }
+
     /// Mark/unmark a shard as having an eligible compaction starved of CPU.
     pub fn set_comp_waiter(&mut self, shard: usize, waiting: bool) {
         self.comp_waiter[shard] = waiting;

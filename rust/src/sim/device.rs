@@ -10,7 +10,8 @@ use std::cell::RefCell;
 use std::rc::Rc;
 
 use crate::config::DeviceProfile;
-
+use crate::trace::{Event, TraceSink};
+use crate::zone::Dev;
 
 use super::Ns;
 
@@ -38,11 +39,22 @@ pub struct DeviceTimer {
     pub profile: DeviceProfile,
     free_at: Ns,
     pub traffic: Traffic,
+    /// Observation-only trace sink + the device tag to stamp on service
+    /// intervals. Disabled (no-op) by default; the engine attaches a live
+    /// sink via [`SharedTimer::set_trace`] when tracing is configured.
+    trace: TraceSink,
+    trace_dev: Option<Dev>,
 }
 
 impl DeviceTimer {
     pub fn new(profile: DeviceProfile) -> Self {
-        DeviceTimer { profile, free_at: 0, traffic: Traffic::default() }
+        DeviceTimer {
+            profile,
+            free_at: 0,
+            traffic: Traffic::default(),
+            trace: TraceSink::disabled(),
+            trace_dev: None,
+        }
     }
 
     /// Pure service time of an access (no queueing).
@@ -70,6 +82,10 @@ impl DeviceTimer {
         let finish = start + svc;
         self.free_at = finish;
         self.traffic.busy_ns += svc;
+        if let Some(dev) = self.trace_dev {
+            self.trace.stamp(start);
+            self.trace.emit(|| Event::Dev { dev, kind, bytes, issue: now, start, finish });
+        }
         match kind {
             AccessKind::SeqRead | AccessKind::RandRead => {
                 self.traffic.read_bytes += bytes;
@@ -141,6 +157,14 @@ impl SharedTimer {
 
     pub fn reset_traffic(&self) {
         self.0.borrow_mut().reset_traffic()
+    }
+
+    /// Attach a trace sink: every access emits one `DEV` service-interval
+    /// event tagged `dev`. Observation-only — timing is untouched.
+    pub fn set_trace(&self, trace: TraceSink, dev: Dev) {
+        let mut t = self.0.borrow_mut();
+        t.trace = trace;
+        t.trace_dev = Some(dev);
     }
 
     /// Do two handles refer to the same physical FIFO server?

@@ -1,0 +1,1147 @@
+//! Deterministic virtual-time tracing: causal spans over the DES.
+//!
+//! Every emission is stamped on the *virtual* clock (never wall time), so a
+//! trace is a pure function of `(config, seed)` — two runs of the same
+//! workload produce byte-identical exports, and tracing is observation-only:
+//! enabling it must not move a single virtual timestamp (pinned by the
+//! golden-digest tests in `tests/datapath.rs`).
+//!
+//! Architecture:
+//!
+//! * [`TraceSink`] — a cloneable handle, `None` when tracing is off. The hot
+//!   path costs one `Option` test when disabled and the event-constructor
+//!   closure is never called, so the off path compiles to (almost) nothing.
+//!   All shards of a [`crate::shard::ShardedEngine`] share ONE sink (rebound
+//!   like the CPU pool and device timers), so events land in global
+//!   `(time, seq)` order — the order the frontend processes them in.
+//! * [`TraceBuf`] — a bounded ring (drop-oldest). A full ring never blocks
+//!   or reallocates; it counts `dropped`, and the checker refuses to verify
+//!   sum invariants over a lossy trace.
+//! * [`Event`] — the span/event taxonomy with causal ids (shard, job id,
+//!   SST id, zone id, client id). Each event renders to one pipe-delimited
+//!   record (`Event::line`); the export embeds both those records (the
+//!   machine-checkable form) and Chrome-trace/Perfetto `traceEvents` (the
+//!   human-visual form) in one JSON file.
+//! * [`check_export`] — the second correctness oracle: replays an export
+//!   and asserts (1) job spans and CPU slot spans are well-nested and
+//!   properly paired per resource, (2) per-device busy intervals never
+//!   overlap (the QD1 FIFO contract), (3) concurrent CPU spans never exceed
+//!   `bg_threads` and the replayed slot count matches the pool's reported
+//!   occupancy, (4) flush-priority reservations are never violated by a
+//!   compaction admission, and (5) per shard, summed trace queue/CPU wait
+//!   and stall counts equal the `Metrics` snapshots *exactly*.
+//!
+//! Span taxonomy (pipe records, one per line in `hhzsEvents`):
+//!
+//! ```text
+//! DEV|dev|kind|bytes|issue|start|finish        device service interval (QD1 FIFO)
+//! IO|dev|op|shard|job|sst|bytes|wait|at        one Metrics::record_queue_wait site
+//! CPUWAIT|shard|kind|job|wait|at               one Metrics::cpu_wait sample
+//! ACQ|shard|kind|job|at|in_use                 CPU slot acquired (occupancy after)
+//! REL|shard|kind|job|at|in_use                 CPU slot released (occupancy after)
+//! DENY|shard|at                                flush admission denied (waiter set)
+//! UNWAIT|shard|at                              flush waiter cleared without a grant
+//! JOB|shard|kind|job|queued|at                 job span opens (queued <= at)
+//! JOBEND|shard|kind|job|at                     job span closes
+//! MIGS|shard|sst|from|to|at                    migration span opens
+//! MIGE|shard|sst|at                            migration span closes
+//! STALL|shard|client|at                        writer parked (one Metrics::stalls)
+//! UNSTALL|shard|client|at|dur                  parked op executed after dur ns
+//! ZAPP|dev|zone|bytes|at                       zone append committed
+//! ZRST|dev|zone|at                             zone reset
+//! CADM|shard|sst|zone|bytes|at                 SSD cache admit
+//! CEVT|shard|zone|at                           SSD cache zone evicted
+//! HINT|shard|kind|at                           hint issued to the policy
+//! SNAP|shard|at|stalls|stall_ns|qw_ssd|qw_hdd|cpuw_n|cpuw_sum|ops|fl|comp
+//!                                              Metrics snapshot (phase boundary)
+//! ```
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, VecDeque};
+use std::rc::Rc;
+
+use crate::hints::{CompactionHint, Hint};
+use crate::metrics::Metrics;
+use crate::sim::{AccessKind, Ns};
+use crate::zone::{Dev, ZoneId};
+
+/// Default ring capacity (events). At roughly 100 bytes/event this bounds
+/// the trace memory to ~100 MiB fully loaded; small CI workloads fit with
+/// large margin, and the checker rejects a trace that overflowed.
+pub const DEFAULT_BUFFER_EVENTS: usize = 1 << 20;
+
+/// Which background job kind a CPU span / job span belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum JobKind {
+    Flush,
+    Compaction,
+}
+
+impl JobKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobKind::Flush => "flush",
+            JobKind::Compaction => "comp",
+        }
+    }
+}
+
+/// Which datapath an `IO` record (a `Metrics::record_queue_wait` mirror)
+/// came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoOp {
+    Wal,
+    WalOverflow,
+    WalRecover,
+    CacheRead,
+    CacheWrite,
+    BlockRead,
+    ScanRead,
+    CompactionRead,
+    SstWrite,
+    MigrationRead,
+    MigrationWrite,
+}
+
+impl IoOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            IoOp::Wal => "wal",
+            IoOp::WalOverflow => "wal_of",
+            IoOp::WalRecover => "wal_rec",
+            IoOp::CacheRead => "cache_rd",
+            IoOp::CacheWrite => "cache_wr",
+            IoOp::BlockRead => "block_rd",
+            IoOp::ScanRead => "scan_rd",
+            IoOp::CompactionRead => "comp_rd",
+            IoOp::SstWrite => "sst_wr",
+            IoOp::MigrationRead => "mig_rd",
+            IoOp::MigrationWrite => "mig_wr",
+        }
+    }
+}
+
+/// Short label for a hint, for `HINT` records.
+pub fn hint_kind(h: &Hint) -> &'static str {
+    match h {
+        Hint::Flush(_) => "flush",
+        Hint::Compaction(CompactionHint::Start { .. }) => "comp_start",
+        Hint::Compaction(CompactionHint::OutputSst { .. }) => "comp_out",
+        Hint::Compaction(CompactionHint::Finish { .. }) => "comp_fin",
+        Hint::CacheEvict(_) => "cache_evict",
+    }
+}
+
+fn kind_name(k: AccessKind) -> &'static str {
+    match k {
+        AccessKind::SeqRead => "seq_rd",
+        AccessKind::SeqWrite => "seq_wr",
+        AccessKind::RandRead => "rnd_rd",
+    }
+}
+
+/// One trace event. See the module docs for the record schema.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// A device service interval from the QD1 FIFO timer: queued at
+    /// `issue`, served `[start, finish)`.
+    Dev { dev: Dev, kind: AccessKind, bytes: u64, issue: Ns, start: Ns, finish: Ns },
+    /// One `Metrics::record_queue_wait` site, with causal ids.
+    Io {
+        dev: Dev,
+        op: IoOp,
+        shard: usize,
+        job: Option<u64>,
+        sst: Option<u64>,
+        bytes: u64,
+        wait: Ns,
+        at: Ns,
+    },
+    /// One `Metrics::cpu_wait` sample (recorded at job admission).
+    CpuWait { shard: usize, kind: JobKind, job: u64, wait: Ns, at: Ns },
+    /// CPU slot acquired; `in_use` is pool occupancy *after* the acquire.
+    CpuAcquire { shard: usize, kind: JobKind, job: u64, at: Ns, in_use: usize },
+    /// CPU slot released; `in_use` is pool occupancy *after* the release.
+    CpuRelease { shard: usize, kind: JobKind, job: u64, at: Ns, in_use: usize },
+    /// Flush admission denied — the pool marked this shard a flush waiter.
+    FlushDenied { shard: usize, at: Ns },
+    /// Flush waiter cleared without a grant (flush no longer wanted).
+    FlushUnwait { shard: usize, at: Ns },
+    /// Background job span opens (`queued` is when it became ready).
+    JobStart { shard: usize, kind: JobKind, job: u64, queued: Ns, at: Ns },
+    /// Background job span closes.
+    JobEnd { shard: usize, kind: JobKind, job: u64, at: Ns },
+    /// Migration span opens for one SST.
+    MigStart { shard: usize, sst: u64, from: Dev, to: Dev, at: Ns },
+    /// Migration span closes (completed or aborted).
+    MigEnd { shard: usize, sst: u64, at: Ns },
+    /// A writer parked on a write stall (one `Metrics::stalls`).
+    Stall { shard: usize, client: usize, at: Ns },
+    /// A previously parked op executed `dur` ns after issue.
+    Unstall { shard: usize, client: usize, at: Ns, dur: Ns },
+    /// Zone append committed (write pointer advanced by `bytes`).
+    ZoneAppend { dev: Dev, zone: ZoneId, bytes: u64, at: Ns },
+    /// Zone reset.
+    ZoneReset { dev: Dev, zone: ZoneId, at: Ns },
+    /// SSD cache admitted a block of `sst`.
+    CacheAdmit { shard: usize, sst: u64, zone: ZoneId, bytes: u64, at: Ns },
+    /// SSD cache evicted (reset) a cache zone.
+    CacheEvict { shard: usize, zone: ZoneId, at: Ns },
+    /// The engine issued a hint to the policy.
+    HintIssued { shard: usize, kind: &'static str, at: Ns },
+    /// Per-shard `Metrics` snapshot at a phase boundary (and once at
+    /// export). The checker verifies segment sums against these exactly.
+    Snapshot {
+        shard: usize,
+        at: Ns,
+        stalls: u64,
+        stall_ns: Ns,
+        qw_ssd: Ns,
+        qw_hdd: Ns,
+        cpuw_n: u64,
+        cpuw_sum: u128,
+        ops: u64,
+        flushes: u64,
+        compactions: u64,
+    },
+}
+
+fn opt(v: Option<u64>) -> String {
+    v.map_or_else(|| "-".to_string(), |x| x.to_string())
+}
+
+impl Event {
+    /// Snapshot constructor from a live `Metrics`.
+    pub fn snapshot(shard: usize, at: Ns, m: &Metrics) -> Event {
+        Event::Snapshot {
+            shard,
+            at,
+            stalls: m.stalls,
+            stall_ns: m.stall_ns,
+            qw_ssd: m.queue_wait.get(&Dev::Ssd).copied().unwrap_or(0),
+            qw_hdd: m.queue_wait.get(&Dev::Hdd).copied().unwrap_or(0),
+            cpuw_n: m.cpu_wait.n,
+            cpuw_sum: m.cpu_wait.sum,
+            ops: m.ops_done,
+            flushes: m.flushes,
+            compactions: m.compactions,
+        }
+    }
+
+    /// The pipe-delimited record for this event (see module docs).
+    pub fn line(&self) -> String {
+        match self {
+            Event::Dev { dev, kind, bytes, issue, start, finish } => {
+                format!("DEV|{}|{}|{bytes}|{issue}|{start}|{finish}", dev.name(), kind_name(*kind))
+            }
+            Event::Io { dev, op, shard, job, sst, bytes, wait, at } => format!(
+                "IO|{}|{}|{shard}|{}|{}|{bytes}|{wait}|{at}",
+                dev.name(),
+                op.name(),
+                opt(*job),
+                opt(*sst)
+            ),
+            Event::CpuWait { shard, kind, job, wait, at } => {
+                format!("CPUWAIT|{shard}|{}|{job}|{wait}|{at}", kind.name())
+            }
+            Event::CpuAcquire { shard, kind, job, at, in_use } => {
+                format!("ACQ|{shard}|{}|{job}|{at}|{in_use}", kind.name())
+            }
+            Event::CpuRelease { shard, kind, job, at, in_use } => {
+                format!("REL|{shard}|{}|{job}|{at}|{in_use}", kind.name())
+            }
+            Event::FlushDenied { shard, at } => format!("DENY|{shard}|{at}"),
+            Event::FlushUnwait { shard, at } => format!("UNWAIT|{shard}|{at}"),
+            Event::JobStart { shard, kind, job, queued, at } => {
+                format!("JOB|{shard}|{}|{job}|{queued}|{at}", kind.name())
+            }
+            Event::JobEnd { shard, kind, job, at } => {
+                format!("JOBEND|{shard}|{}|{job}|{at}", kind.name())
+            }
+            Event::MigStart { shard, sst, from, to, at } => {
+                format!("MIGS|{shard}|{sst}|{}|{}|{at}", from.name(), to.name())
+            }
+            Event::MigEnd { shard, sst, at } => format!("MIGE|{shard}|{sst}|{at}"),
+            Event::Stall { shard, client, at } => format!("STALL|{shard}|{client}|{at}"),
+            Event::Unstall { shard, client, at, dur } => {
+                format!("UNSTALL|{shard}|{client}|{at}|{dur}")
+            }
+            Event::ZoneAppend { dev, zone, bytes, at } => {
+                format!("ZAPP|{}|{zone}|{bytes}|{at}", dev.name())
+            }
+            Event::ZoneReset { dev, zone, at } => format!("ZRST|{}|{zone}|{at}", dev.name()),
+            Event::CacheAdmit { shard, sst, zone, bytes, at } => {
+                format!("CADM|{shard}|{sst}|{zone}|{bytes}|{at}")
+            }
+            Event::CacheEvict { shard, zone, at } => format!("CEVT|{shard}|{zone}|{at}"),
+            Event::HintIssued { shard, kind, at } => format!("HINT|{shard}|{kind}|{at}"),
+            Event::Snapshot {
+                shard,
+                at,
+                stalls,
+                stall_ns,
+                qw_ssd,
+                qw_hdd,
+                cpuw_n,
+                cpuw_sum,
+                ops,
+                flushes,
+                compactions,
+            } => format!(
+                "SNAP|{shard}|{at}|{stalls}|{stall_ns}|{qw_ssd}|{qw_hdd}|{cpuw_n}|{cpuw_sum}|{ops}|{flushes}|{compactions}"
+            ),
+        }
+    }
+}
+
+/// The bounded event ring. Full ⇒ drop-oldest + count (never blocks, never
+/// reallocates past capacity); `now` is the last virtual time any emitter
+/// stamped, used by emission sites that have no clock of their own (zone
+/// resets on untimed paths).
+#[derive(Debug)]
+pub struct TraceBuf {
+    cap: usize,
+    now: Ns,
+    dropped: u64,
+    events: VecDeque<Event>,
+}
+
+impl TraceBuf {
+    fn push(&mut self, ev: Event) {
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+}
+
+/// Cloneable tracing handle. `Default` (and [`TraceSink::disabled`]) is the
+/// no-op sink: one branch on the hot path, the event closure never runs.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSink(Option<Rc<RefCell<TraceBuf>>>);
+
+impl TraceSink {
+    pub fn disabled() -> TraceSink {
+        TraceSink(None)
+    }
+
+    pub fn enabled(buffer_events: usize) -> TraceSink {
+        TraceSink(Some(Rc::new(RefCell::new(TraceBuf {
+            cap: buffer_events.max(1),
+            now: 0,
+            dropped: 0,
+            events: VecDeque::new(),
+        }))))
+    }
+
+    pub fn from_config(t: &crate::config::TraceConfig) -> TraceSink {
+        if t.enabled {
+            TraceSink::enabled(t.buffer_events)
+        } else {
+            TraceSink::disabled()
+        }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Emit one event. The closure is only invoked when tracing is on, so
+    /// argument construction costs nothing on the disabled path.
+    #[inline]
+    pub fn emit(&self, f: impl FnOnce() -> Event) {
+        if let Some(buf) = &self.0 {
+            let ev = f();
+            buf.borrow_mut().push(ev);
+        }
+    }
+
+    /// Advance the sink's clock hint (for emission sites without a clock).
+    #[inline]
+    pub fn stamp(&self, now: Ns) {
+        if let Some(buf) = &self.0 {
+            buf.borrow_mut().now = now;
+        }
+    }
+
+    /// Last stamped virtual time (0 when disabled).
+    pub fn now_hint(&self) -> Ns {
+        self.0.as_ref().map_or(0, |b| b.borrow().now)
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.as_ref().map_or(0, |b| b.borrow().events.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.0.as_ref().map_or(0, |b| b.borrow().dropped)
+    }
+
+    /// Two handles share one ring (the sharing invariant the shard layer
+    /// establishes, mirroring `SharedTimer::shares_with`).
+    pub fn shares_with(&self, other: &TraceSink) -> bool {
+        match (&self.0, &other.0) {
+            (Some(a), Some(b)) => Rc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+
+    /// All pipe records in emission (= global DES) order.
+    pub fn lines(&self) -> Vec<String> {
+        self.0
+            .as_ref()
+            .map_or_else(Vec::new, |b| b.borrow().events.iter().map(|e| e.line()).collect())
+    }
+
+    /// Render the full export: Perfetto `traceEvents` + `hhzsMeta` +
+    /// `hhzsEvents` in one JSON object. Deterministic: pure function of
+    /// the buffered events (no wall clock, no randomness).
+    pub fn export_string(&self, shards: usize, bg_threads: usize) -> String {
+        let (lines, perfetto, dropped) = match &self.0 {
+            Some(buf) => {
+                let b = buf.borrow();
+                let lines: Vec<String> = b.events.iter().map(|e| e.line()).collect();
+                (lines, perfetto_events(&b, shards), b.dropped)
+            }
+            None => (Vec::new(), Vec::new(), 0),
+        };
+        let mut out = String::new();
+        out.push_str("{\n\"traceEvents\": [\n");
+        out.push_str(&perfetto.join(",\n"));
+        out.push_str("\n],\n");
+        out.push_str(&format!(
+            "\"hhzsMeta\": {{\"shards\": {shards}, \"bg_threads\": {bg_threads}, \
+             \"events\": {}, \"dropped\": {dropped}}},\n",
+            lines.len()
+        ));
+        out.push_str("\"hhzsEvents\": [\n");
+        let quoted: Vec<String> = lines.iter().map(|l| format!("\"{l}\"")).collect();
+        out.push_str(&quoted.join(",\n"));
+        out.push_str("\n]\n}\n");
+        out
+    }
+}
+
+/// Microsecond timestamp with nanosecond remainder, Chrome-trace style.
+fn us(ns: Ns) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+fn dev_tid(dev: Dev) -> u32 {
+    match dev {
+        Dev::Ssd => 1,
+        Dev::Hdd => 2,
+    }
+}
+
+fn slice(pid: usize, tid: usize, ts: Ns, dur: Ns, name: &str) -> String {
+    format!(
+        "{{\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\"ts\":{},\"dur\":{},\"name\":\"{name}\"}}",
+        us(ts),
+        us(dur)
+    )
+}
+
+fn instant(pid: usize, tid: usize, ts: Ns, name: &str) -> String {
+    format!(
+        "{{\"ph\":\"i\",\"pid\":{pid},\"tid\":{tid},\"ts\":{},\"s\":\"t\",\"name\":\"{name}\"}}",
+        us(ts)
+    )
+}
+
+fn meta_name(pid: usize, tid: Option<usize>, what: &str, name: &str) -> String {
+    match tid {
+        Some(t) => format!(
+            "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{t},\"name\":\"{what}\",\"args\":{{\"name\":\"{name}\"}}}}"
+        ),
+        None => format!(
+            "{{\"ph\":\"M\",\"pid\":{pid},\"name\":\"{what}\",\"args\":{{\"name\":\"{name}\"}}}}"
+        ),
+    }
+}
+
+/// Build the Perfetto view: pid 1 = devices (service + queue lanes), pid 2
+/// = the shared CPU pool (one lane per concurrently held slot, assigned
+/// deterministically lowest-free-first), pid `3+s` = shard `s` (job spans,
+/// queued spans, stalls, migrations, instants).
+fn perfetto_events(buf: &TraceBuf, shards: usize) -> Vec<String> {
+    let mut body: Vec<String> = Vec::new();
+    let mut free_lanes: BinaryHeap<std::cmp::Reverse<usize>> = BinaryHeap::new();
+    let mut next_lane = 0usize;
+    let mut cpu_open: BTreeMap<(usize, JobKind, u64), (Ns, usize)> = BTreeMap::new();
+    let mut job_open: BTreeMap<(usize, JobKind, u64), (Ns, Ns)> = BTreeMap::new();
+    let mut mig_open: BTreeMap<(usize, u64), (Dev, Dev, Ns)> = BTreeMap::new();
+    for ev in &buf.events {
+        match ev {
+            Event::Dev { dev, kind, bytes, issue, start, finish } => {
+                let t = dev_tid(*dev) as usize;
+                body.push(slice(1, t, *start, finish - start, &format!(
+                    "{} {bytes}B",
+                    kind_name(*kind)
+                )));
+                if start > issue {
+                    body.push(slice(1, t + 2, *issue, start - issue, &format!(
+                        "queue {}",
+                        kind_name(*kind)
+                    )));
+                }
+            }
+            Event::CpuAcquire { shard, kind, job, at, .. } => {
+                let lane = match free_lanes.pop() {
+                    Some(std::cmp::Reverse(l)) => l,
+                    None => {
+                        next_lane += 1;
+                        next_lane - 1
+                    }
+                };
+                cpu_open.insert((*shard, *kind, *job), (*at, lane));
+            }
+            Event::CpuRelease { shard, kind, job, at, .. } => {
+                if let Some((t0, lane)) = cpu_open.remove(&(*shard, *kind, *job)) {
+                    body.push(slice(2, lane + 1, t0, at - t0, &format!(
+                        "{} s{shard} j{job}",
+                        kind.name()
+                    )));
+                    free_lanes.push(std::cmp::Reverse(lane));
+                }
+            }
+            Event::FlushDenied { shard, at } => {
+                body.push(instant(3 + shard, 5, *at, "flush denied"));
+            }
+            Event::FlushUnwait { shard, at } => {
+                body.push(instant(3 + shard, 5, *at, "flush unwaited"));
+            }
+            Event::JobStart { shard, kind, job, queued, at } => {
+                job_open.insert((*shard, *kind, *job), (*queued, *at));
+            }
+            Event::JobEnd { shard, kind, job, at } => {
+                if let Some((queued, t0)) = job_open.remove(&(*shard, *kind, *job)) {
+                    if queued < t0 {
+                        body.push(slice(3 + shard, 2, queued, t0 - queued, &format!(
+                            "{} j{job} queued",
+                            kind.name()
+                        )));
+                    }
+                    body.push(slice(3 + shard, 1, t0, at - t0, &format!(
+                        "{} j{job}",
+                        kind.name()
+                    )));
+                }
+            }
+            Event::MigStart { shard, sst, from, to, at } => {
+                mig_open.insert((*shard, *sst), (*from, *to, *at));
+            }
+            Event::MigEnd { shard, sst, at } => {
+                if let Some((from, to, t0)) = mig_open.remove(&(*shard, *sst)) {
+                    body.push(slice(3 + shard, 4, t0, at - t0, &format!(
+                        "migrate sst{sst} {}->{}",
+                        from.name(),
+                        to.name()
+                    )));
+                }
+            }
+            Event::Stall { shard, client, at } => {
+                body.push(instant(3 + shard, 3, *at, &format!("stall c{client}")));
+            }
+            Event::Unstall { shard, client, at, dur } => {
+                body.push(slice(3 + shard, 3, at - dur, *dur, &format!("stalled c{client}")));
+            }
+            Event::ZoneReset { dev, zone, at } => {
+                body.push(instant(1, dev_tid(*dev) as usize, *at, &format!("reset z{zone}")));
+            }
+            Event::CacheAdmit { shard, sst, zone, at, .. } => {
+                body.push(instant(3 + shard, 5, *at, &format!("cache admit sst{sst} z{zone}")));
+            }
+            Event::CacheEvict { shard, zone, at } => {
+                body.push(instant(3 + shard, 5, *at, &format!("cache evict z{zone}")));
+            }
+            Event::HintIssued { shard, kind, at } => {
+                body.push(instant(3 + shard, 5, *at, &format!("hint {kind}")));
+            }
+            // High-volume / bookkeeping records stay pipe-only.
+            Event::Io { .. }
+            | Event::CpuWait { .. }
+            | Event::ZoneAppend { .. }
+            | Event::Snapshot { .. } => {}
+        }
+    }
+    let mut out: Vec<String> = Vec::new();
+    out.push(meta_name(1, None, "process_name", "devices"));
+    out.push(meta_name(1, Some(1), "thread_name", "ssd service"));
+    out.push(meta_name(1, Some(2), "thread_name", "hdd service"));
+    out.push(meta_name(1, Some(3), "thread_name", "ssd queue"));
+    out.push(meta_name(1, Some(4), "thread_name", "hdd queue"));
+    out.push(meta_name(2, None, "process_name", "cpu-pool"));
+    for l in 0..next_lane {
+        out.push(meta_name(2, Some(l + 1), "thread_name", &format!("slot {l}")));
+    }
+    for s in 0..shards {
+        out.push(meta_name(3 + s, None, "process_name", &format!("shard {s}")));
+        out.push(meta_name(3 + s, Some(1), "thread_name", "jobs"));
+        out.push(meta_name(3 + s, Some(2), "thread_name", "job queue"));
+        out.push(meta_name(3 + s, Some(3), "thread_name", "stalls"));
+        out.push(meta_name(3 + s, Some(4), "thread_name", "migrations"));
+        out.push(meta_name(3 + s, Some(5), "thread_name", "hints"));
+    }
+    out.extend(body);
+    out
+}
+
+// ---------------------------------------------------------------------
+// The trace checker: replay an export, assert the DES invariants.
+// ---------------------------------------------------------------------
+
+/// Result of a [`check_export`] replay.
+#[derive(Debug, Default)]
+pub struct CheckReport {
+    pub events: usize,
+    pub dev_intervals: usize,
+    pub jobs_closed: usize,
+    pub snapshots: usize,
+    pub max_concurrent_cpu: usize,
+    pub violations: Vec<String>,
+}
+
+impl CheckReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} events, {} device intervals, {} job spans, {} snapshots, \
+             peak cpu {} — {}",
+            self.events,
+            self.dev_intervals,
+            self.jobs_closed,
+            self.snapshots,
+            self.max_concurrent_cpu,
+            if self.ok() {
+                "OK".to_string()
+            } else {
+                format!("{} VIOLATION(S)", self.violations.len())
+            }
+        )
+    }
+}
+
+/// Scan `"key": <int>` inside the `hhzsMeta` object.
+fn scan_meta_u64(json: &str, key: &str) -> Option<u64> {
+    let meta = json.find("\"hhzsMeta\"")?;
+    let rest = &json[meta..];
+    let end = rest.find('}')?;
+    let obj = &rest[..end];
+    let pat = format!("\"{key}\": ");
+    let at = obj.find(&pat)? + pat.len();
+    let digits: String = obj[at..].chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+/// Pull the pipe records back out of an export.
+fn extract_lines(json: &str) -> Result<Vec<String>, String> {
+    let at = json.find("\"hhzsEvents\": [").ok_or("no hhzsEvents array in file")?;
+    let mut out = Vec::new();
+    let bytes = json.as_bytes();
+    let mut i = at + "\"hhzsEvents\": [".len();
+    loop {
+        while i < bytes.len() && (bytes[i] as char).is_whitespace() {
+            i += 1;
+        }
+        match bytes.get(i) {
+            Some(b']') => return Ok(out),
+            Some(b'"') => {
+                let start = i + 1;
+                let mut j = start;
+                while j < bytes.len() && bytes[j] != b'"' {
+                    j += 1;
+                }
+                if j >= bytes.len() {
+                    return Err("unterminated record string".into());
+                }
+                out.push(json[start..j].to_string());
+                i = j + 1;
+            }
+            Some(b',') => i += 1,
+            _ => return Err("malformed hhzsEvents array".into()),
+        }
+    }
+}
+
+/// The flush-slot reservation the shared pool holds back from compactions
+/// (must mirror `CpuPool::flush_reserved`).
+fn flush_reserved(total: usize) -> usize {
+    match total {
+        0 | 1 => 0,
+        t => 2.min(t - 1),
+    }
+}
+
+#[derive(Clone, Default)]
+struct ShardAcc {
+    qw_ssd: u64,
+    qw_hdd: u64,
+    cpuw_n: u64,
+    cpuw_sum: u128,
+    stalls: u64,
+    stall_ns: u64,
+    any: bool,
+}
+
+/// Replay pipe records and verify the five invariant families. `shards`
+/// and `bg_threads` come from the export's `hhzsMeta`.
+pub fn check_lines(lines: &[String], shards: usize, bg_threads: usize, dropped: u64) -> CheckReport {
+    let mut r = CheckReport { events: lines.len(), ..Default::default() };
+    if dropped > 0 {
+        r.violations.push(format!(
+            "ring buffer dropped {dropped} events — sum invariants unverifiable; \
+             raise [trace] buffer_events"
+        ));
+        return r;
+    }
+    let reserved = flush_reserved(bg_threads);
+    let mut dev_last_finish: BTreeMap<String, u64> = BTreeMap::new();
+    let mut in_use: usize = 0;
+    let mut cpu_open: BTreeSet<(usize, String, u64)> = BTreeSet::new();
+    let mut job_open: BTreeMap<(usize, String, u64), u64> = BTreeMap::new();
+    let mut mig_open: BTreeSet<(usize, u64)> = BTreeSet::new();
+    let mut flush_wait = vec![false; shards.max(1)];
+    let mut acc = vec![ShardAcc::default(); shards.max(1)];
+    for (i, l) in lines.iter().enumerate() {
+        let f: Vec<&str> = l.split('|').collect();
+        let mut bad = false;
+        let mut num = |s: &str| -> u64 {
+            s.parse().unwrap_or_else(|_| {
+                bad = true;
+                0
+            })
+        };
+        macro_rules! viol {
+            ($($arg:tt)*) => { r.violations.push(format!("record {i} [{l}]: {}", format!($($arg)*))) };
+        }
+        match f.first().copied() {
+            Some("DEV") if f.len() == 7 => {
+                let (issue, start, finish) = (num(f[4]), num(f[5]), num(f[6]));
+                if issue > start || start > finish {
+                    viol!("service interval not ordered issue<=start<=finish");
+                }
+                let prev = dev_last_finish.entry(f[1].to_string()).or_insert(0);
+                if start < *prev {
+                    viol!("busy interval overlaps previous finish {prev} on {}", f[1]);
+                }
+                *prev = (*prev).max(finish);
+                r.dev_intervals += 1;
+            }
+            Some("IO") if f.len() == 9 => {
+                let shard = num(f[3]) as usize;
+                let wait = num(f[7]);
+                if shard >= acc.len() {
+                    viol!("shard out of range");
+                } else {
+                    let a = &mut acc[shard];
+                    a.any = true;
+                    match f[1] {
+                        "ssd" => a.qw_ssd += wait,
+                        "hdd" => a.qw_hdd += wait,
+                        d => viol!("unknown device {d}"),
+                    }
+                }
+            }
+            Some("CPUWAIT") if f.len() == 6 => {
+                let shard = num(f[1]) as usize;
+                let wait = num(f[4]);
+                if shard >= acc.len() {
+                    viol!("shard out of range");
+                } else {
+                    acc[shard].any = true;
+                    acc[shard].cpuw_n += 1;
+                    acc[shard].cpuw_sum += wait as u128;
+                }
+            }
+            Some("ACQ") if f.len() == 6 => {
+                let shard = num(f[1]) as usize;
+                let job = num(f[3]);
+                let reported = num(f[5]) as usize;
+                in_use += 1;
+                if in_use != reported {
+                    viol!("replayed occupancy {in_use} != pool-reported {reported}");
+                    in_use = reported; // resync so one slip doesn't cascade
+                }
+                if in_use > bg_threads {
+                    viol!("concurrent CPU spans {in_use} exceed bg_threads {bg_threads}");
+                }
+                r.max_concurrent_cpu = r.max_concurrent_cpu.max(in_use);
+                if !cpu_open.insert((shard, f[2].to_string(), job)) {
+                    viol!("slot acquired twice without release");
+                }
+                if shard < flush_wait.len() && f[2] == "flush" {
+                    flush_wait[shard] = false;
+                }
+                if f[2] == "comp" {
+                    let waiting = flush_wait.iter().filter(|w| **w).count();
+                    if waiting + reported > bg_threads {
+                        viol!(
+                            "flush priority violated: {waiting} flush waiter(s) but \
+                             compaction admission left occupancy {reported}/{bg_threads}"
+                        );
+                    }
+                    if reported > bg_threads - reserved {
+                        viol!(
+                            "compaction admission broke the {reserved}-slot flush \
+                             reservation ({reported}/{bg_threads})"
+                        );
+                    }
+                }
+            }
+            Some("REL") if f.len() == 6 => {
+                let shard = num(f[1]) as usize;
+                let job = num(f[3]);
+                let reported = num(f[5]) as usize;
+                if !cpu_open.remove(&(shard, f[2].to_string(), job)) {
+                    viol!("slot released without a matching acquire");
+                }
+                in_use = in_use.saturating_sub(1);
+                if in_use != reported {
+                    viol!("replayed occupancy {in_use} != pool-reported {reported}");
+                    in_use = reported;
+                }
+            }
+            Some("DENY") if f.len() == 3 => {
+                let shard = num(f[1]) as usize;
+                if shard < flush_wait.len() {
+                    flush_wait[shard] = true;
+                }
+            }
+            Some("UNWAIT") if f.len() == 3 => {
+                let shard = num(f[1]) as usize;
+                if shard < flush_wait.len() {
+                    flush_wait[shard] = false;
+                }
+            }
+            Some("JOB") if f.len() == 6 => {
+                let key = (num(f[1]) as usize, f[2].to_string(), num(f[3]));
+                let (queued, at) = (num(f[4]), num(f[5]));
+                if queued > at {
+                    viol!("job queued after it started");
+                }
+                if job_open.insert(key, at).is_some() {
+                    viol!("job span opened twice");
+                }
+            }
+            Some("JOBEND") if f.len() == 5 => {
+                let key = (num(f[1]) as usize, f[2].to_string(), num(f[3]));
+                let at = num(f[4]);
+                match job_open.remove(&key) {
+                    Some(start) if at < start => viol!("job span ends before it starts"),
+                    Some(_) => r.jobs_closed += 1,
+                    None => viol!("job span closed without an open"),
+                }
+            }
+            Some("MIGS") if f.len() == 6 => {
+                if !mig_open.insert((num(f[1]) as usize, num(f[2]))) {
+                    viol!("migration span opened twice for one SST");
+                }
+            }
+            Some("MIGE") if f.len() == 4 => {
+                if !mig_open.remove(&(num(f[1]) as usize, num(f[2]))) {
+                    viol!("migration span closed without an open");
+                }
+            }
+            Some("STALL") if f.len() == 4 => {
+                let shard = num(f[1]) as usize;
+                if shard < acc.len() {
+                    acc[shard].any = true;
+                    acc[shard].stalls += 1;
+                }
+            }
+            Some("UNSTALL") if f.len() == 5 => {
+                let shard = num(f[1]) as usize;
+                let dur = num(f[4]);
+                if shard < acc.len() {
+                    acc[shard].any = true;
+                    acc[shard].stall_ns += dur;
+                }
+            }
+            Some("SNAP") if f.len() == 12 => {
+                let shard = num(f[1]) as usize;
+                if shard >= acc.len() {
+                    viol!("shard out of range");
+                } else {
+                    let a = &acc[shard];
+                    let (stalls, stall_ns) = (num(f[3]), num(f[4]));
+                    let (qw_ssd, qw_hdd) = (num(f[5]), num(f[6]));
+                    let cpuw_n = num(f[7]);
+                    let cpuw_sum: u128 = f[8].parse().unwrap_or(u128::MAX);
+                    if a.stalls != stalls {
+                        viol!("trace stalls {} != Metrics::stalls {stalls}", a.stalls);
+                    }
+                    if a.stall_ns != stall_ns {
+                        viol!("trace stall ns {} != Metrics::stall_ns {stall_ns}", a.stall_ns);
+                    }
+                    if a.qw_ssd != qw_ssd {
+                        viol!("trace ssd wait {} != Metrics::queue_wait {qw_ssd}", a.qw_ssd);
+                    }
+                    if a.qw_hdd != qw_hdd {
+                        viol!("trace hdd wait {} != Metrics::queue_wait {qw_hdd}", a.qw_hdd);
+                    }
+                    if a.cpuw_n != cpuw_n || a.cpuw_sum != cpuw_sum {
+                        viol!(
+                            "trace cpu wait {}:{} != Metrics::cpu_wait {cpuw_n}:{cpuw_sum}",
+                            a.cpuw_n,
+                            a.cpuw_sum
+                        );
+                    }
+                    acc[shard] = ShardAcc::default();
+                    r.snapshots += 1;
+                }
+            }
+            Some("ZAPP") if f.len() == 5 => {}
+            Some("ZRST") if f.len() == 4 => {}
+            Some("CADM") if f.len() == 6 => {}
+            Some("CEVT") if f.len() == 4 => {}
+            Some("HINT") if f.len() == 4 => {}
+            _ => viol!("unknown or malformed record"),
+        }
+        if bad {
+            r.violations.push(format!("record {i} [{l}]: unparseable number"));
+        }
+    }
+    for (key, _) in job_open {
+        r.violations.push(format!("job span never closed: shard {} {} j{}", key.0, key.1, key.2));
+    }
+    for key in cpu_open {
+        r.violations.push(format!("CPU slot never released: shard {} {} j{}", key.0, key.1, key.2));
+    }
+    if in_use != 0 {
+        r.violations.push(format!("{in_use} CPU slot(s) still held at end of trace"));
+    }
+    for (s, a) in acc.iter().enumerate() {
+        if a.any {
+            r.violations.push(format!(
+                "shard {s}: waits/stalls recorded after the final snapshot — \
+                 export must emit a closing SNAP per shard"
+            ));
+        }
+    }
+    r
+}
+
+/// Check a rendered export string (the `--trace` output file format).
+pub fn check_export(json: &str) -> Result<CheckReport, String> {
+    let shards =
+        scan_meta_u64(json, "shards").ok_or("missing hhzsMeta.shards — not an hhzs trace?")?;
+    let bg = scan_meta_u64(json, "bg_threads").ok_or("missing hhzsMeta.bg_threads")?;
+    let dropped = scan_meta_u64(json, "dropped").unwrap_or(0);
+    let lines = extract_lines(json)?;
+    Ok(check_lines(&lines, shards as usize, bg as usize, dropped))
+}
+
+/// Check a trace file on disk (`hhzs trace check <file>`).
+pub fn check_file(path: &str) -> Result<CheckReport, String> {
+    let json =
+        std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    check_export(&json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_never_runs_the_closure() {
+        let t = TraceSink::disabled();
+        t.emit(|| panic!("closure must not run on the disabled path"));
+        t.stamp(42);
+        assert!(!t.is_enabled());
+        assert_eq!(t.len(), 0);
+        assert_eq!(t.now_hint(), 0);
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let t = TraceSink::enabled(3);
+        for i in 0..5u64 {
+            t.emit(|| Event::Stall { shard: 0, client: i as usize, at: i });
+        }
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.dropped(), 2);
+        let lines = t.lines();
+        assert_eq!(lines[0], "STALL|0|2|2", "oldest two must have been dropped");
+    }
+
+    #[test]
+    fn stamp_feeds_clockless_sites() {
+        let t = TraceSink::enabled(8);
+        t.stamp(1_000);
+        assert_eq!(t.now_hint(), 1_000);
+        let u = t.clone();
+        u.stamp(2_000);
+        assert_eq!(t.now_hint(), 2_000, "clones share the ring and the clock hint");
+        assert!(t.shares_with(&u));
+        assert!(!t.shares_with(&TraceSink::enabled(8)));
+    }
+
+    fn consistent_lines() -> Vec<String> {
+        [
+            "DEV|ssd|seq_wr|4096|0|0|100",
+            "DEV|ssd|rnd_rd|4096|50|100|180",
+            "IO|ssd|wal|0|-|-|4096|0|0",
+            "IO|ssd|block_rd|0|-|7|4096|50|50",
+            "STALL|0|3|60",
+            "JOB|0|flush|1|80|90",
+            "ACQ|0|flush|1|90|1",
+            "CPUWAIT|0|flush|1|10|90",
+            "UNSTALL|0|3|95|35",
+            "REL|0|flush|1|120|0",
+            "JOBEND|0|flush|1|120",
+            "ZAPP|ssd|2|4096|100",
+            "ZRST|ssd|2|110",
+            "HINT|0|flush|120",
+            "SNAP|0|130|1|35|50|0|1|10|5|1|0",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+    }
+
+    #[test]
+    fn checker_accepts_a_consistent_trace() {
+        let r = check_lines(&consistent_lines(), 1, 2, 0);
+        assert!(r.ok(), "unexpected violations: {:?}", r.violations);
+        assert_eq!(r.dev_intervals, 2);
+        assert_eq!(r.jobs_closed, 1);
+        assert_eq!(r.snapshots, 1);
+        assert_eq!(r.max_concurrent_cpu, 1);
+    }
+
+    #[test]
+    fn checker_rejects_overlapping_device_intervals() {
+        let lines: Vec<String> =
+            ["DEV|ssd|seq_wr|1|0|0|100", "DEV|ssd|seq_wr|1|0|99|150", "SNAP|0|1|0|0|0|0|0|0|0|0|0"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let r = check_lines(&lines, 1, 2, 0);
+        assert_eq!(r.violations.len(), 1);
+        assert!(r.violations[0].contains("overlaps"), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn checker_rejects_cpu_overcommit() {
+        let lines: Vec<String> = ["ACQ|0|flush|1|0|1", "ACQ|0|comp|2|0|2", "ACQ|0|comp|3|0|3"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let r = check_lines(&lines, 1, 2, 0);
+        assert!(
+            r.violations.iter().any(|v| v.contains("exceed bg_threads")),
+            "{:?}",
+            r.violations
+        );
+    }
+
+    #[test]
+    fn checker_rejects_flush_priority_violation() {
+        // One flush waiter, 2 threads: a compaction filling the last slot
+        // (occupancy 2/2) starves the waiting flush.
+        let lines: Vec<String> = [
+            "ACQ|0|comp|1|0|1",
+            "DENY|1|5",
+            "ACQ|0|comp|2|10|2",
+            "REL|0|comp|1|20|1",
+            "REL|0|comp|2|20|0",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let r = check_lines(&lines, 2, 2, 0);
+        assert!(r.violations.iter().any(|v| v.contains("flush priority")), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn checker_rejects_snapshot_sum_mismatch() {
+        let lines: Vec<String> = ["STALL|0|1|10", "SNAP|0|20|0|0|0|0|0|0|0|0|0"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let r = check_lines(&lines, 1, 2, 0);
+        assert!(r.violations.iter().any(|v| v.contains("Metrics::stalls")), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn checker_rejects_unbalanced_spans_and_lossy_rings() {
+        let lines: Vec<String> =
+            ["JOB|0|flush|1|0|0", "ACQ|0|flush|1|0|1"].iter().map(|s| s.to_string()).collect();
+        let r = check_lines(&lines, 1, 2, 0);
+        assert!(r.violations.iter().any(|v| v.contains("never closed")), "{:?}", r.violations);
+        assert!(r.violations.iter().any(|v| v.contains("never released")), "{:?}", r.violations);
+        let r = check_lines(&lines, 1, 2, 3);
+        assert!(r.violations.iter().any(|v| v.contains("dropped 3")), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn export_round_trips_through_the_checker() {
+        let t = TraceSink::enabled(1 << 10);
+        t.emit(|| Event::Dev {
+            dev: Dev::Ssd,
+            kind: AccessKind::SeqWrite,
+            bytes: 4096,
+            issue: 0,
+            start: 0,
+            finish: 100,
+        });
+        t.emit(|| Event::Io {
+            dev: Dev::Ssd,
+            op: IoOp::Wal,
+            shard: 0,
+            job: None,
+            sst: None,
+            bytes: 4096,
+            wait: 0,
+            at: 0,
+        });
+        t.emit(|| Event::Snapshot {
+            shard: 0,
+            at: 100,
+            stalls: 0,
+            stall_ns: 0,
+            qw_ssd: 0,
+            qw_hdd: 0,
+            cpuw_n: 0,
+            cpuw_sum: 0,
+            ops: 1,
+            flushes: 0,
+            compactions: 0,
+        });
+        let json = t.export_string(1, 2);
+        assert!(json.contains("\"traceEvents\""));
+        assert!(json.contains("\"hhzsMeta\""));
+        let r = check_export(&json).expect("export parses");
+        assert!(r.ok(), "{:?}", r.violations);
+        assert_eq!(r.events, 3);
+        // Export is a pure function of the buffer.
+        assert_eq!(json, t.export_string(1, 2));
+    }
+
+    #[test]
+    fn microsecond_timestamps_are_exact() {
+        assert_eq!(us(0), "0.000");
+        assert_eq!(us(1_500), "1.500");
+        assert_eq!(us(999), "0.999");
+        assert_eq!(us(1_000_001), "1000.001");
+    }
+
+    #[test]
+    fn flush_reservation_mirrors_the_pool() {
+        assert_eq!(flush_reserved(0), 0);
+        assert_eq!(flush_reserved(1), 0);
+        assert_eq!(flush_reserved(2), 1);
+        assert_eq!(flush_reserved(3), 2);
+        assert_eq!(flush_reserved(12), 2);
+    }
+}

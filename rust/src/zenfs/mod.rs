@@ -105,6 +105,13 @@ impl ZenFs {
         }
     }
 
+    /// Attach a trace sink to both devices (zone events + `DEV` service
+    /// intervals on their shared timing servers). Observation-only.
+    pub fn set_trace(&mut self, trace: &crate::trace::TraceSink) {
+        self.ssd.set_trace(trace.clone());
+        self.hdd.set_trace(trace.clone());
+    }
+
     pub fn device(&mut self, dev: Dev) -> &mut ZonedDevice {
         match dev {
             Dev::Ssd => &mut self.ssd,

@@ -7,6 +7,7 @@
 
 use crate::config::DeviceProfile;
 use crate::sim::{AccessKind, Ns, SharedTimer};
+use crate::trace::{Event, TraceSink};
 use crate::wire::WireBuf;
 
 use super::{Dev, Zone, ZoneError, ZoneId, ZoneState};
@@ -28,6 +29,9 @@ pub struct ZonedDevice {
     /// rebinds all shards' devices to one shared server per physical
     /// device (see [`ZonedDevice::set_timer`]).
     pub timer: SharedTimer,
+    /// Observation-only trace sink for zone append/reset events (disabled
+    /// by default). Untimed paths stamp the sink's last-seen virtual time.
+    trace: TraceSink,
 }
 
 impl ZonedDevice {
@@ -37,6 +41,7 @@ impl ZonedDevice {
             zone_cap,
             zones: (0..num_zones).map(|_| Zone::new(zone_cap)).collect(),
             timer: SharedTimer::new(profile),
+            trace: TraceSink::disabled(),
         }
     }
 
@@ -46,6 +51,13 @@ impl ZonedDevice {
     /// charged.
     pub fn set_timer(&mut self, timer: SharedTimer) {
         self.timer = timer;
+    }
+
+    /// Attach a trace sink (and mirror it onto the timing server, which
+    /// emits the `DEV` service intervals). Observation-only.
+    pub fn set_trace(&mut self, trace: TraceSink) {
+        self.timer.set_trace(trace.clone(), self.dev);
+        self.trace = trace;
     }
 
     pub fn num_zones(&self) -> u32 {
@@ -101,6 +113,8 @@ impl ZonedDevice {
     ) -> Result<(u64, Ns, Ns), ZoneError> {
         let off = self.zones[zone as usize].append_wire(buf)?;
         let (s, f) = self.timer.access(now, AccessKind::SeqWrite, buf.len());
+        let (dev, bytes) = (self.dev, buf.len());
+        self.trace.emit(|| Event::ZoneAppend { dev, zone, bytes, at: now });
         Ok((off, s, f))
     }
 
@@ -138,7 +152,10 @@ impl ZonedDevice {
 
     /// Append without charging time (the caller charges chunked I/O itself).
     pub fn append_untimed(&mut self, zone: ZoneId, buf: &WireBuf) -> Result<u64, ZoneError> {
-        self.zones[zone as usize].append_wire(buf)
+        let off = self.zones[zone as usize].append_wire(buf)?;
+        let (dev, bytes, at) = (self.dev, buf.len(), self.trace.now_hint());
+        self.trace.emit(|| Event::ZoneAppend { dev, zone, bytes, at });
+        Ok(off)
     }
 
     /// Read without charging time.
@@ -155,6 +172,8 @@ impl ZonedDevice {
     /// reset cost is negligible next to the data traffic).
     pub fn reset(&mut self, zone: ZoneId) {
         self.zones[zone as usize].reset();
+        let (dev, at) = (self.dev, self.trace.now_hint());
+        self.trace.emit(|| Event::ZoneReset { dev, zone, at });
     }
 
     pub fn finish_zone(&mut self, zone: ZoneId) {

@@ -293,6 +293,77 @@ fn e2e_digest_matches_committed_golden() {
 }
 
 // ---------------------------------------------------------------------
+// Tracing: deterministic, observationally free, checker-clean
+// ---------------------------------------------------------------------
+
+/// [`run_protocol`] with the trace ring armed; returns the digest plus
+/// the finished export JSON.
+fn run_protocol_traced(shards: usize) -> (Vec<String>, String) {
+    let mut cfg = proto_cfg(shards);
+    cfg.trace.enabled = true;
+    // Headroom over the default ring: a dropped event would make the
+    // checker's sum invariants unverifiable and fail the test early.
+    cfg.trace.buffer_events = 1 << 22;
+    let clients = cfg.workload.clients;
+    let mut se = ShardedEngine::new(&cfg, |c| hhzs::exp::common::make_policy("HHZS", c));
+    let router = se.router;
+    let load = Spec::from_config(&cfg, Kind::Load);
+    se.run(
+        |s| Box::new(RoutedSource::new(YcsbSource::new(load.clone(), clients), router, s)),
+        clients,
+        None,
+        false,
+    );
+    se.flush_all();
+    let a = Spec::from_config(&cfg, Kind::A);
+    se.run(
+        |s| Box::new(RoutedSource::new(YcsbSource::new(a.clone(), clients), router, s)),
+        clients,
+        None,
+        false,
+    );
+    se.quiesce();
+    let export = se.export_trace_string();
+    (digest(&se), export)
+}
+
+#[test]
+fn tracing_is_deterministic_and_observationally_free() {
+    for shards in [1usize, 4] {
+        // Tracing must not perturb the DES: the traced run's digest
+        // (clock, metrics, SST layout, extents) is bit-identical to the
+        // untraced run's — the golden-file guarantee holds with the ring
+        // on, off, or absent from the config.
+        let untraced = run_protocol(shards);
+        let (digest1, export1) = run_protocol_traced(shards);
+        assert_eq!(
+            digest1, untraced,
+            "{shards} shard(s): tracing changed the observable timeline"
+        );
+        // Same seed, same binary ⇒ byte-identical export JSON.
+        let (_, export2) = run_protocol_traced(shards);
+        assert_eq!(export1, export2, "{shards} shard(s): nondeterministic trace export");
+        // And the export must replay clean through every DES invariant:
+        // non-overlapping device busy intervals, CPU occupancy ≤
+        // bg_threads, flush priority respected, span pairing, and the
+        // per-phase wait/stall sums matching Metrics exactly.
+        let report = hhzs::trace::check_export(&export1).expect("parse trace export");
+        assert!(
+            report.ok(),
+            "{shards} shard(s): trace checker violations: {:#?}",
+            report.violations
+        );
+        assert!(report.events > 0, "{shards} shard(s): empty trace");
+        assert!(report.dev_intervals > 0, "{shards} shard(s): no device intervals");
+        assert!(report.jobs_closed > 0, "{shards} shard(s): no job spans");
+        assert!(
+            report.snapshots >= shards,
+            "{shards} shard(s): missing per-shard snapshots"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
 // O(entries) memory: resident bytes do not scale with value_size
 // ---------------------------------------------------------------------
 

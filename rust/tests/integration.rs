@@ -368,9 +368,15 @@ fn sharded_frontend_conserves_ops_on_the_shared_device_pair() {
     cfg.workload.ops = 15_000;
     let mut tputs = Vec::new();
     for n in [1usize, 2, 4] {
-        let (_, a_tput, m, per_shard) = hhzs::exp::exp7::run_one(&cfg, n);
+        let (_, a_tput, m, per_shard, shard_m) = hhzs::exp::exp7::run_one(&cfg, n);
         assert_eq!(m.ops_done, 15_000, "{n} shards lost ops");
         assert_eq!(per_shard.len(), n);
+        assert_eq!(shard_m.len(), n);
+        assert_eq!(
+            shard_m.iter().map(|sm| sm.ops_done).sum::<u64>(),
+            m.ops_done,
+            "per-shard metrics must partition the merged ops"
+        );
         assert!(
             per_shard.iter().all(|&ops| ops > 0),
             "an idle shard at n={n}: {per_shard:?}"
