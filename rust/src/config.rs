@@ -211,6 +211,40 @@ impl Default for TraceConfig {
     }
 }
 
+/// Deterministic crash & power-loss injection knobs (see
+/// [`crate::sim::crash`]). Disabled by default; an armed-but-unfired
+/// injector is observationally free (runs stay bit-identical).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CrashConfig {
+    pub enabled: bool,
+    /// Which [`crate::sim::CrashPoint`] hook fires (its `name()` string).
+    pub point: String,
+    /// Fire at the first matching hook at or after this virtual time
+    /// (0 = no time trigger).
+    pub at_time_ns: u64,
+    /// Fire once this many client write ops have been issued
+    /// (0 = no op trigger).
+    pub at_op: u64,
+    /// Seed of the injector's private RNG (chooses the torn byte).
+    pub seed: u64,
+    /// Which shard the injector arms on (`shards > 1`: exactly one victim
+    /// domain crashes; the others keep their leases).
+    pub shard: usize,
+}
+
+impl Default for CrashConfig {
+    fn default() -> Self {
+        CrashConfig {
+            enabled: false,
+            point: "mid_flush".into(),
+            at_time_ns: 0,
+            at_op: 0,
+            seed: 1,
+            shard: 0,
+        }
+    }
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct Config {
     pub geometry: Geometry,
@@ -221,6 +255,9 @@ pub struct Config {
     pub workload: WorkloadConfig,
     /// Virtual-time tracing (off by default; zero-cost when off).
     pub trace: TraceConfig,
+    /// Crash injection (off by default; observationally free when armed
+    /// but unfired).
+    pub crash: CrashConfig,
     /// Number of independent LSM engines the key space is striped over
     /// (see [`crate::shard`]). `1` = the paper's single-engine system; the
     /// substrate lease layer splits zones/memory budgets for `> 1`.
@@ -289,6 +326,7 @@ impl Config {
                 seed: 42,
             },
             trace: TraceConfig::default(),
+            crash: CrashConfig::default(),
             shards: 1,
             use_xla_kernels: false,
         }
@@ -341,6 +379,8 @@ impl Config {
              key_size = {}\nvalue_size = {}\nload_objects = {}\nops = {}\n\
              clients = {}\nzipf_alpha = {}\nseed = {}\n\n\
              [trace]\nenabled = {}\nout = \"{}\"\nbuffer_events = {}\n\n\
+             [crash]\nenabled = {}\npoint = \"{}\"\nat_time_ns = {}\nat_op = {}\n\
+             seed = {}\nshard = {}\n\n\
              [sharding]\nshards = {}\n\n\
              [runtime]\nuse_xla_kernels = {}\n",
             g.scale_denom, g.ssd_zone_cap, g.hdd_zone_cap, g.sst_size, g.ssd_zones,
@@ -353,6 +393,8 @@ impl Config {
             h.sample_interval_ns,
             w.key_size, w.value_size, w.load_objects, w.ops, w.clients, w.zipf_alpha, w.seed,
             self.trace.enabled, self.trace.out, self.trace.buffer_events,
+            self.crash.enabled, self.crash.point, self.crash.at_time_ns, self.crash.at_op,
+            self.crash.seed, self.crash.shard,
             self.shards,
             self.use_xla_kernels,
         )
@@ -415,6 +457,18 @@ impl Config {
             doc.get_bool("trace", "enabled", &mut t.enabled);
             doc.get_str("trace", "out", &mut t.out);
             doc.get_usize("trace", "buffer_events", &mut t.buffer_events);
+        }
+        {
+            let k = &mut c.crash;
+            doc.get_bool("crash", "enabled", &mut k.enabled);
+            doc.get_str("crash", "point", &mut k.point);
+            if crate::sim::CrashPoint::parse(&k.point).is_none() {
+                anyhow::bail!("bad crash.point {:?}", k.point);
+            }
+            doc.get_u64("crash", "at_time_ns", &mut k.at_time_ns);
+            doc.get_u64("crash", "at_op", &mut k.at_op);
+            doc.get_u64("crash", "seed", &mut k.seed);
+            doc.get_usize("crash", "shard", &mut k.shard);
         }
         doc.get_usize("sharding", "shards", &mut c.shards);
         c.shards = c.shards.max(1);
@@ -512,6 +566,25 @@ mod tests {
         assert_eq!(c.trace.buffer_events, 4096);
         let c2 = Config::from_toml_str(&c.to_toml()).unwrap();
         assert_eq!(c2, c);
+    }
+
+    #[test]
+    fn crash_knobs_default_off_and_round_trip() {
+        let c = Config::small();
+        assert!(!c.crash.enabled);
+        let c = Config::from_toml_str(
+            "[crash]\nenabled = true\npoint = \"mid_zone_append\"\n\
+             at_time_ns = 5000\nat_op = 0\nseed = 9\nshard = 1\n",
+        )
+        .unwrap();
+        assert!(c.crash.enabled);
+        assert_eq!(c.crash.point, "mid_zone_append");
+        assert_eq!(c.crash.at_time_ns, 5000);
+        assert_eq!(c.crash.seed, 9);
+        assert_eq!(c.crash.shard, 1);
+        let c2 = Config::from_toml_str(&c.to_toml()).unwrap();
+        assert_eq!(c2, c);
+        assert!(Config::from_toml_str("[crash]\npoint = \"nope\"\n").is_err());
     }
 
     #[test]

@@ -29,10 +29,10 @@ use crate::metrics::{LevelSizeSample, Metrics, WriteCategory};
 use crate::policy::{MigrationKind, Policy, SstOrigin, View};
 use crate::sim::cpu::{CpuPool, CpuPoolStats};
 use crate::sim::rng::fingerprint32;
-use crate::sim::{AccessKind, Ns};
+use crate::sim::{AccessKind, CrashInjector, CrashPoint, Ns};
 use crate::trace::{hint_kind, Event, IoOp, JobKind, TraceSink};
 use crate::zenfs::ZenFs;
-use crate::zone::Dev;
+use crate::zone::{Dev, ZoneId};
 
 use self::walcache::PoolManager;
 
@@ -206,6 +206,12 @@ pub struct Engine {
     sampling: bool,
     /// Reused WAL-record encode buffer (hot path: one put per record).
     wal_buf: WireBuf,
+    /// Armed crash injector (`[crash]` config / `--crash-at`). `None` when
+    /// disabled or when this engine is not the victim shard; stays present
+    /// (with `fired = true`) after the crash so harnesses can introspect
+    /// it. Armed-but-unfired it only reads the clock/op counter — the run
+    /// stays bit-identical to an uninjected one.
+    crash: Option<CrashInjector>,
     /// Optional XLA-backed bloom prober for the batched read path
     /// (`multi_get`); also attachable to the HHZS migration scorer.
     pub xla: Option<std::rc::Rc<crate::runtime::XlaKernels>>,
@@ -274,8 +280,10 @@ impl Engine {
             parked: Vec::new(),
             sampling: false,
             wal_buf: WireBuf::new(),
+            crash: None,
             xla: None,
         };
+        e.crash = CrashInjector::from_config(&e.cfg.crash);
         let tick = e.cfg.hhzs.scan_interval_ns;
         e.push_event(tick, EventKind::PolicyTick);
         e
@@ -452,6 +460,27 @@ impl Engine {
         Rc::ptr_eq(&self.cpu, &other.cpu)
     }
 
+    /// Arm (or replace) this engine's crash injector.
+    pub fn arm_crash(&mut self, inj: CrashInjector) {
+        self.crash = Some(inj);
+    }
+
+    /// Disarm the injector — the shard layer calls this on every engine
+    /// except `cfg.crash.shard`, so exactly one victim exists per run.
+    pub fn disarm_crash(&mut self) {
+        self.crash = None;
+    }
+
+    /// The armed (or fired) injector, if any.
+    pub fn crash_injector(&self) -> Option<&CrashInjector> {
+        self.crash.as_ref()
+    }
+
+    /// Has this engine's injector fired (crash + recovery happened)?
+    pub fn crash_fired(&self) -> bool {
+        self.crash.as_ref().map_or(false, |i| i.fired)
+    }
+
     /// Re-run the background scheduler because another shard released a
     /// CPU slot this engine was starved for. `at` is the (frontend) event
     /// time of the release; in sync mode callers pass 0 and the local
@@ -534,6 +563,13 @@ impl Engine {
         let Engine { fs, metrics, pool, now, wal_buf, .. } = self;
         let wal_finish = pool.append_wal(fs, metrics, *now, wal_buf, preferred);
         let record_len = self.wal_buf.len();
+        // Crash hooks in the WAL→MemTable window: the record this put just
+        // appended is on media but unapplied and unacked — the injector
+        // tears it mid-byte and the client never hears back.
+        if let Some(p) = self.wal_crash_point() {
+            self.crash_fire(p);
+            return self.now + CPU_MEMTABLE_NS;
+        }
         let key = self.arena.intern(key);
         self.mem.insert(key, seq, value);
         self.mem.wal_bytes += record_len;
@@ -1009,6 +1045,10 @@ impl Engine {
     }
 
     fn handle_job_step(&mut self, id: u64) {
+        if let Some(p) = self.job_crash_point(id) {
+            self.crash_fire(p);
+            return;
+        }
         let chunk = self.cfg.hhzs.chunk_bytes;
         let Some(job) = self.jobs.remove(&id) else { return };
         match job {
@@ -1219,6 +1259,15 @@ impl Engine {
     }
 
     fn handle_migration_step(&mut self) {
+        if !self.migration_queue.is_empty()
+            && self
+                .crash
+                .as_ref()
+                .map_or(false, |i| i.should_fire(CrashPoint::MidMigration, self.now))
+        {
+            self.crash_fire(CrashPoint::MidMigration);
+            return;
+        }
         let Some(task) = self.migration_queue.front_mut() else {
             self.migration_active = false;
             return;
@@ -1676,21 +1725,171 @@ impl Engine {
     /// contract. Returns the number of entries replayed.
     ///
     /// Background jobs in flight are discarded (their outputs were never
-    /// installed in the version, so their partially written zones are
-    /// reset), exactly as a restart would find them.
+    /// published in a crash-surviving version, so their files and zones
+    /// are reclaimed), exactly as a restart would find them. This is the
+    /// *cooperative* form — no media damage; the injected form
+    /// ([`CrashInjector`] + the `crash_fire` hooks) additionally tears the
+    /// in-flight zone append mid-record first.
     pub fn crash_and_recover(&mut self) -> usize {
-        // 1. Drop volatile state.
+        self.crash_volatile();
+        self.recover_replay(None)
+    }
+
+    /// Which WAL-window crash point (if any) fires on this put. All three
+    /// tear the record this very put just appended: it is on media but the
+    /// MemTable apply has not run and the client was never acked.
+    fn wal_crash_point(&mut self) -> Option<CrashPoint> {
+        let now = self.now;
+        let inj = self.crash.as_mut()?;
+        inj.note_op();
+        [CrashPoint::MidZoneAppend, CrashPoint::WalBeforeMemtable, CrashPoint::MidRecovery]
+            .into_iter()
+            .find(|p| inj.should_fire(*p, now))
+    }
+
+    /// Does an armed injector fire on this job's next step?
+    fn job_crash_point(&self, id: u64) -> Option<CrashPoint> {
+        let inj = self.crash.as_ref()?;
+        let p = match self.jobs.get(&id)? {
+            Job::Flush(_) => CrashPoint::MidFlush,
+            Job::Compaction(_) => CrashPoint::MidCompaction,
+        };
+        if inj.should_fire(p, self.now) {
+            Some(p)
+        } else {
+            None
+        }
+    }
+
+    /// Fire the armed injector at `point`: inflict the physical power-loss
+    /// media state (a zone append truncated at an RNG-chosen byte — the
+    /// write pointer lands mid-record), drop all volatile state, unwind
+    /// the shared substrate, and restart from surviving zones/WAL only.
+    /// The injector is kept (with `fired = true`) for introspection.
+    fn crash_fire(&mut self, point: CrashPoint) {
+        let mut inj = self.crash.take().expect("crash point checked armed");
+        inj.fired = true;
+        match point {
+            CrashPoint::MidZoneAppend | CrashPoint::WalBeforeMemtable | CrashPoint::MidRecovery => {
+                // Tear the WAL record the interrupted put just appended.
+                if let Some(len) = self.pool.last_record_len() {
+                    let keep = inj.torn_byte(len);
+                    let Engine { fs, pool, .. } = self;
+                    if pool.tear_wal_tail(fs, keep).is_some() {
+                        inj.torn = Some(keep);
+                    }
+                }
+            }
+            CrashPoint::MidFlush | CrashPoint::MidCompaction => {
+                self.write_torn_job_orphan(point, &mut inj);
+            }
+            CrashPoint::MidMigration => self.write_torn_migration_orphan(&mut inj),
+        }
+        let (shard, name, at) = (self.cpu_shard, point.name(), self.now);
+        self.trace.emit(|| Event::CrashFired { shard, point: name, at });
+        self.crash_volatile();
+        let double_fault = if point == CrashPoint::MidRecovery { Some(&mut inj) } else { None };
+        self.recover_replay(double_fault);
+        self.crash = Some(inj);
+    }
+
+    /// Write the torn prefix of the crashed job's in-flight output SST
+    /// into a fresh empty zone, with no zenfs file over it — the real
+    /// on-media state a power loss leaves mid-SST-write. Recovery's
+    /// orphan GC must find and reclaim it.
+    fn write_torn_job_orphan(&mut self, point: CrashPoint, inj: &mut CrashInjector) {
+        let mut job_ids: Vec<u64> = self.jobs.keys().copied().collect();
+        job_ids.sort_unstable();
+        for id in job_ids {
+            let (outputs, cur, want) = match (point, &self.jobs[&id]) {
+                (CrashPoint::MidFlush, Job::Flush(j)) => (&j.outputs, j.cur, Dev::Ssd),
+                (CrashPoint::MidCompaction, Job::Compaction(j)) => (&j.outputs, j.cur, Dev::Hdd),
+                _ => continue,
+            };
+            if let Some(out) = outputs.get(cur) {
+                if out.data.len() > 1 {
+                    let keep = inj.torn_byte(out.data.len());
+                    let prefix = out.data.slice_to_buf(0, keep);
+                    let dev = out.dev.unwrap_or(want);
+                    inj.torn = self.write_orphan(&prefix, dev);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Same, for the SST copy a migration was writing to its target device.
+    fn write_torn_migration_orphan(&mut self, inj: &mut CrashInjector) {
+        let Some(task) = self.migration_queue.front() else { return };
+        let (sst, to) = (task.sst, task.to);
+        let size = match self.fs.file(sst) {
+            Some(f) if f.size > 1 => f.size,
+            _ => return,
+        };
+        let keep = inj.torn_byte(size);
+        let Ok(prefix) = self.fs.read_file_untimed(sst, 0, keep) else { return };
+        inj.torn = self.write_orphan(&prefix, to);
+    }
+
+    /// Append `data` into an empty zone on `want` (falling back to the
+    /// other device), bypassing zenfs: an unreferenced on-media orphan
+    /// whose write pointer sits mid-record. Returns the bytes that landed.
+    fn write_orphan(&mut self, data: &WireBuf, want: Dev) -> Option<u64> {
+        if data.is_empty() {
+            return None;
+        }
+        let alt = if want == Dev::Ssd { Dev::Hdd } else { Dev::Ssd };
+        for dev in [want, alt] {
+            let zone = match dev {
+                // Never a reserved pool zone: those belong to the WAL/
+                // cache allocator, which only ever appends there itself.
+                Dev::Ssd => (0..self.fs.ssd.num_zones()).find(|z| {
+                    self.fs.ssd.zone(*z).is_empty() && !self.fs.reserved_ssd_zones().contains(z)
+                }),
+                Dev::Hdd => self.fs.hdd.find_empty_zone(),
+            };
+            if let Some(z) = zone {
+                let cap = self.fs.device_ref(dev).zone(z).capacity;
+                let chunk = data.slice_to_buf(0, data.len().min(cap));
+                if self.fs.device(dev).append_untimed(z, &chunk).is_ok() {
+                    return Some(chunk.len());
+                }
+                return None;
+            }
+        }
+        // No empty zone anywhere: the power loss had nowhere to leave a
+        // torn write — media stays as-is.
+        None
+    }
+
+    /// Drop all volatile state and unwind in-flight background work — the
+    /// restart's view before WAL replay. Outputs a crashed job had already
+    /// installed in zenfs but not yet published in a crash-surviving
+    /// version are deleted; flush outputs additionally leave L0, where
+    /// install had optimistically placed them (their WAL segments are
+    /// still live, so replay restores every entry). Queued migrations are
+    /// unwound span-by-span so no busy mark or open trace span leaks.
+    fn crash_volatile(&mut self) {
         self.mem = MemTable::new();
         self.immutables.clear();
         self.cache = BlockCache::new(self.cfg.lsm.block_cache_bytes);
-        // Abandon in-flight jobs: reclaim zones of outputs already
-        // installed in zenfs but not yet in the version (crash ⇒ orphan
-        // files are garbage-collected on recovery).
-        let job_ids: Vec<u64> = self.jobs.keys().copied().collect();
+        let mut job_ids: Vec<u64> = self.jobs.keys().copied().collect();
+        job_ids.sort_unstable();
         for id in job_ids {
             if let Some(job) = self.jobs.remove(&id) {
                 match job {
-                    Job::Flush(_) => {
+                    Job::Flush(j) => {
+                        // Outputs before `cur` were installed in zenfs AND
+                        // added to L0 at install time — reclaim their file
+                        // and zone space symmetrically with the compaction
+                        // arm below (the crash loses the whole flush; its
+                        // WAL segments survive for replay).
+                        for out in &j.outputs[..j.cur] {
+                            self.version.remove_l0(out.meta.id);
+                            let _ = self.fs.delete_file(out.meta.id);
+                            self.pool.invalidate_sst(out.meta.id);
+                            self.policy.on_sst_deleted(out.meta.id);
+                        }
                         self.flush_active = false;
                         self.cpu.borrow_mut().release_flush(self.cpu_shard);
                         self.trace_job_end(JobKind::Flush, id);
@@ -1698,6 +1897,7 @@ impl Engine {
                     Job::Compaction(j) => {
                         for m in &j.installed {
                             let _ = self.fs.delete_file(m.id);
+                            self.pool.invalidate_sst(m.id);
                         }
                         for sst in &j.input_ids {
                             self.busy_ssts.remove(sst);
@@ -1716,28 +1916,180 @@ impl Engine {
         self.cpu.borrow_mut().set_comp_waiter(self.cpu_shard, false);
         self.flush_ready_since = None;
         self.comp_ready_since = None;
-        self.migration_queue.clear();
+        // Unwind queued migrations: close their spans and busy marks (a
+        // leaked busy mark would block those SSTs' compactions forever
+        // after recovery).
+        while let Some(task) = self.migration_queue.pop_front() {
+            self.busy_ssts.remove(&task.sst);
+            let (shard, sst, at) = (self.cpu_shard, task.sst, self.now);
+            self.trace.emit(|| Event::MigEnd { shard, sst, at });
+        }
         self.migration_active = false;
-        // 2. Replay live WAL segments oldest-first (seqnos in the records
-        // restore the exact ordering).
+    }
+
+    /// Reset any non-empty zone no surviving metadata references: zenfs
+    /// file extents, live WAL zones, and SSD cache zones. These are
+    /// exactly the zones a power loss stranded (torn SST outputs, partial
+    /// migration copies) — for an unreferenced zone, "write pointer
+    /// consistent with metadata" (invariant I3) means `wp == 0`.
+    fn recovery_orphan_gc(&mut self) -> usize {
+        let mut live: HashSet<(Dev, ZoneId)> = HashSet::new();
+        for f in self.fs.files() {
+            for ext in &f.extents {
+                live.insert((f.dev, ext.zone));
+            }
+        }
+        for z in self.pool.referenced_zones() {
+            live.insert(z);
+        }
+        let mut reclaimed = 0;
+        for dev in [Dev::Ssd, Dev::Hdd] {
+            for z in 0..self.fs.device_ref(dev).num_zones() {
+                if !self.fs.device_ref(dev).zone(z).is_empty() && !live.contains(&(dev, z)) {
+                    self.fs.device(dev).reset(z);
+                    reclaimed += 1;
+                }
+            }
+        }
+        reclaimed
+    }
+
+    /// Restart from surviving media only: GC orphan zones, read back the
+    /// live WAL segments (each clamped to its zone's surviving write
+    /// pointer — a torn tail replays its intact prefix), and replay them
+    /// oldest-first. `double_fault` aborts the replay partway once (the
+    /// MidRecovery crash), drops the half-built MemTable, and restarts it
+    /// from scratch — the media is untouched, so the retry converges on
+    /// the same state.
+    fn recover_replay(&mut self, double_fault: Option<&mut CrashInjector>) -> usize {
+        self.recovery_orphan_gc();
         let segments = {
             let Engine { pool, fs, metrics, now, .. } = &mut *self;
             pool.recover_segments(fs, metrics, *now)
         };
-        let mut replayed = 0usize;
-        let mut max_seq = self.seq;
+        let total: u64 = segments.iter().map(|(_, b)| b.entries().count() as u64).sum();
+        let mut abort_at = match double_fault {
+            Some(inj) if total > 0 => Some(inj.pick_below(total)),
+            _ => None,
+        };
         let mut key_buf: Vec<u8> = Vec::new();
-        for (_, buf) in segments {
-            for e in buf.entries() {
-                max_seq = max_seq.max(e.seq);
-                e.key.copy_into(&mut key_buf);
-                let key = self.arena.intern(&key_buf);
-                self.mem.insert(key, e.seq, e.value);
-                replayed += 1;
+        'replay: loop {
+            let mut replayed = 0usize;
+            let mut max_seq = self.seq;
+            for (_, buf) in &segments {
+                for e in buf.entries() {
+                    if abort_at == Some(replayed as u64) {
+                        abort_at = None;
+                        self.mem = MemTable::new();
+                        let (shard, at) = (self.cpu_shard, self.now);
+                        let point = CrashPoint::MidRecovery.name();
+                        self.trace.emit(|| Event::CrashFired { shard, point, at });
+                        continue 'replay;
+                    }
+                    max_seq = max_seq.max(e.seq);
+                    e.key.copy_into(&mut key_buf);
+                    let key = self.arena.intern(&key_buf);
+                    self.mem.insert(key, e.seq, e.value);
+                    replayed += 1;
+                }
+            }
+            self.seq = max_seq;
+            let (shard, at, n) = (self.cpu_shard, self.now, replayed as u64);
+            self.trace.emit(|| Event::Recovered { shard, replayed: n, at });
+            return replayed;
+        }
+    }
+
+    /// Post-recovery structural invariants (the crash harness's I2/I3);
+    /// returns human-readable violations, empty when consistent.
+    ///
+    /// I2 — no torn SST visible in any version: every SST the version
+    /// references has a zenfs file of exactly `file_size` bytes whose
+    /// blocks are fully readable and decode to exactly `num_entries`
+    /// whole entries (a torn block decodes short — the wire format stops
+    /// at a severed record).
+    ///
+    /// I3 — every zone's write pointer consistent with zenfs metadata:
+    /// all file extents, live WAL runs, and cached blocks lie at or below
+    /// their zone's write pointer, and every non-empty zone is referenced
+    /// by some surviving metadata (no orphans escape GC).
+    pub fn verify_recovery_invariants(&mut self) -> Vec<String> {
+        let mut viol = Vec::new();
+        // I2: version SSTs fully present and decodable.
+        let metas: Vec<Arc<SstMeta>> = (0..self.version.num_levels())
+            .flat_map(|l| self.version.level(l).iter().cloned())
+            .collect();
+        for m in metas {
+            let Some(f) = self.fs.file(m.id) else {
+                viol.push(format!("I2: sst {} (L{}) has no zenfs file", m.id, m.level));
+                continue;
+            };
+            if f.size != m.file_size {
+                viol.push(format!(
+                    "I2: sst {} file size {} != meta file_size {}",
+                    m.id, f.size, m.file_size
+                ));
+                continue;
+            }
+            let mut entries = 0u64;
+            let mut unreadable = false;
+            for h in &m.blocks {
+                match self.fs.read_file_untimed(m.id, h.offset, h.len as u64) {
+                    Ok(b) => entries += b.entries().count() as u64,
+                    Err(e) => {
+                        viol.push(format!(
+                            "I2: sst {} block @{} unreadable: {e:?}",
+                            m.id, h.offset
+                        ));
+                        unreadable = true;
+                    }
+                }
+            }
+            if !unreadable && entries != m.num_entries {
+                viol.push(format!(
+                    "I2: sst {} decodes {} entries, meta says {} (torn block)",
+                    m.id, entries, m.num_entries
+                ));
             }
         }
-        self.seq = max_seq;
-        replayed
+        // I3a: every referenced byte range is below its zone's wp.
+        let mut referenced: HashSet<(Dev, ZoneId)> = HashSet::new();
+        let mut ranges: Vec<(Dev, ZoneId, u64, u64, String)> = Vec::new();
+        for f in self.fs.files() {
+            for ext in &f.extents {
+                ranges.push((f.dev, ext.zone, ext.offset, ext.len, format!("file {}", f.id)));
+            }
+        }
+        for (dev, zone, offset, len) in self.pool.live_runs() {
+            ranges.push((dev, zone, offset, len, "wal run".to_string()));
+        }
+        for loc in self.pool.cache_locs() {
+            ranges.push((Dev::Ssd, loc.zone, loc.offset, loc.len as u64, "cache block".into()));
+        }
+        for (dev, zone, offset, len, what) in ranges {
+            referenced.insert((dev, zone));
+            let wp = self.fs.device_ref(dev).zone(zone).wp();
+            if offset + len > wp {
+                viol.push(format!(
+                    "I3: {what} [{offset}, {}) beyond wp {wp} of {dev:?} zone {zone}",
+                    offset + len
+                ));
+            }
+        }
+        // I3b: no unreferenced non-empty zones (orphans escape GC). The
+        // active WAL / cache zones are referenced-by-construction even
+        // when their runs were fully released.
+        for z in self.pool.referenced_zones() {
+            referenced.insert(z);
+        }
+        for dev in [Dev::Ssd, Dev::Hdd] {
+            for z in 0..self.fs.device_ref(dev).num_zones() {
+                if !self.fs.device_ref(dev).zone(z).is_empty() && !referenced.contains(&(dev, z)) {
+                    viol.push(format!("I3: {dev:?} zone {z} non-empty but unreferenced"));
+                }
+            }
+        }
+        viol
     }
 
     /// Attach the AOT XLA kernels: enables the batched bloom read path

@@ -69,6 +69,9 @@ pub struct PoolManager {
     cache_zones: VecDeque<ZoneId>,
     mapping: HashMap<(SstId, u64), CacheLoc>,
     fifo: VecDeque<FifoEntry>,
+    /// The most recent WAL record's placement — (segment, dev, zone,
+    /// offset, len) — the append a power-loss crash tears mid-record.
+    last_record: Option<(u64, Dev, ZoneId, u64, u64)>,
     /// Overflow WAL appends that could not be placed in the pool (should
     /// stay 0 when the pool is sized per §3.2).
     pub wal_overflows: u64,
@@ -99,6 +102,7 @@ impl PoolManager {
             cache_zones: VecDeque::new(),
             mapping: HashMap::new(),
             fifo: VecDeque::new(),
+            last_record: None,
             wal_overflows: 0,
             cache_zone_evictions: 0,
             trace: TraceSink::disabled(),
@@ -179,6 +183,7 @@ impl PoolManager {
             metrics.record_queue_wait(preferred, s.saturating_sub(now));
             metrics.record_write(WriteCategory::Wal, preferred, len);
             self.trace_io(preferred, IoOp::WalOverflow, None, len, s.saturating_sub(now), now);
+            self.last_record = None;
             return f;
         };
         let (offset, start, finish) = fs
@@ -201,14 +206,86 @@ impl PoolManager {
             }
             _ => seg.runs.push((dev, z, offset, len)),
         }
+        self.last_record = Some((self.cur_segment, dev, z, offset, len));
         finish
+    }
+
+    /// Logical length of the most recent WAL record, if it is still the
+    /// log tail (the crash injector's tear-size input).
+    pub fn last_record_len(&self) -> Option<u64> {
+        self.last_record.map(|(_, _, _, _, len)| len)
+    }
+
+    /// Physically tear the most recent WAL record at `keep` surviving bytes
+    /// (crash injection): the zone's write pointer lands mid-record and the
+    /// pool's run bookkeeping shrinks to match the surviving media, so
+    /// post-recovery appends and the decode discipline both see exactly
+    /// what a power loss would leave. Returns the torn (dev, zone, new wp).
+    pub fn tear_wal_tail(&mut self, fs: &mut ZenFs, keep: u64) -> Option<(Dev, ZoneId, u64)> {
+        let (seg_id, dev, zone, offset, len) = self.last_record.take()?;
+        let keep = keep.min(len);
+        let wp = fs.device(dev).power_loss_truncate(zone, offset + keep);
+        if let Some(seg) = self.segments.get_mut(&seg_id) {
+            let lost = len - keep;
+            seg.bytes = seg.bytes.saturating_sub(lost);
+            if let Some((_, _, roff, rlen)) = seg.runs.last_mut() {
+                debug_assert_eq!(*roff + *rlen, offset + len, "record is the tail of the log");
+                *rlen = rlen.saturating_sub(lost);
+                if *rlen == 0 {
+                    seg.runs.pop();
+                }
+            }
+        }
+        Some((dev, zone, wp))
+    }
+
+    /// Every (dev, zone) the pool currently holds live data in: WAL zones
+    /// (per-segment refs + the active zone) and SSD cache zones. Recovery's
+    /// orphan GC must not touch these.
+    pub fn referenced_zones(&self) -> Vec<(Dev, ZoneId)> {
+        let mut v: Vec<(Dev, ZoneId)> = self.zone_refs.keys().copied().collect();
+        if let Some(az) = self.active_wal {
+            if !v.contains(&az) {
+                v.push(az);
+            }
+        }
+        for z in &self.cache_zones {
+            let k = (Dev::Ssd, *z);
+            if !v.contains(&k) {
+                v.push(k);
+            }
+        }
+        v
+    }
+
+    /// WAL runs of every live segment (for write-pointer validation):
+    /// (dev, zone, offset, len) tuples.
+    pub fn live_runs(&self) -> Vec<(Dev, ZoneId, u64, u64)> {
+        let mut v = Vec::new();
+        for seg in self.segments.values() {
+            v.extend(seg.runs.iter().copied());
+        }
+        v
+    }
+
+    /// Cached-block locations (for write-pointer validation).
+    pub fn cache_locs(&self) -> Vec<CacheLoc> {
+        self.mapping.values().copied().collect()
     }
 
     /// Read back the wire-form records of every live (unflushed) WAL
     /// segment, oldest first — the crash-recovery input. Charges
     /// sequential reads for the replayed (logical) bytes.
+    ///
+    /// Torn-tail hardened: a power loss can leave a zone's write pointer
+    /// short of a recorded run (the final record was truncated mid-bytes).
+    /// Each run is clamped to the surviving media — the intact prefix is
+    /// read, the run metadata shrinks to match, and the segment's remaining
+    /// runs (which can only postdate the tear) are dropped rather than
+    /// replayed as garbage. Torn *middle* runs cannot occur: a run only
+    /// closes when its zone fills, so any tear is at the log tail.
     pub fn recover_segments(
-        &self,
+        &mut self,
         fs: &mut ZenFs,
         metrics: &mut Metrics,
         now: Ns,
@@ -217,17 +294,32 @@ impl PoolManager {
         ids.sort_unstable();
         let mut out = Vec::new();
         for id in ids {
-            let seg = &self.segments[&id];
+            let runs = self.segments[&id].runs.clone();
             let mut bytes = WireBuf::new();
-            for (dev, zone, offset, len) in &seg.runs {
-                let data = fs
-                    .device(*dev)
-                    .read_untimed(*zone, *offset, *len)
-                    .expect("live WAL run readable");
-                let (s, _) = fs.charge(now, *dev, crate::sim::AccessKind::SeqRead, *len);
-                metrics.record_queue_wait(*dev, s.saturating_sub(now));
-                self.trace_io(*dev, IoOp::WalRecover, None, *len, s.saturating_sub(now), now);
-                bytes.append_buf(&data);
+            let mut new_runs = Vec::with_capacity(runs.len());
+            let mut seg_bytes = 0u64;
+            for (dev, zone, offset, len) in runs {
+                let wp = fs.device_ref(dev).zone(zone).wp();
+                let avail = wp.saturating_sub(offset).min(len);
+                if avail > 0 {
+                    let data = fs
+                        .device(dev)
+                        .read_untimed(zone, offset, avail)
+                        .expect("surviving WAL run readable");
+                    let (s, _) = fs.charge(now, dev, crate::sim::AccessKind::SeqRead, avail);
+                    metrics.record_queue_wait(dev, s.saturating_sub(now));
+                    self.trace_io(dev, IoOp::WalRecover, None, avail, s.saturating_sub(now), now);
+                    bytes.append_buf(&data);
+                    new_runs.push((dev, zone, offset, avail));
+                    seg_bytes += avail;
+                }
+                if avail < len {
+                    break; // torn tail — nothing after it survived
+                }
+            }
+            if let Some(seg) = self.segments.get_mut(&id) {
+                seg.runs = new_runs;
+                seg.bytes = seg_bytes;
             }
             out.push((id, bytes));
         }
@@ -541,6 +633,64 @@ mod tests {
         pm.invalidate_sst(1);
         assert!(!pm.cache_contains(1, 0));
         assert!(pm.cache_contains(2, 0));
+    }
+
+    fn wal_record(i: u64) -> WireBuf {
+        let mut rec = WireBuf::new();
+        let key = format!("key-{i:04}");
+        let val = format!("value-{i:04}");
+        let payload = crate::wire::Payload::from_bytes(val.as_bytes());
+        rec.push_entry(key.as_bytes(), i + 1, Some(payload));
+        rec
+    }
+
+    #[test]
+    fn tear_wal_tail_shrinks_run_and_media() {
+        let (mut fs, mut pm, mut m) = fs_with_pool();
+        let first_len = wal_record(0).len();
+        pm.append_wal(&mut fs, &mut m, 0, &wal_record(0), Dev::Ssd);
+        pm.append_wal(&mut fs, &mut m, 0, &wal_record(1), Dev::Ssd);
+        let (dev, zone, wp) = pm.tear_wal_tail(&mut fs, 3).expect("tail tracked");
+        assert_eq!(dev, Dev::Ssd);
+        assert_eq!(wp, first_len + 3, "write pointer lands 3 bytes into record 1");
+        assert_eq!(fs.device_ref(dev).zone(zone).wp(), wp);
+        // The run bookkeeping shrank with the media.
+        assert_eq!(pm.live_runs(), vec![(Dev::Ssd, zone, 0, first_len + 3)]);
+        // The tail can only be torn once.
+        assert!(pm.tear_wal_tail(&mut fs, 0).is_none());
+    }
+
+    #[test]
+    fn recover_segments_clamps_torn_tail_instead_of_panicking() {
+        let (mut fs, mut pm, mut m) = fs_with_pool();
+        for i in 0..3 {
+            pm.append_wal(&mut fs, &mut m, 0, &wal_record(i), Dev::Ssd);
+        }
+        // Surgically truncate the zone mid-final-record, bypassing the
+        // pool's own bookkeeping — recovery must cope with stale runs.
+        let (_, dev, zone, offset, len) = pm.last_record.unwrap();
+        fs.device(dev).power_loss_truncate(zone, offset + len / 2);
+        let segs = pm.recover_segments(&mut fs, &mut m, 0);
+        assert_eq!(segs.len(), 1);
+        let entries: Vec<_> = segs[0].1.entries().collect();
+        assert_eq!(entries.len(), 2, "intact prefix replays; torn record is dropped");
+        assert_eq!(entries[0].key.to_vec(), b"key-0000");
+        assert_eq!(entries[1].key.to_vec(), b"key-0001");
+        // Run metadata now matches the surviving media exactly.
+        assert_eq!(pm.live_runs(), vec![(dev, zone, 0, offset + len / 2)]);
+    }
+
+    #[test]
+    fn recover_segments_intact_log_round_trips() {
+        let (mut fs, mut pm, mut m) = fs_with_pool();
+        pm.append_wal(&mut fs, &mut m, 0, &wal_record(0), Dev::Ssd);
+        let seg0 = pm.seal_segment();
+        pm.append_wal(&mut fs, &mut m, 0, &wal_record(1), Dev::Ssd);
+        let segs = pm.recover_segments(&mut fs, &mut m, 0);
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[0].0, seg0);
+        assert_eq!(segs[0].1.entries().count(), 1);
+        assert_eq!(segs[1].1.entries().count(), 1);
     }
 
     #[test]

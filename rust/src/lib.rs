@@ -35,6 +35,7 @@
 pub mod bench;
 pub mod config;
 pub mod coordinator;
+pub mod crashtest;
 pub mod exp;
 pub mod hints;
 pub mod lsm;

@@ -92,6 +92,15 @@ impl Version {
         self.levels[0].push(sst);
     }
 
+    /// Remove one L0 SST by id (crash unwind of a flush that installed
+    /// outputs but never committed: the file is deleted from zenfs and its
+    /// version entry must go with it). Returns true when it was present.
+    pub fn remove_l0(&mut self, id: SstId) -> bool {
+        let before = self.levels[0].len();
+        self.levels[0].retain(|m| m.id != id);
+        self.levels[0].len() != before
+    }
+
     /// Install compaction outputs and remove inputs atomically.
     ///
     /// Input removal is a set lookup per SST (not a scan of the id slice),

@@ -21,6 +21,14 @@
 //!                                     # and self-checks it
 //! hhzs trace check <FILE>             # replay a trace export, assert the
 //!                                     # DES invariants (exit 1 on violation)
+//! hhzs crash grid [--quick]           # deterministic crash/power-loss grid:
+//!                                     # CrashPoint x trigger x seed x shards,
+//!                                     # 4 recovery invariants per cell
+//! hhzs crash run [--crash-point P] [--crash-at N] [--crash-at-ns NS]
+//!                [--crash-seed S] [--shards N] [--trace FILE]
+//!                                     # one injected crash cell; --trace also
+//!                                     # writes the traced export for
+//!                                     # `hhzs trace check`
 //! ```
 //!
 //! Any run-like command also takes `--trace FILE`: tracing is switched on
@@ -104,6 +112,26 @@ fn build_config(args: &Args) -> anyhow::Result<Config> {
     }
     if let Some(v) = args.flags.get("trace-buffer") {
         cfg.trace.buffer_events = v.parse()?;
+    }
+    // Crash injection: any trigger/point flag arms the injector (point
+    // defaults to mid_flush; see `hhzs crash` for the grid harness).
+    if let Some(v) = args.flags.get("crash-point") {
+        cfg.crash.enabled = true;
+        cfg.crash.point = v.clone();
+    }
+    if let Some(v) = args.flags.get("crash-at") {
+        cfg.crash.enabled = true;
+        cfg.crash.at_op = v.parse()?;
+    }
+    if let Some(v) = args.flags.get("crash-at-ns") {
+        cfg.crash.enabled = true;
+        cfg.crash.at_time_ns = v.parse()?;
+    }
+    if let Some(v) = args.flags.get("crash-seed") {
+        cfg.crash.seed = v.parse()?;
+    }
+    if let Some(v) = args.flags.get("crash-shard") {
+        cfg.crash.shard = v.parse()?;
     }
     Ok(cfg)
 }
@@ -269,6 +297,79 @@ fn cmd_trace_check(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `hhzs crash grid [--quick]`: sweep the deterministic crash &
+/// power-loss cell matrix (CrashPoint × trigger × seed × shard count),
+/// asserting the four recovery invariants per cell. Exits nonzero on any
+/// violation or if any point variant never tore a mid-record zone
+/// append. `--quick` is the CI shape (108 cells).
+fn cmd_crash_grid(args: &Args) -> anyhow::Result<()> {
+    let quick = args.flags.contains_key("quick");
+    let t0 = std::time::Instant::now();
+    let sum = hhzs::crashtest::run_grid(quick, |line| println!("{line}"));
+    println!(
+        "crash grid: {} cells, {} fired, {} torn, {} failure(s) in {:.1}s wall",
+        sum.cells,
+        sum.fired,
+        sum.torn,
+        sum.failures.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    for f in &sum.failures {
+        eprintln!("  FAIL: {f}");
+    }
+    anyhow::ensure!(sum.passed(), "crash grid failed ({} failure(s))", sum.failures.len());
+    Ok(())
+}
+
+/// `hhzs crash run`: one injected crash cell (flags pick the point,
+/// trigger, seed, and shard count), with the same invariant battery as a
+/// grid cell. `--trace FILE` additionally runs it traced and writes the
+/// export — CI pipes that through `hhzs trace check` to validate span
+/// unwinding across the power loss.
+fn cmd_crash_run(args: &Args) -> anyhow::Result<()> {
+    use hhzs::crashtest::{run_cell_traced, Cell};
+    use hhzs::sim::CrashPoint;
+
+    let cfg = build_config(args)?;
+    let point = CrashPoint::parse(&cfg.crash.point).ok_or_else(|| {
+        anyhow::anyhow!("bad --crash-point {:?} (see CrashPoint names)", cfg.crash.point)
+    })?;
+    let cell = Cell {
+        point,
+        shards: cfg.shards,
+        // Default to an op trigger that reliably crosses.
+        at_op: if cfg.crash.at_op == 0 && cfg.crash.at_time_ns == 0 {
+            100
+        } else {
+            cfg.crash.at_op
+        },
+        at_time: cfg.crash.at_time_ns,
+        seed: cfg.crash.seed,
+    };
+    let trace_out = args.flags.get("trace").cloned();
+    let (r, export) = run_cell_traced(&cell, trace_out.is_some());
+    println!(
+        "crash run: {} shards={} at_op={} at_time={} seed={} -> fired={} torn={:?} ops={}",
+        cell.point.name(),
+        cell.shards,
+        cell.at_op,
+        cell.at_time,
+        cell.seed,
+        r.fired,
+        r.torn,
+        r.ops_issued
+    );
+    for v in &r.violations {
+        eprintln!("  violation: {v}");
+    }
+    if let (Some(path), Some(export)) = (trace_out, export) {
+        std::fs::write(&path, &export)?;
+        println!("trace written to {path} ({} bytes)", export.len());
+    }
+    anyhow::ensure!(r.violations.is_empty(), "{} invariant violation(s)", r.violations.len());
+    Ok(())
+}
+
 fn cmd_xla_check() -> anyhow::Result<()> {
     if !XlaKernels::artifacts_present("artifacts") {
         anyhow::bail!("artifacts/ missing — run `make artifacts` first");
@@ -287,12 +388,16 @@ fn cmd_xla_check() -> anyhow::Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: hhzs <exp|bench|bench-devices|demo|config|xla-check|trace> [flags]\n\
+        "usage: hhzs <exp|bench|bench-devices|demo|config|xla-check|trace|crash> [flags]\n\
          run `hhzs exp all --profile quick` for a fast full sweep\n\
          run `hhzs bench wallclock --quick` for the BENCH_2 wall-clock bench\n\
          run `hhzs trace run --profile quick --shards 4 --out trace.json` for a\n\
          traced workload (Perfetto-loadable JSON), `hhzs trace check FILE` to\n\
-         replay its DES invariants, and add `--trace FILE` to `demo` to trace it"
+         replay its DES invariants, and add `--trace FILE` to `demo` to trace it\n\
+         run `hhzs crash grid --quick` for the crash/power-loss injection grid\n\
+         (CrashPoint x trigger x seed x shards; asserts the 4 recovery\n\
+         invariants per cell) and `hhzs crash run --crash-point mid_flush\n\
+         --crash-at 100 --crash-seed 1 --shards 4 [--trace FILE]` for one cell"
     );
     std::process::exit(2);
 }
@@ -324,6 +429,11 @@ fn main() -> anyhow::Result<()> {
         Some("trace") => match args.positional.get(1).map(|s| s.as_str()) {
             Some("run") => cmd_trace_run(&args),
             Some("check") => cmd_trace_check(&args),
+            _ => usage(),
+        },
+        Some("crash") => match args.positional.get(1).map(|s| s.as_str()) {
+            Some("grid") => cmd_crash_grid(&args),
+            Some("run") => cmd_crash_run(&args),
             _ => usage(),
         },
         _ => usage(),

@@ -122,6 +122,17 @@ impl ShardedEngine {
             // every shard land in the shared buffer in emission order.
             e.share_trace(trace.clone(), s);
         }
+        // Exactly ONE victim per crash-injected run: every engine armed
+        // itself from its lease's (cloned) `[crash]` section — disarm all
+        // but the configured victim shard.
+        if cfg.crash.enabled {
+            let victim = cfg.crash.shard.min(engines.len() - 1);
+            for (s, e) in engines.iter_mut().enumerate() {
+                if s != victim {
+                    e.disarm_crash();
+                }
+            }
+        }
         ShardedEngine {
             engines,
             router,

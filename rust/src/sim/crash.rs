@@ -1,0 +1,188 @@
+//! Deterministic crash & power-loss injection over the DES.
+//!
+//! A [`CrashInjector`] is armed at a chosen virtual time or operation count
+//! and fires at the first matching [`CrashPoint`] hook the engine passes
+//! afterwards. Firing models *physical* power loss: the engine truncates
+//! in-flight zone appends at a byte chosen by the injector's seeded RNG
+//! (the write pointer lands mid-record — torn WAL tails and torn SST
+//! blocks become real on-media states), drops all volatile state, unwinds
+//! shared-substrate spans, and restarts from surviving zones/WAL only.
+//!
+//! Determinism: the injector is a pure function of `(point, arm, seed)` —
+//! the same configuration tears the same byte of the same zone on every
+//! run. An armed injector that never fires is observationally free: it
+//! only reads the clock/op counter, so the run stays bit-identical to one
+//! without it (pinned in `tests/datapath.rs`).
+
+use super::rng::Rng;
+use super::Ns;
+
+/// Where in the engine's lifecycle the crash fires. Each variant names one
+/// injection hook on the datapath; see `Engine::crash_*` in `coordinator`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CrashPoint {
+    /// Inside a flush job, between output-chunk device writes.
+    MidFlush,
+    /// Inside a compaction job, between read/write chunks.
+    MidCompaction,
+    /// Immediately after a WAL zone append commits (the torn tail lands in
+    /// the record that very append wrote).
+    MidZoneAppend,
+    /// Inside a migration, between relocation chunks.
+    MidMigration,
+    /// After the WAL append, before the MemTable apply — the classic
+    /// durability window (the record is on media, the apply never ran).
+    WalBeforeMemtable,
+    /// During WAL replay of a previous recovery (double-fault).
+    MidRecovery,
+}
+
+impl CrashPoint {
+    pub const ALL: [CrashPoint; 6] = [
+        CrashPoint::MidFlush,
+        CrashPoint::MidCompaction,
+        CrashPoint::MidZoneAppend,
+        CrashPoint::MidMigration,
+        CrashPoint::WalBeforeMemtable,
+        CrashPoint::MidRecovery,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CrashPoint::MidFlush => "mid_flush",
+            CrashPoint::MidCompaction => "mid_compaction",
+            CrashPoint::MidZoneAppend => "mid_zone_append",
+            CrashPoint::MidMigration => "mid_migration",
+            CrashPoint::WalBeforeMemtable => "wal_before_memtable",
+            CrashPoint::MidRecovery => "mid_recovery",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CrashPoint> {
+        CrashPoint::ALL.iter().copied().find(|p| p.name() == s)
+    }
+}
+
+/// The armed injector. Owned by at most one engine (the victim shard);
+/// `fired` stays true after the crash so it fires at most once.
+#[derive(Clone, Debug)]
+pub struct CrashInjector {
+    pub point: CrashPoint,
+    /// Fire at the first matching hook at or after this virtual time
+    /// (0 = no time trigger).
+    pub at_time: Ns,
+    /// Fire at the first matching hook once this many client write ops
+    /// have been issued (0 = no op trigger).
+    pub at_op: u64,
+    rng: Rng,
+    pub fired: bool,
+    /// Bytes of the in-flight append that survived the power loss, when the
+    /// fire tore a record mid-write (`None` until fired, or when nothing was
+    /// in flight to tear). Introspection for the grid harness.
+    pub torn: Option<u64>,
+    ops_seen: u64,
+}
+
+impl CrashInjector {
+    pub fn new(point: CrashPoint, at_time: Ns, at_op: u64, seed: u64) -> CrashInjector {
+        CrashInjector {
+            point,
+            at_time,
+            at_op,
+            rng: Rng::new(seed ^ 0xC4A5_7EA2_D00F_1234),
+            fired: false,
+            torn: None,
+            ops_seen: 0,
+        }
+    }
+
+    /// Build from the `[crash]` config section; `None` when disabled.
+    pub fn from_config(c: &crate::config::CrashConfig) -> Option<CrashInjector> {
+        if !c.enabled {
+            return None;
+        }
+        let point = CrashPoint::parse(&c.point)
+            .unwrap_or_else(|| panic!("unknown crash point {:?}", c.point));
+        Some(CrashInjector::new(point, c.at_time_ns, c.at_op, c.seed))
+    }
+
+    /// Count one client write op (the `--crash-at <op>` trigger axis).
+    pub fn note_op(&mut self) {
+        self.ops_seen += 1;
+    }
+
+    pub fn ops_seen(&self) -> u64 {
+        self.ops_seen
+    }
+
+    /// Should the crash fire at this hook, now? True once per injector.
+    pub fn should_fire(&self, point: CrashPoint, now: Ns) -> bool {
+        !self.fired
+            && self.point == point
+            && ((self.at_time > 0 && now >= self.at_time)
+                || (self.at_op > 0 && self.ops_seen >= self.at_op))
+    }
+
+    /// Pick the surviving byte count of an in-flight append of `len`
+    /// logical bytes: strictly inside the record when possible, so the
+    /// write pointer lands mid-record and the tail is genuinely torn.
+    pub fn torn_byte(&mut self, len: u64) -> u64 {
+        if len <= 1 {
+            return 0;
+        }
+        1 + self.rng.next_below(len - 1)
+    }
+
+    /// Deterministic draw in `[0, n)` — e.g. which replay entry the
+    /// MidRecovery double fault aborts at.
+    pub fn pick_below(&mut self, n: u64) -> u64 {
+        if n == 0 {
+            return 0;
+        }
+        self.rng.next_below(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_names_round_trip() {
+        for p in CrashPoint::ALL {
+            assert_eq!(CrashPoint::parse(p.name()), Some(p));
+        }
+        assert_eq!(CrashPoint::parse("nope"), None);
+    }
+
+    #[test]
+    fn fires_once_at_time_or_op_trigger() {
+        let mut inj = CrashInjector::new(CrashPoint::MidFlush, 1_000, 0, 7);
+        assert!(!inj.should_fire(CrashPoint::MidFlush, 999));
+        assert!(!inj.should_fire(CrashPoint::MidCompaction, 2_000), "wrong point never fires");
+        assert!(inj.should_fire(CrashPoint::MidFlush, 1_000));
+        inj.fired = true;
+        assert!(!inj.should_fire(CrashPoint::MidFlush, 2_000), "at most once");
+
+        let mut by_op = CrashInjector::new(CrashPoint::WalBeforeMemtable, 0, 3, 7);
+        for _ in 0..2 {
+            by_op.note_op();
+        }
+        assert!(!by_op.should_fire(CrashPoint::WalBeforeMemtable, u64::MAX));
+        by_op.note_op();
+        assert!(by_op.should_fire(CrashPoint::WalBeforeMemtable, 0));
+    }
+
+    #[test]
+    fn torn_byte_is_strictly_mid_record_and_deterministic() {
+        let mut a = CrashInjector::new(CrashPoint::MidZoneAppend, 1, 0, 42);
+        let mut b = CrashInjector::new(CrashPoint::MidZoneAppend, 1, 0, 42);
+        for len in [2u64, 3, 100, 4096] {
+            let t = a.torn_byte(len);
+            assert!(t >= 1 && t < len, "tear {t} outside (0, {len})");
+            assert_eq!(t, b.torn_byte(len), "same seed, same tear");
+        }
+        assert_eq!(a.torn_byte(1), 0);
+        assert_eq!(a.torn_byte(0), 0);
+    }
+}

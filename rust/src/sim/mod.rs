@@ -10,11 +10,13 @@
 //! so cross-shard scheduling contention emerges — and is measured — too.
 
 pub mod cpu;
+pub mod crash;
 pub mod device;
 pub mod rng;
 pub mod zipf;
 
 pub use cpu::{CpuPool, CpuPoolStats};
+pub use crash::{CrashInjector, CrashPoint};
 pub use device::{AccessKind, DeviceTimer, SharedTimer};
 pub use rng::Rng;
 pub use zipf::{KeyChooser, Latest, Uniform, Zipf};

@@ -49,6 +49,9 @@
 //! UNSTALL|shard|client|at|dur                  parked op executed after dur ns
 //! ZAPP|dev|zone|bytes|at                       zone append committed
 //! ZRST|dev|zone|at                             zone reset
+//! ZTRUNC|dev|zone|wp|at                        power-loss truncation (crash)
+//! CRASH|shard|point|at                         crash injector fired
+//! RECOV|shard|replayed|at                      recovery complete (WAL replay)
 //! CADM|shard|sst|zone|bytes|at                 SSD cache admit
 //! CEVT|shard|zone|at                           SSD cache zone evicted
 //! HINT|shard|kind|at                           hint issued to the policy
@@ -183,6 +186,13 @@ pub enum Event {
     ZoneAppend { dev: Dev, zone: ZoneId, bytes: u64, at: Ns },
     /// Zone reset.
     ZoneReset { dev: Dev, zone: ZoneId, at: Ns },
+    /// Power-loss truncation: the zone's write pointer landed at `wp`
+    /// (possibly mid-record) when the crash injector fired.
+    ZoneTrunc { dev: Dev, zone: ZoneId, wp: u64, at: Ns },
+    /// The crash injector fired at `at` (virtual power loss).
+    CrashFired { shard: usize, point: &'static str, at: Ns },
+    /// Recovery finished: `replayed` WAL entries were re-applied.
+    Recovered { shard: usize, replayed: u64, at: Ns },
     /// SSD cache admitted a block of `sst`.
     CacheAdmit { shard: usize, sst: u64, zone: ZoneId, bytes: u64, at: Ns },
     /// SSD cache evicted (reset) a cache zone.
@@ -270,6 +280,11 @@ impl Event {
                 format!("ZAPP|{}|{zone}|{bytes}|{at}", dev.name())
             }
             Event::ZoneReset { dev, zone, at } => format!("ZRST|{}|{zone}|{at}", dev.name()),
+            Event::ZoneTrunc { dev, zone, wp, at } => {
+                format!("ZTRUNC|{}|{zone}|{wp}|{at}", dev.name())
+            }
+            Event::CrashFired { shard, point, at } => format!("CRASH|{shard}|{point}|{at}"),
+            Event::Recovered { shard, replayed, at } => format!("RECOV|{shard}|{replayed}|{at}"),
             Event::CacheAdmit { shard, sst, zone, bytes, at } => {
                 format!("CADM|{shard}|{sst}|{zone}|{bytes}|{at}")
             }
@@ -554,6 +569,17 @@ fn perfetto_events(buf: &TraceBuf, shards: usize) -> Vec<String> {
             }
             Event::ZoneReset { dev, zone, at } => {
                 body.push(instant(1, dev_tid(*dev) as usize, *at, &format!("reset z{zone}")));
+            }
+            Event::ZoneTrunc { dev, zone, wp, at } => {
+                body.push(instant(1, dev_tid(*dev) as usize, *at, &format!(
+                    "power-loss trunc z{zone} wp={wp}"
+                )));
+            }
+            Event::CrashFired { shard, point, at } => {
+                body.push(instant(3 + shard, 1, *at, &format!("CRASH {point}")));
+            }
+            Event::Recovered { shard, replayed, at } => {
+                body.push(instant(3 + shard, 1, *at, &format!("recovered {replayed} entries")));
             }
             Event::CacheAdmit { shard, sst, zone, at, .. } => {
                 body.push(instant(3 + shard, 5, *at, &format!("cache admit sst{sst} z{zone}")));
@@ -902,6 +928,19 @@ pub fn check_lines(lines: &[String], shards: usize, bg_threads: usize, dropped: 
             }
             Some("ZAPP") if f.len() == 5 => {}
             Some("ZRST") if f.len() == 4 => {}
+            Some("ZTRUNC") if f.len() == 5 => {}
+            Some("CRASH") if f.len() == 4 => {
+                let shard = num(f[1]) as usize;
+                if shard >= acc.len() {
+                    viol!("shard out of range");
+                }
+            }
+            Some("RECOV") if f.len() == 4 => {
+                let shard = num(f[1]) as usize;
+                if shard >= acc.len() {
+                    viol!("shard out of range");
+                }
+            }
             Some("CADM") if f.len() == 6 => {}
             Some("CEVT") if f.len() == 4 => {}
             Some("HINT") if f.len() == 4 => {}
@@ -1082,6 +1121,29 @@ mod tests {
         assert!(r.violations.iter().any(|v| v.contains("never released")), "{:?}", r.violations);
         let r = check_lines(&lines, 1, 2, 3);
         assert!(r.violations.iter().any(|v| v.contains("dropped 3")), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn checker_accepts_crash_and_recovery_records() {
+        let lines: Vec<String> = [
+            "JOB|0|flush|1|0|0",
+            "ACQ|0|flush|1|0|1",
+            "ZTRUNC|ssd|3|117|50",
+            "CRASH|0|mid_flush|50",
+            // The crash path unwinds the open spans before recovery.
+            "REL|0|flush|1|50|0",
+            "JOBEND|0|flush|1|50",
+            "RECOV|0|42|60",
+            "SNAP|0|70|0|0|0|0|0|0|0|0|0",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let r = check_lines(&lines, 1, 2, 0);
+        assert!(r.ok(), "unexpected violations: {:?}", r.violations);
+        // A crash record naming a shard outside the domain is rejected.
+        let bad = vec!["CRASH|7|mid_flush|50".to_string()];
+        assert!(!check_lines(&bad, 1, 2, 0).ok());
     }
 
     #[test]

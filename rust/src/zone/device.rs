@@ -168,6 +168,16 @@ impl ZonedDevice {
         self.zones[zone as usize].read(offset, len)
     }
 
+    /// Power-loss truncation of one zone (crash injection): the write
+    /// pointer lands at `at`, possibly mid-record. Emits a `ZTRUNC` trace
+    /// event carrying the surviving write pointer.
+    pub fn power_loss_truncate(&mut self, zone: ZoneId, at: u64) -> u64 {
+        let wp = self.zones[zone as usize].power_loss_truncate(at);
+        let (dev, at) = (self.dev, self.trace.now_hint());
+        self.trace.emit(|| Event::ZoneTrunc { dev, zone, wp, at });
+        wp
+    }
+
     /// Reset a zone (instantaneous in the model, as on real devices the
     /// reset cost is negligible next to the data traffic).
     pub fn reset(&mut self, zone: ZoneId) {

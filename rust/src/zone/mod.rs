@@ -164,6 +164,25 @@ impl Zone {
         self.data = WireBuf::new();
         self.reset_count += 1;
     }
+
+    /// Model physical power loss during an in-flight append: the write
+    /// pointer lands at `at` (clamped to the current wp) and every byte past
+    /// it is gone. `at` may fall mid-record — the surviving prefix is a real
+    /// on-media torn state and decoding it stops at the tear (the WireBuf
+    /// truncation contract). Returns the new write pointer.
+    pub fn power_loss_truncate(&mut self, at: u64) -> u64 {
+        let at = at.min(self.wp);
+        self.data = self.data.slice_to_buf(0, at);
+        self.wp = at;
+        self.state = if at == 0 {
+            ZoneState::Empty
+        } else if at == self.capacity {
+            ZoneState::Full
+        } else {
+            ZoneState::Open
+        };
+        at
+    }
 }
 
 #[cfg(test)]
@@ -221,6 +240,33 @@ mod tests {
         assert!(z.append(b"d").is_err());
         // Reads of written data still work on a finished zone.
         assert_eq!(z.read(0, 3).unwrap().phys_bytes(), b"abc");
+    }
+
+    #[test]
+    fn power_loss_truncate_tears_mid_record() {
+        let mut z = Zone::new(10_000);
+        let mut rec = WireBuf::new();
+        rec.push_entry(b"key-a", 1, Some(Payload::fill(1, 100)));
+        let first = rec.len();
+        z.append_wire(&rec).unwrap();
+        let mut rec2 = WireBuf::new();
+        rec2.push_entry(b"key-b", 2, Some(Payload::fill(2, 100)));
+        z.append_wire(&rec2).unwrap();
+        // Power fails mid-way through the second record.
+        let tear = first + rec2.len() / 2;
+        assert_eq!(z.power_loss_truncate(tear), tear);
+        assert_eq!(z.wp(), tear);
+        assert_eq!(z.state(), ZoneState::Open);
+        // Survivor decodes the intact first record only; the torn tail
+        // stops decoding instead of producing garbage.
+        let back = z.read(0, z.wp()).unwrap();
+        let es: Vec<_> = back.entries().collect();
+        assert_eq!(es.len(), 1);
+        assert_eq!(es[0].key.to_vec(), b"key-a");
+        // Truncating to zero empties the zone; clamping past wp is a no-op.
+        assert_eq!(z.power_loss_truncate(0), 0);
+        assert_eq!(z.state(), ZoneState::Empty);
+        assert_eq!(z.power_loss_truncate(999_999), 0);
     }
 
     #[test]

@@ -204,7 +204,10 @@ fn digest(se: &ShardedEngine) -> Vec<String> {
 }
 
 fn run_protocol(shards: usize) -> Vec<String> {
-    let cfg = proto_cfg(shards);
+    run_protocol_cfg(proto_cfg(shards))
+}
+
+fn run_protocol_cfg(cfg: Config) -> Vec<String> {
     let clients = cfg.workload.clients;
     let mut se = ShardedEngine::new(&cfg, |c| hhzs::exp::common::make_policy("HHZS", c));
     let router = se.router;
@@ -290,6 +293,30 @@ fn e2e_digest_matches_committed_golden() {
          timeline change is intended, regenerate with UPDATE_GOLDEN=1 \
          cargo test --test datapath and commit tests/golden/datapath.golden"
     );
+}
+
+// ---------------------------------------------------------------------
+// Crash injection: armed-but-unfired is observationally free
+// ---------------------------------------------------------------------
+
+#[test]
+fn armed_unfired_injector_is_observationally_free() {
+    // An armed crash injector whose trigger never crosses only reads the
+    // clock/op counter, so the full §4.1 protocol must stay bit-identical
+    // to the untraced baseline — the same digest the committed golden
+    // pins. Any divergence means arming alone perturbed the DES.
+    for shards in [1usize, 4] {
+        let baseline = run_protocol(shards);
+        let mut cfg = proto_cfg(shards);
+        cfg.crash.enabled = true;
+        cfg.crash.point = "mid_flush".into();
+        cfg.crash.at_op = u64::MAX; // armed, never crossing
+        let armed = run_protocol_cfg(cfg);
+        assert_eq!(
+            baseline, armed,
+            "{shards} shard(s): an armed-but-unfired crash injector perturbed the timeline"
+        );
+    }
 }
 
 // ---------------------------------------------------------------------
