@@ -71,6 +71,15 @@ pub struct WallclockRun {
     /// Resident interned-key bytes of the key arena at the end of the
     /// measured phase (the `Metrics::key_arena_bytes` gauge).
     pub key_arena_bytes: u64,
+    /// Sum of the four `Metrics::resident_*_bytes` gauges at the end of
+    /// the measured phase: everything demand paging keeps hydrated for
+    /// zones, WAL windows, and caches (merged across shards).
+    pub resident_bytes: u64,
+    /// Whether block-granular demand paging was on for this run. The
+    /// legacy sweep rows run with it OFF so their phys-ratio gates keep
+    /// pinning the prefix-compression/interning claims (dehydration would
+    /// send both sides of those ratios to ~0 and mask a regression).
+    pub paging: bool,
 }
 
 /// Peak resident set size of this process (VmHWM), or 0 if unavailable.
@@ -92,7 +101,7 @@ pub fn peak_rss_bytes() -> u64 {
     0
 }
 
-fn bench_cfg(objects: u64, ops: u64, value_size: usize, key_size: usize) -> Config {
+fn bench_cfg(objects: u64, ops: u64, value_size: usize, key_size: usize, paging: bool) -> Config {
     // 1/512 paper scale: ~42 MiB SSD, ~4 GiB HDD — holds the 10× dataset
     // at every swept value size.
     let mut cfg = Config::paper_scaled(512);
@@ -100,7 +109,12 @@ fn bench_cfg(objects: u64, ops: u64, value_size: usize, key_size: usize) -> Conf
     cfg.workload.ops = ops;
     cfg.workload.value_size = value_size;
     cfg.workload.key_size = key_size;
+    cfg.residency.paging = paging;
     cfg
+}
+
+fn resident_total(m: &crate::metrics::Metrics) -> u64 {
+    m.resident_ssd_bytes + m.resident_hdd_bytes + m.resident_wal_bytes + m.resident_cache_bytes
 }
 
 /// Run load + YCSB-A once and measure it.
@@ -110,8 +124,9 @@ pub fn run_one(
     ops: u64,
     value_size: usize,
     key_size: usize,
+    paging: bool,
 ) -> WallclockRun {
-    let cfg = bench_cfg(objects, ops, value_size, key_size);
+    let cfg = bench_cfg(objects, ops, value_size, key_size, paging);
     let mut e = Engine::new(cfg.clone(), Box::new(HhzsPolicy::new(cfg.lsm.num_levels)));
     let clients = cfg.workload.clients;
     let t0 = Instant::now();
@@ -142,6 +157,8 @@ pub fn run_one(
         zone_phys_bytes: e.fs.phys_bytes(),
         zone_logical_bytes: e.fs.ssd.written_bytes() + e.fs.hdd.written_bytes(),
         key_arena_bytes: e.metrics.key_arena_bytes,
+        resident_bytes: resident_total(&e.metrics),
+        paging,
     }
 }
 
@@ -154,8 +171,9 @@ pub fn run_one_sharded(
     ops: u64,
     value_size: usize,
     shards: usize,
+    paging: bool,
 ) -> WallclockRun {
-    let mut cfg = bench_cfg(objects, ops, value_size, 24);
+    let mut cfg = bench_cfg(objects, ops, value_size, 24, paging);
     cfg.shards = shards;
     let mut se = ShardedEngine::new(&cfg, |c| Box::new(HhzsPolicy::new(c.lsm.num_levels)));
     let clients = cfg.workload.clients;
@@ -190,6 +208,8 @@ pub fn run_one_sharded(
         zone_phys_bytes: phys,
         zone_logical_bytes: logical,
         key_arena_bytes: merged.key_arena_bytes,
+        resident_bytes: resident_total(&merged),
+        paging,
     }
 }
 
@@ -214,7 +234,9 @@ fn run_to_json(r: &WallclockRun) -> String {
             "      \"peak_rss_bytes\": {},\n",
             "      \"zone_phys_bytes\": {},\n",
             "      \"zone_logical_bytes\": {},\n",
-            "      \"key_arena_bytes\": {}\n",
+            "      \"key_arena_bytes\": {},\n",
+            "      \"resident_bytes\": {},\n",
+            "      \"paging\": {}\n",
             "    }}"
         ),
         json_escape(&r.label),
@@ -231,6 +253,8 @@ fn run_to_json(r: &WallclockRun) -> String {
         r.zone_phys_bytes,
         r.zone_logical_bytes,
         r.key_arena_bytes,
+        r.resident_bytes,
+        r.paging,
     )
 }
 
@@ -368,10 +392,15 @@ pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> 
     // VmHWM is process-monotone, so the high-water mark it sets bounds the
     // 4× -payload footprint; `zone_phys_bytes` is the per-run flatness
     // signal (peak_rss_bytes of later runs inherits earlier marks).
+    // The sweep rows run with demand paging OFF: their phys-ratio gates
+    // pin the prefix-compression and key-interning claims, and with
+    // paging on dehydration drives both sides of those ratios toward
+    // zero — a regression would hide inside the noise. The paged row
+    // below measures (and records) what paging saves.
     for value_size in [4000usize, 1000] {
         let label = format!("streaming-{scale_label}-v{value_size}");
         eprintln!("[bench] {label}: {objects} objects + {ops} YCSB-A ops ...");
-        let r = run_one(&label, objects, ops, value_size, 24);
+        let r = run_one(&label, objects, ops, value_size, 24, false);
         eprintln!(
             "[bench] {label}: {:.1}s wall, {:.0} sim-ops/s, rss {} MiB, zone phys {} MiB / logical {} MiB",
             r.wall_secs,
@@ -388,7 +417,7 @@ pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> 
     {
         let label = format!("sharded4-{scale_label}-v1000");
         eprintln!("[bench] {label}: 4-shard frontend ...");
-        let r = run_one_sharded(&label, objects, ops, 1000, 4);
+        let r = run_one_sharded(&label, objects, ops, 1000, 4, false);
         eprintln!(
             "[bench] {label}: {:.1}s wall, {:.0} sim-ops/s, cpu wait {:.1}ms",
             r.wall_secs,
@@ -404,7 +433,7 @@ pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> 
     for key_size in [24usize, 128] {
         let label = format!("streaming-{scale_label}-k{key_size}-v100");
         eprintln!("[bench] {label}: key_len {key_size} sweep ...");
-        let r = run_one(&label, objects, ops, 100, key_size);
+        let r = run_one(&label, objects, ops, 100, key_size, false);
         eprintln!(
             "[bench] {label}: {:.1}s wall, {:.0} sim-ops/s, zone phys {} KiB, key arena {} KiB",
             r.wall_secs,
@@ -415,8 +444,29 @@ pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> 
         runs.push(r);
     }
 
+    // The paged row: the production default (demand paging on), same
+    // shape as the v1000 streaming row. `resident_bytes` records the
+    // working set paging keeps hydrated; the exp7 --quick CI smoke gates
+    // its flatness against keyspace growth.
+    {
+        let label = format!("streaming-{scale_label}-v1000-paged");
+        eprintln!("[bench] {label}: demand-paged residency ...");
+        let r = run_one(&label, objects, ops, 1000, 24, true);
+        eprintln!(
+            "[bench] {label}: {:.1}s wall, {:.0} sim-ops/s, zone phys {} KiB, resident {} KiB \
+             (unpaged zone phys {} KiB)",
+            r.wall_secs,
+            r.sim_ops_per_wall_sec,
+            r.zone_phys_bytes >> 10,
+            r.resident_bytes >> 10,
+            runs[1].zone_phys_bytes >> 10,
+        );
+        runs.push(r);
+    }
+
     // runs[0] = streaming v4000, runs[1] = streaming v1000, runs[2] = sharded4 v1000,
-    // runs[3] = streaming k24 v100, runs[4] = streaming k128 v100.
+    // runs[3] = streaming k24 v100, runs[4] = streaming k128 v100,
+    // runs[5] = streaming v1000 paged.
     let phys_ratio = runs[0].zone_phys_bytes as f64 / runs[1].zone_phys_bytes.max(1) as f64;
     let logical_ratio =
         runs[0].zone_logical_bytes as f64 / runs[1].zone_logical_bytes.max(1) as f64;
@@ -448,8 +498,11 @@ pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> 
             "4x-payload run executes first so its mark bounds that footprint); use ",
             "zone_phys_bytes for per-run comparisons. cpu_wait_ns is the merged virtual time ",
             "ready flush/compaction jobs waited for a slot of the shared bg_threads CPU pool ",
-            "during the measured YCSB-A phase. The gates section feeds the always-armed ",
-            "invariant gates of `bench wallclock --gate`.\",\n",
+            "during the measured YCSB-A phase. resident_bytes sums the four ",
+            "resident_*_bytes gauges (zones + WAL + caches kept hydrated by demand paging); ",
+            "the sweep rows run with paging = false so their phys ratios keep pinning the ",
+            "compression claims, the -paged row runs the production default. The gates ",
+            "section feeds the always-armed invariant gates of `bench wallclock --gate`.\",\n",
             "  \"gates\": {{\n",
             "    \"zone_phys_ratio_max\": {:.3},\n",
             "    \"sharded4_slowdown_max\": {:.3},\n",

@@ -245,6 +245,24 @@ impl Default for CrashConfig {
     }
 }
 
+/// Block-granular demand-paged residency knobs (see [`crate::residency`]).
+/// Paging is observationally free: the DES timeline, golden digests, and
+/// crash invariants are bit-identical with it on or off — only host-side
+/// physical memory (and the `resident_*_bytes` gauges) change.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResidencyConfig {
+    /// Dehydrate synthesizable zone-resident blocks to compact descriptors
+    /// and rehydrate them on demand. On by default; turn off to keep every
+    /// written byte physically resident (debugging aid).
+    pub paging: bool,
+}
+
+impl Default for ResidencyConfig {
+    fn default() -> Self {
+        ResidencyConfig { paging: true }
+    }
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct Config {
     pub geometry: Geometry,
@@ -258,6 +276,8 @@ pub struct Config {
     /// Crash injection (off by default; observationally free when armed
     /// but unfired).
     pub crash: CrashConfig,
+    /// Demand-paged residency (on by default; observationally free).
+    pub residency: ResidencyConfig,
     /// Number of independent LSM engines the key space is striped over
     /// (see [`crate::shard`]). `1` = the paper's single-engine system; the
     /// substrate lease layer splits zones/memory budgets for `> 1`.
@@ -327,6 +347,7 @@ impl Config {
             },
             trace: TraceConfig::default(),
             crash: CrashConfig::default(),
+            residency: ResidencyConfig::default(),
             shards: 1,
             use_xla_kernels: false,
         }
@@ -381,6 +402,7 @@ impl Config {
              [trace]\nenabled = {}\nout = \"{}\"\nbuffer_events = {}\n\n\
              [crash]\nenabled = {}\npoint = \"{}\"\nat_time_ns = {}\nat_op = {}\n\
              seed = {}\nshard = {}\n\n\
+             [residency]\npaging = {}\n\n\
              [sharding]\nshards = {}\n\n\
              [runtime]\nuse_xla_kernels = {}\n",
             g.scale_denom, g.ssd_zone_cap, g.hdd_zone_cap, g.sst_size, g.ssd_zones,
@@ -395,6 +417,7 @@ impl Config {
             self.trace.enabled, self.trace.out, self.trace.buffer_events,
             self.crash.enabled, self.crash.point, self.crash.at_time_ns, self.crash.at_op,
             self.crash.seed, self.crash.shard,
+            self.residency.paging,
             self.shards,
             self.use_xla_kernels,
         )
@@ -470,6 +493,7 @@ impl Config {
             doc.get_u64("crash", "seed", &mut k.seed);
             doc.get_usize("crash", "shard", &mut k.shard);
         }
+        doc.get_bool("residency", "paging", &mut c.residency.paging);
         doc.get_usize("sharding", "shards", &mut c.shards);
         c.shards = c.shards.max(1);
         doc.get_bool("runtime", "use_xla_kernels", &mut c.use_xla_kernels);
@@ -585,6 +609,15 @@ mod tests {
         let c2 = Config::from_toml_str(&c.to_toml()).unwrap();
         assert_eq!(c2, c);
         assert!(Config::from_toml_str("[crash]\npoint = \"nope\"\n").is_err());
+    }
+
+    #[test]
+    fn residency_knob_defaults_on_and_round_trips() {
+        assert!(Config::small().residency.paging);
+        let c = Config::from_toml_str("[residency]\npaging = false\n").unwrap();
+        assert!(!c.residency.paging);
+        let c2 = Config::from_toml_str(&c.to_toml()).unwrap();
+        assert_eq!(c2, c);
     }
 
     #[test]

@@ -27,6 +27,7 @@ use crate::lsm::{
 };
 use crate::metrics::{LevelSizeSample, Metrics, WriteCategory};
 use crate::policy::{MigrationKind, Policy, SstOrigin, View};
+use crate::residency::{Residency, ResidencyHandle};
 use crate::sim::cpu::{CpuPool, CpuPoolStats};
 use crate::sim::rng::fingerprint32;
 use crate::sim::{AccessKind, CrashInjector, CrashPoint, Ns};
@@ -215,6 +216,11 @@ pub struct Engine {
     /// Optional XLA-backed bloom prober for the batched read path
     /// (`multi_get`); also attachable to the HHZS migration scorer.
     pub xla: Option<std::rc::Rc<crate::runtime::XlaKernels>>,
+    /// The demand-paging residency manager both devices page through.
+    /// Like the CPU pool and key arena: a standalone engine owns its own,
+    /// [`crate::shard::ShardedEngine`] rebinds every shard to ONE manager
+    /// per domain, so the paging knob and counters are domain-global.
+    residency: ResidencyHandle,
 }
 
 impl Engine {
@@ -240,6 +246,11 @@ impl Engine {
             fs.set_trace(&trace);
             pool.set_trace(trace.clone(), 0);
         }
+        // One residency manager for the engine's device pair: zone-bound
+        // writes dehydrate through it, reads hydrate. (The shard layer
+        // rebinds all shards to shard 0's manager.)
+        let residency = Residency::new(cfg.residency.paging);
+        fs.set_residency(&residency);
         let version = Version::new(
             cfg.lsm.num_levels,
             cfg.lsm.l0_target,
@@ -282,6 +293,7 @@ impl Engine {
             wal_buf: WireBuf::new(),
             crash: None,
             xla: None,
+            residency,
         };
         e.crash = CrashInjector::from_config(&e.cfg.crash);
         let tick = e.cfg.hhzs.scan_interval_ns;
@@ -453,6 +465,27 @@ impl Engine {
     /// Do two engines intern keys into the same arena?
     pub fn shares_key_arena_with(&self, other: &Engine) -> bool {
         self.arena.shares_with(&other.arena)
+    }
+
+    /// Handle to this engine's residency manager (shared across the
+    /// frontend domain once [`crate::shard::ShardedEngine`] rebinds it).
+    pub fn residency_handle(&self) -> ResidencyHandle {
+        self.residency.clone()
+    }
+
+    /// Join a shared residency manager (the frontend's domain): rebinds
+    /// both devices' paging choke points, so the knob and the paging
+    /// counters are domain-global like the timers/CPU pool/key arena.
+    /// Safe at any time — data dehydrated under the old manager still
+    /// hydrates on read (`page_in` is unconditional).
+    pub(crate) fn share_residency(&mut self, residency: ResidencyHandle) {
+        self.fs.set_residency(&residency);
+        self.residency = residency;
+    }
+
+    /// Do two engines page through the same residency manager?
+    pub fn shares_residency_with(&self, other: &Engine) -> bool {
+        Rc::ptr_eq(&self.residency, &other.residency)
     }
 
     /// Do two engines draw background-CPU slots from the same pool?
@@ -672,6 +705,7 @@ impl Engine {
         self.metrics.record_sst_read(meta.id, meta.level, served_by);
         self.policy.on_sst_read(meta.id, served_by, now);
         let arc = Arc::new(data);
+        debug_assert!(arc.is_hydrated(), "cache admits hydrated copies only");
         let evicted = self.cache.insert(bk, arc.clone());
         for ev in evicted {
             self.handle_cache_eviction(ev.key.sst, ev.key.offset, ev.data);
@@ -1512,6 +1546,37 @@ impl Engine {
             self.arena.sweep();
         }
         self.metrics.key_arena_bytes = self.arena.bytes();
+        self.stamp_residency_gauges();
+    }
+
+    /// Stamp the four physical-residency gauges from this engine's zones
+    /// and block cache. The partition is exact by construction:
+    ///
+    ///   ssd + hdd + wal + cache == fs.phys_bytes() + cache.phys_bytes()
+    ///
+    /// WAL zones are carved out of whichever device holds them; SSD cache
+    /// zones are reported under `cache` together with the block cache's
+    /// pinned (hydrated) copies. The gauges are host-side diagnostics and
+    /// never feed the DES timeline or digests. Public so the conservation
+    /// test (tests/datapath.rs) can restamp at arbitrary instants.
+    pub fn stamp_residency_gauges(&mut self) {
+        let (mut ssd_wal, mut hdd_wal) = (0u64, 0u64);
+        for (dev, z) in self.pool.wal_zone_ids() {
+            let b = self.fs.device_ref(dev).zone(z).phys_bytes();
+            match dev {
+                Dev::Ssd => ssd_wal += b,
+                Dev::Hdd => hdd_wal += b,
+            }
+        }
+        let mut cache_zones = 0u64;
+        for z in self.pool.cache_zone_ids() {
+            cache_zones += self.fs.ssd.zone(z).phys_bytes();
+        }
+        let m = &mut self.metrics;
+        m.resident_wal_bytes = ssd_wal + hdd_wal;
+        m.resident_cache_bytes = cache_zones + self.cache.phys_bytes();
+        m.resident_ssd_bytes = self.fs.ssd.phys_bytes() - ssd_wal - cache_zones;
+        m.resident_hdd_bytes = self.fs.hdd.phys_bytes() - hdd_wal;
     }
 
     fn take_level_sample(&mut self) {

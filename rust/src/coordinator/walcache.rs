@@ -239,16 +239,29 @@ impl PoolManager {
         Some((dev, zone, wp))
     }
 
-    /// Every (dev, zone) the pool currently holds live data in: WAL zones
-    /// (per-segment refs + the active zone) and SSD cache zones. Recovery's
-    /// orphan GC must not touch these.
-    pub fn referenced_zones(&self) -> Vec<(Dev, ZoneId)> {
+    /// Zones currently holding live WAL data: every zone with live
+    /// segment refs, plus the active WAL zone. Used for recovery's orphan
+    /// GC exclusion and the residency-gauge partition (WAL vs SST bytes).
+    pub fn wal_zone_ids(&self) -> Vec<(Dev, ZoneId)> {
         let mut v: Vec<(Dev, ZoneId)> = self.zone_refs.keys().copied().collect();
         if let Some(az) = self.active_wal {
             if !v.contains(&az) {
                 v.push(az);
             }
         }
+        v
+    }
+
+    /// SSD cache zones, oldest first (residency-gauge partition).
+    pub fn cache_zone_ids(&self) -> Vec<ZoneId> {
+        self.cache_zones.iter().copied().collect()
+    }
+
+    /// Every (dev, zone) the pool currently holds live data in: WAL zones
+    /// (per-segment refs + the active zone) and SSD cache zones. Recovery's
+    /// orphan GC must not touch these.
+    pub fn referenced_zones(&self) -> Vec<(Dev, ZoneId)> {
+        let mut v = self.wal_zone_ids();
         for z in &self.cache_zones {
             let k = (Dev::Ssd, *z);
             if !v.contains(&k) {

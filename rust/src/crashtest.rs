@@ -74,6 +74,11 @@ pub struct CellReport {
     pub ops_issued: u64,
     /// Invariant violations; empty = the cell passed.
     pub violations: Vec<String>,
+    /// Physically resident zone bytes of the victim shard after
+    /// recovery. Cells run with demand paging on (the production
+    /// default), so the power loss tears an append while the at-rest
+    /// blocks around it are dehydrated — this is the evidence.
+    pub victim_phys_bytes: u64,
 }
 
 /// Whole-grid outcome.
@@ -212,8 +217,17 @@ pub fn run_cell(cell: &Cell) -> CellReport {
 /// for `hhzs trace check` (CI pipes a traced crash run through it to
 /// validate span unwinding across the power loss).
 pub fn run_cell_traced(cell: &Cell, trace: bool) -> (CellReport, Option<String>) {
+    run_cell_opts(cell, trace, true)
+}
+
+/// Cell runner with the demand-paging knob explicit. The grid always
+/// runs paged (power loss over dehydrated at-rest blocks is the default
+/// reality); the unpaged variant exists so tests can pin that paging is
+/// crash-transparent — same fire, same torn byte, same violations.
+fn run_cell_opts(cell: &Cell, trace: bool, paging: bool) -> (CellReport, Option<String>) {
     let mut cfg = Config::paper_scaled(2048);
     cfg.trace.enabled = trace;
+    cfg.residency.paging = paging;
     cfg.workload.load_objects = 0;
     cfg.shards = cell.shards;
     cfg.crash.enabled = true;
@@ -271,8 +285,12 @@ pub fn run_cell_traced(cell: &Cell, trace: bool) -> (CellReport, Option<String>)
             e.verify_recovery_invariants().into_iter().map(|v| format!("shard {s}: {v}")),
         );
     }
+    let victim_phys_bytes = se.engines[0].fs.phys_bytes();
     let export = trace.then(|| se.export_trace_string());
-    (CellReport { cell: *cell, fired, torn, ops_issued: issued, violations }, export)
+    (
+        CellReport { cell: *cell, fired, torn, ops_issued: issued, violations, victim_phys_bytes },
+        export,
+    )
 }
 
 /// The cell matrix: shard counts {1, 4} × all six points × the point's
@@ -405,6 +423,47 @@ mod tests {
         assert!(!r.fired);
         assert_eq!(r.torn, None);
         assert!(r.violations.is_empty(), "violations: {:?}", r.violations);
+    }
+
+    /// Power loss while the victim's at-rest blocks are dehydrated: the
+    /// cell fires, tears, recovers clean — and an identical cell with
+    /// paging off reaches the same fire/torn/violation outcome, pinning
+    /// that demand paging is crash-transparent. The paged victim holds
+    /// strictly fewer resident bytes than the unpaged one, the evidence
+    /// that dehydration was live through the power loss.
+    #[test]
+    fn power_loss_over_dehydrated_blocks_recovers_and_matches_unpaged() {
+        for point in [CrashPoint::MidZoneAppend, CrashPoint::MidFlush, CrashPoint::MidCompaction]
+        {
+            let (at_op, at_time) = arms(point)[0];
+            let cell = Cell { point, shards: 4, at_op, at_time, seed: 5 };
+            let (paged, _) = run_cell_opts(&cell, false, true);
+            assert!(paged.fired, "{} paged cell never fired", point.name());
+            assert!(
+                paged.violations.is_empty(),
+                "{} paged cell violations: {:?}",
+                point.name(),
+                paged.violations
+            );
+            let (unpaged, _) = run_cell_opts(&cell, false, false);
+            assert_eq!(paged.fired, unpaged.fired, "{}", point.name());
+            assert_eq!(paged.torn, unpaged.torn, "{}: torn byte differs", point.name());
+            assert_eq!(paged.ops_issued, unpaged.ops_issued, "{}", point.name());
+            assert!(
+                unpaged.violations.is_empty(),
+                "{} unpaged cell violations: {:?}",
+                point.name(),
+                unpaged.violations
+            );
+            assert!(
+                paged.victim_phys_bytes < unpaged.victim_phys_bytes,
+                "{}: victim must be dehydrated through the crash \
+                 (paged {} >= unpaged {} resident bytes)",
+                point.name(),
+                paged.victim_phys_bytes,
+                unpaged.victim_phys_bytes
+            );
+        }
     }
 
     #[test]

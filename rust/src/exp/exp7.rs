@@ -1,7 +1,7 @@
 //! Exp#7 (beyond the paper): shard-count behaviour on the shared pair.
 //!
 //! Runs the §4.1 protocol (fresh load, then YCSB A) with the full HHZS
-//! policy at 1/2/4/8 shards through the async frontend: one client pool,
+//! policy at 1..256 shards through the async frontend: one client pool,
 //! one virtual clock, and ONE shared SSD/HDD pair — every shard's
 //! flush/compaction/migration traffic lands on the same device FIFOs, so
 //! what this experiment now measures is cross-shard device contention
@@ -12,7 +12,14 @@
 //! trees, shallower reads) — not the PR 1 fiction of `n` independent
 //! device pairs and thread pools. Deterministic for a fixed seed: the
 //! frontend routes one global op stream over seed-identical DES engines.
+//!
+//! Paper-scale keyspaces (≥ 1M unique keys) and the high shard counts are
+//! hostable because physical residency is demand-paged: zone-resident
+//! YCSB data dehydrates to compact descriptors (see [`crate::residency`]),
+//! so the `resident MiB` column tracks the *working set* (pinned cache
+//! copies, WAL windows, torn tails) rather than the logical dataset.
 
+use crate::metrics::Metrics;
 use crate::report::Table;
 use crate::shard::ShardedEngine;
 use crate::ycsb::{Kind, Spec, YcsbSource};
@@ -20,7 +27,14 @@ use crate::zone::Dev;
 
 use super::common::{make_policy, ExpOpts};
 
-pub const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+pub const SHARD_COUNTS: [usize; 7] = [1, 2, 4, 8, 16, 64, 256];
+
+/// Sum of the four physical-residency gauges — everything the run keeps
+/// hydrated in host memory on behalf of zones, WAL, and caches. The
+/// gauges are per-shard and sum on merge, so this is the domain total.
+pub fn resident_total_bytes(m: &Metrics) -> u64 {
+    m.resident_ssd_bytes + m.resident_hdd_bytes + m.resident_wal_bytes + m.resident_cache_bytes
+}
 
 /// Load + YCSB A at `n` shards; returns (load ops/s, A ops/s, merged A
 /// metrics, per-shard A ops, per-shard A metrics).
@@ -30,6 +44,12 @@ pub fn run_one(
 ) -> (f64, f64, crate::metrics::Metrics, Vec<u64>, Vec<crate::metrics::Metrics>) {
     let mut cfg = cfg.clone();
     cfg.shards = n;
+    // The substrate must host the shard count: carve() insists on ≥ 1
+    // pool zone + 1 SST zone per shard on the SSD and a full SST's worth
+    // of HDD zones each. Widen the zone counts (never shrink the shard
+    // count) so every row runs the identical workload.
+    cfg.geometry.ssd_zones = cfg.geometry.ssd_zones.max(2 * n as u32);
+    cfg.geometry.hdd_zones = cfg.geometry.hdd_zones.max(n as u32 * cfg.hdd_zones_per_sst());
     let mut se = ShardedEngine::new(&cfg, |c| make_policy("HHZS", c));
     let clients = cfg.workload.clients;
 
@@ -47,6 +67,11 @@ pub fn run_one(
 
 pub fn run(opts: &ExpOpts) {
     let csv = opts.csv_dir.as_deref();
+    let mut cfg = opts.cfg.clone();
+    // Paper-scale keyspace: the shard sweep is only interesting when every
+    // row serves ≥ 1M unique keys (the dehydrated descriptors make this
+    // hostable — the logical dataset no longer has to fit in host RAM).
+    cfg.workload.load_objects = cfg.workload.load_objects.max(1_000_000);
     let mut t = Table::new(
         "Exp#7: shard count on one shared SSD/HDD pair (HHZS, fresh load + YCSB A per count)",
         &[
@@ -59,6 +84,7 @@ pub fn run(opts: &ExpOpts) {
             "queue wait ms",
             "cpu wait ms",
             "key arena KiB",
+            "resident MiB",
             "balance max/min",
             "migrations",
         ],
@@ -82,7 +108,7 @@ pub fn run(opts: &ExpOpts) {
     let mut base_a: Option<f64> = None;
     for &n in &SHARD_COUNTS {
         println!("exp7: {n} shard(s)...");
-        let (load_tput, a_tput, m, per_shard, shard_m) = run_one(&opts.cfg, n);
+        let (load_tput, a_tput, m, per_shard, shard_m) = run_one(&cfg, n);
         for (s, sm) in shard_m.iter().enumerate() {
             bt.row(vec![
                 n.to_string(),
@@ -114,10 +140,67 @@ pub fn run(opts: &ExpOpts) {
             format!("{:.1}", m.total_queue_wait_ns() as f64 / 1e6),
             format!("{:.1}", m.cpu_wait.sum as f64 / 1e6),
             format!("{:.1}", m.key_arena_bytes as f64 / 1024.0),
+            format!("{:.2}", resident_total_bytes(&m) as f64 / (1024.0 * 1024.0)),
             format!("{:.2}", max_ops as f64 / (min_ops.max(1)) as f64),
             (m.migrations_cap + m.migrations_pop).to_string(),
         ]);
     }
     t.emit(csv, "exp7_shards");
     bt.emit(csv, "exp7_shard_breakdown");
+}
+
+/// CI smoke: shards {8, 64} at 1× and 4× keyspace with the always-on
+/// residency-flatness gate.
+///
+/// The gate is machine-independent — every input is a deterministic
+/// virtual byte count, no wallclock — and pins the tentpole property:
+/// with demand paging, *resident* bytes track the working set (block
+/// cache pins, WAL windows, torn tails), not the logical dataset. Under
+/// an equal working set (same ops, same cache budget), quadrupling the
+/// keyspace must not grow residency past 1.5× (+ a small absolute slack
+/// so near-zero baselines don't amplify into flaky ratios).
+pub fn run_quick(opts: &ExpOpts) {
+    let csv = opts.csv_dir.as_deref();
+    let mut base = opts.cfg.clone();
+    base.workload.load_objects = 60_000;
+    base.workload.ops = 20_000;
+    let mut t = Table::new(
+        "Exp#7 --quick: residency flatness vs keyspace (HHZS, load + YCSB A)",
+        &["shards", "keyspace", "load ops/s", "A ops/s", "resident MiB", "resident/1x"],
+    );
+    for &n in &[8usize, 64] {
+        let mut resident_1x: u64 = 0;
+        for scale in [1u64, 4] {
+            let mut cfg = base.clone();
+            cfg.workload.load_objects *= scale;
+            println!("exp7 --quick: {n} shard(s), {scale}x keyspace...");
+            let (load_tput, a_tput, m, _, _) = run_one(&cfg, n);
+            let resident = resident_total_bytes(&m);
+            let ratio = if scale == 1 {
+                resident_1x = resident;
+                1.0
+            } else {
+                resident as f64 / resident_1x.max(1) as f64
+            };
+            t.row(vec![
+                n.to_string(),
+                format!("{scale}x"),
+                format!("{load_tput:.0}"),
+                format!("{a_tput:.0}"),
+                format!("{:.2}", resident as f64 / (1024.0 * 1024.0)),
+                format!("{ratio:.2}"),
+            ]);
+            if scale > 1 {
+                let bound = resident_1x + resident_1x / 2 + 256 * 1024;
+                assert!(
+                    resident <= bound,
+                    "residency flatness gate: {n} shards at {scale}x keyspace holds \
+                     {resident} resident bytes > bound {bound} (1.5 × {resident_1x} + slack) — \
+                     resident memory is scaling with the dataset, not the working set"
+                );
+            }
+        }
+    }
+    t.emit(csv, "exp7_quick_residency");
+    println!("exp7 --quick: residency flatness gate passed");
 }

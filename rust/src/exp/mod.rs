@@ -11,7 +11,11 @@
 //! | `exp4`   | Fig 8 — read-ratio sweep |
 //! | `exp5`   | Fig 9 — SSD-size sweep |
 //! | `exp6`   | Fig 10 — migration-rate tail latencies |
-//! | `exp7`   | beyond the paper — shard-count scalability (1/2/4/8) |
+//! | `exp7`   | beyond the paper — shard-count scalability (1..256) |
+//!
+//! `exp7-quick` (= `exp7 --quick` on the CLI) is the CI smoke shape of the
+//! shard sweep: shards {8, 64} at 1×/4× keyspace with the always-on
+//! residency-flatness gate.
 
 pub mod ablate;
 pub mod common;
@@ -39,6 +43,7 @@ pub fn run(name: &str, opts: &ExpOpts) -> anyhow::Result<()> {
         "exp5" => exp5::run(opts),
         "exp6" => exp6::run(opts),
         "exp7" => exp7::run(opts),
+        "exp7-quick" => exp7::run_quick(opts),
         "ablate" => ablate::run(opts),
         "all" => {
             for e in ["table1", "fig2", "exp1", "exp2", "exp3", "exp4", "exp5", "exp6", "exp7"] {

@@ -42,6 +42,7 @@ pub mod lsm;
 pub mod metrics;
 pub mod policy;
 pub mod report;
+pub mod residency;
 pub mod runtime;
 pub mod shard;
 pub mod sim;

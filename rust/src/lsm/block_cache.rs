@@ -5,9 +5,14 @@
 //!
 //! Blocks are [`WireBuf`]s: the byte budget charges their *logical* size
 //! (identical hit/miss/eviction behaviour to a cache of materialized
-//! blocks) while residency costs only the compact physical bytes. A
-//! per-SST index of resident blocks makes [`BlockCache::invalidate_sst`]
-//! O(blocks of that SST) instead of a full-map walk.
+//! blocks) while residency costs only the compact physical bytes. Under
+//! demand paging, admission is a *pin*: every cached block is a hydrated
+//! copy (device reads page in), and eviction/invalidation is the unpin —
+//! freed slab nodes release their `Arc<WireBuf>` immediately so the
+//! bytes do not linger until slab reuse. [`BlockCache::phys_bytes`]
+//! reports the pinned resident total. A per-SST index of resident blocks
+//! makes [`BlockCache::invalidate_sst`] O(blocks of that SST) instead of
+//! a full-map walk.
 
 use std::collections::{BTreeSet, HashMap};
 use std::sync::Arc;
@@ -141,7 +146,9 @@ impl BlockCache {
         while self.used_bytes + len > self.capacity_bytes && self.tail != NIL {
             let t = self.tail;
             let node_key = self.slab[t].key;
-            let node_data = self.slab[t].data.clone();
+            // Take the Arc out of the freed node: eviction must unpin
+            // the block's resident bytes, not park them in the slab.
+            let node_data = std::mem::replace(&mut self.slab[t].data, Arc::new(WireBuf::new()));
             self.detach(t);
             self.map.remove(&node_key);
             self.index_remove(&node_key);
@@ -176,7 +183,8 @@ impl BlockCache {
         for offset in offsets {
             let k = BlockKey { sst, offset };
             if let Some(i) = self.map.remove(&k) {
-                self.used_bytes -= self.slab[i].data.len();
+                let data = std::mem::replace(&mut self.slab[i].data, Arc::new(WireBuf::new()));
+                self.used_bytes -= data.len();
                 self.detach(i);
                 self.free.push(i);
             }
@@ -185,6 +193,11 @@ impl BlockCache {
 
     pub fn used_bytes(&self) -> u64 {
         self.used_bytes
+    }
+    /// Physically resident bytes pinned by the cache. Live nodes only —
+    /// freed slab slots hold empty buffers and contribute nothing.
+    pub fn phys_bytes(&self) -> u64 {
+        self.map.values().map(|&i| self.slab[i].data.phys_len() as u64).sum()
     }
     pub fn len(&self) -> usize {
         self.map.len()
@@ -292,6 +305,22 @@ mod tests {
         let ev = c.insert(BlockKey { sst: 1, offset: 0 }, blk(10));
         assert_eq!(ev.len(), 1);
         assert!(c.get(&BlockKey { sst: 1, offset: 0 }).is_none());
+    }
+
+    #[test]
+    fn eviction_unpins_resident_bytes() {
+        let mut c = BlockCache::new(200);
+        let a = blk(100);
+        c.insert(BlockKey { sst: 1, offset: 0 }, a.clone());
+        c.insert(BlockKey { sst: 1, offset: 100 }, blk(100));
+        assert_eq!(c.phys_bytes(), 200);
+        // Evicting offset 0 must drop the slab's Arc, not just the map entry.
+        c.insert(BlockKey { sst: 1, offset: 200 }, blk(100));
+        assert!(!c.contains(&BlockKey { sst: 1, offset: 0 }));
+        assert_eq!(Arc::strong_count(&a), 1, "freed slab node must release the block");
+        assert_eq!(c.phys_bytes(), 200);
+        c.invalidate_sst(1);
+        assert_eq!(c.phys_bytes(), 0);
     }
 
     #[test]

@@ -131,6 +131,12 @@ struct RawCur {
 }
 
 /// Cursor over one SST's entries, fetching one data block at a time.
+///
+/// The resident block is this cursor's residency *pin*: blocks arrive
+/// hydrated (device reads page in), the cursor's zero-copy key views
+/// borrow their bytes, and the pin is released when the next fetch
+/// replaces the block — so a merge keeps exactly one hydrated block per
+/// input resident regardless of how much cold data it streams over.
 struct SstStream {
     meta: Arc<SstMeta>,
     next_block: usize,
@@ -185,6 +191,10 @@ impl SstStream {
             // stays bounded at one block per input stream.
             let h = self.meta.blocks[self.next_block];
             self.block = fetch(&self.meta, &h);
+            debug_assert!(
+                self.block.is_hydrated(),
+                "merge cursors pin hydrated blocks — fetch must page in"
+            );
             self.next_block += 1;
             self.log = 0;
             self.phys = 0;

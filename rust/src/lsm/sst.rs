@@ -212,11 +212,16 @@ impl SstBuilder {
         // Serialize index + bloom after the data so the file size is
         // honest. The serialized index charges the FULL first-key lengths
         // (12 + klen per block): truncation is a resident-memory
-        // optimization, never a logical-size change.
+        // optimization, never a logical-size change. The reservation is a
+        // weightless pad, not physical zeros: the decoded index and bloom
+        // already live (and are charged) in `SstMeta`, so resident copies
+        // of their serialized form would double-count them — and unlike
+        // zeros, a pad run stops entry decoding instead of reading as a
+        // stream of bogus empty entries.
         let index_bytes: usize =
             (0..self.index.len()).map(|i| 12 + self.index.key_len(i)).sum::<usize>() + 8;
         let mut data = self.data;
-        data.push_zeros(index_bytes + bloom.byte_len());
+        data.push_pad(index_bytes + bloom.byte_len());
         let meta = SstMeta {
             id,
             level,
@@ -459,6 +464,36 @@ mod tests {
         assert_eq!(meta.blocks.len(), 1);
         let block = block_of(&data, &meta.blocks[0]);
         assert_eq!(decode_block(&block), es);
+    }
+
+    #[test]
+    fn sst_files_dehydrate_and_rehydrate_bit_identically() {
+        let es = entries(300);
+        let (meta, data) = build_sst(&es, 1, 0, 2048, 10, 0);
+        let data_bytes: u64 = meta.blocks.iter().map(|b| b.len as u64).sum();
+        // The index/bloom reservation is a weightless pad that stops
+        // decoding — not zeros that read as bogus empty entries.
+        let pad = data.slice_to_buf(data_bytes, meta.file_size - data_bytes);
+        assert_eq!(pad.phys_len(), 0);
+        assert_eq!(pad.entries().count(), 0);
+        // Dehydrating the whole file elides every entry head; every block
+        // sliced out of the paged file hydrates to exactly the block
+        // sliced from the resident file.
+        let paged = data.dehydrate_copy().expect("user keys elide");
+        assert_eq!(paged.len(), data.len());
+        assert!(paged.phys_len() < data.phys_len());
+        for h in &meta.blocks {
+            let mut b = paged.slice_to_buf(h.offset, h.len as u64);
+            b.hydrate();
+            assert_eq!(b, block_of(&data, h));
+        }
+        // Point lookups over hydrated blocks behave identically.
+        for e in es.iter().step_by(7) {
+            let h = &meta.blocks[meta.find_block(&e.key).unwrap()];
+            let mut block = paged.slice_to_buf(h.offset, h.len as u64);
+            block.hydrate();
+            assert_eq!(search_block(&block, &e.key).unwrap().to_entry(), *e);
+        }
     }
 
     #[test]

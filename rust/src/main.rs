@@ -4,6 +4,8 @@
 //! hhzs exp <table1|fig2|exp1..exp7|all> [--profile quick|default|full]
 //!          [--config FILE] [--csv DIR] [--objects N] [--ops N]
 //!          [--ssd-zones N] [--alpha F] [--seed N]
+//!          exp7 also takes --quick: shards {8,64} at 1x/4x keyspace with
+//!          the always-on residency-flatness gate (CI smoke)
 //! hhzs bench wallclock [--quick] [--out BENCH_2.json] [--gate]
 //!                                     # DES wall-clock + memory benchmark;
 //!                                     # --gate enforces the always-armed
@@ -137,11 +139,16 @@ fn build_config(args: &Args) -> anyhow::Result<Config> {
 }
 
 fn cmd_exp(args: &Args) -> anyhow::Result<()> {
-    let name = args
+    let mut name = args
         .positional
         .get(1)
         .cloned()
         .unwrap_or_else(|| "all".to_string());
+    // `exp exp7 --quick`: the CI smoke shape of the shard sweep (shards
+    // {8, 64} at 1x/4x keyspace with the residency-flatness gate).
+    if name == "exp7" && args.flags.contains_key("quick") {
+        name = "exp7-quick".to_string();
+    }
     let cfg = build_config(args)?;
     if cfg.shards > 1 {
         // The paper drivers (table1/fig2/exp1..exp6) reproduce single-engine
@@ -149,7 +156,7 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
         // flag silently measure something else than the user expects.
         eprintln!(
             "note: `exp` ignores shards = {} (exp1..exp6 are single-engine \
-             reproductions; exp7 sweeps 1/2/4/8). Use `demo --shards N` to \
+             reproductions; exp7 sweeps 1..256). Use `demo --shards N` to \
              drive a sharded engine directly.",
             cfg.shards
         );

@@ -98,6 +98,17 @@ pub struct Metrics {
     /// each stamps the same value, so the merge takes the max instead of
     /// summing duplicates.
     pub key_arena_bytes: u64,
+    /// Physically resident bytes at phase end, by where they are pinned —
+    /// the demand-paging residency breakdown. Gauges, not counters, and
+    /// *per-shard* ones (each engine owns its zones), so the merge sums:
+    /// SSD SST zones, HDD SST zones, WAL zones (either device), and the
+    /// caches (SSD cache zones + the in-memory block cache's hydrated
+    /// copies). The conservation identity `ssd + hdd + wal + cache ==
+    /// fs phys + block-cache phys` is pinned by `tests/datapath.rs`.
+    pub resident_ssd_bytes: u64,
+    pub resident_hdd_bytes: u64,
+    pub resident_wal_bytes: u64,
+    pub resident_cache_bytes: u64,
     /// Start/end of run (virtual).
     pub start_ns: Ns,
     pub finished_at: Ns,
@@ -222,6 +233,12 @@ impl Metrics {
         // Domain gauge: engines sharing one arena stamp the same value;
         // max (not sum) keeps the merged number the domain's residency.
         self.key_arena_bytes = self.key_arena_bytes.max(other.key_arena_bytes);
+        // Residency gauges are per-shard (each engine owns its zones and
+        // block cache), so the domain total is the sum.
+        self.resident_ssd_bytes += other.resident_ssd_bytes;
+        self.resident_hdd_bytes += other.resident_hdd_bytes;
+        self.resident_wal_bytes += other.resident_wal_bytes;
+        self.resident_cache_bytes += other.resident_cache_bytes;
         // Shards run on one shared clock (the async frontend), so per-shard
         // windows coincide; taking the envelope also keeps the merge
         // correct for runs recorded on separate clocks.
@@ -318,6 +335,22 @@ mod tests {
         assert_eq!(a.read_traffic[&Dev::Hdd].bytes, 40);
         assert_eq!(a.read_traffic[&Dev::Hdd].ios, 2);
         assert_eq!((a.start_ns, a.finished_at), (100, 400));
+    }
+
+    #[test]
+    fn residency_gauges_sum_on_merge() {
+        let mut a = Metrics::default();
+        a.resident_ssd_bytes = 100;
+        a.resident_wal_bytes = 10;
+        let mut b = Metrics::default();
+        b.resident_ssd_bytes = 50;
+        b.resident_hdd_bytes = 30;
+        b.resident_cache_bytes = 7;
+        a.merge(&b);
+        assert_eq!(a.resident_ssd_bytes, 150);
+        assert_eq!(a.resident_hdd_bytes, 30);
+        assert_eq!(a.resident_wal_bytes, 10);
+        assert_eq!(a.resident_cache_bytes, 7);
     }
 
     #[test]

@@ -1,0 +1,140 @@
+//! Block-granular demand-paged residency — the per-domain manager that
+//! decides whether zone-resident [`crate::wire::WireBuf`] contents keep
+//! their physical bytes (entry headers + key suffixes) in RAM.
+//!
+//! The paging model: bytes at rest on a zoned device are *cold* and may
+//! dehydrate to compact [`crate::wire::KeySynthRun`] descriptors; every
+//! hydrated copy that leaves the device through a read — a block-cache
+//! entry, an in-flight compaction/scan cursor's current block, a
+//! WAL-recovery window — is a *pin* that keeps those bytes resident for
+//! exactly as long as the copy lives. The [`crate::zone::ZonedDevice`]
+//! read/write paths are the single choke point: `append` pages out
+//! ([`Residency::page_out`]), every read pages in
+//! ([`Residency::page_in`]), so zones, the WAL, and the SSD cache zones
+//! all hold paged buffers without any per-caller plumbing.
+//!
+//! Paging is observationally free by construction: dehydration never
+//! changes a buffer's *logical* length, and every size, offset, write
+//! pointer, device-time charge, and digest in the simulator derives from
+//! logical lengths. Rehydration costs host CPU only — zero virtual time.
+//! One manager is shared across all shards of a domain (rebound in
+//! `ShardedEngine::new` exactly like the shared timers/CPU pool/key
+//! arena), so the paging knob and the paging counters are domain-global.
+
+use crate::wire::WireBuf;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Host-side paging counters (diagnostics; never part of the DES
+/// timeline or digests).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResidencyStats {
+    /// Entry heads elided across all `page_out` calls.
+    pub dehydrated_runs: u64,
+    /// Entry heads re-rendered across all `page_in` calls.
+    pub rehydrated_runs: u64,
+    /// Physical bytes released by dehydration (headers + keys).
+    pub bytes_elided: u64,
+    /// Physical bytes re-materialized by rehydration.
+    pub bytes_restored: u64,
+}
+
+/// The per-domain residency manager. See the module docs.
+#[derive(Debug)]
+pub struct Residency {
+    paging: bool,
+    pub stats: ResidencyStats,
+}
+
+/// Shared handle: one manager per domain, one `Rc` per device.
+pub type ResidencyHandle = Rc<RefCell<Residency>>;
+
+impl Residency {
+    /// A fresh manager; `paging = false` keeps every physical byte
+    /// resident forever (the pre-residency behavior, bit-identical).
+    pub fn new(paging: bool) -> ResidencyHandle {
+        Rc::new(RefCell::new(Residency { paging, stats: ResidencyStats::default() }))
+    }
+
+    pub fn paging(&self) -> bool {
+        self.paging
+    }
+
+    /// Page a buffer out on its way to a zone: returns the dehydrated
+    /// copy when paging is on and something elides, `None` when the
+    /// caller should append the original unchanged (no copy is made).
+    pub fn page_out(&mut self, buf: &WireBuf) -> Option<WireBuf> {
+        if !self.paging {
+            return None;
+        }
+        let out = buf.dehydrate_copy()?;
+        let elided = out.key_runs().len() - buf.key_runs().len();
+        self.stats.dehydrated_runs += elided as u64;
+        self.stats.bytes_elided += (buf.phys_len() - out.phys_len()) as u64;
+        Some(out)
+    }
+
+    /// Page a buffer in on its way out of a zone: rehydrates
+    /// unconditionally (data at rest may be dehydrated even after the
+    /// paging knob is turned off mid-run — reads must always return
+    /// fully resident bytes; the hydrated copy is the caller's pin).
+    pub fn page_in(&mut self, buf: &mut WireBuf) {
+        if buf.is_hydrated() {
+            return;
+        }
+        let before = buf.phys_len();
+        self.stats.rehydrated_runs += buf.key_runs().len() as u64;
+        buf.hydrate();
+        self.stats.bytes_restored += (buf.phys_len() - before) as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::Payload;
+
+    fn entry_buf() -> WireBuf {
+        let mut b = WireBuf::new();
+        for i in 0..4u64 {
+            b.push_entry(&crate::ycsb::key_for(i, 24), i, Some(Payload::fill(1, 50)));
+        }
+        b
+    }
+
+    #[test]
+    fn page_out_then_in_round_trips_and_counts() {
+        let h = Residency::new(true);
+        let b = entry_buf();
+        let mut d = h.borrow_mut().page_out(&b).expect("paging on elides");
+        assert!(d.phys_len() < b.phys_len());
+        assert_eq!(d.len(), b.len());
+        h.borrow_mut().page_in(&mut d);
+        assert_eq!(d, b);
+        let stats = h.borrow().stats;
+        assert_eq!(stats.dehydrated_runs, 4);
+        assert_eq!(stats.rehydrated_runs, 4);
+        assert_eq!(stats.bytes_elided, stats.bytes_restored);
+        assert_eq!(stats.bytes_elided, 4 * (14 + 24));
+    }
+
+    #[test]
+    fn paging_off_never_copies_but_still_hydrates_reads() {
+        let h = Residency::new(false);
+        let b = entry_buf();
+        assert!(h.borrow_mut().page_out(&b).is_none());
+        // A buffer dehydrated while the knob was on must still hydrate
+        // on read after the knob is switched off.
+        let mut d = b.dehydrate_copy().unwrap();
+        h.borrow_mut().page_in(&mut d);
+        assert_eq!(d, b);
+    }
+
+    #[test]
+    fn page_out_skips_opaque_buffers() {
+        let h = Residency::new(true);
+        let raw = WireBuf::from_bytes(&[7u8; 4096]);
+        assert!(h.borrow_mut().page_out(&raw).is_none());
+        assert_eq!(h.borrow().stats, ResidencyStats::default());
+    }
+}

@@ -20,6 +20,14 @@
 //! * an initial `1/N` slice of the §3.4 migration-rate budget, later
 //!   refined by the demand-proportional [`crate::shard::arbiter`].
 //!
+//! Physical residency is NOT carved: all shards page through shard 0's
+//! [`crate::residency::Residency`] manager (rebound in
+//! [`crate::shard::ShardedEngine::new`] like the timers/CPU pool/key
+//! arena), so dehydrated descriptors cost the same domain-wide whether a
+//! keyspace is served by 1 engine or 256. The per-shard
+//! `resident_*_bytes` gauges still partition exactly — each engine owns
+//! disjoint zones — and sum on metrics merge.
+//!
 //! `shards = 1` short-circuits to the untouched config (base 1, stride 1),
 //! which is what makes the single-shard system reproduce the seed engine
 //! bit-for-bit — the regression guard for this whole subsystem.

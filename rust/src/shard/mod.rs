@@ -102,14 +102,17 @@ impl ShardedEngine {
         // (a 4-shard run used to simulate 4 × 12 phantom threads) — and
         // all engines intern keys into shard 0's arena, so the router and
         // every shard hash/compare the same shared key bytes and a unique
-        // key costs its bytes once across the domain. With one shard all
-        // four are the identity.
+        // key costs its bytes once across the domain. Likewise ONE
+        // residency manager: every shard's zones page through shard 0's,
+        // so the paging knob and dehydrate/rehydrate counters are
+        // domain-global. With one shard all five are the identity.
         let event_seq = engines[0].event_seq_handle();
         let ssd_timer = engines[0].fs.ssd.timer.clone();
         let hdd_timer = engines[0].fs.hdd.timer.clone();
         let cpu = engines[0].cpu_pool_handle();
         let arena = engines[0].key_arena_handle();
         let trace = engines[0].trace_handle();
+        let residency = engines[0].residency_handle();
         cpu.borrow_mut().configure(engines.len(), cfg.lsm.cpu_sched);
         for (s, e) in engines.iter_mut().enumerate().skip(1) {
             e.fs.ssd.set_timer(ssd_timer.clone());
@@ -117,6 +120,7 @@ impl ShardedEngine {
             e.share_event_seq(event_seq.clone());
             e.share_cpu_pool(cpu.clone(), s);
             e.share_key_arena(arena.clone());
+            e.share_residency(residency.clone());
             // ONE trace ring for the domain: rebinding AFTER the timer
             // swap re-tags the shared per-device FIFOs, and events from
             // every shard land in the shared buffer in emission order.

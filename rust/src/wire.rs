@@ -109,6 +109,53 @@ pub struct PrefixRun {
     elided_before: u64,
 }
 
+/// One dehydrated entry head: the header + full key of a single encoded
+/// entry carried as a compact synthetic record — `span()` logical bytes
+/// at `log_off`, zero physical bytes. Only entries whose key is the
+/// deterministic YCSB form `"user" + decimal digits` dehydrate (the key
+/// analogue of value [`SynthRun`]s): the digit-field value `key_num` is
+/// recovered by [`crate::ycsb::parse_user_key`], which verifies at
+/// dehydration time that re-rendering it at width `klen - 4` reproduces
+/// the key byte-for-byte, so rehydration is bit-identical by
+/// construction. Runs always cover a full head; a slice that cuts one
+/// materializes the overlapped bytes instead of storing a partial run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KeySynthRun {
+    /// Logical offset of the entry head (header byte 0) in its buffer.
+    pub log_off: u64,
+    /// Full key length, including the 4-byte `"user"` tag.
+    pub klen: u16,
+    /// The key's digit-field value (`fnv1a(item) mod 10^(klen-4)`).
+    pub key_num: u64,
+    /// The entry's sequence number (header field).
+    pub seq: u64,
+    /// The entry's raw `vlen` header field (`u32::MAX` = tombstone).
+    pub vlen_raw: u32,
+    /// Head bytes elided by all earlier key runs (prefix sum for
+    /// O(log n) logical→physical offset translation).
+    elided_before: u64,
+}
+
+impl KeySynthRun {
+    /// Logical bytes covered: the entry header plus the whole key.
+    pub fn span(&self) -> u64 {
+        ENTRY_HEADER as u64 + self.klen as u64
+    }
+
+    /// Materialize the covered bytes (header + key) onto `out`.
+    fn render_onto(&self, out: &mut Vec<u8>) {
+        let mut hdr = [0u8; ENTRY_HEADER];
+        hdr[0..2].copy_from_slice(&self.klen.to_le_bytes());
+        hdr[2..6].copy_from_slice(&self.vlen_raw.to_le_bytes());
+        hdr[6..14].copy_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&hdr);
+        let start = out.len();
+        out.extend_from_slice(b"user");
+        out.resize(start + self.klen as usize, 0);
+        crate::ycsb::render_key_digits(self.key_num, &mut out[start + 4..]);
+    }
+}
+
 /// A zero-copy decoded key: the restart key's shared prefix plus this
 /// entry's stored suffix, borrowed from the buffer. Compares exactly
 /// like the contiguous `prefix ++ suffix` byte string (equal views hash
@@ -269,6 +316,10 @@ pub struct WireBuf {
     /// Elided shared-key-prefix runs sorted by `log_off`; each lies at the
     /// start of exactly one encoded entry's key region.
     prefix_runs: Vec<PrefixRun>,
+    /// Dehydrated entry heads sorted by `log_off` (residency paging);
+    /// disjoint from each other and from the two run lists above, each
+    /// covering exactly one entry's header + key.
+    key_runs: Vec<KeySynthRun>,
     log_len: u64,
 }
 
@@ -283,6 +334,7 @@ impl WireBuf {
             phys: bytes.to_vec(),
             runs: Vec::new(),
             prefix_runs: Vec::new(),
+            key_runs: Vec::new(),
             log_len: bytes.len() as u64,
         }
     }
@@ -314,10 +366,21 @@ impl WireBuf {
         &self.prefix_runs
     }
 
+    pub fn key_runs(&self) -> &[KeySynthRun] {
+        &self.key_runs
+    }
+
+    /// True when no entry heads are dehydrated — every logical byte that
+    /// is not a synthetic value/prefix/padding run is resident in `phys`.
+    pub fn is_hydrated(&self) -> bool {
+        self.key_runs.is_empty()
+    }
+
     pub fn clear(&mut self) {
         self.phys.clear();
         self.runs.clear();
         self.prefix_runs.clear();
+        self.key_runs.clear();
         self.log_len = 0;
     }
 
@@ -333,15 +396,35 @@ impl WireBuf {
         self.prefix_runs.last().map_or(0, |r| r.elided_before + r.len as u64)
     }
 
+    fn total_key_elided(&self) -> u64 {
+        self.key_runs.last().map_or(0, |r| r.elided_before + r.span())
+    }
+
     /// Append real bytes.
     pub fn push_bytes(&mut self, bytes: &[u8]) {
         self.phys.extend_from_slice(bytes);
         self.log_len += bytes.len() as u64;
     }
 
-    /// Append `n` zero bytes (SST index/bloom padding).
+    /// Append `n` zero bytes (physically resident).
     pub fn push_zeros(&mut self, n: usize) {
         self.phys.extend(std::iter::repeat(0u8).take(n));
+        self.log_len += n as u64;
+    }
+
+    /// Append `n` logical padding bytes occupying zero physical bytes (a
+    /// fingerprint-0 synthetic run). The SST index/bloom reservation uses
+    /// this: those structures live decoded in `SstMeta`, so keeping the
+    /// on-media copy as physical zeros would charge them against
+    /// residency twice. Unlike [`WireBuf::push_zeros`] — whose zeros
+    /// decode as bogus empty entries — decode treats synthetic padding
+    /// as opaque and stops there.
+    pub fn push_pad(&mut self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let synth_before = self.total_synth();
+        self.runs.push(SynthRun { log_off: self.log_len, len: n as u32, fp: 0, synth_before });
         self.log_len += n as u64;
     }
 
@@ -418,7 +501,8 @@ impl WireBuf {
     }
 
     /// Physical offset of logical position `log`. Positions strictly
-    /// inside a synthetic or prefix run map to the run's physical start.
+    /// inside a synthetic, prefix, or key run map to the run's physical
+    /// start.
     fn phys_of(&self, log: u64) -> usize {
         let idx = self.runs.partition_point(|r| r.log_off < log);
         let synth = if idx == 0 {
@@ -434,7 +518,14 @@ impl WireBuf {
             let r = &self.prefix_runs[pidx - 1];
             r.elided_before + (r.len as u64).min(log - r.log_off)
         };
-        (log - synth - elided) as usize
+        let kidx = self.key_runs.partition_point(|r| r.log_off < log);
+        let kelided = if kidx == 0 {
+            0
+        } else {
+            let r = &self.key_runs[kidx - 1];
+            r.elided_before + r.span().min(log - r.log_off)
+        };
+        (log - synth - elided - kelided) as usize
     }
 
     /// Copy out the logical range `[off, off + len)` as an owned buffer.
@@ -482,7 +573,47 @@ impl WireBuf {
             });
             elided_acc += e - s;
         }
-        WireBuf { phys: self.phys[ps..pe].to_vec(), runs, prefix_runs, log_len: len }
+        // Key runs always cover a full entry head: fully-contained runs
+        // are carried over (rebased), while a run cut by either slice
+        // edge materializes its overlapped bytes — partial key runs are
+        // never stored. `phys_of` maps positions inside a key run to the
+        // run's physical start, so the materialized head fragment sits
+        // exactly before (slice starts mid-run) or after (slice ends
+        // mid-run) the copied physical range.
+        let kfirst = self.key_runs.partition_point(|r| r.log_off + r.span() <= off);
+        let mut key_runs = Vec::new();
+        let mut head_frag: Vec<u8> = Vec::new();
+        let mut tail_frag: Vec<u8> = Vec::new();
+        let mut key_acc = 0u64;
+        let mut rendered: Vec<u8> = Vec::new();
+        for r in &self.key_runs[kfirst..] {
+            if r.log_off >= end {
+                break;
+            }
+            let r_end = r.log_off + r.span();
+            if r.log_off >= off && r_end <= end {
+                key_runs.push(KeySynthRun {
+                    log_off: r.log_off - off,
+                    elided_before: key_acc,
+                    ..*r
+                });
+                key_acc += r.span();
+            } else {
+                rendered.clear();
+                r.render_onto(&mut rendered);
+                let s = (off.max(r.log_off) - r.log_off) as usize;
+                let e = (end.min(r_end) - r.log_off) as usize;
+                if r.log_off < off {
+                    head_frag.extend_from_slice(&rendered[s..e]);
+                } else {
+                    tail_frag.extend_from_slice(&rendered[s..e]);
+                }
+            }
+        }
+        let mut phys = head_frag;
+        phys.extend_from_slice(&self.phys[ps..pe]);
+        phys.extend_from_slice(&tail_frag);
+        WireBuf { phys, runs, prefix_runs, key_runs, log_len: len }
     }
 
     /// Append another buffer's content (logical concatenation).
@@ -490,6 +621,7 @@ impl WireBuf {
         let base_log = self.log_len;
         let base_synth = self.total_synth();
         let base_elided = self.total_elided();
+        let base_kelided = self.total_key_elided();
         self.phys.extend_from_slice(&other.phys);
         for r in &other.runs {
             self.runs.push(SynthRun {
@@ -507,7 +639,169 @@ impl WireBuf {
                 elided_before: base_elided + r.elided_before,
             });
         }
+        for r in &other.key_runs {
+            self.key_runs.push(KeySynthRun {
+                log_off: base_log + r.log_off,
+                elided_before: base_kelided + r.elided_before,
+                ..*r
+            });
+        }
         self.log_len += other.log_len;
+    }
+
+    /// Dehydrate: scan for entries whose head (header + key) can be
+    /// elided into a [`KeySynthRun`] — a fully-physical, non-prefix-
+    /// compressed head whose key parses as `"user" + digits`
+    /// ([`crate::ycsb::parse_user_key`], which verifies the re-render is
+    /// byte-identical) and is not referenced as a prefix-run source
+    /// (restart keys must stay physical for prefix decode). Returns the
+    /// dehydrated copy, or `None` when nothing elides so the caller can
+    /// keep the original without copying. Logical length, slicing,
+    /// concatenation, and post-[`WireBuf::hydrate`] bytes are all
+    /// bit-identical to the original; already-dehydrated runs are kept
+    /// (the scan steps over them), making dehydration idempotent.
+    pub fn dehydrate_copy(&self) -> Option<WireBuf> {
+        if self.phys.is_empty() {
+            return None;
+        }
+        // Logical ranges referenced as prefix sources; heads intersecting
+        // any of them must stay resident.
+        let mut src_ranges: Vec<(u64, u64)> = self
+            .prefix_runs
+            .iter()
+            .filter(|r| r.src_log >= 0)
+            .map(|r| (r.src_log as u64, r.src_log as u64 + r.len as u64))
+            .collect();
+        src_ranges.sort_unstable();
+        let head_in_source = |s: u64, e: u64| {
+            let i = src_ranges.partition_point(|&(_, re)| re <= s);
+            src_ranges.get(i).is_some_and(|&(rs, _)| rs < e)
+        };
+        let mut cands: Vec<KeySynthRun> = Vec::new();
+        let (mut log, mut phys, mut run, mut prun) = (0u64, 0usize, 0usize, 0usize);
+        let mut kidx = 0usize;
+        loop {
+            // Step over an already-dehydrated entry (head run + value).
+            if let Some(r) = self.key_runs.get(kidx) {
+                if r.log_off == log {
+                    log += r.span();
+                    if r.vlen_raw != u32::MAX {
+                        log += r.vlen_raw as u64;
+                    }
+                    phys = self.phys_of(log);
+                    run = self.runs.partition_point(|x| x.log_off < log);
+                    prun = self.prefix_runs.partition_point(|x| x.log_off < log);
+                    kidx += 1;
+                    continue;
+                }
+            }
+            let Some(raw) = self.decode_entry_raw(log, phys, run, prun) else {
+                // Resync: a zone-boundary slice can start mid-value, so
+                // the cursor may sit inside a synthetic run — skip to its
+                // end (the next entry head) and retry. Anything else
+                // (end, torn tail, padding, severed prefix, raw bytes)
+                // is opaque and the remainder stays resident.
+                let i = self.runs.partition_point(|r| r.log_off + r.len as u64 <= log);
+                if let Some(r) = self.runs.get(i) {
+                    if r.log_off <= log {
+                        log = r.log_off + r.len as u64;
+                        phys = self.phys_of(log);
+                        run = self.runs.partition_point(|x| x.log_off < log);
+                        prun = self.prefix_runs.partition_point(|x| x.log_off < log);
+                        continue;
+                    }
+                }
+                break;
+            };
+            if raw.pre_len == 0 && raw.suf_len > 0 {
+                let head_end = log + ENTRY_HEADER as u64 + raw.suf_len as u64;
+                if !head_in_source(log, head_end) {
+                    let key = &self.phys[raw.suf_off..raw.suf_off + raw.suf_len];
+                    if let Some(key_num) = crate::ycsb::parse_user_key(key) {
+                        cands.push(KeySynthRun {
+                            log_off: log,
+                            klen: raw.suf_len as u16,
+                            key_num,
+                            seq: raw.seq,
+                            vlen_raw: match raw.value {
+                                None => u32::MAX,
+                                Some(p) => p.len,
+                            },
+                            elided_before: 0, // fixed after the merge below
+                        });
+                    }
+                }
+            }
+            log = raw.next_log;
+            phys = raw.next_phys;
+            run = raw.next_run;
+            prun = raw.next_prun;
+        }
+        if cands.is_empty() {
+            return None;
+        }
+        // Build the copy: drop each candidate's (contiguous) physical
+        // head bytes and merge old + new key runs in logical order.
+        let mut new_phys: Vec<u8> = Vec::with_capacity(self.phys.len());
+        let mut src = 0usize;
+        for c in &cands {
+            let p = self.phys_of(c.log_off);
+            new_phys.extend_from_slice(&self.phys[src..p]);
+            src = p + c.span() as usize;
+        }
+        new_phys.extend_from_slice(&self.phys[src..]);
+        let mut key_runs: Vec<KeySynthRun> =
+            Vec::with_capacity(self.key_runs.len() + cands.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.key_runs.len() || j < cands.len() {
+            let old_next = j >= cands.len()
+                || (i < self.key_runs.len() && self.key_runs[i].log_off < cands[j].log_off);
+            if old_next {
+                key_runs.push(self.key_runs[i]);
+                i += 1;
+            } else {
+                key_runs.push(cands[j]);
+                j += 1;
+            }
+        }
+        let mut acc = 0u64;
+        for r in &mut key_runs {
+            r.elided_before = acc;
+            acc += r.span();
+        }
+        let old_total = self.phys.len() as u64 + self.total_key_elided();
+        debug_assert_eq!(new_phys.len() as u64 + acc, old_total);
+        Some(WireBuf {
+            phys: new_phys,
+            runs: self.runs.clone(),
+            prefix_runs: self.prefix_runs.clone(),
+            key_runs,
+            log_len: self.log_len,
+        })
+    }
+
+    /// Rehydrate every dehydrated entry head back into physical bytes —
+    /// the bit-identical inverse of [`WireBuf::dehydrate_copy`] (keys
+    /// re-render through the same fixed-width generator that was
+    /// round-trip-verified at dehydration time). Idempotent; value and
+    /// prefix runs are untouched.
+    pub fn hydrate(&mut self) {
+        if self.key_runs.is_empty() {
+            return;
+        }
+        let mut phys =
+            Vec::with_capacity(self.phys.len() + self.total_key_elided() as usize);
+        let mut src = 0usize;
+        for i in 0..self.key_runs.len() {
+            let r = self.key_runs[i];
+            let p = self.phys_of(r.log_off);
+            phys.extend_from_slice(&self.phys[src..p]);
+            r.render_onto(&mut phys);
+            src = p;
+        }
+        phys.extend_from_slice(&self.phys[src..]);
+        self.phys = phys;
+        self.key_runs.clear();
     }
 
     /// Decode the entry at the given cursor positions. Returns `None` at
@@ -523,6 +817,18 @@ impl WireBuf {
     ) -> Option<RawEntry> {
         if log >= self.log_len || phys + ENTRY_HEADER > self.phys.len() {
             return None;
+        }
+        // A dehydrated entry head at (or overlapping) the cursor cannot
+        // be decoded zero-copy — its key bytes are not resident. Treat it
+        // as truncation, exactly like a severed prefix run: callers
+        // rehydrate (the device read path always does) before decoding.
+        if !self.key_runs.is_empty() {
+            let k = self.key_runs.partition_point(|r| r.log_off + r.span() <= log);
+            if let Some(r) = self.key_runs.get(k) {
+                if r.log_off < log + ENTRY_HEADER as u64 {
+                    return None;
+                }
+            }
         }
         let klen = u16::from_le_bytes(self.phys[phys..phys + 2].try_into().unwrap()) as usize;
         let vlen_raw = u32::from_le_bytes(self.phys[phys + 2..phys + 6].try_into().unwrap());
@@ -860,5 +1166,147 @@ mod tests {
         assert_eq!(b.len(), 128);
         assert_eq!(b.phys_len(), 128);
         assert!(b.phys_bytes().iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn synthetic_padding_is_weightless_and_survives_slicing() {
+        let mut b = WireBuf::new();
+        b.push_entry(b"user123", 1, Some(Payload::fill(3, 40)));
+        b.push_pad(128);
+        assert_eq!(b.len(), 14 + 7 + 40 + 128);
+        assert_eq!(b.phys_len(), 14 + 7);
+        // Decode yields the entry and stops at the opaque padding.
+        assert_eq!(b.entries().count(), 1);
+        // Slice/rejoin through the pad region stays lossless + weightless.
+        for cut in [b.len() - 130, b.len() - 64, b.len() - 1] {
+            let mut joined = b.slice_to_buf(0, cut);
+            joined.append_buf(&b.slice_to_buf(cut, b.len() - cut));
+            assert_eq!(joined.len(), b.len());
+            assert_eq!(joined.phys_len(), b.phys_len());
+            assert_eq!(joined.entries().count(), 1);
+        }
+    }
+
+    /// A buffer mixing dehydratable YCSB entries with entries that must
+    /// stay resident: a non-user key, a tombstone, and an empty value.
+    fn user_buf() -> WireBuf {
+        let mut b = WireBuf::new();
+        b.push_entry(&crate::ycsb::key_for(11, 24), 1, Some(Payload::fill(1, 33)));
+        b.push_entry(b"key-0007", 2, Some(Payload::fill(2, 21)));
+        b.push_entry(&crate::ycsb::key_for(12, 24), 3, None);
+        b.push_entry(&crate::ycsb::key_for(13, 16), 4, Some(Payload::from_bytes(&[])));
+        b.push_entry(&crate::ycsb::key_for(14, 24), 5, Some(Payload::fill(4, 57)));
+        b
+    }
+
+    #[test]
+    fn dehydrate_elides_user_heads_and_hydrates_bit_identically() {
+        let b = user_buf();
+        let d = b.dehydrate_copy().expect("user keys must dehydrate");
+        assert_eq!(d.len(), b.len(), "logical length is invariant");
+        assert_eq!(d.key_runs().len(), 4);
+        // Only the non-user entry's head stays resident.
+        assert_eq!(d.phys_len(), ENTRY_HEADER + 8);
+        assert!(!d.is_hydrated());
+        let mut h = d.clone();
+        h.hydrate();
+        assert_eq!(h, b, "hydrate must invert dehydrate bit-identically");
+        h.hydrate();
+        assert_eq!(h, b, "hydrate is idempotent");
+        // Dehydrating the dehydrated copy finds nothing new.
+        assert!(d.dehydrate_copy().is_none(), "dehydration is stable");
+    }
+
+    #[test]
+    fn dehydrated_buffers_split_and_reassemble_losslessly() {
+        // Satellite property at the unit level: cut the dehydrated buffer
+        // at EVERY logical offset (including mid-KeySynthRun), rejoin,
+        // hydrate — the result must equal the never-dehydrated buffer's
+        // identically-cut form, and decode identically.
+        let b = user_buf();
+        let d = b.dehydrate_copy().unwrap();
+        let want: Vec<(Vec<u8>, u64, Option<Payload>)> =
+            b.entries().map(|e| (e.key.to_vec(), e.seq, e.value)).collect();
+        assert_eq!(want.len(), 5);
+        for cut in 0..=d.len() {
+            let mut joined = d.slice_to_buf(0, cut);
+            joined.append_buf(&d.slice_to_buf(cut, d.len() - cut));
+            assert_eq!(joined.len(), b.len());
+            let mut hydrated = joined.clone();
+            hydrated.hydrate();
+            let mut plain = b.slice_to_buf(0, cut);
+            plain.append_buf(&b.slice_to_buf(cut, b.len() - cut));
+            assert_eq!(hydrated, plain, "lossy dehydrated split at {cut}");
+            let got: Vec<(Vec<u8>, u64, Option<Payload>)> =
+                hydrated.entries().map(|e| (e.key.to_vec(), e.seq, e.value)).collect();
+            assert_eq!(got, want, "decode diverged at cut {cut}");
+        }
+    }
+
+    #[test]
+    fn slicing_a_key_run_materializes_the_cut_head() {
+        let b = user_buf();
+        let d = b.dehydrate_copy().unwrap();
+        let r = d.key_runs()[0];
+        // A slice ending strictly inside the first head: the overlapped
+        // bytes come back as real bytes, identical to the plain slice.
+        let mid = r.log_off + r.span() / 2;
+        let cut = d.slice_to_buf(0, mid);
+        assert!(cut.key_runs().is_empty(), "partial key runs are never stored");
+        assert_eq!(cut, b.slice_to_buf(0, mid));
+        // A slice starting inside the head likewise.
+        let tail = d.slice_to_buf(mid, d.len() - mid);
+        let mut tail_h = tail.clone();
+        tail_h.hydrate();
+        assert_eq!(tail_h, b.slice_to_buf(mid, b.len() - mid));
+    }
+
+    #[test]
+    fn decode_stops_at_a_dehydrated_head() {
+        let mut b = WireBuf::new();
+        b.push_entry(b"key-0001", 1, Some(Payload::fill(1, 10)));
+        b.push_entry(&crate::ycsb::key_for(5, 24), 2, Some(Payload::fill(2, 10)));
+        b.push_entry(b"key-0002", 3, Some(Payload::fill(3, 10)));
+        let d = b.dehydrate_copy().unwrap();
+        // Zero-copy decode cannot cross the elided head: truncation
+        // semantics, like a severed prefix run.
+        assert_eq!(d.entries().count(), 1);
+        let mut h = d.clone();
+        h.hydrate();
+        assert_eq!(h.entries().count(), 3);
+        assert_eq!(h, b);
+    }
+
+    #[test]
+    fn dehydrate_skips_prefix_sources_and_prefixed_entries() {
+        // Restart keys are prefix-run sources and compressed entries have
+        // elided prefixes: neither may dehydrate, so the whole
+        // prefix-compressed stretch stays resident.
+        let (b, _want) = prefixed_buf();
+        assert!(b.dehydrate_copy().is_none());
+    }
+
+    #[test]
+    fn dehydrate_ignores_opaque_buffers() {
+        assert!(WireBuf::from_bytes(b"raw bytes, not entries").dehydrate_copy().is_none());
+        assert!(WireBuf::new().dehydrate_copy().is_none());
+        let mut z = WireBuf::new();
+        z.push_zeros(64);
+        assert!(z.dehydrate_copy().is_none(), "bogus zero entries have empty keys");
+    }
+
+    #[test]
+    fn dehydrate_stops_at_torn_tails_and_keeps_them_resident() {
+        // A truncated final record (power loss mid-append) must survive
+        // dehydrate → hydrate with its torn bytes intact.
+        let b = user_buf();
+        let torn = b.slice_to_buf(0, b.len() - 7);
+        let d = torn.dehydrate_copy().unwrap();
+        let mut h = d.clone();
+        h.hydrate();
+        assert_eq!(h, torn);
+        let want: Vec<_> = torn.entries().map(|e| (e.key.to_vec(), e.seq)).collect();
+        let got: Vec<_> = h.entries().map(|e| (e.key.to_vec(), e.seq)).collect();
+        assert_eq!(got, want);
     }
 }

@@ -82,24 +82,67 @@ impl Spec {
 /// share long prefixes exactly like YCSB's fixed-width hashed keys.
 pub const MAX_KEY_LEN: usize = 128;
 
-/// Write the deterministic key for item `i` into a caller-provided stack
-/// buffer (no heap allocation — the hot-path form). Returns the key
-/// length `key_size.clamp(8, MAX_KEY_LEN)`. For every `key_size <= 24`
-/// this matches the seed generator byte-for-byte (a 20-digit field at
-/// `buf[4..24]`, truncated to the key length — i.e. the HIGH digits
-/// survive truncation, exactly like `format!("user{:020}", hash)` +
-/// truncate); wider sizes widen the zero-padded digit field instead.
+/// Render the low `out.len()` decimal digits of `h` — i.e.
+/// `h mod 10^out.len()`, zero-padded, most-significant digit first.
+/// This is the fixed-width rendering every generated key field uses,
+/// and the one [`parse_user_key`] inverts; `wire`-level key elision
+/// re-renders dehydrated keys through it bit-identically.
 #[inline]
-pub fn key_into(i: u64, key_size: usize, buf: &mut [u8; MAX_KEY_LEN]) -> usize {
-    let n = key_size.clamp(8, MAX_KEY_LEN);
-    let field_end = n.max(24);
-    buf[..4].copy_from_slice(b"user");
-    let mut h = fnv1a_u64(i);
-    for slot in buf[4..field_end].iter_mut().rev() {
+pub fn render_key_digits(mut h: u64, out: &mut [u8]) {
+    for slot in out.iter_mut().rev() {
         *slot = b'0' + (h % 10) as u8;
         h /= 10;
     }
+}
+
+/// Write the deterministic key for item `i` into a caller-provided stack
+/// buffer (no heap allocation — the hot-path form). Returns the key
+/// length `key_size.clamp(8, MAX_KEY_LEN)`. The digit field at
+/// `buf[4..n]` carries `fnv1a(i) mod 10^(n-4)`: for `key_size >= 24`
+/// (width ≥ 20 decimal digits) that is the full item hash zero-padded —
+/// byte-identical to the seed's `format!("user{:020}", hash)` layout —
+/// and for narrower keys it is a well-defined modular projection that
+/// still parses back to exactly the rendered value. (The seed generator
+/// instead kept the HIGH digits of a 20-digit field for `key_size < 24`,
+/// silently discarding the information needed to recover the field value
+/// from the key bytes; no default or swept configuration used those
+/// widths.)
+#[inline]
+pub fn key_into(i: u64, key_size: usize, buf: &mut [u8; MAX_KEY_LEN]) -> usize {
+    let n = key_size.clamp(8, MAX_KEY_LEN);
+    buf[..4].copy_from_slice(b"user");
+    render_key_digits(fnv1a_u64(i), &mut buf[4..n]);
     n
+}
+
+/// Parse a generated YCSB key back to its digit-field value: `"user"`
+/// followed by an all-decimal field whose value fits `u64`. Returns the
+/// value only when re-rendering it at the same width
+/// ([`render_key_digits`]) reproduces the key byte-for-byte — leading
+/// zeros included — so `key == render(parse(key))` holds exactly; that
+/// bijection is what lets the wire layer elide key bytes and rebuild
+/// them on demand. Non-YCSB keys, non-digit bytes, and fields whose
+/// value overflows `u64` return `None` (such keys simply stay
+/// physically resident).
+pub fn parse_user_key(key: &[u8]) -> Option<u64> {
+    let digits = key.strip_prefix(b"user")?;
+    if digits.is_empty() || digits.len() > MAX_KEY_LEN - 4 {
+        return None;
+    }
+    let mut v: u64 = 0;
+    for &b in digits {
+        if !b.is_ascii_digit() {
+            return None;
+        }
+        v = v.checked_mul(10)?.checked_add((b - b'0') as u64)?;
+    }
+    let mut buf = [0u8; MAX_KEY_LEN];
+    render_key_digits(v, &mut buf[..digits.len()]);
+    if &buf[..digits.len()] == digits {
+        Some(v)
+    } else {
+        None
+    }
 }
 
 /// Deterministic 24-byte key for item `i` (hashed digits — YCSB order
@@ -398,11 +441,60 @@ mod tests {
         // Clamped at both ends.
         assert_eq!(key_for(7, 2).len(), 8);
         assert_eq!(key_for(7, 4096).len(), MAX_KEY_LEN);
-        // Sub-24 sizes truncate the 20-digit field exactly like the seed:
-        // the HIGH digits survive (prefix of the 24-byte key), not the
-        // low ones.
+        // Sub-24 sizes keep the LOW digits (`hash mod 10^(n-4)`) so the
+        // key bytes always parse back to the rendered value; the seed's
+        // high-digit truncation discarded exactly the information a
+        // parse needs to reproduce the key.
         let k16 = key_for(42, 16);
-        assert_eq!(&k16[..], &k24[..16]);
+        assert_eq!(&k16[..4], b"user");
+        let low12 = format!("{:012}", fnv1a_u64(42) % 1_000_000_000_000);
+        assert_eq!(&k16[4..], low12.as_bytes());
+    }
+
+    #[test]
+    fn paper_scale_ids_round_trip_without_truncation() {
+        // ≥10M ids: generated keys parse back to their exact item hash —
+        // no silent digit truncation anywhere in the id range. Every id
+        // through 1M, strided coverage through 10M, plus the extremes.
+        let mut buf = [0u8; MAX_KEY_LEN];
+        let ids = (0..1_000_000u64)
+            .chain((1_000_000..10_000_000).step_by(17))
+            .chain([10_000_000, u64::MAX / 2, u64::MAX]);
+        for i in ids {
+            let n = key_into(i, 24, &mut buf);
+            assert_eq!(parse_user_key(&buf[..n]), Some(fnv1a_u64(i)), "id {i}");
+        }
+        // Sampled distinctness across the 10M-id range (a full set would
+        // pin 10M keys in RAM — keeping residency bounded is the point).
+        let mut seen = std::collections::HashSet::new();
+        for i in (0..10_000_000u64).step_by(1009) {
+            let n = key_into(i, 24, &mut buf);
+            assert!(seen.insert(buf[..n].to_vec()), "duplicate key at id {i}");
+        }
+    }
+
+    #[test]
+    fn parse_user_key_inverts_every_generated_width() {
+        // parse → re-render reproduces the key bytes exactly at every
+        // width, including narrow (modular) and padded (≥ 21-digit)
+        // fields.
+        let mut buf = [0u8; MAX_KEY_LEN];
+        for i in [0u64, 42, 9_999_999, u64::MAX] {
+            for w in [8usize, 12, 16, 24, 64, MAX_KEY_LEN] {
+                let n = key_into(i, w, &mut buf);
+                let v = parse_user_key(&buf[..n]).expect("generated keys parse");
+                let mut back = [0u8; MAX_KEY_LEN];
+                back[..4].copy_from_slice(b"user");
+                render_key_digits(v, &mut back[4..n]);
+                assert_eq!(&back[..n], &buf[..n], "id {i} width {w}");
+            }
+        }
+        // Rejections: wrong prefix, empty/invalid field, u64 overflow.
+        assert_eq!(parse_user_key(b"key-0001"), None);
+        assert_eq!(parse_user_key(b"user"), None);
+        assert_eq!(parse_user_key(b"user12a4"), None);
+        assert_eq!(parse_user_key(b"user99999999999999999999"), None);
+        assert_eq!(parse_user_key(b"user18446744073709551615"), Some(u64::MAX));
     }
 
     #[test]

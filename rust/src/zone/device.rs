@@ -6,6 +6,7 @@
 //! through the DES. All service times are charged on *logical* lengths.
 
 use crate::config::DeviceProfile;
+use crate::residency::{Residency, ResidencyHandle};
 use crate::sim::{AccessKind, Ns, SharedTimer};
 use crate::trace::{Event, TraceSink};
 use crate::wire::WireBuf;
@@ -32,6 +33,13 @@ pub struct ZonedDevice {
     /// Observation-only trace sink for zone append/reset events (disabled
     /// by default). Untimed paths stamp the sink's last-seen virtual time.
     trace: TraceSink,
+    /// Demand-paged residency manager: every byte entering a zone passes
+    /// through `page_out` (cold data dehydrates at rest), every byte
+    /// leaving through `page_in` (the hydrated read copy is the caller's
+    /// pin). A handle like the timer: the shard layer rebinds all shards'
+    /// devices to one per-domain manager (see
+    /// [`ZonedDevice::set_residency`]).
+    residency: ResidencyHandle,
 }
 
 impl ZonedDevice {
@@ -42,6 +50,7 @@ impl ZonedDevice {
             zones: (0..num_zones).map(|_| Zone::new(zone_cap)).collect(),
             timer: SharedTimer::new(profile),
             trace: TraceSink::disabled(),
+            residency: Residency::new(true),
         }
     }
 
@@ -51,6 +60,18 @@ impl ZonedDevice {
     /// charged.
     pub fn set_timer(&mut self, timer: SharedTimer) {
         self.timer = timer;
+    }
+
+    /// Rebind the residency manager (per-domain sharing, like
+    /// [`ZonedDevice::set_timer`]). Safe at any time: paging never changes
+    /// logical contents, and reads always rehydrate data that dehydrated
+    /// under a previous manager.
+    pub fn set_residency(&mut self, residency: ResidencyHandle) {
+        self.residency = residency;
+    }
+
+    pub fn residency(&self) -> ResidencyHandle {
+        self.residency.clone()
     }
 
     /// Attach a trace sink (and mirror it onto the timing server, which
@@ -104,21 +125,25 @@ impl ZonedDevice {
     }
 
     /// Append `buf` to `zone` at its write pointer. Returns
-    /// `(offset, start, finish)`.
+    /// `(offset, start, finish)`. Data is paged out on the way in — cold
+    /// zone contents dehydrate — without changing logical length, so the
+    /// landing offset and the charged service time are paging-invariant.
     pub fn append(
         &mut self,
         now: Ns,
         zone: ZoneId,
         buf: &WireBuf,
     ) -> Result<(u64, Ns, Ns), ZoneError> {
-        let off = self.zones[zone as usize].append_wire(buf)?;
+        let staged = self.residency.borrow_mut().page_out(buf);
+        let off = self.zones[zone as usize].append_wire(staged.as_ref().unwrap_or(buf))?;
         let (s, f) = self.timer.access(now, AccessKind::SeqWrite, buf.len());
         let (dev, bytes) = (self.dev, buf.len());
         self.trace.emit(|| Event::ZoneAppend { dev, zone, bytes, at: now });
         Ok((off, s, f))
     }
 
-    /// Random (point) read — 4-KiB-block cost model.
+    /// Random (point) read — 4-KiB-block cost model. The returned buffer
+    /// is paged in (fully hydrated): it is the caller's pin.
     pub fn read_random(
         &mut self,
         now: Ns,
@@ -126,12 +151,14 @@ impl ZonedDevice {
         offset: u64,
         len: u64,
     ) -> Result<(WireBuf, Ns, Ns), ZoneError> {
-        let data = self.zones[zone as usize].read(offset, len)?;
+        let mut data = self.zones[zone as usize].read(offset, len)?;
+        self.residency.borrow_mut().page_in(&mut data);
         let (s, f) = self.timer.access(now, AccessKind::RandRead, len);
         Ok((data, s, f))
     }
 
-    /// Sequential (streaming) read — bandwidth cost model.
+    /// Sequential (streaming) read — bandwidth cost model. Paged in like
+    /// [`ZonedDevice::read_random`].
     pub fn read_seq(
         &mut self,
         now: Ns,
@@ -139,7 +166,8 @@ impl ZonedDevice {
         offset: u64,
         len: u64,
     ) -> Result<(WireBuf, Ns, Ns), ZoneError> {
-        let data = self.zones[zone as usize].read(offset, len)?;
+        let mut data = self.zones[zone as usize].read(offset, len)?;
+        self.residency.borrow_mut().page_in(&mut data);
         let (s, f) = self.timer.access(now, AccessKind::SeqRead, len);
         Ok((data, s, f))
     }
@@ -150,22 +178,27 @@ impl ZonedDevice {
         self.timer.access(now, kind, bytes)
     }
 
-    /// Append without charging time (the caller charges chunked I/O itself).
+    /// Append without charging time (the caller charges chunked I/O
+    /// itself). Paged out like [`ZonedDevice::append`].
     pub fn append_untimed(&mut self, zone: ZoneId, buf: &WireBuf) -> Result<u64, ZoneError> {
-        let off = self.zones[zone as usize].append_wire(buf)?;
+        let staged = self.residency.borrow_mut().page_out(buf);
+        let off = self.zones[zone as usize].append_wire(staged.as_ref().unwrap_or(buf))?;
         let (dev, bytes, at) = (self.dev, buf.len(), self.trace.now_hint());
         self.trace.emit(|| Event::ZoneAppend { dev, zone, bytes, at });
         Ok(off)
     }
 
-    /// Read without charging time.
+    /// Read without charging time. Paged in like
+    /// [`ZonedDevice::read_random`].
     pub fn read_untimed(
         &mut self,
         zone: ZoneId,
         offset: u64,
         len: u64,
     ) -> Result<WireBuf, ZoneError> {
-        self.zones[zone as usize].read(offset, len)
+        let mut data = self.zones[zone as usize].read(offset, len)?;
+        self.residency.borrow_mut().page_in(&mut data);
+        Ok(data)
     }
 
     /// Power-loss truncation of one zone (crash injection): the write
@@ -268,5 +301,39 @@ mod tests {
         d.append(0, z0, &wire(&[0u8; 100])).unwrap();
         d.append(0, z1, &wire(&[0u8; 50])).unwrap();
         assert_eq!(d.written_bytes(), 150);
+    }
+
+    #[test]
+    fn appends_dehydrate_at_rest_and_reads_pin_hydrated_copies() {
+        let mut d = ssd();
+        let mut rec = WireBuf::new();
+        for i in 0..8u64 {
+            rec.push_entry(
+                &crate::ycsb::key_for(i, 24),
+                i,
+                Some(crate::wire::Payload::fill(1, 200)),
+            );
+        }
+        let z = d.find_empty_zone().unwrap();
+        let (off, _, _) = d.append(0, z, &rec).unwrap();
+        assert_eq!(off, 0);
+        // At rest: heads elided, write pointer still logical.
+        assert_eq!(d.zone(z).wp(), rec.len());
+        assert_eq!(d.phys_bytes(), 0, "all-YCSB records dehydrate completely");
+        assert!(!d.zone(z).is_empty());
+        // A read returns the bit-identical hydrated pin; media unchanged.
+        let (back, _, _) = d.read_random(0, z, 0, rec.len()).unwrap();
+        assert_eq!(back, rec);
+        assert_eq!(d.phys_bytes(), 0, "reading must not rehydrate the media");
+        let stats = d.residency().borrow().stats;
+        assert_eq!(stats.dehydrated_runs, 8);
+        assert_eq!(stats.rehydrated_runs, 8);
+        // With paging off nothing dehydrates.
+        let mut d2 = ssd();
+        d2.set_residency(crate::residency::Residency::new(false));
+        d2.append(0, 0, &rec).unwrap();
+        assert_eq!(d2.phys_bytes(), rec.phys_len() as u64);
+        let (back2, _, _) = d2.read_random(0, 0, 0, rec.len()).unwrap();
+        assert_eq!(back2, rec);
     }
 }

@@ -270,6 +270,32 @@ mod tests {
     }
 
     #[test]
+    fn power_loss_truncate_mid_key_run_preserves_dehydrated_state() {
+        // A zone holding a dehydrated buffer loses power mid-way through
+        // an elided entry head: the surviving prefix must stay paged
+        // (contained key runs intact, the cut head materialized) and
+        // hydrate to exactly the torn plain bytes.
+        let mut plain = WireBuf::new();
+        for i in 0..6u64 {
+            plain.push_entry(&crate::ycsb::key_for(i, 24), i, Some(Payload::fill(2, 80)));
+        }
+        let paged = plain.dehydrate_copy().unwrap();
+        let mut z = Zone::new(10_000);
+        z.append_wire(&paged).unwrap();
+        assert_eq!(z.phys_bytes(), 0);
+        // Tear inside the 4th entry's (elided) head.
+        let tear = paged.key_runs()[3].log_off + 20;
+        z.power_loss_truncate(tear);
+        assert_eq!(z.wp(), tear);
+        let mut back = z.read(0, tear).unwrap();
+        assert_eq!(back.key_runs().len(), 3, "contained runs survive the tear");
+        back.hydrate();
+        assert_eq!(back, plain.slice_to_buf(0, tear));
+        // The intact entries still decode; the torn head stops decode.
+        assert_eq!(back.entries().count(), 3);
+    }
+
+    #[test]
     fn wire_append_advances_wp_logically_but_stores_compactly() {
         let mut z = Zone::new(10_000);
         let mut rec = WireBuf::new();

@@ -400,6 +400,10 @@ fn resident_bytes_track_entries_not_payload_bytes() {
         let mut cfg = Config::paper_scaled(2048);
         cfg.workload.load_objects = 20_000;
         cfg.workload.value_size = value_size;
+        // Paging off: this pins the value-synthesis claim alone. With
+        // demand paging on, dehydration drives both sides toward zero
+        // and the ratio stops measuring anything.
+        cfg.residency.paging = false;
         let mut e = Engine::new(
             cfg.clone(),
             Box::new(hhzs::policy::HhzsPolicy::new(cfg.lsm.num_levels)),
@@ -437,6 +441,10 @@ fn key_memory_run(key_size: usize) -> (u64, u64, hhzs::lsm::KeyArenaStats, u64) 
     cfg.workload.ops = 5_000;
     cfg.workload.key_size = key_size;
     cfg.workload.value_size = 100;
+    // Paging off: the interning/prefix-compression claims are about the
+    // hydrated physical form; dehydrated key descriptors would hide a
+    // compression regression entirely.
+    cfg.residency.paging = false;
     let mut e = Engine::new(
         cfg.clone(),
         Box::new(hhzs::policy::HhzsPolicy::new(cfg.lsm.num_levels)),
@@ -457,11 +465,10 @@ fn key_memory_run(key_size: usize) -> (u64, u64, hhzs::lsm::KeyArenaStats, u64) 
     let mut entries = 0u64;
     for m in &metas {
         let data = e.fs.read_file_untimed(m.id, 0, m.file_size).expect("live SST");
-        let block_bytes: u64 = m.blocks.iter().map(|h| h.len as u64).sum();
-        let padding = m.file_size - block_bytes; // index+bloom zeros (physical)
-        // Resident bytes of this file minus headers and padding = the
-        // resident KEY bytes (values are synthetic; suffixes + restarts).
-        key_bytes += data.phys_len() as u64 - m.num_entries * ENTRY_HEADER as u64 - padding;
+        // Resident bytes of this file minus entry headers = the resident
+        // KEY bytes (values are synthetic and the index/bloom reservation
+        // is a weightless pad run; suffixes + restart keys remain).
+        key_bytes += data.phys_len() as u64 - m.num_entries * ENTRY_HEADER as u64;
         entries += m.num_entries;
     }
     e.key_arena().sweep();
@@ -520,6 +527,169 @@ fn resident_key_bytes_scale_with_unique_key_bytes_not_dup_factor() {
         s128.unique * (128 + KEY_OVERHEAD as u64),
         "gauge counts unique key bytes + overhead exactly"
     );
+}
+
+// ---------------------------------------------------------------------
+// Demand-paged residency: observationally free, exact gauge partition
+// ---------------------------------------------------------------------
+
+#[test]
+fn demand_paging_is_observationally_free() {
+    // Dehydrating zone-resident blocks to descriptors and rehydrating on
+    // demand must not move a single observable: the full §4.1 protocol's
+    // digest (virtual clock, metrics, SST layout, extents, cpu_wait) is
+    // bit-identical with paging on (the default the committed golden
+    // pins) and off.
+    for shards in [1usize, 4] {
+        let paged = run_protocol(shards);
+        let mut cfg = proto_cfg(shards);
+        cfg.residency.paging = false;
+        let unpaged = run_protocol_cfg(cfg);
+        assert_eq!(
+            paged, unpaged,
+            "{shards} shard(s): demand paging changed the observable timeline"
+        );
+    }
+}
+
+#[test]
+fn residency_gauges_partition_resident_bytes_exactly() {
+    // Conservation at every phase boundary, per shard:
+    //   ssd + hdd + wal + cache == fs.phys_bytes() + block_cache.phys_bytes()
+    // The identity holds by construction today; this pins it against a
+    // future gauge source that forgets to join the partition.
+    fn check(se: &mut ShardedEngine, paging: bool, shards: usize, phase: &str) {
+        for (s, e) in se.engines.iter_mut().enumerate() {
+            e.stamp_residency_gauges();
+            let m = &e.metrics;
+            let sum = m.resident_ssd_bytes
+                + m.resident_hdd_bytes
+                + m.resident_wal_bytes
+                + m.resident_cache_bytes;
+            let want = e.fs.phys_bytes() + e.cache.phys_bytes();
+            assert_eq!(
+                sum, want,
+                "paging={paging} shards={shards} shard {s} at {phase}: \
+                 resident gauges do not partition the physical bytes"
+            );
+        }
+    }
+    for paging in [true, false] {
+        for shards in [1usize, 4] {
+            let mut cfg = proto_cfg(shards);
+            cfg.workload.load_objects = 8_000;
+            cfg.workload.ops = 2_000;
+            cfg.residency.paging = paging;
+            let clients = cfg.workload.clients;
+            let mut se =
+                ShardedEngine::new(&cfg, |c| hhzs::exp::common::make_policy("HHZS", c));
+            let router = se.router;
+            let load = Spec::from_config(&cfg, Kind::Load);
+            se.run(
+                |s| {
+                    Box::new(RoutedSource::new(
+                        YcsbSource::new(load.clone(), clients),
+                        router,
+                        s,
+                    ))
+                },
+                clients,
+                None,
+                false,
+            );
+            check(&mut se, paging, shards, "load");
+            se.flush_all();
+            check(&mut se, paging, shards, "reopen");
+            let a = Spec::from_config(&cfg, Kind::A);
+            se.run(
+                |s| {
+                    Box::new(RoutedSource::new(YcsbSource::new(a.clone(), clients), router, s))
+                },
+                clients,
+                None,
+                false,
+            );
+            check(&mut se, paging, shards, "ycsb-a");
+            se.quiesce();
+            check(&mut se, paging, shards, "quiesce");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dehydrated decode ≡ hydrated decode across arbitrary cuts (randomized)
+// ---------------------------------------------------------------------
+
+#[test]
+fn dehydrated_buffers_decode_identically_across_arbitrary_cuts() {
+    for case in 0..20u64 {
+        let mut rng = Rng::new(0xD1_11D ^ case);
+        // YCSB-generated keys (synthesizable — they dehydrate) mixed with
+        // opaque keys (they must stay resident untouched), plus the usual
+        // value shapes: tombstones, 0-length, random fills.
+        let mut keys: std::collections::BTreeSet<Vec<u8>> = Default::default();
+        for _ in 0..30 + rng.next_below(200) {
+            let k = if rng.next_below(5) == 0 {
+                format!("opaque-{:05}", rng.next_below(10_000)).into_bytes()
+            } else {
+                hhzs::ycsb::key_for(rng.next_below(1_000_000), 24)
+            };
+            keys.insert(k);
+        }
+        let entries: Vec<Entry> = keys
+            .into_iter()
+            .enumerate()
+            .map(|(i, k)| Entry {
+                key: k.into(),
+                seq: i as u64,
+                value: match i % 5 {
+                    0 => None,
+                    1 => Some(Payload::fill(i as u8, 0)),
+                    _ => Some(Payload::fill(i as u8, rng.next_below(300) as usize)),
+                },
+            })
+            .collect();
+        let block_size = 256 + rng.next_below(2048);
+        let (meta, data) = build_sst(&entries, 1, 0, block_size, 10, 0);
+        let body_len = meta.blocks.last().map(|h| h.offset + h.len as u64).unwrap_or(0);
+        let body = data.slice_to_buf(0, body_len);
+
+        let paged = body.dehydrate_copy().expect("YCSB-keyed blocks must elide heads");
+        assert_eq!(paged.len(), body.len(), "case {case}: logical length");
+        assert!(
+            paged.phys_len() < body.phys_len(),
+            "case {case}: dehydration must shrink resident bytes"
+        );
+        // Decode equivalence on the dehydrated form itself.
+        let got: Vec<Entry> = paged.entries().map(|e| e.to_entry()).collect();
+        assert_eq!(got, entries, "case {case}: dehydrated decode");
+        // Hydration restores the exact physical bytes.
+        let mut back = paged.clone();
+        back.hydrate();
+        assert!(back.is_hydrated(), "case {case}: hydrate left heads elided");
+        assert_eq!(
+            back.phys_bytes(),
+            body.phys_bytes(),
+            "case {case}: hydrate is not bit-identical"
+        );
+        // Arbitrary cuts — uniform over the body, so plenty land mid
+        // KeySynthRun (a head spans ENTRY_HEADER + klen = 38 bytes at
+        // klen 24): slice, re-join, and both the dehydrated decode and a
+        // post-rejoin hydration must still be exact.
+        for _ in 0..16 {
+            let cut = rng.next_below(body_len + 1);
+            let mut joined = paged.slice_to_buf(0, cut);
+            joined.append_buf(&paged.slice_to_buf(cut, body_len - cut));
+            assert_eq!(joined.len(), paged.len(), "case {case}: cut {cut} length");
+            let rejoined: Vec<Entry> = joined.entries().map(|e| e.to_entry()).collect();
+            assert_eq!(rejoined, entries, "case {case}: lossy at cut {cut}");
+            let mut h = joined.clone();
+            h.hydrate();
+            assert!(h.is_hydrated(), "case {case}: cut {cut} hydrate incomplete");
+            let hydrated: Vec<Entry> = h.entries().map(|e| e.to_entry()).collect();
+            assert_eq!(hydrated, entries, "case {case}: cut {cut} hydrated decode");
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
