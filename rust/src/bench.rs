@@ -39,7 +39,7 @@
 
 use std::time::Instant;
 
-use crate::config::Config;
+use crate::config::{Config, WakePolicy};
 use crate::coordinator::Engine;
 use crate::policy::HhzsPolicy;
 use crate::shard::ShardedEngine;
@@ -62,6 +62,13 @@ pub struct WallclockRun {
     /// Total virtual ns ready background jobs waited for a CPU slot in the
     /// measured YCSB-A phase (merged across shards; 0 with idle slots).
     pub cpu_wait_ns: u128,
+    /// Total virtual ns foreground ops waited for a `fg_threads` slot
+    /// (merged; 0 when the foreground pool is off).
+    pub fg_wait_ns: u128,
+    /// Wake rounds where the stall-aware policy redirected a freed CPU
+    /// slot past the FIFO head toward the shard closest to a write stall
+    /// (pool-global over the whole run; always 0 under FIFO wakes).
+    pub stalls_avoided: u64,
     /// VmHWM after this run (process-wide high-water mark, monotone).
     pub peak_rss_bytes: u64,
     /// Physically resident zone bytes at the end of the run.
@@ -153,6 +160,8 @@ pub fn run_one(
             load_virtual
         },
         cpu_wait_ns: e.metrics.cpu_wait.sum,
+        fg_wait_ns: e.metrics.fg_cpu_wait.sum,
+        stalls_avoided: e.cpu_pool_stats().stalls_avoided,
         peak_rss_bytes: peak_rss_bytes(),
         zone_phys_bytes: e.fs.phys_bytes(),
         zone_logical_bytes: e.fs.ssd.written_bytes() + e.fs.hdd.written_bytes(),
@@ -164,7 +173,9 @@ pub fn run_one(
 
 /// Run load + YCSB-A through the sharded async frontend (one shared
 /// clock, device pair, and `bg_threads` CPU pool over `shards` engines)
-/// and measure it.
+/// and measure it. `wake` picks the freed-slot wake order; `fg_threads`
+/// enables the contended foreground pool (the saturated rows raise the
+/// closed-loop client count above the slot count so per-op CPU queues).
 pub fn run_one_sharded(
     label: &str,
     objects: u64,
@@ -172,9 +183,16 @@ pub fn run_one_sharded(
     value_size: usize,
     shards: usize,
     paging: bool,
+    wake: WakePolicy,
+    fg_threads: usize,
 ) -> WallclockRun {
     let mut cfg = bench_cfg(objects, ops, value_size, 24, paging);
     cfg.shards = shards;
+    cfg.lsm.wake = wake;
+    cfg.lsm.fg_threads = fg_threads;
+    if fg_threads > 0 {
+        cfg.workload.clients = cfg.workload.clients.max(4 * fg_threads);
+    }
     let mut se = ShardedEngine::new(&cfg, |c| Box::new(HhzsPolicy::new(c.lsm.num_levels)));
     let clients = cfg.workload.clients;
     let t0 = Instant::now();
@@ -204,6 +222,8 @@ pub fn run_one_sharded(
         sim_ops_per_wall_sec: total_ops as f64 / wall,
         virtual_ops_per_sec: if a_virtual > 0.0 { a_virtual } else { load_virtual },
         cpu_wait_ns: merged.cpu_wait.sum,
+        fg_wait_ns: merged.fg_cpu_wait.sum,
+        stalls_avoided: se.cpu_pool_stats().stalls_avoided,
         peak_rss_bytes: peak_rss_bytes(),
         zone_phys_bytes: phys,
         zone_logical_bytes: logical,
@@ -231,6 +251,8 @@ fn run_to_json(r: &WallclockRun) -> String {
             "      \"sim_ops_per_wall_sec\": {:.1},\n",
             "      \"virtual_ops_per_sec\": {:.1},\n",
             "      \"cpu_wait_ns\": {},\n",
+            "      \"fg_wait_ns\": {},\n",
+            "      \"stalls_avoided\": {},\n",
             "      \"peak_rss_bytes\": {},\n",
             "      \"zone_phys_bytes\": {},\n",
             "      \"zone_logical_bytes\": {},\n",
@@ -249,6 +271,8 @@ fn run_to_json(r: &WallclockRun) -> String {
         r.sim_ops_per_wall_sec,
         r.virtual_ops_per_sec,
         r.cpu_wait_ns,
+        r.fg_wait_ns,
+        r.stalls_avoided,
         r.peak_rss_bytes,
         r.zone_phys_bytes,
         r.zone_logical_bytes,
@@ -417,7 +441,7 @@ pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> 
     {
         let label = format!("sharded4-{scale_label}-v1000");
         eprintln!("[bench] {label}: 4-shard frontend ...");
-        let r = run_one_sharded(&label, objects, ops, 1000, 4, false);
+        let r = run_one_sharded(&label, objects, ops, 1000, 4, false, WakePolicy::Fifo, 0);
         eprintln!(
             "[bench] {label}: {:.1}s wall, {:.0} sim-ops/s, cpu wait {:.1}ms",
             r.wall_secs,
@@ -464,9 +488,47 @@ pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> 
         runs.push(r);
     }
 
+    // The scheduler rows (appended AFTER the positional rows the gate
+    // ratios index): the same 4-shard protocol under stall-aware wakes at
+    // equal bg_threads, and the fg-saturated shape (fg_threads = 8,
+    // clients raised above the slot count) where per-op CPU queues and
+    // the run crosses from device-bound to CPU-bound.
+    {
+        let label = "sharded4-stall-aware".to_string();
+        eprintln!("[bench] {label}: 4-shard frontend, stall-aware wakes ...");
+        let r =
+            run_one_sharded(&label, objects, ops, 1000, 4, false, WakePolicy::StallAware, 0);
+        eprintln!(
+            "[bench] {label}: {:.1}s wall, {:.0} sim-ops/s, cpu wait {:.1}ms, \
+             stalls avoided {}",
+            r.wall_secs,
+            r.sim_ops_per_wall_sec,
+            r.cpu_wait_ns as f64 / 1e6,
+            r.stalls_avoided,
+        );
+        runs.push(r);
+    }
+    {
+        let label = "sharded4-fg8-saturated".to_string();
+        eprintln!("[bench] {label}: 4-shard frontend, fg_threads = 8, saturating clients ...");
+        let r =
+            run_one_sharded(&label, objects, ops, 1000, 4, false, WakePolicy::StallAware, 8);
+        eprintln!(
+            "[bench] {label}: {:.1}s wall, {:.0} sim-ops/s, fg wait {:.1}ms, \
+             stalls avoided {}",
+            r.wall_secs,
+            r.sim_ops_per_wall_sec,
+            r.fg_wait_ns as f64 / 1e6,
+            r.stalls_avoided,
+        );
+        runs.push(r);
+    }
+
     // runs[0] = streaming v4000, runs[1] = streaming v1000, runs[2] = sharded4 v1000,
     // runs[3] = streaming k24 v100, runs[4] = streaming k128 v100,
-    // runs[5] = streaming v1000 paged.
+    // runs[5] = streaming v1000 paged, runs[6] = sharded4-stall-aware,
+    // runs[7] = sharded4-fg8-saturated. The gate ratios below index
+    // runs[0..6] positionally — append new rows after, never between.
     let phys_ratio = runs[0].zone_phys_bytes as f64 / runs[1].zone_phys_bytes.max(1) as f64;
     let logical_ratio =
         runs[0].zone_logical_bytes as f64 / runs[1].zone_logical_bytes.max(1) as f64;
@@ -498,7 +560,10 @@ pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> 
             "4x-payload run executes first so its mark bounds that footprint); use ",
             "zone_phys_bytes for per-run comparisons. cpu_wait_ns is the merged virtual time ",
             "ready flush/compaction jobs waited for a slot of the shared bg_threads CPU pool ",
-            "during the measured YCSB-A phase. resident_bytes sums the four ",
+            "during the measured YCSB-A phase; fg_wait_ns is the analogous wait of foreground ",
+            "per-op CPU charges on the fg_threads pool (0 when off), and stalls_avoided counts ",
+            "wake rounds where the stall-aware policy redirected a freed slot past the FIFO ",
+            "head (always 0 under fifo wakes). resident_bytes sums the four ",
             "resident_*_bytes gauges (zones + WAL + caches kept hydrated by demand paging); ",
             "the sweep rows run with paging = false so their phys ratios keep pinning the ",
             "compression claims, the -paged row runs the production default. The gates ",

@@ -123,6 +123,40 @@ impl CpuSched {
     }
 }
 
+/// Wake-order policy of the shared background-CPU pool: which starved
+/// shard gets re-polled first when a slot frees up (see
+/// [`crate::sim::CpuPool::take_wake_list`]). Orthogonal to [`CpuSched`]:
+/// `CpuSched` caps how many slots a shard may *hold*, `WakePolicy` orders
+/// who is *offered* the next freed one. Flush-before-compaction stays a
+/// hard constraint under both.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WakePolicy {
+    /// Shard-order wake (the PR 4 behavior; bit-identical goldens).
+    Fifo,
+    /// Highest stall risk first: waiters are ordered by live per-shard
+    /// pressure (L0 files vs the stop limit, memtable fill, parked
+    /// writers, zone-reset debt) plus an aging term that bounds any
+    /// waiter's wait (no starvation).
+    StallAware,
+}
+
+impl WakePolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WakePolicy::Fifo => "fifo",
+            WakePolicy::StallAware => "stall_aware",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fifo" => Some(WakePolicy::Fifo),
+            "stall_aware" => Some(WakePolicy::StallAware),
+            _ => None,
+        }
+    }
+}
+
 /// LSM-tree store parameters (§4.1 setup).
 #[derive(Clone, Debug, PartialEq)]
 pub struct LsmConfig {
@@ -145,6 +179,14 @@ pub struct LsmConfig {
     pub bg_threads: usize,
     /// Cross-shard arbitration policy for the shared CPU pool.
     pub cpu_sched: CpuSched,
+    /// Wake-order policy for freed CPU slots (`fifo` = the golden-pinned
+    /// shard-order wake; `stall_aware` = highest stall risk first).
+    pub wake: WakePolicy,
+    /// Foreground CPU slots: per-op `CPU_*_NS` costs are charged against a
+    /// pool of this many slots in global event order, so saturating
+    /// closed-loop load queues on host CPU. `0` = contention-free (the
+    /// seed arithmetic; golden-pinned).
+    pub fg_threads: usize,
     /// Hard write stall when L0 reaches this many files.
     pub l0_stop_files: usize,
     /// L0→L1 compaction trigger (number of L0 files).
@@ -325,6 +367,8 @@ impl Config {
                 num_levels: 7,
                 bg_threads: 12,
                 cpu_sched: CpuSched::WorkConserving,
+                wake: WakePolicy::Fifo,
+                fg_threads: 0,
                 l0_stop_files: 64,
                 l0_compaction_trigger: 4,
             },
@@ -392,7 +436,8 @@ impl Config {
              memtable_size = {}\nmax_memtables = {}\nmin_flush_memtables = {}\n\
              block_size = {}\nblock_cache_bytes = {}\nbloom_bits_per_key = {}\n\
              l0_target = {}\nlevel_multiplier = {}\nnum_levels = {}\n\
-             bg_threads = {}\ncpu_sched = \"{}\"\nl0_stop_files = {}\nl0_compaction_trigger = {}\n\n\
+             bg_threads = {}\ncpu_sched = \"{}\"\nwake_sched = \"{}\"\nfg_threads = {}\n\
+             l0_stop_files = {}\nl0_compaction_trigger = {}\n\n\
              [hhzs]\n\
              migration_rate_bps = {}\nhdd_rate_threshold = {}\n\
              scan_interval_ns = {}\nchunk_bytes = {}\nsample_interval_ns = {}\n\n\
@@ -409,8 +454,8 @@ impl Config {
             g.hdd_zones, g.wal_cache_zones,
             l.memtable_size, l.max_memtables, l.min_flush_memtables, l.block_size,
             l.block_cache_bytes, l.bloom_bits_per_key, l.l0_target, l.level_multiplier,
-            l.num_levels, l.bg_threads, l.cpu_sched.as_str(), l.l0_stop_files,
-            l.l0_compaction_trigger,
+            l.num_levels, l.bg_threads, l.cpu_sched.as_str(), l.wake.as_str(), l.fg_threads,
+            l.l0_stop_files, l.l0_compaction_trigger,
             h.migration_rate_bps, h.hdd_rate_threshold, h.scan_interval_ns, h.chunk_bytes,
             h.sample_interval_ns,
             w.key_size, w.value_size, w.load_objects, w.ops, w.clients, w.zipf_alpha, w.seed,
@@ -452,8 +497,22 @@ impl Config {
             doc.get_usize("lsm", "bg_threads", &mut l.bg_threads);
             let mut sched = l.cpu_sched.as_str().to_string();
             doc.get_str("lsm", "cpu_sched", &mut sched);
-            l.cpu_sched = CpuSched::parse(&sched)
-                .ok_or_else(|| anyhow::anyhow!("bad lsm.cpu_sched {sched:?}"))?;
+            // The `cpu_sched` key accepts wake-policy names too (the CLI
+            // exposes all four under one `--cpu-sched` flag): a fifo/
+            // stall_aware value under this key sets `wake` instead.
+            match (CpuSched::parse(&sched), WakePolicy::parse(&sched)) {
+                (Some(cs), _) => l.cpu_sched = cs,
+                (None, Some(wp)) => l.wake = wp,
+                (None, None) => anyhow::bail!(
+                    "bad lsm.cpu_sched {sched:?} \
+                     (fair|work_conserving|fifo|stall_aware)"
+                ),
+            }
+            let mut wake = l.wake.as_str().to_string();
+            doc.get_str("lsm", "wake_sched", &mut wake);
+            l.wake = WakePolicy::parse(&wake)
+                .ok_or_else(|| anyhow::anyhow!("bad lsm.wake_sched {wake:?}"))?;
+            doc.get_usize("lsm", "fg_threads", &mut l.fg_threads);
             doc.get_usize("lsm", "l0_stop_files", &mut l.l0_stop_files);
             doc.get_usize("lsm", "l0_compaction_trigger", &mut l.l0_compaction_trigger);
         }
@@ -574,6 +633,33 @@ mod tests {
         let c = Config::from_toml_str("[lsm]\ncpu_sched = \"fair\"\n").unwrap();
         assert_eq!(c.lsm.cpu_sched, CpuSched::Fair);
         assert!(Config::from_toml_str("[lsm]\ncpu_sched = \"nope\"\n").is_err());
+    }
+
+    #[test]
+    fn wake_policy_and_fg_threads_round_trip() {
+        let c = Config::small();
+        assert_eq!(c.lsm.wake, WakePolicy::Fifo);
+        assert_eq!(c.lsm.fg_threads, 0);
+        let c = Config::from_toml_str(
+            "[lsm]\nwake_sched = \"stall_aware\"\nfg_threads = 8\n",
+        )
+        .unwrap();
+        assert_eq!(c.lsm.wake, WakePolicy::StallAware);
+        assert_eq!(c.lsm.fg_threads, 8);
+        let c2 = Config::from_toml_str(&c.to_toml()).unwrap();
+        assert_eq!(c2, c);
+        assert!(Config::from_toml_str("[lsm]\nwake_sched = \"nope\"\n").is_err());
+    }
+
+    #[test]
+    fn cpu_sched_key_accepts_wake_policy_names() {
+        // ISSUE naming: `cpu_sched = fifo | stall_aware` routes to `wake`
+        // and leaves the hold-cap policy untouched.
+        let c = Config::from_toml_str("[lsm]\ncpu_sched = \"stall_aware\"\n").unwrap();
+        assert_eq!(c.lsm.wake, WakePolicy::StallAware);
+        assert_eq!(c.lsm.cpu_sched, CpuSched::WorkConserving);
+        let c = Config::from_toml_str("[lsm]\ncpu_sched = \"fifo\"\n").unwrap();
+        assert_eq!(c.lsm.wake, WakePolicy::Fifo);
     }
 
     #[test]

@@ -17,7 +17,7 @@ use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
 use std::rc::Rc;
 use std::sync::Arc;
 
-use crate::config::Config;
+use crate::config::{Config, WakePolicy};
 use crate::hints::{CacheEvictHint, CompactionHint, FlushHint, Hint};
 use crate::lsm::block_cache::BlockKey;
 use crate::lsm::compaction::{merge_entries, streaming_merge, OutputShape};
@@ -28,7 +28,7 @@ use crate::lsm::{
 use crate::metrics::{LevelSizeSample, Metrics, WriteCategory};
 use crate::policy::{MigrationKind, Policy, SstOrigin, View};
 use crate::residency::{Residency, ResidencyHandle};
-use crate::sim::cpu::{CpuPool, CpuPoolStats};
+use crate::sim::cpu::{CpuPool, CpuPoolStats, FgPool};
 use crate::sim::rng::fingerprint32;
 use crate::sim::{AccessKind, CrashInjector, CrashPoint, Ns};
 use crate::trace::{hint_kind, Event, IoOp, JobKind, TraceSink};
@@ -186,6 +186,14 @@ pub struct Engine {
     cpu: Rc<RefCell<CpuPool>>,
     /// This engine's shard index in the pool's domain (0 standalone).
     cpu_shard: usize,
+    /// The foreground-CPU slot pool (`fg_threads` slots). Empty =
+    /// uncontended: every `CPU_*_NS` charge completes at `now + cost`,
+    /// bit-identical to the seed's free-foreground arithmetic. The shard
+    /// layer rebinds every engine to ONE pool per frontend domain.
+    fg: Rc<RefCell<FgPool>>,
+    /// Latest stall-risk score pushed to the shared pool (push-on-change
+    /// only, so FIFO runs never touch the pool and traces stay quiet).
+    last_risk: u64,
     /// The interned-key arena. Like the CPU pool: a standalone engine owns
     /// its own; [`crate::shard::ShardedEngine`] rebinds every shard to ONE
     /// shared arena per frontend domain, so a unique key costs its bytes
@@ -259,6 +267,8 @@ impl Engine {
         );
         let cache = BlockCache::new(cfg.lsm.block_cache_bytes);
         let cpu = Rc::new(RefCell::new(CpuPool::new(cfg.lsm.bg_threads, 1, cfg.lsm.cpu_sched)));
+        cpu.borrow_mut().set_wake(cfg.lsm.wake);
+        let fg = Rc::new(RefCell::new(FgPool::new(cfg.lsm.fg_threads)));
         let mut e = Engine {
             cfg,
             fs,
@@ -281,6 +291,8 @@ impl Engine {
             flush_active: false,
             cpu,
             cpu_shard: 0,
+            fg,
+            last_risk: 0,
             arena: KeyArena::new(),
             flush_ready_since: None,
             comp_ready_since: None,
@@ -352,6 +364,43 @@ impl Engine {
     /// Snapshot of the (possibly shared) CPU pool's bookkeeping.
     pub fn cpu_pool_stats(&self) -> CpuPoolStats {
         self.cpu.borrow().stats()
+    }
+
+    /// Handle to this engine's foreground-CPU pool (for the shard layer).
+    pub(crate) fn fg_pool_handle(&self) -> Rc<RefCell<FgPool>> {
+        self.fg.clone()
+    }
+
+    /// Join a shared foreground-CPU pool (the frontend's domain). Must
+    /// happen before any op is charged — grants made against the private
+    /// pool would not occupy the shared slots.
+    pub(crate) fn share_fg_pool(&mut self, fg: Rc<RefCell<FgPool>>) {
+        assert!(
+            self.seq == 0 && self.metrics.ops_done == 0,
+            "fg pool must be shared before any op is charged"
+        );
+        self.fg = fg;
+    }
+
+    /// Do two engines charge foreground CPU against the same pool?
+    pub fn shares_fg_pool_with(&self, other: &Engine) -> bool {
+        Rc::ptr_eq(&self.fg, &other.fg)
+    }
+
+    /// Charge `cost` ns of foreground CPU issued at `now`. Uncontended
+    /// (`fg_threads = 0`) this is the identity `now + cost` — the seed's
+    /// free-foreground arithmetic, bit-for-bit, with no metrics sample and
+    /// no trace record. Contended, the op queues for the earliest slot;
+    /// the wait lands in `Metrics::fg_cpu_wait` and one FG trace record.
+    fn fg_charge(&mut self, now: Ns, cost: Ns) -> Ns {
+        if !self.fg.borrow().is_enabled() {
+            return now + cost;
+        }
+        let (start, wait) = self.fg.borrow_mut().charge(now, cost);
+        self.metrics.fg_cpu_wait.record(wait);
+        let shard = self.cpu_shard;
+        self.trace.emit(|| Event::FgCharge { shard, start, cost, wait, at: now });
+        start + cost
     }
 
     /// Handle to this engine's trace sink (for the shard layer).
@@ -437,7 +486,7 @@ impl Engine {
     /// instead). Emits the closing snapshot first.
     pub fn trace_export_string(&self) -> String {
         self.trace_snapshot();
-        self.trace.export_string(1, self.cfg.lsm.bg_threads)
+        self.trace.export_string(1, self.cfg.lsm.bg_threads, self.cfg.lsm.fg_threads)
     }
 
     /// This engine's interned-key arena (shared across the frontend
@@ -610,7 +659,8 @@ impl Engine {
             self.seal_memtable();
         }
         self.metrics.writes_done += 1;
-        wal_finish.max(self.now + CPU_MEMTABLE_NS)
+        let cpu_done = self.fg_charge(self.now, CPU_MEMTABLE_NS);
+        wal_finish.max(cpu_done)
     }
 
     fn seal_memtable(&mut self) {
@@ -631,27 +681,28 @@ impl Engine {
         // 1. MemTables (active, then immutables newest-first).
         if let Some(v) = self.mem.get(key) {
             self.metrics.memtable_hits += 1;
-            return (v, self.now + CPU_MEMTABLE_NS);
+            let f = self.fg_charge(self.now, CPU_MEMTABLE_NS);
+            return (v, f);
         }
-        for (_, im) in self.immutables.iter().rev() {
-            if let Some(v) = im.get(key) {
-                self.metrics.memtable_hits += 1;
-                return (v, self.now + CPU_MEMTABLE_NS);
-            }
+        let im_hit = self.immutables.iter().rev().find_map(|(_, im)| im.get(key));
+        if let Some(v) = im_hit {
+            self.metrics.memtable_hits += 1;
+            let f = self.fg_charge(self.now, CPU_MEMTABLE_NS);
+            return (v, f);
         }
         // 2. SSTs, L0 newest-first then one candidate per level.
         let fp = fingerprint32(key);
         let candidates = self.version.candidates_for(key);
         let mut finish = self.now;
         for meta in candidates {
-            finish += CPU_BLOOM_NS;
+            finish = self.fg_charge(finish, CPU_BLOOM_NS);
             if !meta.bloom.may_contain(fp) {
                 continue;
             }
             let Some(bi) = meta.find_block(key) else { continue };
             let handle = meta.blocks[bi];
             let (block, f) = self.fetch_block(&meta, handle.offset, handle.len as u64, finish);
-            finish = finish.max(f) + CPU_BLOCK_SEARCH_NS;
+            finish = self.fg_charge(finish.max(f), CPU_BLOCK_SEARCH_NS);
             if let Some(e) = search_block(&block, key) {
                 return (e.value, finish);
             }
@@ -673,7 +724,8 @@ impl Engine {
         let bk = BlockKey { sst: meta.id, offset };
         if let Some(b) = self.cache.get(&bk) {
             self.metrics.block_cache_hits += 1;
-            return (b, now + CPU_CACHE_HIT_NS);
+            let f = self.fg_charge(now, CPU_CACHE_HIT_NS);
+            return (b, f);
         }
         self.metrics.block_cache_misses += 1;
         let dev = self.fs.file_dev(meta.id).expect("SST file exists");
@@ -809,7 +861,10 @@ impl Engine {
         }
         let mut merged = merge_entries(sources, true);
         merged.truncate(n);
-        (merged, finish.max(self.now + CPU_BLOCK_SEARCH_NS))
+        // The final merge CPU overlaps the in-flight reads: completion is
+        // whichever ends later, the last read or the charged CPU span.
+        let cpu_done = self.fg_charge(self.now, CPU_BLOCK_SEARCH_NS);
+        (merged, finish.max(cpu_done))
     }
 
     /// Read one SST's qualifying blocks into `collected`, counting *live*
@@ -879,6 +934,7 @@ impl Engine {
     /// time from first denial to job start is recorded in
     /// [`Metrics::cpu_wait`].
     fn maybe_schedule_jobs(&mut self) {
+        self.push_stall_risk();
         if self.flush_wanted() {
             self.start_flush();
         } else {
@@ -911,6 +967,37 @@ impl Engine {
             self.comp_ready_since.get_or_insert(self.now);
         } else {
             self.comp_ready_since = None;
+        }
+    }
+
+    /// Recompute this shard's stall-risk score from live signals and push
+    /// it to the shared pool: L0 depth vs the write-stop trigger, memtable
+    /// fill fraction, parked-writer count, and SSD zone-reset debt — each
+    /// component capped at 256 (the pool clamps the sum at `RISK_MAX`).
+    /// Pushed on change only, with one RISK trace record per change, so a
+    /// `wake = fifo` run never touches the pool and stays byte-identical.
+    fn push_stall_risk(&mut self) {
+        if self.cfg.lsm.wake != WakePolicy::StallAware {
+            return;
+        }
+        let l0 = self.version.level(0).len() as u64;
+        let l0_stop = self.cfg.lsm.l0_stop_files.max(1) as u64;
+        let mem = self.mem.approx_bytes() as u64;
+        let mem_cap = self.cfg.lsm.memtable_size.max(1);
+        let parked = self.parked.len() as u64;
+        let zones = self.fs.ssd.num_zones() as u64;
+        let used =
+            (0..self.fs.ssd.num_zones()).filter(|&z| !self.fs.ssd.zone(z).is_empty()).count()
+                as u64;
+        let score = (l0 * 256 / l0_stop).min(256)
+            + (mem * 256 / mem_cap).min(256)
+            + (parked * 64).min(256)
+            + if zones > 0 { 256 * used / zones } else { 0 };
+        if score != self.last_risk {
+            self.last_risk = score;
+            self.cpu.borrow_mut().set_stall_risk(self.cpu_shard, score);
+            let (shard, at) = (self.cpu_shard, self.now);
+            self.trace.emit(|| Event::StallRisk { shard, score, at });
         }
     }
 
@@ -963,6 +1050,11 @@ impl Engine {
         }
         let acquired = self.cpu.borrow_mut().acquire_flush(self.cpu_shard);
         debug_assert!(acquired, "admission re-check cannot fail within one call");
+        if self.cpu.borrow_mut().take_promoted(self.cpu_shard) {
+            // This grant jumped the FIFO order because this shard was the
+            // highest stall risk — one avoided stall episode.
+            self.metrics.stalls_avoided += 1;
+        }
         let wait = self.flush_ready_since.take().map_or(0, |t| self.now.saturating_sub(t));
         self.metrics.cpu_wait.record(wait);
         let id = self.next_job_id;
@@ -1059,6 +1151,9 @@ impl Engine {
         self.busy_levels.insert(pick.output_level());
         let acquired = self.cpu.borrow_mut().acquire_compaction(self.cpu_shard);
         debug_assert!(acquired, "caller checked admission within this call");
+        if self.cpu.borrow_mut().take_promoted(self.cpu_shard) {
+            self.metrics.stalls_avoided += 1;
+        }
         let wait = self.comp_ready_since.take().map_or(0, |t| self.now.saturating_sub(t));
         self.metrics.cpu_wait.record(wait);
         self.trace_job_start(JobKind::Compaction, job, wait);
@@ -1435,9 +1530,18 @@ impl Engine {
         let finish = self.execute_op(op);
         let lat = finish.saturating_sub(issued_at);
         if issued_at < self.now {
-            self.metrics.stall_ns += self.now - issued_at;
-            let (shard, at, dur) = (self.cpu_shard, self.now, self.now - issued_at);
-            self.trace.emit(|| Event::Unstall { shard, client: c, at, dur });
+            // Charge the stall to the measured phase only: a writer parked
+            // across a `begin_phase` boundary starts charging at the
+            // boundary, not at its pre-reset issue time — so the UNSTALL
+            // span and `Metrics::stall_ns` agree (checker-enforced) and
+            // the fresh phase never inherits pre-reset stall time.
+            let base = issued_at.max(self.metrics.start_ns);
+            let dur = self.now.saturating_sub(base);
+            if dur > 0 {
+                self.metrics.stall_ns += dur;
+                let (shard, at) = (self.cpu_shard, self.now);
+                self.trace.emit(|| Event::Unstall { shard, client: c, at, dur });
+            }
         }
         if is_write {
             self.metrics.write_lat.record(lat);
@@ -1975,10 +2079,16 @@ impl Engine {
                 }
             }
         }
-        // The restart drops any CPU claims with the in-flight jobs.
+        // The restart drops any CPU claims with the in-flight jobs, and
+        // the scheduler forgets the victim: risk, age and any pending
+        // promotion die with the process (the checker mirrors this reset
+        // at the CRASH record). The fg pool needs no unwind — its slot
+        // clocks decay with virtual time and grants are never held open.
         self.trace_flush_unwait();
         self.cpu.borrow_mut().clear_flush_waiter(self.cpu_shard);
         self.cpu.borrow_mut().set_comp_waiter(self.cpu_shard, false);
+        self.cpu.borrow_mut().reset_shard_sched_state(self.cpu_shard);
+        self.last_risk = 0;
         self.flush_ready_since = None;
         self.comp_ready_since = None;
         // Unwind queued migrations: close their spans and busy marks (a
@@ -2264,7 +2374,7 @@ impl Engine {
                 let handle = meta.blocks[bi];
                 let (block, f) =
                     self.fetch_block(&meta, handle.offset, handle.len as u64, finish);
-                finish = finish.max(f) + CPU_BLOCK_SEARCH_NS;
+                finish = self.fg_charge(finish.max(f), CPU_BLOCK_SEARCH_NS);
                 if let Some(e) = search_block(&block, key) {
                     out[i] = e.value;
                     break;
@@ -2293,5 +2403,7 @@ impl Engine {
     }
 }
 
+#[cfg(test)]
+mod sched_tests;
 #[cfg(test)]
 mod tests;

@@ -1,0 +1,65 @@
+//! Scheduler-adjacent engine regressions: writer-park `stall_ns`
+//! accounting across a phase boundary, and its agreement with the paired
+//! UNSTALL trace span (the contract `trace::check_lines` enforces).
+
+use super::*;
+use crate::policy::HhzsPolicy;
+use crate::lsm::Payload;
+
+fn traced_engine() -> Engine {
+    let mut cfg = Config::tiny();
+    cfg.trace.enabled = true;
+    let levels = cfg.lsm.num_levels;
+    Engine::new(cfg, Box::new(HhzsPolicy::new(levels)))
+}
+
+fn unstall_durs(e: &Engine) -> Vec<u64> {
+    e.trace
+        .lines()
+        .iter()
+        .filter(|l| l.starts_with("UNSTALL|"))
+        .map(|l| l.rsplit('|').next().unwrap().parse().unwrap())
+        .collect()
+}
+
+#[test]
+fn cross_phase_park_charges_only_from_the_boundary() {
+    let mut e = traced_engine();
+    // A writer parked at t=400k survives a phase boundary at t=1M and
+    // finally executes at t=1.2M. The fresh phase owns only the 200k ns
+    // after its own start — not the 800k the op spent parked overall.
+    e.begin_phase(1_000_000, false);
+    let op = Op::Insert { key: b"k".to_vec(), value: Payload::from_bytes(b"v") };
+    let FrontendOp::Done(_) = e.frontend_client_op(7, op, 400_000, 1_200_000) else {
+        panic!("fresh engine cannot be write-blocked");
+    };
+    assert_eq!(e.metrics.stall_ns, 200_000, "post-reset phase charges from the boundary");
+    assert_eq!(unstall_durs(&e), vec![200_000], "trace span must agree with Metrics::stall_ns");
+}
+
+#[test]
+fn park_resolved_at_the_boundary_charges_nothing() {
+    let mut e = traced_engine();
+    // The whole park happened before the reset: the new phase sees zero
+    // stall time and no UNSTALL span (a zero-length span would desync the
+    // checker's sum against an earlier-phase STALL record).
+    e.begin_phase(2_000_000, false);
+    let op = Op::Insert { key: b"k".to_vec(), value: Payload::from_bytes(b"v") };
+    let FrontendOp::Done(_) = e.frontend_client_op(3, op, 1_000_000, 2_000_000) else {
+        panic!("fresh engine cannot be write-blocked");
+    };
+    assert_eq!(e.metrics.stall_ns, 0);
+    assert!(unstall_durs(&e).is_empty(), "no span for a pre-boundary park");
+}
+
+#[test]
+fn in_phase_park_accounting_is_unchanged() {
+    let mut e = traced_engine();
+    e.begin_phase(0, false);
+    let op = Op::Insert { key: b"k".to_vec(), value: Payload::from_bytes(b"v") };
+    let FrontendOp::Done(_) = e.frontend_client_op(1, op, 500, 1_500) else {
+        panic!("fresh engine cannot be write-blocked");
+    };
+    assert_eq!(e.metrics.stall_ns, 1_000, "same-phase parks charge issue-to-execute as before");
+    assert_eq!(unstall_durs(&e), vec![1_000]);
+}

@@ -33,7 +33,7 @@
 
 use std::collections::{BTreeMap, HashSet};
 
-use crate::config::Config;
+use crate::config::{Config, WakePolicy};
 use crate::exp::common::make_policy;
 use crate::hints::Hint;
 use crate::lsm::SstId;
@@ -58,6 +58,17 @@ pub struct Cell {
     /// (0 = no time trigger).
     pub at_time: Ns,
     pub seed: u64,
+    /// Wake-order policy of the shared CPU pool for this cell. The grid
+    /// sweeps stall-aware cells too: the crash unwind must drop the
+    /// victim's scheduler claims (risk, age, promotion) symmetrically
+    /// with its CPU-slot release, or recovery would replay against a
+    /// stale priority and the I1–I4 battery catches the divergence.
+    pub wake: WakePolicy,
+    /// Foreground CPU slots for this cell. The fg pool needs no crash
+    /// unwind by construction (slot busy-clocks decay with virtual time;
+    /// nothing is held across the power loss) — stall-aware cells run
+    /// with it enabled to pin exactly that.
+    pub fg_threads: usize,
 }
 
 /// The outcome of one cell.
@@ -230,6 +241,8 @@ fn run_cell_opts(cell: &Cell, trace: bool, paging: bool) -> (CellReport, Option<
     cfg.residency.paging = paging;
     cfg.workload.load_objects = 0;
     cfg.shards = cell.shards;
+    cfg.lsm.wake = cell.wake;
+    cfg.lsm.fg_threads = cell.fg_threads;
     cfg.crash.enabled = true;
     cfg.crash.point = cell.point.name().to_string();
     cfg.crash.at_op = cell.at_op;
@@ -294,7 +307,11 @@ fn run_cell_opts(cell: &Cell, trace: bool, paging: bool) -> (CellReport, Option<
 }
 
 /// The cell matrix: shard counts {1, 4} × all six points × the point's
-/// trigger arms × seeds. Quick mode (CI) runs 3 seeds — 108 cells.
+/// trigger arms × seeds, under the FIFO wake policy — plus stall-aware
+/// cells (mid_flush and mid_compaction × both shard counts, with the
+/// contended foreground pool on) pinning that the crash unwind of the
+/// scheduler state is symmetric with the slot unwind. Quick mode (CI)
+/// runs 3 seeds — 108 FIFO + 12 stall-aware = 120 cells.
 pub fn grid_cells(quick: bool) -> Vec<Cell> {
     let seeds: &[u64] = if quick { &[1, 2, 3] } else { &[1, 2, 3, 4, 5, 6] };
     let mut cells = Vec::new();
@@ -302,8 +319,34 @@ pub fn grid_cells(quick: bool) -> Vec<Cell> {
         for point in CrashPoint::ALL {
             for &(at_op, at_time) in arms(point) {
                 for &seed in seeds {
-                    cells.push(Cell { point, shards, at_op, at_time, seed });
+                    cells.push(Cell {
+                        point,
+                        shards,
+                        at_op,
+                        at_time,
+                        seed,
+                        wake: WakePolicy::Fifo,
+                        fg_threads: 0,
+                    });
                 }
+            }
+        }
+    }
+    for &shards in &[1usize, 4] {
+        for point in [CrashPoint::MidFlush, CrashPoint::MidCompaction] {
+            // The first arm is the op trigger that reliably crosses
+            // mid-job — the interesting unwind for scheduler state.
+            let (at_op, at_time) = arms(point)[0];
+            for &seed in seeds {
+                cells.push(Cell {
+                    point,
+                    shards,
+                    at_op,
+                    at_time,
+                    seed,
+                    wake: WakePolicy::StallAware,
+                    fg_threads: 2,
+                });
             }
         }
     }
@@ -320,8 +363,14 @@ pub fn run_grid(quick: bool, mut progress: impl FnMut(&str)) -> GridSummary {
     let mut torn_by_point: BTreeMap<&'static str, usize> = BTreeMap::new();
     for (n, cell) in cells.iter().enumerate() {
         let r = run_cell(cell);
+        let sched = match cell.wake {
+            WakePolicy::Fifo => String::new(),
+            WakePolicy::StallAware => {
+                format!(" wake=stall_aware fg_threads={}", cell.fg_threads)
+            }
+        };
         let label = format!(
-            "[{:>3}/{}] {} shards={} at_op={} at_time={} seed={}",
+            "[{:>3}/{}] {} shards={} at_op={} at_time={} seed={}{sched}",
             n + 1,
             cells.len(),
             cell.point.name(),
@@ -373,7 +422,15 @@ mod tests {
         let mut torn_points = 0;
         for point in CrashPoint::ALL {
             let (at_op, at_time) = arms(point)[0];
-            let cell = Cell { point, shards: 1, at_op, at_time, seed: 1 };
+            let cell = Cell {
+                point,
+                shards: 1,
+                at_op,
+                at_time,
+                seed: 1,
+                wake: WakePolicy::Fifo,
+                fg_threads: 0,
+            };
             let r = run_cell(&cell);
             assert!(r.fired, "{} cell never fired", point.name());
             assert!(
@@ -401,6 +458,8 @@ mod tests {
             at_op: 40,
             at_time: 0,
             seed: 2,
+            wake: WakePolicy::Fifo,
+            fg_threads: 0,
         };
         let r = run_cell(&cell);
         assert!(r.fired, "victim shard never fired");
@@ -418,6 +477,8 @@ mod tests {
             at_op: u64::MAX,
             at_time: 0,
             seed: 3,
+            wake: WakePolicy::Fifo,
+            fg_threads: 0,
         };
         let r = run_cell(&cell);
         assert!(!r.fired);
@@ -436,7 +497,15 @@ mod tests {
         for point in [CrashPoint::MidZoneAppend, CrashPoint::MidFlush, CrashPoint::MidCompaction]
         {
             let (at_op, at_time) = arms(point)[0];
-            let cell = Cell { point, shards: 4, at_op, at_time, seed: 5 };
+            let cell = Cell {
+                point,
+                shards: 4,
+                at_op,
+                at_time,
+                seed: 5,
+                wake: WakePolicy::Fifo,
+                fg_threads: 0,
+            };
             let (paged, _) = run_cell_opts(&cell, false, true);
             assert!(paged.fired, "{} paged cell never fired", point.name());
             assert!(
@@ -478,5 +547,41 @@ mod tests {
                 point.name()
             );
         }
+        // Stall-aware scheduler-unwind coverage: mid-job points at both
+        // shard counts, with the contended foreground pool on.
+        for point in [CrashPoint::MidFlush, CrashPoint::MidCompaction] {
+            for &shards in &[1usize, 4] {
+                assert!(
+                    cells.iter().any(|c| c.point == point
+                        && c.shards == shards
+                        && c.wake == WakePolicy::StallAware
+                        && c.fg_threads > 0
+                        && c.at_op > 0),
+                    "{} needs a stall_aware cell at {shards} shard(s)",
+                    point.name()
+                );
+            }
+        }
+    }
+
+    /// A stall-aware cell with the foreground pool on: fires mid-job,
+    /// recovers, and upholds I1–I4 — the crash unwind of the scheduler
+    /// claims (risk/age/promotion) is symmetric with the slot unwind,
+    /// and the fg pool needs none (busy-clocks decay with virtual time).
+    #[test]
+    fn stall_aware_cell_fires_and_recovers_clean() {
+        let (at_op, at_time) = arms(CrashPoint::MidFlush)[0];
+        let cell = Cell {
+            point: CrashPoint::MidFlush,
+            shards: 4,
+            at_op,
+            at_time,
+            seed: 1,
+            wake: WakePolicy::StallAware,
+            fg_threads: 2,
+        };
+        let r = run_cell(&cell);
+        assert!(r.fired, "stall-aware cell never fired");
+        assert!(r.violations.is_empty(), "violations: {:?}", r.violations);
     }
 }

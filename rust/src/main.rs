@@ -13,8 +13,14 @@
 //!                                     # committed baseline, fails on >30%
 //!                                     # sim-ops/wall-sec per-row regression
 //! hhzs bench-devices                  # Table 1 microbench only
-//! hhzs demo [--n N] [--shards N] [--cpu-sched fair|work_conserving]
-//!                                     # tiny put/get/scan smoke demo
+//! hhzs demo [--n N] [--shards N]
+//!           [--cpu-sched fair|work_conserving|fifo|stall_aware]
+//!           [--fg-threads N]          # tiny put/get/scan smoke demo;
+//!                                     # fair/work_conserving pick the slot
+//!                                     # hold-cap policy, fifo/stall_aware
+//!                                     # the wake-order policy, and
+//!                                     # --fg-threads > 0 charges per-op CPU
+//!                                     # against a contended foreground pool
 //! hhzs config [--profile P]           # print the effective config TOML
 //! hhzs xla-check                      # load + smoke the AOT kernels
 //! hhzs trace run [--out FILE] [--shards N] [--profile P] ...
@@ -105,8 +111,19 @@ fn build_config(args: &Args) -> anyhow::Result<Config> {
         cfg.shards = v.parse::<usize>()?.max(1);
     }
     if let Some(v) = args.flags.get("cpu-sched") {
-        cfg.lsm.cpu_sched = hhzs::config::CpuSched::parse(v)
-            .ok_or_else(|| anyhow::anyhow!("bad --cpu-sched {v:?} (fair|work_conserving)"))?;
+        // One flag, both policies (mirrors the `cpu_sched` TOML key):
+        // fair/work_conserving set the hold-cap policy, fifo/stall_aware
+        // the wake-order policy.
+        match (hhzs::config::CpuSched::parse(v), hhzs::config::WakePolicy::parse(v)) {
+            (Some(cs), _) => cfg.lsm.cpu_sched = cs,
+            (None, Some(wp)) => cfg.lsm.wake = wp,
+            (None, None) => anyhow::bail!(
+                "bad --cpu-sched {v:?} (fair|work_conserving|fifo|stall_aware)"
+            ),
+        }
+    }
+    if let Some(v) = args.flags.get("fg-threads") {
+        cfg.lsm.fg_threads = v.parse()?;
     }
     if let Some(v) = args.flags.get("trace") {
         cfg.trace.enabled = true;
@@ -352,6 +369,8 @@ fn cmd_crash_run(args: &Args) -> anyhow::Result<()> {
         },
         at_time: cfg.crash.at_time_ns,
         seed: cfg.crash.seed,
+        wake: cfg.lsm.wake,
+        fg_threads: cfg.lsm.fg_threads,
     };
     let trace_out = args.flags.get("trace").cloned();
     let (r, export) = run_cell_traced(&cell, trace_out.is_some());
@@ -401,6 +420,8 @@ fn usage() -> ! {
          run `hhzs trace run --profile quick --shards 4 --out trace.json` for a\n\
          traced workload (Perfetto-loadable JSON), `hhzs trace check FILE` to\n\
          replay its DES invariants, and add `--trace FILE` to `demo` to trace it\n\
+         (add `--cpu-sched stall_aware` / `--fg-threads N` to any run-like\n\
+         command for stall-aware CPU wakes / contended foreground CPU)\n\
          run `hhzs crash grid --quick` for the crash/power-loss injection grid\n\
          (CrashPoint x trigger x seed x shards; asserts the 4 recovery\n\
          invariants per cell) and `hhzs crash run --crash-point mid_flush\n\

@@ -70,6 +70,14 @@ pub struct Metrics {
     /// sharing one `bg_threads` pool, cross-shard CPU contention lands
     /// here — the scheduling analogue of `queue_wait`.
     pub cpu_wait: LogHistogram,
+    /// Virtual time a client op's per-op CPU cost waited for a foreground
+    /// slot (`fg_threads` pool); one sample per charged op-path site.
+    /// Always empty at `fg_threads = 0` (contention-free seed arithmetic).
+    pub fg_cpu_wait: LogHistogram,
+    /// Times the stall-aware wake policy promoted a higher-risk shard over
+    /// the FIFO head — the ROADMAP "stalls avoided vs FIFO" measurement.
+    /// Always 0 under `wake = fifo`.
+    pub stalls_avoided: u64,
     /// SSD-cache effectiveness (§3.5).
     pub ssd_cache_hits: u64,
     pub ssd_cache_misses: u64,
@@ -208,6 +216,8 @@ impl Metrics {
             *self.queue_wait.entry(*dev).or_default() += w;
         }
         self.cpu_wait.merge(&other.cpu_wait);
+        self.fg_cpu_wait.merge(&other.fg_cpu_wait);
+        self.stalls_avoided += other.stalls_avoided;
         self.ssd_cache_hits += other.ssd_cache_hits;
         self.ssd_cache_misses += other.ssd_cache_misses;
         self.block_cache_hits += other.block_cache_hits;
@@ -308,6 +318,21 @@ mod tests {
         assert_eq!(a.cpu_wait.n, 3);
         assert_eq!(a.cpu_wait.sum, 12_000);
         assert_eq!(a.cpu_wait.max, 7_000);
+    }
+
+    #[test]
+    fn fg_cpu_wait_and_stalls_avoided_merge() {
+        let mut a = Metrics::default();
+        a.fg_cpu_wait.record(2_000);
+        a.stalls_avoided = 3;
+        let mut b = Metrics::default();
+        b.fg_cpu_wait.record(500);
+        b.fg_cpu_wait.record(1_500);
+        b.stalls_avoided = 4;
+        a.merge(&b);
+        assert_eq!(a.fg_cpu_wait.n, 3);
+        assert_eq!(a.fg_cpu_wait.sum, 4_000);
+        assert_eq!(a.stalls_avoided, 7);
     }
 
     #[test]

@@ -207,6 +207,9 @@ impl<'a> Frontend<'a> {
             // rescheduled itself inside its finish path.
             if self.cpu.borrow().wake_pending() {
                 let wake = self.cpu.borrow_mut().take_wake_list();
+                if !wake.is_empty() {
+                    super::trace_wake_round(&self.trace, &self.cpu.borrow(), at);
+                }
                 for s in wake {
                     self.engines[s].poll_cpu(at);
                 }

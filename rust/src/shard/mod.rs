@@ -50,12 +50,13 @@ pub use router::Router;
 use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 
-use crate::config::Config;
+use crate::config::{Config, WakePolicy};
 use crate::coordinator::{Engine, OpSource};
 use crate::metrics::Metrics;
 use crate::policy::Policy;
 use crate::sim::cpu::{CpuPool, CpuPoolStats};
 use crate::sim::Ns;
+use crate::trace::{Event, TraceSink};
 
 /// Consecutive drive rounds with an unchanged progress signature before
 /// the settle loops declare a stall. Legitimate long waits (deep device
@@ -110,15 +111,17 @@ impl ShardedEngine {
         let ssd_timer = engines[0].fs.ssd.timer.clone();
         let hdd_timer = engines[0].fs.hdd.timer.clone();
         let cpu = engines[0].cpu_pool_handle();
+        let fg = engines[0].fg_pool_handle();
         let arena = engines[0].key_arena_handle();
         let trace = engines[0].trace_handle();
         let residency = engines[0].residency_handle();
-        cpu.borrow_mut().configure(engines.len(), cfg.lsm.cpu_sched);
+        cpu.borrow_mut().configure(engines.len(), cfg.lsm.cpu_sched, cfg.lsm.wake);
         for (s, e) in engines.iter_mut().enumerate().skip(1) {
             e.fs.ssd.set_timer(ssd_timer.clone());
             e.fs.hdd.set_timer(hdd_timer.clone());
             e.share_event_seq(event_seq.clone());
             e.share_cpu_pool(cpu.clone(), s);
+            e.share_fg_pool(fg.clone());
             e.share_key_arena(arena.clone());
             e.share_residency(residency.clone());
             // ONE trace ring for the domain: rebinding AFTER the timer
@@ -312,6 +315,11 @@ impl ShardedEngine {
             return;
         }
         let list = self.cpu.borrow_mut().take_wake_list();
+        if !list.is_empty() {
+            // Sync mode has no shared clock; WAKE ordering is what the
+            // checker replays, so `at = 0` is fine here.
+            trace_wake_round(&self.engines[0].trace, &self.cpu.borrow(), 0);
+        }
         for s in list {
             // Sync mode: each engine stays on its local clock.
             self.engines[s].poll_cpu(0);
@@ -391,7 +399,8 @@ impl ShardedEngine {
             e.trace_snapshot();
         }
         let bg = self.engines[0].cfg.lsm.bg_threads;
-        self.engines[0].trace.export_string(self.engines.len(), bg)
+        let fg = self.engines[0].cfg.lsm.fg_threads;
+        self.engines[0].trace.export_string(self.engines.len(), bg, fg)
     }
 
     /// Write the trace export to `path` (Perfetto-loadable JSON).
@@ -470,6 +479,30 @@ impl ShardedEngine {
             .map(|(s, e)| e.scan_collect(start, n, s == home))
             .collect();
         merge_gather(parts, n).len()
+    }
+}
+
+/// Emit one `WAKE` record per waiter of the stall-aware round the pool
+/// just computed (rank = offer order), so `hhzs trace check` can replay
+/// the scheduler's exact decision. Under FIFO the pool leaves
+/// [`CpuPool::last_wake`] empty and nothing is emitted — FIFO traces stay
+/// byte-identical to the committed goldens. Call only after a non-empty
+/// `take_wake_list` (the pool skips round bookkeeping on empty rounds).
+pub(crate) fn trace_wake_round(trace: &TraceSink, cpu: &CpuPool, at: Ns) {
+    if cpu.wake_policy() != WakePolicy::StallAware || !trace.is_enabled() {
+        return;
+    }
+    let (round, slots) = cpu.last_wake();
+    for (rank, w) in slots.iter().enumerate() {
+        trace.emit(|| Event::SchedWake {
+            shard: w.shard,
+            flush: w.flush,
+            risk: w.risk,
+            age: w.age,
+            rank,
+            round,
+            at,
+        });
     }
 }
 

@@ -29,7 +29,24 @@
 //! `busy_threads` arithmetic — that identity is what keeps `shards = 1`
 //! bit-for-bit (pinned by `tests/integration.rs` and `tests/frontend.rs`).
 
-use crate::config::CpuSched;
+use crate::config::{CpuSched, WakePolicy};
+use crate::sim::Ns;
+
+/// Stall-risk scores are clamped here before aging is added, so a waiter
+/// aged past `RISK_MAX / AGE_STEP` wake rounds outranks ANY fresh waiter
+/// regardless of its live pressure — the bounded-wait / no-starvation
+/// guarantee of [`WakePolicy::StallAware`].
+pub const RISK_MAX: u64 = 1024;
+/// Priority added per wake round a shard keeps waiting.
+pub const AGE_STEP: u64 = 256;
+
+/// The effective wake priority of a waiter: live stall risk (clamped)
+/// plus the aging term. Public so the trace checker replays the exact
+/// ordering the pool used (mirrored like [`crate::trace`]'s
+/// `flush_reserved`).
+pub fn effective_priority(risk: u64, age: u64) -> u64 {
+    risk.min(RISK_MAX) + age.saturating_mul(AGE_STEP)
+}
 
 /// Copyable snapshot of the pool's bookkeeping, for tests and reports.
 #[derive(Clone, Copy, Debug, Default)]
@@ -45,6 +62,22 @@ pub struct CpuPoolStats {
     /// Unreachable by construction; counted (not just debug-asserted) so
     /// the property suite can pin it at zero in release builds too.
     pub flush_priority_violations: u64,
+    /// Wake rounds where the stall-aware policy put a different shard at
+    /// the head than FIFO would have — slots redirected toward the shard
+    /// closest to a write stall. Always 0 under [`WakePolicy::Fifo`].
+    pub stalls_avoided: u64,
+}
+
+/// One waiter of the most recent stall-aware wake round, in offer order —
+/// what the trace layer serializes so `hhzs trace check` can replay the
+/// scheduler's decision.
+#[derive(Clone, Copy, Debug)]
+pub struct WakeSlot {
+    pub shard: usize,
+    /// Flush waiter (the hard-priority class) vs compaction waiter.
+    pub flush: bool,
+    pub risk: u64,
+    pub age: u64,
 }
 
 /// The shared pool of background-CPU slots. Time-free by design: the DES
@@ -68,6 +101,24 @@ pub struct CpuPool {
     /// Set on release while any waiter is registered; the frontend drains
     /// it to re-poll starved shards at the release's event time.
     wake_pending: bool,
+    /// Wake-order policy for [`CpuPool::take_wake_list`].
+    wake: WakePolicy,
+    /// Live per-shard stall-risk scores, pushed by the engines (L0
+    /// pressure, memtable fill, parked writers, zone-reset debt).
+    risk: Vec<u64>,
+    /// Wake rounds each registered waiter has been offered without
+    /// acquiring — the no-starvation aging term. Reset when the shard
+    /// acquires a slot or stops waiting.
+    age: Vec<u64>,
+    /// Shards put at the head of a wake round ahead of the FIFO order;
+    /// consumed by the engine at acquire time to attribute
+    /// `Metrics::stalls_avoided`.
+    promoted: Vec<bool>,
+    /// Monotone id of stall-aware wake rounds (trace grouping).
+    wake_rounds: u64,
+    /// The most recent stall-aware wake round, in offer order (empty
+    /// under FIFO — FIFO traces stay byte-identical).
+    last_wake: Vec<WakeSlot>,
     stats: CpuPoolStats,
 }
 
@@ -83,20 +134,64 @@ impl CpuPool {
             flush_waiter: vec![false; shards],
             comp_waiter: vec![false; shards],
             wake_pending: false,
+            wake: WakePolicy::Fifo,
+            risk: vec![0; shards],
+            age: vec![0; shards],
+            promoted: vec![false; shards],
+            wake_rounds: 0,
+            last_wake: Vec::new(),
             stats: CpuPoolStats { total, ..Default::default() },
         }
     }
 
     /// Rebind the pool to a sharded domain (called by the shard layer
     /// before any background work exists).
-    pub fn configure(&mut self, shards: usize, sched: CpuSched) {
+    pub fn configure(&mut self, shards: usize, sched: CpuSched, wake: WakePolicy) {
         assert!(shards >= 1);
         assert_eq!(self.in_use, 0, "cannot reshape a pool with slots in use");
         self.sched = sched;
+        self.wake = wake;
         self.per_shard = vec![0; shards];
         self.per_shard_comp = vec![0; shards];
         self.flush_waiter = vec![false; shards];
         self.comp_waiter = vec![false; shards];
+        self.risk = vec![0; shards];
+        self.age = vec![0; shards];
+        self.promoted = vec![false; shards];
+        self.last_wake.clear();
+    }
+
+    /// Set the wake-order policy without reshaping (standalone engines).
+    pub fn set_wake(&mut self, wake: WakePolicy) {
+        self.wake = wake;
+    }
+
+    pub fn wake_policy(&self) -> WakePolicy {
+        self.wake
+    }
+
+    /// Push one shard's live stall-risk score (engines call this whenever
+    /// their pressure signals change; time-free, so FIFO timelines are
+    /// untouched).
+    pub fn set_stall_risk(&mut self, shard: usize, score: u64) {
+        self.risk[shard] = score;
+    }
+
+    pub fn stall_risk(&self, shard: usize) -> u64 {
+        self.risk[shard]
+    }
+
+    /// Was this shard promoted past the FIFO head since its last acquire?
+    /// Consumed (cleared) by the engine when the promoted shard actually
+    /// takes the slot, to attribute `Metrics::stalls_avoided`.
+    pub fn take_promoted(&mut self, shard: usize) -> bool {
+        std::mem::replace(&mut self.promoted[shard], false)
+    }
+
+    /// The most recent stall-aware wake round in offer order, with the
+    /// round id (for trace emission). Empty under FIFO.
+    pub fn last_wake(&self) -> (u64, &[WakeSlot]) {
+        (self.wake_rounds, &self.last_wake)
     }
 
     /// Slots compactions may never take (RocksDB's flush pool), shrunk so
@@ -154,6 +249,8 @@ impl CpuPool {
     }
 
     fn grab(&mut self, shard: usize) {
+        // A granted slot ends the shard's waiting episode.
+        self.age[shard] = 0;
         self.in_use += 1;
         self.per_shard[shard] += 1;
         self.stats.acquires += 1;
@@ -183,6 +280,10 @@ impl CpuPool {
 
     pub fn clear_flush_waiter(&mut self, shard: usize) {
         self.flush_waiter[shard] = false;
+        if !self.comp_waiter[shard] {
+            // Aging measures a *continuous* waiting episode only.
+            self.age[shard] = 0;
+        }
     }
 
     /// Take a slot for a compaction, subject to every pool-wide rule.
@@ -210,6 +311,9 @@ impl CpuPool {
     /// Mark/unmark a shard as having an eligible compaction starved of CPU.
     pub fn set_comp_waiter(&mut self, shard: usize, waiting: bool) {
         self.comp_waiter[shard] = waiting;
+        if !waiting && !self.flush_waiter[shard] {
+            self.age[shard] = 0;
+        }
     }
 
     /// Is this shard currently claiming a compaction wake-up?
@@ -246,19 +350,127 @@ impl CpuPool {
     }
 
     /// Drain the wake flag and list the starved shards, flush waiters
-    /// first (in shard order) so the re-poll order respects flush priority
+    /// first so the re-poll order respects flush priority
     /// deterministically. Waiter flags stay set — a re-poll that is denied
     /// again keeps its claim.
+    ///
+    /// Within each class the order is the wake policy's: FIFO keeps the
+    /// PR 4 shard order (bit-identical goldens); stall-aware sorts by
+    /// [`effective_priority`] (clamped live risk + aging) descending, with
+    /// the shard index as the deterministic tie-break — so the next freed
+    /// slot is offered to the shard closest to a write stall, and any
+    /// waiter's wait is bounded by `RISK_MAX / AGE_STEP` wake rounds
+    /// against fresh competitors (no starvation). Flush-before-compaction
+    /// and the flush reservation stay hard constraints under both.
     pub fn take_wake_list(&mut self) -> Vec<usize> {
         self.wake_pending = false;
         let n = self.per_shard.len();
         let mut out: Vec<usize> = (0..n).filter(|&s| self.flush_waiter[s]).collect();
+        let nflush = out.len();
         out.extend((0..n).filter(|&s| self.comp_waiter[s] && !self.flush_waiter[s]));
+        if self.wake == WakePolicy::Fifo || out.is_empty() {
+            return out;
+        }
+        let fifo_head = out[0];
+        {
+            let (risk, age) = (&self.risk, &self.age);
+            let prio =
+                |s: &usize| (std::cmp::Reverse(effective_priority(risk[*s], age[*s])), *s);
+            out[..nflush].sort_by_key(prio);
+            out[nflush..].sort_by_key(prio);
+        }
+        if out[0] != fifo_head {
+            // A higher-risk shard jumped the FIFO head: the slot goes to
+            // the shard most likely to stall instead.
+            self.promoted[out[0]] = true;
+            self.stats.stalls_avoided += 1;
+        }
+        self.wake_rounds += 1;
+        self.last_wake.clear();
+        for (i, &s) in out.iter().enumerate() {
+            self.last_wake.push(WakeSlot {
+                shard: s,
+                flush: i < nflush,
+                risk: self.risk[s],
+                age: self.age[s],
+            });
+        }
+        // Every offered-but-still-waiting shard ages one round; ages reset
+        // on acquire or when the shard stops waiting.
+        for &s in &out {
+            self.age[s] += 1;
+        }
         out
     }
 
     pub fn stats(&self) -> CpuPoolStats {
         self.stats
+    }
+
+    /// Drop one shard's scheduler claims (risk, age, promotion) — the
+    /// crash-restart unwind, symmetric with the waiter-flag clearing the
+    /// engine already does. Slots themselves are released per job by
+    /// `crash_volatile`.
+    pub fn reset_shard_sched_state(&mut self, shard: usize) {
+        self.risk[shard] = 0;
+        self.age[shard] = 0;
+        self.promoted[shard] = false;
+    }
+}
+
+/// The foreground-CPU slot pool: per-op `CPU_*_NS` costs are charged
+/// against `fg_threads` slots in the callers' global `(time, seq)` event
+/// order, so saturating closed-loop load queues on host CPU exactly like
+/// it queues on the device FIFOs. Time-indexed rather than span-based —
+/// a charge occupies `[start, start + cost)` of the least-loaded slot and
+/// needs no explicit release (and therefore no crash unwind: occupancy
+/// decays with virtual time).
+///
+/// With zero threads the pool is disabled and `charge` is the identity
+/// (`start = now`, `wait = 0`) — bit-for-bit the seed's contention-free
+/// arithmetic, which is what keeps the committed goldens at
+/// `fg_threads = 0`.
+#[derive(Debug, Clone)]
+pub struct FgPool {
+    /// Virtual time each slot is busy until. Empty = disabled.
+    busy_until: Vec<Ns>,
+}
+
+impl FgPool {
+    pub fn new(threads: usize) -> Self {
+        FgPool { busy_until: vec![0; threads] }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.busy_until.len()
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        !self.busy_until.is_empty()
+    }
+
+    /// Charge `cost` ns of foreground CPU issued at `now`; returns
+    /// `(start, wait)` where `start = max(now, earliest free slot)` and
+    /// the chosen slot becomes busy until `start + cost`.
+    pub fn charge(&mut self, now: Ns, cost: Ns) -> (Ns, Ns) {
+        if self.busy_until.is_empty() {
+            return (now, 0);
+        }
+        let slot = self
+            .busy_until
+            .iter()
+            .enumerate()
+            .min_by_key(|&(i, &b)| (b, i))
+            .map(|(i, _)| i)
+            .unwrap();
+        let start = now.max(self.busy_until[slot]);
+        self.busy_until[slot] = start + cost;
+        (start, start - now)
+    }
+
+    /// Slots still busy strictly after `t` (tests / occupancy probes).
+    pub fn busy_at(&self, t: Ns) -> usize {
+        self.busy_until.iter().filter(|&&b| b > t).count()
     }
 }
 
@@ -344,9 +556,127 @@ mod tests {
     #[test]
     fn reshaping_an_idle_pool() {
         let mut p = CpuPool::new(3, 1, CpuSched::WorkConserving);
-        p.configure(4, CpuSched::Fair);
+        p.configure(4, CpuSched::Fair, WakePolicy::Fifo);
         assert_eq!(p.compaction_cap(), 1);
         assert!(p.acquire_compaction(3));
         p.release_compaction(3);
+    }
+
+    #[test]
+    fn stall_aware_wakes_the_highest_risk_waiter_first() {
+        let mut p = CpuPool::new(1, 4, CpuSched::WorkConserving);
+        p.configure(4, CpuSched::WorkConserving, WakePolicy::StallAware);
+        p.set_stall_risk(1, 100);
+        p.set_stall_risk(3, 900);
+        assert!(p.acquire_compaction(0));
+        p.set_comp_waiter(1, true);
+        p.set_comp_waiter(3, true);
+        p.release_compaction(0);
+        assert!(p.wake_pending());
+        // FIFO would offer shard 1 first; stall-aware promotes shard 3.
+        assert_eq!(p.take_wake_list(), vec![3, 1]);
+        assert_eq!(p.stats().stalls_avoided, 1);
+        assert!(p.take_promoted(3));
+        assert!(!p.take_promoted(3), "promotion is consumed once");
+        assert!(!p.take_promoted(1));
+        let (round, slots) = p.last_wake();
+        assert_eq!(round, 1);
+        assert_eq!(slots.len(), 2);
+        assert_eq!((slots[0].shard, slots[0].risk), (3, 900));
+    }
+
+    #[test]
+    fn stall_aware_keeps_flush_class_ahead_of_any_compaction_risk() {
+        let mut p = CpuPool::new(1, 3, CpuSched::WorkConserving);
+        p.configure(3, CpuSched::WorkConserving, WakePolicy::StallAware);
+        assert!(p.acquire_compaction(0));
+        // Shard 2's compaction has sky-high risk; shard 1 has a waiting
+        // FLUSH with zero risk — the flush class still comes first.
+        p.set_stall_risk(2, u64::MAX);
+        assert!(!p.acquire_flush(1));
+        p.set_comp_waiter(2, true);
+        p.release_compaction(0);
+        assert_eq!(p.take_wake_list(), vec![1, 2]);
+    }
+
+    #[test]
+    fn aging_outranks_any_fresh_risk_after_bounded_rounds() {
+        let mut p = CpuPool::new(1, 2, CpuSched::WorkConserving);
+        p.configure(2, CpuSched::WorkConserving, WakePolicy::StallAware);
+        assert!(p.acquire_compaction(0));
+        p.set_comp_waiter(1, true);
+        p.set_stall_risk(1, 0);
+        // Shard 1 keeps being offered and re-denied; a fresh max-risk
+        // competitor (shard 0) reappears every round and takes the slot.
+        // Within RISK_MAX / AGE_STEP + 1 rounds (clamp + the shard-index
+        // tie-break) shard 1 must reach the head anyway.
+        let bound = (RISK_MAX / AGE_STEP) as usize + 2;
+        let mut won = false;
+        for _ in 0..bound {
+            p.set_comp_waiter(0, true);
+            p.set_stall_risk(0, RISK_MAX * 100); // clamped to RISK_MAX
+            p.release_compaction(0);
+            let list = p.take_wake_list();
+            if list[0] == 1 {
+                won = true;
+                break;
+            }
+            // The fresh competitor wins the round and holds the slot
+            // again (acquire resets its age; shard 1 keeps aging).
+            assert!(p.acquire_compaction(0));
+        }
+        assert!(won, "aging must bound the wait to {bound} rounds");
+    }
+
+    #[test]
+    fn uniform_priorities_reduce_to_fifo_order() {
+        // The pool-level half of the fifo-identity pin: zero risk and
+        // equal ages sort to shard order in both classes.
+        let mut fifo = CpuPool::new(1, 4, CpuSched::WorkConserving);
+        fifo.configure(4, CpuSched::WorkConserving, WakePolicy::Fifo);
+        let mut sa = CpuPool::new(1, 4, CpuSched::WorkConserving);
+        sa.configure(4, CpuSched::WorkConserving, WakePolicy::StallAware);
+        for p in [&mut fifo, &mut sa] {
+            assert!(p.acquire_compaction(0));
+            assert!(!p.acquire_flush(2));
+            p.set_comp_waiter(1, true);
+            p.set_comp_waiter(3, true);
+            p.release_compaction(0);
+        }
+        assert_eq!(fifo.take_wake_list(), sa.take_wake_list());
+        assert_eq!(sa.stats().stalls_avoided, 0, "no promotion under uniform priority");
+    }
+
+    #[test]
+    fn fg_pool_queues_at_saturation_and_is_identity_when_disabled() {
+        let mut off = FgPool::new(0);
+        assert!(!off.is_enabled());
+        assert_eq!(off.charge(5_000, 1_000), (5_000, 0), "disabled pool is the seed arithmetic");
+        let mut p = FgPool::new(2);
+        // Three simultaneous 1000ns charges on 2 slots: the third waits.
+        assert_eq!(p.charge(0, 1_000), (0, 0));
+        assert_eq!(p.charge(0, 1_000), (0, 0));
+        assert_eq!(p.charge(0, 1_000), (1_000, 1_000));
+        assert_eq!(p.busy_at(500), 2);
+        assert_eq!(p.busy_at(1_500), 1);
+        assert_eq!(p.busy_at(2_000), 0);
+        // A later charge after the backlog drains starts immediately.
+        assert_eq!(p.charge(10_000, 500), (10_000, 0));
+    }
+
+    #[test]
+    fn crash_unwind_clears_risk_age_and_promotion() {
+        let mut p = CpuPool::new(1, 2, CpuSched::WorkConserving);
+        p.configure(2, CpuSched::WorkConserving, WakePolicy::StallAware);
+        assert!(p.acquire_compaction(0));
+        p.set_stall_risk(1, 700);
+        p.set_comp_waiter(1, true);
+        p.release_compaction(0);
+        let _ = p.take_wake_list();
+        assert!(p.take_promoted(1) || p.stall_risk(1) == 700);
+        p.set_stall_risk(1, 700);
+        p.reset_shard_sched_state(1);
+        assert_eq!(p.stall_risk(1), 0);
+        assert!(!p.take_promoted(1));
     }
 }

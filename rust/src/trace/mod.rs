@@ -55,7 +55,10 @@
 //! CADM|shard|sst|zone|bytes|at                 SSD cache admit
 //! CEVT|shard|zone|at                           SSD cache zone evicted
 //! HINT|shard|kind|at                           hint issued to the policy
-//! SNAP|shard|at|stalls|stall_ns|qw_ssd|qw_hdd|cpuw_n|cpuw_sum|ops|fl|comp
+//! RISK|shard|score|at                          stall-risk score pushed to the pool
+//! WAKE|shard|class|risk|age|rank|round|at      one slot of a stall-aware wake round
+//! FG|shard|start|cost|wait|at                  foreground CPU charge (fg pool)
+//! SNAP|shard|at|stalls|stall_ns|qw_ssd|qw_hdd|cpuw_n|cpuw_sum|ops|fl|comp|fgw_n|fgw_sum
 //!                                              Metrics snapshot (phase boundary)
 //! ```
 
@@ -199,6 +202,17 @@ pub enum Event {
     CacheEvict { shard: usize, zone: ZoneId, at: Ns },
     /// The engine issued a hint to the policy.
     HintIssued { shard: usize, kind: &'static str, at: Ns },
+    /// A shard pushed a new stall-risk score to the shared CPU pool
+    /// (emitted on change only; the checker tracks the latest per shard).
+    StallRisk { shard: usize, score: u64, at: Ns },
+    /// One slot of a stall-aware wake round: the pool offered the slot at
+    /// `rank` within `round` to `shard` with the recorded risk/age. The
+    /// checker replays every round and asserts flush-class-first ordering
+    /// and non-increasing effective priority within each class.
+    SchedWake { shard: usize, flush: bool, risk: u64, age: u64, rank: usize, round: u64, at: Ns },
+    /// A foreground op charged `cost` ns against the fg pool: issued at
+    /// `at`, granted a slot at `start` after `wait` ns of queueing.
+    FgCharge { shard: usize, start: Ns, cost: Ns, wait: Ns, at: Ns },
     /// Per-shard `Metrics` snapshot at a phase boundary (and once at
     /// export). The checker verifies segment sums against these exactly.
     Snapshot {
@@ -213,6 +227,8 @@ pub enum Event {
         ops: u64,
         flushes: u64,
         compactions: u64,
+        fgw_n: u64,
+        fgw_sum: u128,
     },
 }
 
@@ -235,6 +251,8 @@ impl Event {
             ops: m.ops_done,
             flushes: m.flushes,
             compactions: m.compactions,
+            fgw_n: m.fg_cpu_wait.n,
+            fgw_sum: m.fg_cpu_wait.sum,
         }
     }
 
@@ -290,6 +308,14 @@ impl Event {
             }
             Event::CacheEvict { shard, zone, at } => format!("CEVT|{shard}|{zone}|{at}"),
             Event::HintIssued { shard, kind, at } => format!("HINT|{shard}|{kind}|{at}"),
+            Event::StallRisk { shard, score, at } => format!("RISK|{shard}|{score}|{at}"),
+            Event::SchedWake { shard, flush, risk, age, rank, round, at } => format!(
+                "WAKE|{shard}|{}|{risk}|{age}|{rank}|{round}|{at}",
+                if *flush { "flush" } else { "comp" }
+            ),
+            Event::FgCharge { shard, start, cost, wait, at } => {
+                format!("FG|{shard}|{start}|{cost}|{wait}|{at}")
+            }
             Event::Snapshot {
                 shard,
                 at,
@@ -302,8 +328,10 @@ impl Event {
                 ops,
                 flushes,
                 compactions,
+                fgw_n,
+                fgw_sum,
             } => format!(
-                "SNAP|{shard}|{at}|{stalls}|{stall_ns}|{qw_ssd}|{qw_hdd}|{cpuw_n}|{cpuw_sum}|{ops}|{flushes}|{compactions}"
+                "SNAP|{shard}|{at}|{stalls}|{stall_ns}|{qw_ssd}|{qw_hdd}|{cpuw_n}|{cpuw_sum}|{ops}|{flushes}|{compactions}|{fgw_n}|{fgw_sum}"
             ),
         }
     }
@@ -417,7 +445,7 @@ impl TraceSink {
     /// Render the full export: Perfetto `traceEvents` + `hhzsMeta` +
     /// `hhzsEvents` in one JSON object. Deterministic: pure function of
     /// the buffered events (no wall clock, no randomness).
-    pub fn export_string(&self, shards: usize, bg_threads: usize) -> String {
+    pub fn export_string(&self, shards: usize, bg_threads: usize, fg_threads: usize) -> String {
         let (lines, perfetto, dropped) = match &self.0 {
             Some(buf) => {
                 let b = buf.borrow();
@@ -432,7 +460,7 @@ impl TraceSink {
         out.push_str("\n],\n");
         out.push_str(&format!(
             "\"hhzsMeta\": {{\"shards\": {shards}, \"bg_threads\": {bg_threads}, \
-             \"events\": {}, \"dropped\": {dropped}}},\n",
+             \"fg_threads\": {fg_threads}, \"events\": {}, \"dropped\": {dropped}}},\n",
             lines.len()
         ));
         out.push_str("\"hhzsEvents\": [\n");
@@ -594,6 +622,9 @@ fn perfetto_events(buf: &TraceBuf, shards: usize) -> Vec<String> {
             Event::Io { .. }
             | Event::CpuWait { .. }
             | Event::ZoneAppend { .. }
+            | Event::StallRisk { .. }
+            | Event::SchedWake { .. }
+            | Event::FgCharge { .. }
             | Event::Snapshot { .. } => {}
         }
     }
@@ -716,12 +747,20 @@ struct ShardAcc {
     cpuw_sum: u128,
     stalls: u64,
     stall_ns: u64,
+    fgw_n: u64,
+    fgw_sum: u128,
     any: bool,
 }
 
-/// Replay pipe records and verify the five invariant families. `shards`
-/// and `bg_threads` come from the export's `hhzsMeta`.
-pub fn check_lines(lines: &[String], shards: usize, bg_threads: usize, dropped: u64) -> CheckReport {
+/// Replay pipe records and verify the invariant families. `shards`,
+/// `bg_threads` and `fg_threads` come from the export's `hhzsMeta`.
+pub fn check_lines(
+    lines: &[String],
+    shards: usize,
+    bg_threads: usize,
+    fg_threads: usize,
+    dropped: u64,
+) -> CheckReport {
     let mut r = CheckReport { events: lines.len(), ..Default::default() };
     if dropped > 0 {
         r.violations.push(format!(
@@ -738,6 +777,11 @@ pub fn check_lines(lines: &[String], shards: usize, bg_threads: usize, dropped: 
     let mut mig_open: BTreeSet<(usize, u64)> = BTreeSet::new();
     let mut flush_wait = vec![false; shards.max(1)];
     let mut acc = vec![ShardAcc::default(); shards.max(1)];
+    // Scheduler replay state: latest pushed risk per shard, the previous
+    // slot of the current wake round, and the fg pool's slot clocks.
+    let mut last_risk = vec![0u64; shards.max(1)];
+    let mut wake_prev: Option<(u64, usize, bool, u64, usize)> = None;
+    let mut fg_busy = vec![0u64; fg_threads];
     for (i, l) in lines.iter().enumerate() {
         let f: Vec<&str> = l.split('|').collect();
         let mut bad = false;
@@ -893,7 +937,93 @@ pub fn check_lines(lines: &[String], shards: usize, bg_threads: usize, dropped: 
                     acc[shard].stall_ns += dur;
                 }
             }
-            Some("SNAP") if f.len() == 12 => {
+            Some("RISK") if f.len() == 4 => {
+                let shard = num(f[1]) as usize;
+                let score = num(f[2]);
+                if shard >= last_risk.len() {
+                    viol!("shard out of range");
+                } else {
+                    last_risk[shard] = score;
+                }
+            }
+            Some("WAKE") if f.len() == 8 => {
+                let shard = num(f[1]) as usize;
+                let flush = match f[2] {
+                    "flush" => true,
+                    "comp" => false,
+                    c => {
+                        viol!("unknown wake class {c}");
+                        false
+                    }
+                };
+                let (risk, age) = (num(f[3]), num(f[4]));
+                let rank = num(f[5]) as usize;
+                let round = num(f[6]);
+                if shard >= last_risk.len() {
+                    viol!("shard out of range");
+                } else if risk != last_risk[shard] {
+                    viol!(
+                        "wake risk {risk} != last traced RISK {} for shard {shard}",
+                        last_risk[shard]
+                    );
+                }
+                let eff = crate::sim::cpu::effective_priority(risk, age);
+                match wake_prev {
+                    Some((pround, prank, pflush, peff, pshard)) if pround == round => {
+                        if rank != prank + 1 {
+                            viol!("wake rank {rank} not contiguous after {prank} in round {round}");
+                        }
+                        if flush && !pflush {
+                            viol!("flush-class waiter ranked after a compaction waiter");
+                        }
+                        if flush == pflush {
+                            if eff > peff {
+                                viol!(
+                                    "priority order violated: rank {rank} eff {eff} > \
+                                     rank {prank} eff {peff}"
+                                );
+                            }
+                            if eff == peff && shard <= pshard {
+                                viol!("shard tie-break violated at equal priority");
+                            }
+                        }
+                    }
+                    _ => {
+                        if rank != 0 {
+                            viol!("wake round {round} does not start at rank 0");
+                        }
+                    }
+                }
+                wake_prev = Some((round, rank, flush, eff, shard));
+            }
+            Some("FG") if f.len() == 6 => {
+                let shard = num(f[1]) as usize;
+                let (start, cost, wait, at) = (num(f[2]), num(f[3]), num(f[4]), num(f[5]));
+                if fg_busy.is_empty() {
+                    viol!("FG record in a trace with fg_threads = 0");
+                } else {
+                    let slot = (0..fg_busy.len()).min_by_key(|&i| (fg_busy[i], i)).unwrap();
+                    let expect = at.max(fg_busy[slot]);
+                    if start != expect {
+                        viol!(
+                            "fg grant at {start} != replayed earliest slot time {expect} \
+                             (fg-pool occupancy must stay <= fg_threads {fg_threads})"
+                        );
+                    }
+                    if wait != start.saturating_sub(at) {
+                        viol!("fg wait {wait} != start - issue {}", start.saturating_sub(at));
+                    }
+                    fg_busy[slot] = start.max(fg_busy[slot]) + cost;
+                }
+                if shard >= acc.len() {
+                    viol!("shard out of range");
+                } else {
+                    acc[shard].any = true;
+                    acc[shard].fgw_n += 1;
+                    acc[shard].fgw_sum += wait as u128;
+                }
+            }
+            Some("SNAP") if f.len() == 14 => {
                 let shard = num(f[1]) as usize;
                 if shard >= acc.len() {
                     viol!("shard out of range");
@@ -903,6 +1033,8 @@ pub fn check_lines(lines: &[String], shards: usize, bg_threads: usize, dropped: 
                     let (qw_ssd, qw_hdd) = (num(f[5]), num(f[6]));
                     let cpuw_n = num(f[7]);
                     let cpuw_sum: u128 = f[8].parse().unwrap_or(u128::MAX);
+                    let fgw_n = num(f[12]);
+                    let fgw_sum: u128 = f[13].parse().unwrap_or(u128::MAX);
                     if a.stalls != stalls {
                         viol!("trace stalls {} != Metrics::stalls {stalls}", a.stalls);
                     }
@@ -922,6 +1054,13 @@ pub fn check_lines(lines: &[String], shards: usize, bg_threads: usize, dropped: 
                             a.cpuw_sum
                         );
                     }
+                    if a.fgw_n != fgw_n || a.fgw_sum != fgw_sum {
+                        viol!(
+                            "trace fg wait {}:{} != Metrics::fg_cpu_wait {fgw_n}:{fgw_sum}",
+                            a.fgw_n,
+                            a.fgw_sum
+                        );
+                    }
                     acc[shard] = ShardAcc::default();
                     r.snapshots += 1;
                 }
@@ -933,6 +1072,10 @@ pub fn check_lines(lines: &[String], shards: usize, bg_threads: usize, dropped: 
                 let shard = num(f[1]) as usize;
                 if shard >= acc.len() {
                     viol!("shard out of range");
+                } else {
+                    // The crash unwind resets the victim's scheduler state
+                    // (risk, age, promotion) without emitting a RISK record.
+                    last_risk[shard] = 0;
                 }
             }
             Some("RECOV") if f.len() == 4 => {
@@ -975,9 +1118,11 @@ pub fn check_export(json: &str) -> Result<CheckReport, String> {
     let shards =
         scan_meta_u64(json, "shards").ok_or("missing hhzsMeta.shards — not an hhzs trace?")?;
     let bg = scan_meta_u64(json, "bg_threads").ok_or("missing hhzsMeta.bg_threads")?;
+    // Absent in pre-fg traces: treat as an uncontended foreground.
+    let fg = scan_meta_u64(json, "fg_threads").unwrap_or(0);
     let dropped = scan_meta_u64(json, "dropped").unwrap_or(0);
     let lines = extract_lines(json)?;
-    Ok(check_lines(&lines, shards as usize, bg as usize, dropped))
+    Ok(check_lines(&lines, shards as usize, bg as usize, fg as usize, dropped))
 }
 
 /// Check a trace file on disk (`hhzs trace check <file>`).
@@ -1041,7 +1186,7 @@ mod tests {
             "ZAPP|ssd|2|4096|100",
             "ZRST|ssd|2|110",
             "HINT|0|flush|120",
-            "SNAP|0|130|1|35|50|0|1|10|5|1|0",
+            "SNAP|0|130|1|35|50|0|1|10|5|1|0|0|0",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -1050,7 +1195,7 @@ mod tests {
 
     #[test]
     fn checker_accepts_a_consistent_trace() {
-        let r = check_lines(&consistent_lines(), 1, 2, 0);
+        let r = check_lines(&consistent_lines(), 1, 2, 0, 0);
         assert!(r.ok(), "unexpected violations: {:?}", r.violations);
         assert_eq!(r.dev_intervals, 2);
         assert_eq!(r.jobs_closed, 1);
@@ -1060,12 +1205,15 @@ mod tests {
 
     #[test]
     fn checker_rejects_overlapping_device_intervals() {
-        let lines: Vec<String> =
-            ["DEV|ssd|seq_wr|1|0|0|100", "DEV|ssd|seq_wr|1|0|99|150", "SNAP|0|1|0|0|0|0|0|0|0|0|0"]
-                .iter()
-                .map(|s| s.to_string())
-                .collect();
-        let r = check_lines(&lines, 1, 2, 0);
+        let lines: Vec<String> = [
+            "DEV|ssd|seq_wr|1|0|0|100",
+            "DEV|ssd|seq_wr|1|0|99|150",
+            "SNAP|0|1|0|0|0|0|0|0|0|0|0|0|0",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let r = check_lines(&lines, 1, 2, 0, 0);
         assert_eq!(r.violations.len(), 1);
         assert!(r.violations[0].contains("overlaps"), "{:?}", r.violations);
     }
@@ -1076,7 +1224,7 @@ mod tests {
             .iter()
             .map(|s| s.to_string())
             .collect();
-        let r = check_lines(&lines, 1, 2, 0);
+        let r = check_lines(&lines, 1, 2, 0, 0);
         assert!(
             r.violations.iter().any(|v| v.contains("exceed bg_threads")),
             "{:?}",
@@ -1098,17 +1246,17 @@ mod tests {
         .iter()
         .map(|s| s.to_string())
         .collect();
-        let r = check_lines(&lines, 2, 2, 0);
+        let r = check_lines(&lines, 2, 2, 0, 0);
         assert!(r.violations.iter().any(|v| v.contains("flush priority")), "{:?}", r.violations);
     }
 
     #[test]
     fn checker_rejects_snapshot_sum_mismatch() {
-        let lines: Vec<String> = ["STALL|0|1|10", "SNAP|0|20|0|0|0|0|0|0|0|0|0"]
+        let lines: Vec<String> = ["STALL|0|1|10", "SNAP|0|20|0|0|0|0|0|0|0|0|0|0|0"]
             .iter()
             .map(|s| s.to_string())
             .collect();
-        let r = check_lines(&lines, 1, 2, 0);
+        let r = check_lines(&lines, 1, 2, 0, 0);
         assert!(r.violations.iter().any(|v| v.contains("Metrics::stalls")), "{:?}", r.violations);
     }
 
@@ -1116,10 +1264,10 @@ mod tests {
     fn checker_rejects_unbalanced_spans_and_lossy_rings() {
         let lines: Vec<String> =
             ["JOB|0|flush|1|0|0", "ACQ|0|flush|1|0|1"].iter().map(|s| s.to_string()).collect();
-        let r = check_lines(&lines, 1, 2, 0);
+        let r = check_lines(&lines, 1, 2, 0, 0);
         assert!(r.violations.iter().any(|v| v.contains("never closed")), "{:?}", r.violations);
         assert!(r.violations.iter().any(|v| v.contains("never released")), "{:?}", r.violations);
-        let r = check_lines(&lines, 1, 2, 3);
+        let r = check_lines(&lines, 1, 2, 0, 3);
         assert!(r.violations.iter().any(|v| v.contains("dropped 3")), "{:?}", r.violations);
     }
 
@@ -1134,16 +1282,16 @@ mod tests {
             "REL|0|flush|1|50|0",
             "JOBEND|0|flush|1|50",
             "RECOV|0|42|60",
-            "SNAP|0|70|0|0|0|0|0|0|0|0|0",
+            "SNAP|0|70|0|0|0|0|0|0|0|0|0|0|0",
         ]
         .iter()
         .map(|s| s.to_string())
         .collect();
-        let r = check_lines(&lines, 1, 2, 0);
+        let r = check_lines(&lines, 1, 2, 0, 0);
         assert!(r.ok(), "unexpected violations: {:?}", r.violations);
         // A crash record naming a shard outside the domain is rejected.
         let bad = vec!["CRASH|7|mid_flush|50".to_string()];
-        assert!(!check_lines(&bad, 1, 2, 0).ok());
+        assert!(!check_lines(&bad, 1, 2, 0, 0).ok());
     }
 
     #[test]
@@ -1179,15 +1327,108 @@ mod tests {
             ops: 1,
             flushes: 0,
             compactions: 0,
+            fgw_n: 0,
+            fgw_sum: 0,
         });
-        let json = t.export_string(1, 2);
+        let json = t.export_string(1, 2, 0);
         assert!(json.contains("\"traceEvents\""));
         assert!(json.contains("\"hhzsMeta\""));
+        assert!(json.contains("\"fg_threads\": 0"));
         let r = check_export(&json).expect("export parses");
         assert!(r.ok(), "{:?}", r.violations);
         assert_eq!(r.events, 3);
         // Export is a pure function of the buffer.
-        assert_eq!(json, t.export_string(1, 2));
+        assert_eq!(json, t.export_string(1, 2, 0));
+    }
+
+    #[test]
+    fn checker_replays_wake_rounds_and_rejects_priority_inversions() {
+        // A consistent stall_aware round: shard 1 pushed risk 900, shard 0
+        // risk 100; flush class first, then comps by effective priority.
+        let good: Vec<String> = [
+            "RISK|1|900|10",
+            "RISK|0|100|10",
+            "WAKE|2|flush|0|0|0|1|20",
+            "WAKE|1|comp|900|0|1|1|20",
+            "WAKE|0|comp|100|0|2|1|20",
+            "SNAP|0|30|0|0|0|0|0|0|0|0|0|0|0",
+            "SNAP|1|30|0|0|0|0|0|0|0|0|0|0|0",
+            "SNAP|2|30|0|0|0|0|0|0|0|0|0|0|0",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let r = check_lines(&good, 3, 2, 0, 0);
+        assert!(r.ok(), "unexpected violations: {:?}", r.violations);
+
+        // A grant that skipped the higher-priority waiter is rejected.
+        let inverted: Vec<String> = [
+            "RISK|1|900|10",
+            "RISK|0|100|10",
+            "WAKE|0|comp|100|0|0|1|20",
+            "WAKE|1|comp|900|0|1|1|20",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let r = check_lines(&inverted, 3, 2, 0, 0);
+        assert!(r.violations.iter().any(|v| v.contains("priority order")), "{:?}", r.violations);
+
+        // A compaction waiter ranked ahead of a flush waiter is rejected.
+        let class: Vec<String> = ["WAKE|0|comp|0|0|0|1|20", "WAKE|1|flush|0|0|1|1|20"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let r = check_lines(&class, 3, 2, 0, 0);
+        assert!(r.violations.iter().any(|v| v.contains("flush-class")), "{:?}", r.violations);
+
+        // A wake recording a risk that was never pushed is rejected.
+        let stale: Vec<String> = ["WAKE|0|comp|77|0|0|1|20"].iter().map(|s| s.to_string()).collect();
+        let r = check_lines(&stale, 3, 2, 0, 0);
+        assert!(r.violations.iter().any(|v| v.contains("last traced RISK")), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn checker_replays_the_fg_pool_and_rejects_overcommit() {
+        // Two slots: ops at t=0,0 run immediately; the third queues 100ns.
+        let good: Vec<String> = [
+            "FG|0|0|100|0|0",
+            "FG|0|0|100|0|0",
+            "FG|0|100|50|100|0",
+            "SNAP|0|200|0|0|0|0|0|0|0|0|0|3|100",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let r = check_lines(&good, 1, 2, 2, 0);
+        assert!(r.ok(), "unexpected violations: {:?}", r.violations);
+
+        // Claiming an immediate grant while both slots are busy is an
+        // occupancy violation.
+        let over: Vec<String> = ["FG|0|0|100|0|0", "FG|0|0|100|0|0", "FG|0|0|50|0|0"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let r = check_lines(&over, 1, 2, 2, 0);
+        assert!(r.violations.iter().any(|v| v.contains("fg grant")), "{:?}", r.violations);
+
+        // FG records are impossible in an uncontended (fg_threads=0) trace.
+        let none: Vec<String> = ["FG|0|0|100|0|0"].iter().map(|s| s.to_string()).collect();
+        let r = check_lines(&none, 1, 2, 0, 0);
+        assert!(r.violations.iter().any(|v| v.contains("fg_threads = 0")), "{:?}", r.violations);
+
+        // A wait that disagrees with start - issue is rejected.
+        let lied: Vec<String> = ["FG|0|0|100|5|0"].iter().map(|s| s.to_string()).collect();
+        let r = check_lines(&lied, 1, 2, 2, 0);
+        assert!(r.violations.iter().any(|v| v.contains("fg wait")), "{:?}", r.violations);
+
+        // SNAP fg-wait sums must match the accumulated FG records.
+        let sums: Vec<String> = ["FG|0|100|50|100|0", "SNAP|0|200|0|0|0|0|0|0|0|0|0|1|0"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let r = check_lines(&sums, 1, 2, 2, 0);
+        assert!(r.violations.iter().any(|v| v.contains("fg wait")), "{:?}", r.violations);
     }
 
     #[test]

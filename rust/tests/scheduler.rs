@@ -1,0 +1,305 @@
+//! Scheduler-invariant property grid for the stall-aware wake policy.
+//!
+//! Three layers, per the acceptance criteria:
+//!
+//! * pool-level randomized properties — uniform priorities reduce the
+//!   stall-aware order to FIFO's exactly (the golden-identity pin at the
+//!   pool level), and a continuously waiting shard reaches the head of
+//!   its class within a bounded number of wake rounds against arbitrary
+//!   fresh competitors (aging = no starvation);
+//! * end-to-end DES runs over shards {1,2,4,8} × bg_threads {1,2,3,12}
+//!   × wake {fifo, stall_aware} — work conservation (one acquire per
+//!   started job, zero leaks), the global slot bound, and zero
+//!   flush-priority violations hold under BOTH wake policies, and FIFO
+//!   never reports an avoided stall;
+//! * a traced 4-shard stall-aware run replayed through the trace
+//!   checker — priority-order compliance of every emitted wake round and
+//!   fg-pool occupancy ≤ fg_threads, verified from the export alone.
+
+use hhzs::config::{Config, CpuSched, WakePolicy};
+use hhzs::shard::ShardedEngine;
+use hhzs::sim::cpu::{CpuPool, AGE_STEP, RISK_MAX};
+use hhzs::sim::rng::Rng;
+use hhzs::ycsb::{Kind, Spec, YcsbSource};
+
+// ---------------------------------------------------------------------
+// Pool-level randomized properties
+// ---------------------------------------------------------------------
+
+/// Uniform priorities (equal risk, equal age) must make the stall-aware
+/// wake order event-for-event identical to FIFO's, across random waiter
+/// sets in both classes. This is the pool half of the guarantee that
+/// `wake = stall_aware` with no pressure differential cannot perturb a
+/// golden-pinned timeline.
+#[test]
+fn randomized_uniform_priority_wakes_match_fifo_order() {
+    for case in 0..100u64 {
+        let mut rng = Rng::new(0x5C4ED_000 + case);
+        let shards = [2usize, 3, 4, 8][rng.next_below(4) as usize];
+        let mut fifo = CpuPool::new(2, shards, CpuSched::WorkConserving);
+        fifo.configure(shards, CpuSched::WorkConserving, WakePolicy::Fifo);
+        let mut sa = CpuPool::new(2, shards, CpuSched::WorkConserving);
+        sa.configure(shards, CpuSched::WorkConserving, WakePolicy::StallAware);
+        let ctx = format!("case {case}: shards={shards}");
+        for episode in 0..40 {
+            // A random waiter set, mirrored into both pools; every shard
+            // of the stall-aware pool carries the SAME risk score
+            // (uniform ≠ zero — the clamp and the tie-break must not
+            // reorder equals either).
+            for s in 0..shards {
+                match rng.next_below(3) {
+                    0 => {
+                        fifo.flush_denied(s);
+                        sa.flush_denied(s);
+                    }
+                    1 => {
+                        fifo.set_comp_waiter(s, true);
+                        sa.set_comp_waiter(s, true);
+                    }
+                    _ => {}
+                }
+            }
+            let risk = rng.next_below(RISK_MAX * 2);
+            for s in 0..shards {
+                sa.set_stall_risk(s, risk);
+            }
+            assert_eq!(
+                fifo.take_wake_list(),
+                sa.take_wake_list(),
+                "{ctx} episode {episode}: uniform priorities must wake in FIFO order"
+            );
+            // End every waiting episode so ages stay uniform (zero) —
+            // a shard that stops waiting resets its age by contract.
+            for s in 0..shards {
+                fifo.set_comp_waiter(s, false);
+                fifo.clear_flush_waiter(s);
+                sa.set_comp_waiter(s, false);
+                sa.clear_flush_waiter(s);
+            }
+        }
+        assert_eq!(
+            sa.stats().stalls_avoided,
+            0,
+            "{ctx}: no promotion may fire under uniform priorities"
+        );
+    }
+}
+
+/// Bounded wait: a zero-risk shard that keeps waiting must reach the
+/// head of its class within `RISK_MAX / AGE_STEP + O(shards)` wake
+/// rounds, no matter what risks its competitors refresh to — the aging
+/// term outgrows any clamped live score, and winners reset their age on
+/// acquire while the victim's keeps compounding.
+#[test]
+fn aged_waiter_reaches_the_head_within_bounded_rounds() {
+    for case in 0..50u64 {
+        let mut rng = Rng::new(0xA6ED_000 + case);
+        let shards = [2usize, 3, 4, 8][rng.next_below(4) as usize];
+        let victim = shards - 1;
+        let mut p = CpuPool::new(1, shards, CpuSched::WorkConserving);
+        p.configure(shards, CpuSched::WorkConserving, WakePolicy::StallAware);
+        assert!(p.acquire_compaction(0));
+        let mut holder = 0usize;
+        p.set_comp_waiter(victim, true);
+        p.set_stall_risk(victim, 0);
+        // Worst case: competitors rotate through the slot with max risk,
+        // so the longest-unreset competitor holds eff 1024 + 256·(C-1);
+        // the victim (largest shard index — loses every tie) overtakes
+        // within shards + 4 rounds. The bound below is deliberately
+        // looser so it pins the mechanism, not the exact constant.
+        let bound = (RISK_MAX / AGE_STEP) as usize + 2 * shards + 4;
+        let mut won = false;
+        for _ in 0..bound {
+            for s in 0..shards - 1 {
+                if s != holder {
+                    p.set_comp_waiter(s, true);
+                }
+                p.set_stall_risk(s, rng.next_below(RISK_MAX * 2));
+            }
+            p.release_compaction(holder);
+            let list = p.take_wake_list();
+            let head = list[0];
+            if head == victim {
+                won = true;
+                break;
+            }
+            assert!(p.acquire_compaction(head), "the offered head must be admissible");
+            holder = head;
+        }
+        assert!(
+            won,
+            "case {case}: shards={shards}: victim still starved after {bound} wake rounds"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// End-to-end DES grid: shards × bg_threads × wake policy
+// ---------------------------------------------------------------------
+
+fn des_cfg(shards: usize, bg_threads: usize, wake: WakePolicy) -> Config {
+    let mut cfg = Config::paper_scaled(2048);
+    cfg.workload.load_objects = 6_000;
+    cfg.workload.ops = 1_500;
+    cfg.shards = shards;
+    cfg.lsm.bg_threads = bg_threads;
+    cfg.lsm.wake = wake;
+    // Alternate the hold-cap policy across the grid so both arbitration
+    // modes are exercised under both wake policies.
+    cfg.lsm.cpu_sched =
+        if (shards + bg_threads) % 2 == 0 { CpuSched::Fair } else { CpuSched::WorkConserving };
+    // The substrate must host the shard count (same widening as Exp#7).
+    let hdd_per_sst = cfg.hdd_zones_per_sst();
+    cfg.geometry.ssd_zones = cfg.geometry.ssd_zones.max(2 * shards as u32);
+    cfg.geometry.hdd_zones = cfg.geometry.hdd_zones.max(shards as u32 * hdd_per_sst);
+    cfg
+}
+
+/// Work conservation, the global slot bound, and flush priority across
+/// the full grid — the stall-aware policy reorders who is OFFERED a
+/// freed slot, so none of the pool's hard ledgers may move.
+#[test]
+fn des_grid_conserves_work_under_both_wake_policies() {
+    for &wake in &[WakePolicy::Fifo, WakePolicy::StallAware] {
+        for &shards in &[1usize, 2, 4, 8] {
+            for &bg in &[1usize, 2, 3, 12] {
+                let cfg = des_cfg(shards, bg, wake);
+                let clients = cfg.workload.clients;
+                let mut se =
+                    ShardedEngine::new(&cfg, |c| hhzs::exp::common::make_policy("HHZS", c));
+                let mut load = YcsbSource::new(Spec::from_config(&cfg, Kind::Load), clients);
+                se.run_shared(&mut load, clients, None, false);
+                se.flush_all();
+                se.quiesce();
+                let ctx = format!("shards={shards} bg_threads={bg} wake={}", wake.as_str());
+                let m = se.merged_metrics();
+                assert_eq!(
+                    m.ops_done, cfg.workload.load_objects,
+                    "{ctx}: lost ops (termination)"
+                );
+                let st = se.cpu_pool_stats();
+                assert!(
+                    st.high_water <= bg,
+                    "{ctx}: {} slots in use at some event (global bound {bg})",
+                    st.high_water
+                );
+                assert_eq!(st.in_use, 0, "{ctx}: slots leaked after quiesce");
+                assert_eq!(st.acquires, st.releases, "{ctx}: acquire/release imbalance");
+                assert_eq!(
+                    st.acquires,
+                    m.flushes + m.compactions,
+                    "{ctx}: acquires must match started jobs"
+                );
+                assert!(m.flushes > 0, "{ctx}: workload must exercise flushes");
+                assert_eq!(st.flush_priority_violations, 0, "{ctx}: flush priority");
+                assert_eq!(
+                    m.cpu_wait.n,
+                    m.flushes + m.compactions,
+                    "{ctx}: one cpu_wait sample per job"
+                );
+                if wake == WakePolicy::Fifo {
+                    assert_eq!(st.stalls_avoided, 0, "{ctx}: FIFO cannot avoid stalls");
+                    assert_eq!(m.stalls_avoided, 0, "{ctx}: FIFO engines saw a promotion");
+                }
+            }
+        }
+    }
+}
+
+/// With one shard there is never a competing waiter, so the stall-aware
+/// policy must reproduce the FIFO timeline exactly — same virtual end
+/// time, same job and op counts, same latency sums. (The committed
+/// golden digests pin the FIFO side; this pins stall_aware onto it.)
+#[test]
+fn single_shard_stall_aware_timeline_is_identical_to_fifo() {
+    let run = |wake: WakePolicy| {
+        let mut cfg = des_cfg(1, 2, wake);
+        cfg.workload.ops = 1_000;
+        let clients = cfg.workload.clients;
+        let mut se = ShardedEngine::new(&cfg, |c| hhzs::exp::common::make_policy("HHZS", c));
+        let mut load = YcsbSource::new(Spec::from_config(&cfg, Kind::Load), clients);
+        se.run_shared(&mut load, clients, None, false);
+        se.flush_all();
+        let mut a = YcsbSource::new(Spec::from_config(&cfg, Kind::A), clients);
+        se.run_shared(&mut a, clients, None, false);
+        se.quiesce();
+        let m = se.merged_metrics();
+        (
+            se.engines[0].now,
+            m.ops_done,
+            m.flushes,
+            m.compactions,
+            m.stall_ns,
+            (m.read_lat.n, m.read_lat.sum),
+            (m.write_lat.n, m.write_lat.sum),
+            m.stalls_avoided,
+        )
+    };
+    let fifo = run(WakePolicy::Fifo);
+    let sa = run(WakePolicy::StallAware);
+    assert_eq!(fifo, sa, "a single-shard stall-aware run diverged from FIFO");
+    assert_eq!(sa.7, 0, "one shard can never be promoted past itself");
+}
+
+// ---------------------------------------------------------------------
+// Traced replay: the checker re-derives the scheduler's decisions
+// ---------------------------------------------------------------------
+
+/// A contended 4-shard stall-aware run with the foreground pool on,
+/// exported and replayed through `trace::check_export`: every WAKE round
+/// must be flush-class-first, non-increasing in effective priority with
+/// the shard tie-break, and consistent with the last traced RISK; every
+/// FG grant must match a greedy earliest-slot replay (occupancy ≤
+/// fg_threads). `bg_threads = 1` maximizes wake traffic.
+#[test]
+fn traced_stall_aware_run_passes_the_scheduler_replay() {
+    let mut cfg = des_cfg(4, 1, WakePolicy::StallAware);
+    cfg.lsm.fg_threads = 2;
+    cfg.trace.enabled = true;
+    cfg.trace.buffer_events = 2_000_000;
+    let clients = cfg.workload.clients;
+    let mut se = ShardedEngine::new(&cfg, |c| hhzs::exp::common::make_policy("HHZS", c));
+    let mut load = YcsbSource::new(Spec::from_config(&cfg, Kind::Load), clients);
+    se.run_shared(&mut load, clients, None, false);
+    se.flush_all();
+    let mut a = YcsbSource::new(Spec::from_config(&cfg, Kind::A), clients);
+    se.run_shared(&mut a, clients, None, false);
+    se.quiesce();
+    let export = se.export_trace_string();
+    assert!(export.contains("RISK|"), "stall-aware run must trace risk pushes");
+    assert!(export.contains("WAKE|"), "contended run must trace wake rounds");
+    assert!(export.contains("FG|"), "fg_threads = 2 run must trace foreground grants");
+    let report = hhzs::trace::check_export(&export).expect("export must parse");
+    assert!(
+        report.ok(),
+        "scheduler replay found violations: {:?}",
+        report.violations
+    );
+}
+
+/// The foreground pool's saturation signal and its off-switch identity:
+/// with `fg_threads` below the closed-loop client count per-op CPU must
+/// queue (measured wait > 0), and with the pool off no sample may ever
+/// be recorded (the seed's contention-free arithmetic).
+#[test]
+fn fg_pool_saturation_measures_wait_and_stays_silent_when_off() {
+    let run = |fg: usize| {
+        let mut cfg = des_cfg(2, 12, WakePolicy::StallAware);
+        cfg.lsm.fg_threads = fg;
+        let clients = cfg.workload.clients;
+        let mut se = ShardedEngine::new(&cfg, |c| hhzs::exp::common::make_policy("HHZS", c));
+        let mut load = YcsbSource::new(Spec::from_config(&cfg, Kind::Load), clients);
+        se.run_shared(&mut load, clients, None, false);
+        se.quiesce();
+        se.merged_metrics()
+    };
+    let off = run(0);
+    assert_eq!(off.fg_cpu_wait.n, 0, "fg_threads = 0 must never record a wait sample");
+    let on = run(2);
+    assert!(
+        on.fg_cpu_wait.n > 0 && on.fg_cpu_wait.sum > 0,
+        "8 clients on 2 fg slots measured no foreground CPU wait (n={}, sum={})",
+        on.fg_cpu_wait.n,
+        on.fg_cpu_wait.sum
+    );
+}
