@@ -87,6 +87,13 @@ pub struct WallclockRun {
     /// pinning the prefix-compression/interning claims (dehydration would
     /// send both sides of those ratios to ~0 and mask a regression).
     pub paging: bool,
+    /// Median members per fused WAL group-commit append in the measured
+    /// phase (0 when group commit is off — ungrouped appends are not
+    /// sampled).
+    pub wal_group_p50: u64,
+    /// Coalesced SST read accesses (each carrying >= 2 member block
+    /// reads) in the measured phase; 0 with read coalescing off.
+    pub fused_reads: u64,
 }
 
 /// Peak resident set size of this process (VmHWM), or 0 if unavailable.
@@ -168,6 +175,8 @@ pub fn run_one(
         key_arena_bytes: e.metrics.key_arena_bytes,
         resident_bytes: resident_total(&e.metrics),
         paging,
+        wal_group_p50: e.metrics.wal_group_size.quantile(0.5),
+        fused_reads: e.metrics.fused_reads,
     }
 }
 
@@ -185,6 +194,7 @@ pub fn run_one_sharded(
     paging: bool,
     wake: WakePolicy,
     fg_threads: usize,
+    batch: Option<&crate::config::BatchConfig>,
 ) -> WallclockRun {
     let mut cfg = bench_cfg(objects, ops, value_size, 24, paging);
     cfg.shards = shards;
@@ -192,6 +202,11 @@ pub fn run_one_sharded(
     cfg.lsm.fg_threads = fg_threads;
     if fg_threads > 0 {
         cfg.workload.clients = cfg.workload.clients.max(4 * fg_threads);
+    }
+    if let Some(b) = batch {
+        cfg.batch = b.clone();
+        // Fused windows need concurrent writers to have anything to fuse.
+        cfg.workload.clients = cfg.workload.clients.max(32);
     }
     let mut se = ShardedEngine::new(&cfg, |c| Box::new(HhzsPolicy::new(c.lsm.num_levels)));
     let clients = cfg.workload.clients;
@@ -230,6 +245,8 @@ pub fn run_one_sharded(
         key_arena_bytes: merged.key_arena_bytes,
         resident_bytes: resident_total(&merged),
         paging,
+        wal_group_p50: merged.wal_group_size.quantile(0.5),
+        fused_reads: merged.fused_reads,
     }
 }
 
@@ -258,7 +275,9 @@ fn run_to_json(r: &WallclockRun) -> String {
             "      \"zone_logical_bytes\": {},\n",
             "      \"key_arena_bytes\": {},\n",
             "      \"resident_bytes\": {},\n",
-            "      \"paging\": {}\n",
+            "      \"paging\": {},\n",
+            "      \"wal_group_p50\": {},\n",
+            "      \"fused_reads\": {}\n",
             "    }}"
         ),
         json_escape(&r.label),
@@ -279,6 +298,8 @@ fn run_to_json(r: &WallclockRun) -> String {
         r.key_arena_bytes,
         r.resident_bytes,
         r.paging,
+        r.wal_group_p50,
+        r.fused_reads,
     )
 }
 
@@ -441,7 +462,7 @@ pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> 
     {
         let label = format!("sharded4-{scale_label}-v1000");
         eprintln!("[bench] {label}: 4-shard frontend ...");
-        let r = run_one_sharded(&label, objects, ops, 1000, 4, false, WakePolicy::Fifo, 0);
+        let r = run_one_sharded(&label, objects, ops, 1000, 4, false, WakePolicy::Fifo, 0, None);
         eprintln!(
             "[bench] {label}: {:.1}s wall, {:.0} sim-ops/s, cpu wait {:.1}ms",
             r.wall_secs,
@@ -497,7 +518,7 @@ pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> 
         let label = "sharded4-stall-aware".to_string();
         eprintln!("[bench] {label}: 4-shard frontend, stall-aware wakes ...");
         let r =
-            run_one_sharded(&label, objects, ops, 1000, 4, false, WakePolicy::StallAware, 0);
+            run_one_sharded(&label, objects, ops, 1000, 4, false, WakePolicy::StallAware, 0, None);
         eprintln!(
             "[bench] {label}: {:.1}s wall, {:.0} sim-ops/s, cpu wait {:.1}ms, \
              stalls avoided {}",
@@ -512,7 +533,7 @@ pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> 
         let label = "sharded4-fg8-saturated".to_string();
         eprintln!("[bench] {label}: 4-shard frontend, fg_threads = 8, saturating clients ...");
         let r =
-            run_one_sharded(&label, objects, ops, 1000, 4, false, WakePolicy::StallAware, 8);
+            run_one_sharded(&label, objects, ops, 1000, 4, false, WakePolicy::StallAware, 8, None);
         eprintln!(
             "[bench] {label}: {:.1}s wall, {:.0} sim-ops/s, fg wait {:.1}ms, \
              stalls avoided {}",
@@ -524,10 +545,47 @@ pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> 
         runs.push(r);
     }
 
+    // The request-fusion rows (appended after the positional rows, like
+    // the scheduler rows): the 4-shard protocol with cross-shard WAL
+    // group commit, and with SST read coalescing, each against the same
+    // saturating client pool. `wal_group_p50` / `fused_reads` in the JSON
+    // are the evidence the fusion layer engaged.
+    {
+        let label = "sharded4-group-commit".to_string();
+        eprintln!("[bench] {label}: 4-shard frontend, WAL group commit ...");
+        let batch = crate::config::BatchConfig {
+            group_commit: true,
+            commit_batch_max: 64,
+            ..Default::default()
+        };
+        let r = run_one_sharded(
+            &label, objects, ops, 1000, 4, false, WakePolicy::Fifo, 0, Some(&batch),
+        );
+        eprintln!(
+            "[bench] {label}: {:.1}s wall, {:.0} sim-ops/s, wal group p50 {}",
+            r.wall_secs, r.sim_ops_per_wall_sec, r.wal_group_p50,
+        );
+        runs.push(r);
+    }
+    {
+        let label = "sharded4-read-coalesce".to_string();
+        eprintln!("[bench] {label}: 4-shard frontend, fused SST reads ...");
+        let batch = crate::config::BatchConfig { read_coalesce: true, ..Default::default() };
+        let r = run_one_sharded(
+            &label, objects, ops, 1000, 4, false, WakePolicy::Fifo, 0, Some(&batch),
+        );
+        eprintln!(
+            "[bench] {label}: {:.1}s wall, {:.0} sim-ops/s, fused reads {}",
+            r.wall_secs, r.sim_ops_per_wall_sec, r.fused_reads,
+        );
+        runs.push(r);
+    }
+
     // runs[0] = streaming v4000, runs[1] = streaming v1000, runs[2] = sharded4 v1000,
     // runs[3] = streaming k24 v100, runs[4] = streaming k128 v100,
     // runs[5] = streaming v1000 paged, runs[6] = sharded4-stall-aware,
-    // runs[7] = sharded4-fg8-saturated. The gate ratios below index
+    // runs[7] = sharded4-fg8-saturated, runs[8] = sharded4-group-commit,
+    // runs[9] = sharded4-read-coalesce. The gate ratios below index
     // runs[0..6] positionally — append new rows after, never between.
     let phys_ratio = runs[0].zone_phys_bytes as f64 / runs[1].zone_phys_bytes.max(1) as f64;
     let logical_ratio =
@@ -566,7 +624,9 @@ pub fn run_wallclock(quick: bool, out: &str, gate: bool) -> std::io::Result<()> 
             "head (always 0 under fifo wakes). resident_bytes sums the four ",
             "resident_*_bytes gauges (zones + WAL + caches kept hydrated by demand paging); ",
             "the sweep rows run with paging = false so their phys ratios keep pinning the ",
-            "compression claims, the -paged row runs the production default. The gates ",
+            "compression claims, the -paged row runs the production default. wal_group_p50 is ",
+            "the median member count per fused WAL group-commit append and fused_reads the ",
+            "coalesced SST read count (both 0 with the [batch] knobs off). The gates ",
             "section feeds the always-armed invariant gates of `bench wallclock --gate`.\",\n",
             "  \"gates\": {{\n",
             "    \"zone_phys_ratio_max\": {:.3},\n",

@@ -305,6 +305,58 @@ impl Default for ResidencyConfig {
     }
 }
 
+/// Request-fusion knobs (group commit + read coalescing; see
+/// [`crate::coordinator::groupcommit`]). All off by default: the off path
+/// is bit-identical to the golden digests, and `commit_batch_max = 1`
+/// reduces group commit to off.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchConfig {
+    /// Hold frontend WAL records arriving within a commit window and issue
+    /// ONE fused device append per window per device (one
+    /// `per_req_overhead_ns` charge for the whole batch). Each member op is
+    /// acked at the batch's finish time; its queue wait is still measured
+    /// from its own issue point.
+    pub group_commit: bool,
+    /// Commit window length in virtual nanoseconds: the first record of a
+    /// batch opens the window, and the batch closes when virtual time
+    /// passes `open + commit_window_ns` (or when it fills). `0` groups only
+    /// records staged at the same virtual instant.
+    pub commit_window_ns: u64,
+    /// Close the batch early once it holds this many records. `1` disables
+    /// grouping entirely (every record commits alone, exactly the
+    /// ungrouped path).
+    pub commit_batch_max: usize,
+    /// Coalesce adjacent/overlapping SST block reads from one logical op
+    /// (multi-get candidate blocks, scan scatter-gather legs, compaction
+    /// input chunks) into one charged device access, promoting contiguous
+    /// random reads to a single sequential read.
+    pub read_coalesce: bool,
+    /// Max byte gap between two block reads that may still fuse into one
+    /// sequential access (the gap bytes are read and discarded, so they
+    /// count toward the fused transfer length but not toward data bytes).
+    pub coalesce_gap_bytes: u64,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            group_commit: false,
+            commit_window_ns: 100_000, // 100 µs — ~10 WAL overheads
+            commit_batch_max: 32,
+            read_coalesce: false,
+            coalesce_gap_bytes: 4096,
+        }
+    }
+}
+
+impl BatchConfig {
+    /// Group commit engages only when enabled AND batches may exceed one
+    /// record; `commit_batch_max = 1` must reduce to the ungrouped path.
+    pub fn group_commit_enabled(&self) -> bool {
+        self.group_commit && self.commit_batch_max > 1
+    }
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct Config {
     pub geometry: Geometry,
@@ -320,6 +372,9 @@ pub struct Config {
     pub crash: CrashConfig,
     /// Demand-paged residency (on by default; observationally free).
     pub residency: ResidencyConfig,
+    /// Request fusion: WAL group commit + SST read coalescing (off by
+    /// default; the off path is golden-pinned).
+    pub batch: BatchConfig,
     /// Number of independent LSM engines the key space is striped over
     /// (see [`crate::shard`]). `1` = the paper's single-engine system; the
     /// substrate lease layer splits zones/memory budgets for `> 1`.
@@ -392,6 +447,7 @@ impl Config {
             trace: TraceConfig::default(),
             crash: CrashConfig::default(),
             residency: ResidencyConfig::default(),
+            batch: BatchConfig::default(),
             shards: 1,
             use_xla_kernels: false,
         }
@@ -448,6 +504,8 @@ impl Config {
              [crash]\nenabled = {}\npoint = \"{}\"\nat_time_ns = {}\nat_op = {}\n\
              seed = {}\nshard = {}\n\n\
              [residency]\npaging = {}\n\n\
+             [batch]\ngroup_commit = {}\ncommit_window_ns = {}\n\
+             commit_batch_max = {}\nread_coalesce = {}\ncoalesce_gap_bytes = {}\n\n\
              [sharding]\nshards = {}\n\n\
              [runtime]\nuse_xla_kernels = {}\n",
             g.scale_denom, g.ssd_zone_cap, g.hdd_zone_cap, g.sst_size, g.ssd_zones,
@@ -463,6 +521,9 @@ impl Config {
             self.crash.enabled, self.crash.point, self.crash.at_time_ns, self.crash.at_op,
             self.crash.seed, self.crash.shard,
             self.residency.paging,
+            self.batch.group_commit, self.batch.commit_window_ns,
+            self.batch.commit_batch_max, self.batch.read_coalesce,
+            self.batch.coalesce_gap_bytes,
             self.shards,
             self.use_xla_kernels,
         )
@@ -553,6 +614,17 @@ impl Config {
             doc.get_usize("crash", "shard", &mut k.shard);
         }
         doc.get_bool("residency", "paging", &mut c.residency.paging);
+        {
+            let b = &mut c.batch;
+            doc.get_bool("batch", "group_commit", &mut b.group_commit);
+            doc.get_u64("batch", "commit_window_ns", &mut b.commit_window_ns);
+            doc.get_usize("batch", "commit_batch_max", &mut b.commit_batch_max);
+            if b.commit_batch_max == 0 {
+                anyhow::bail!("batch.commit_batch_max must be >= 1");
+            }
+            doc.get_bool("batch", "read_coalesce", &mut b.read_coalesce);
+            doc.get_u64("batch", "coalesce_gap_bytes", &mut b.coalesce_gap_bytes);
+        }
         doc.get_usize("sharding", "shards", &mut c.shards);
         c.shards = c.shards.max(1);
         doc.get_bool("runtime", "use_xla_kernels", &mut c.use_xla_kernels);
@@ -704,6 +776,37 @@ mod tests {
         assert!(!c.residency.paging);
         let c2 = Config::from_toml_str(&c.to_toml()).unwrap();
         assert_eq!(c2, c);
+    }
+
+    #[test]
+    fn batch_knobs_default_off_and_round_trip() {
+        let c = Config::small();
+        assert!(!c.batch.group_commit);
+        assert!(!c.batch.read_coalesce);
+        assert!(!c.batch.group_commit_enabled());
+        let c = Config::from_toml_str(
+            "[batch]\ngroup_commit = true\ncommit_window_ns = 50000\n\
+             commit_batch_max = 16\nread_coalesce = true\n\
+             coalesce_gap_bytes = 8192\n",
+        )
+        .unwrap();
+        assert!(c.batch.group_commit);
+        assert_eq!(c.batch.commit_window_ns, 50_000);
+        assert_eq!(c.batch.commit_batch_max, 16);
+        assert!(c.batch.read_coalesce);
+        assert_eq!(c.batch.coalesce_gap_bytes, 8192);
+        assert!(c.batch.group_commit_enabled());
+        let c2 = Config::from_toml_str(&c.to_toml()).unwrap();
+        assert_eq!(c2, c);
+        assert!(Config::from_toml_str("[batch]\ncommit_batch_max = 0\n").is_err());
+    }
+
+    #[test]
+    fn batch_of_one_is_disabled() {
+        let mut c = Config::small();
+        c.batch.group_commit = true;
+        c.batch.commit_batch_max = 1;
+        assert!(!c.batch.group_commit_enabled());
     }
 
     #[test]

@@ -1,0 +1,279 @@
+//! Cross-shard WAL group commit: the per-domain batch ledger.
+//!
+//! A [`GroupCommitter`] is a shared handle rebound across shards in
+//! `ShardedEngine::new` exactly like the `SharedTimer`/`CpuPool`/`KeyArena`/
+//! `TraceSink`: all engines of one frontend stage WAL records into ONE
+//! ledger, so records from different shards arriving within a commit window
+//! fuse into a single device-visible append on the shared SSD/HDD pair.
+//!
+//! The ledger itself is pure bookkeeping — it never touches the clock, the
+//! devices, or the metrics. An engine *stages* a member (its record is
+//! already on media, appended untimed) and the frontend later *closes* due
+//! batches from the global event loop: one fused `charge` on the shared
+//! timer, then per-member acks. A batch becomes due when its deadline event
+//! fires (`staged_at + commit_window_ns` of its first member) or when it
+//! fills to `commit_batch_max`.
+//!
+//! Batch ids are unique for the life of the committer, so a deadline event
+//! for a batch that already closed by fill is recognisably stale (no-op).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::config::BatchConfig;
+use crate::sim::Ns;
+use crate::zone::Dev;
+
+/// One staged WAL record awaiting its batch's fused append.
+#[derive(Clone, Copy, Debug)]
+pub struct Member {
+    pub shard: usize,
+    pub client: usize,
+    /// Record length on media (its share of the fused transfer).
+    pub bytes: u64,
+    /// When the client op was issued (latency base).
+    pub issued_at: Ns,
+    /// When the record was staged (queue-wait base: per-op wait is still
+    /// measured from its own issue point).
+    pub staged_at: Ns,
+    /// When the op's foreground CPU work completes; the ack is
+    /// `max(fused finish, cpu_ready)`.
+    pub cpu_ready: Ns,
+}
+
+/// An open or due batch: all members bound for one fused append on `dev`.
+#[derive(Debug)]
+pub struct Batch {
+    pub id: u64,
+    pub dev: Dev,
+    pub opened_at: Ns,
+    pub deadline: Ns,
+    pub members: Vec<Member>,
+}
+
+impl Batch {
+    pub fn total_bytes(&self) -> u64 {
+        self.members.iter().map(|m| m.bytes).sum()
+    }
+}
+
+/// What [`GroupCommitter::stage`] did, so the staging engine can schedule
+/// the window-deadline event for a batch it just opened.
+#[derive(Clone, Copy, Debug)]
+pub struct StageOutcome {
+    pub batch_id: u64,
+    /// This member opened a new batch: push a `WalCommit(batch_id)` event
+    /// at `deadline` and emit the `BATCHO` trace record.
+    pub opened: bool,
+    pub deadline: Ns,
+}
+
+#[derive(Debug)]
+struct Inner {
+    enabled: bool,
+    window_ns: u64,
+    batch_max: usize,
+    next_id: u64,
+    /// At most one open batch per device (Ssd = 0, Hdd = 1).
+    open: [Option<Batch>; 2],
+    /// Closed batches awaiting the frontend's fused append, close order.
+    due: Vec<Batch>,
+    /// Total members ever staged (test/assert visibility).
+    staged_total: u64,
+}
+
+fn dev_ix(dev: Dev) -> usize {
+    match dev {
+        Dev::Ssd => 0,
+        Dev::Hdd => 1,
+    }
+}
+
+/// Cloneable per-domain handle (see module docs).
+#[derive(Clone, Debug)]
+pub struct GroupCommitter(Rc<RefCell<Inner>>);
+
+impl GroupCommitter {
+    pub fn new(cfg: &BatchConfig) -> Self {
+        GroupCommitter(Rc::new(RefCell::new(Inner {
+            enabled: cfg.group_commit_enabled(),
+            window_ns: cfg.commit_window_ns,
+            batch_max: cfg.commit_batch_max.max(1),
+            next_id: 0,
+            open: [None, None],
+            due: Vec::new(),
+            staged_total: 0,
+        })))
+    }
+
+    /// Does group commit engage at all? (`group_commit && batch_max > 1`;
+    /// the off path never calls any other method.)
+    pub fn enabled(&self) -> bool {
+        self.0.borrow().enabled
+    }
+
+    /// Stage one record into the open batch for `dev` (opening one if
+    /// needed). A batch that reaches `commit_batch_max` moves to the due
+    /// queue immediately.
+    pub fn stage(&self, dev: Dev, m: Member) -> StageOutcome {
+        let mut g = self.0.borrow_mut();
+        g.staged_total += 1;
+        let window = g.window_ns;
+        let batch_max = g.batch_max;
+        let ix = dev_ix(dev);
+        let mut opened = false;
+        if g.open[ix].is_none() {
+            let id = g.next_id;
+            g.next_id += 1;
+            g.open[ix] = Some(Batch {
+                id,
+                dev,
+                opened_at: m.staged_at,
+                deadline: m.staged_at + window,
+                members: Vec::new(),
+            });
+            opened = true;
+        }
+        let batch = g.open[ix].as_mut().unwrap();
+        batch.members.push(m);
+        let (batch_id, deadline, full) =
+            (batch.id, batch.deadline, batch.members.len() >= batch_max);
+        if full {
+            let b = g.open[ix].take().unwrap();
+            g.due.push(b);
+        }
+        StageOutcome { batch_id, opened, deadline }
+    }
+
+    /// The window-deadline event for `id` fired: close the batch if it is
+    /// still open. Stale ids (batch already closed by fill) are a no-op —
+    /// ids are never reused.
+    pub fn on_deadline(&self, id: u64) {
+        let mut g = self.0.borrow_mut();
+        for ix in 0..2 {
+            if g.open[ix].as_ref().is_some_and(|b| b.id == id) {
+                let b = g.open[ix].take().unwrap();
+                g.due.push(b);
+                return;
+            }
+        }
+    }
+
+    pub fn has_due(&self) -> bool {
+        !self.0.borrow().due.is_empty()
+    }
+
+    /// Drain the due queue in close order (the frontend's post-event hook).
+    pub fn take_due(&self) -> Vec<Batch> {
+        std::mem::take(&mut self.0.borrow_mut().due)
+    }
+
+    /// Members currently staged in open batches (not yet due).
+    pub fn open_members(&self) -> usize {
+        let g = self.0.borrow();
+        g.open.iter().flatten().map(|b| b.members.len()).sum()
+    }
+
+    /// Total members ever staged through this committer.
+    pub fn staged_total(&self) -> u64 {
+        self.0.borrow().staged_total
+    }
+
+    /// Two handles share one ledger (the shard-layer rebinding invariant,
+    /// mirroring `SharedTimer::shares_with`).
+    pub fn shares_with(&self, other: &GroupCommitter) -> bool {
+        Rc::ptr_eq(&self.0, &other.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(window_ns: u64, batch_max: usize) -> BatchConfig {
+        BatchConfig {
+            group_commit: true,
+            commit_window_ns: window_ns,
+            commit_batch_max: batch_max,
+            ..BatchConfig::default()
+        }
+    }
+
+    fn member(shard: usize, at: Ns) -> Member {
+        Member { shard, client: 0, bytes: 100, issued_at: at, staged_at: at, cpu_ready: at }
+    }
+
+    #[test]
+    fn first_member_opens_and_deadline_closes() {
+        let gc = GroupCommitter::new(&cfg(1_000, 64));
+        let o = gc.stage(Dev::Ssd, member(0, 50));
+        assert!(o.opened);
+        assert_eq!(o.deadline, 1_050);
+        let o2 = gc.stage(Dev::Ssd, member(1, 300));
+        assert!(!o2.opened, "window already open");
+        assert_eq!(o2.batch_id, o.batch_id);
+        assert!(!gc.has_due());
+        assert_eq!(gc.open_members(), 2);
+        gc.on_deadline(o.batch_id);
+        assert!(gc.has_due());
+        let due = gc.take_due();
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].members.len(), 2);
+        assert_eq!(due[0].total_bytes(), 200);
+        assert_eq!(gc.open_members(), 0);
+        assert_eq!(gc.staged_total(), 2);
+    }
+
+    #[test]
+    fn fill_closes_early_and_stale_deadline_is_noop() {
+        let gc = GroupCommitter::new(&cfg(1_000, 2));
+        let o = gc.stage(Dev::Ssd, member(0, 10));
+        gc.stage(Dev::Ssd, member(1, 20));
+        assert!(gc.has_due(), "batch_max reached must close the batch");
+        // A third record opens a NEW batch with a fresh id.
+        let o3 = gc.stage(Dev::Ssd, member(2, 30));
+        assert!(o3.opened);
+        assert_ne!(o3.batch_id, o.batch_id);
+        // The first batch's deadline event is now stale: no-op.
+        gc.on_deadline(o.batch_id);
+        assert_eq!(gc.take_due().len(), 1);
+        assert_eq!(gc.open_members(), 1);
+    }
+
+    #[test]
+    fn devices_batch_independently() {
+        let gc = GroupCommitter::new(&cfg(1_000, 64));
+        let a = gc.stage(Dev::Ssd, member(0, 10));
+        let b = gc.stage(Dev::Hdd, member(0, 10));
+        assert!(a.opened && b.opened);
+        assert_ne!(a.batch_id, b.batch_id);
+        gc.on_deadline(a.batch_id);
+        let due = gc.take_due();
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].dev, Dev::Ssd);
+        assert_eq!(gc.open_members(), 1, "the HDD batch stays open");
+        gc.on_deadline(b.batch_id);
+        assert_eq!(gc.take_due()[0].dev, Dev::Hdd);
+    }
+
+    #[test]
+    fn handles_share_one_ledger() {
+        let gc = GroupCommitter::new(&cfg(1_000, 64));
+        let clone = gc.clone();
+        clone.stage(Dev::Ssd, member(0, 10));
+        assert_eq!(gc.open_members(), 1);
+        assert!(gc.shares_with(&clone));
+        assert!(!gc.shares_with(&GroupCommitter::new(&cfg(1_000, 64))));
+    }
+
+    #[test]
+    fn disabled_config_reports_disabled() {
+        let mut c = cfg(1_000, 1);
+        assert!(!GroupCommitter::new(&c).enabled(), "batch_max 1 reduces to off");
+        c.commit_batch_max = 8;
+        c.group_commit = false;
+        assert!(!GroupCommitter::new(&c).enabled());
+        c.group_commit = true;
+        assert!(GroupCommitter::new(&c).enabled());
+    }
+}

@@ -10,6 +10,7 @@
 //! [`crate::sim::device`]; latencies include queue wait, so migration and
 //! compaction interference show up in the measured tails (Exp#6).
 
+pub mod groupcommit;
 pub mod walcache;
 
 use std::cell::{Cell, RefCell};
@@ -35,7 +36,8 @@ use crate::trace::{hint_kind, Event, IoOp, JobKind, TraceSink};
 use crate::zenfs::ZenFs;
 use crate::zone::{Dev, ZoneId};
 
-use self::walcache::PoolManager;
+use self::groupcommit::{Batch, GroupCommitter, Member};
+use self::walcache::{PoolManager, StagedAppend};
 
 /// CPU cost constants (virtual ns) for non-I/O work on the op path.
 const CPU_MEMTABLE_NS: Ns = 1_000;
@@ -67,6 +69,10 @@ enum EventKind {
     MigrationStep,
     PolicyTick,
     Sample,
+    /// Group-commit window deadline for batch `id` (see
+    /// [`groupcommit::GroupCommitter`]): closes the batch if it is still
+    /// open; stale for a batch already closed by fill (no-op).
+    WalCommit(u64),
 }
 
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -83,6 +89,20 @@ pub(crate) enum FrontendOp {
     Parked(Op),
     /// Executed; the op completes at this virtual time.
     Done(Ns),
+    /// Staged into the shared group committer: the WAL record is on media
+    /// (untimed) and the MemTable apply ran, but the client is acked only
+    /// when its batch's fused append completes (the frontend reschedules
+    /// it from the batch-close hook).
+    Staged,
+}
+
+/// What [`Engine::stage_put`] did with a write bound for group commit.
+enum StagePut {
+    /// Joined a batch; the ack arrives at the batch close.
+    Staged,
+    /// Could not batch (WAL overflow fallback, or a crash fired mid-put):
+    /// the op completes at this virtual time like an unbatched one.
+    Immediate(Ns),
 }
 
 impl Ord for Ev {
@@ -229,6 +249,11 @@ pub struct Engine {
     /// [`crate::shard::ShardedEngine`] rebinds every shard to ONE manager
     /// per domain, so the paging knob and counters are domain-global.
     residency: ResidencyHandle,
+    /// The cross-shard group-commit ledger ([`cfg.batch`]). Rebound to ONE
+    /// shared committer per frontend domain by
+    /// [`crate::shard::ShardedEngine`]; disabled (never consulted) with the
+    /// knobs off, keeping the off path bit-identical.
+    gc: GroupCommitter,
 }
 
 impl Engine {
@@ -269,6 +294,7 @@ impl Engine {
         let cpu = Rc::new(RefCell::new(CpuPool::new(cfg.lsm.bg_threads, 1, cfg.lsm.cpu_sched)));
         cpu.borrow_mut().set_wake(cfg.lsm.wake);
         let fg = Rc::new(RefCell::new(FgPool::new(cfg.lsm.fg_threads)));
+        let gc = GroupCommitter::new(&cfg.batch);
         let mut e = Engine {
             cfg,
             fs,
@@ -306,6 +332,7 @@ impl Engine {
             crash: None,
             xla: None,
             residency,
+            gc,
         };
         e.crash = CrashInjector::from_config(&e.cfg.crash);
         let tick = e.cfg.hhzs.scan_interval_ns;
@@ -385,6 +412,35 @@ impl Engine {
     /// Do two engines charge foreground CPU against the same pool?
     pub fn shares_fg_pool_with(&self, other: &Engine) -> bool {
         Rc::ptr_eq(&self.fg, &other.fg)
+    }
+
+    /// Handle to this engine's group committer (for the shard layer /
+    /// frontend).
+    pub(crate) fn group_committer_handle(&self) -> GroupCommitter {
+        self.gc.clone()
+    }
+
+    /// Join a shared group-commit ledger (the frontend's domain). Must
+    /// happen before any op runs — members staged into the private ledger
+    /// would never be closed by the shared frontend hook.
+    pub(crate) fn share_group_committer(&mut self, gc: GroupCommitter) {
+        assert!(
+            self.seq == 0 && self.metrics.ops_done == 0,
+            "group committer must be shared before any op is staged"
+        );
+        self.gc = gc;
+    }
+
+    /// Do two engines stage WAL records into the same committer?
+    pub fn shares_group_committer_with(&self, other: &Engine) -> bool {
+        self.gc.shares_with(&other.gc)
+    }
+
+    /// Total WAL records this engine's (possibly shared) committer ever
+    /// staged — test visibility that group commit actually engaged; 0
+    /// with the knobs off.
+    pub fn group_commit_staged_total(&self) -> u64 {
+        self.gc.staged_total()
     }
 
     /// Charge `cost` ns of foreground CPU issued at `now`. Uncontended
@@ -663,6 +719,70 @@ impl Engine {
         wal_finish.max(cpu_done)
     }
 
+    /// The group-commit variant of [`Engine::do_put`]: the WAL record
+    /// lands on media untimed and joins the shared committer's open batch
+    /// for its device; the MemTable apply, seal check, and foreground CPU
+    /// all happen now, but the device time is charged once per batch when
+    /// the window closes — which is when the client is acked. Two ways
+    /// out of batching: the overflow fallback (pool full, timed append
+    /// already charged) and a crash firing in the WAL→MemTable window
+    /// (the torn record never registered as a member, so earlier staged
+    /// members stay durable on media and ack after recovery).
+    fn stage_put(
+        &mut self,
+        c: usize,
+        key: &[u8],
+        value: Option<Payload>,
+        issued_at: Ns,
+    ) -> StagePut {
+        self.seq += 1;
+        let seq = self.seq;
+        self.wal_buf.clear();
+        self.wal_buf.push_entry(key, seq, value);
+        let preferred = if self.pool.is_reserved_mode() {
+            Dev::Ssd
+        } else {
+            self.with_view(|p, v| p.place_wal(v))
+        };
+        let staged = {
+            let Engine { fs, metrics, pool, now, wal_buf, .. } = self;
+            pool.append_wal_staged(fs, metrics, *now, wal_buf, preferred)
+        };
+        let record_len = self.wal_buf.len();
+        if let Some(p) = self.wal_crash_point() {
+            self.crash_fire(p);
+            return StagePut::Immediate(self.now + CPU_MEMTABLE_NS);
+        }
+        let key = self.arena.intern(key);
+        self.mem.insert(key, seq, value);
+        self.mem.wal_bytes += record_len;
+        if self.mem.approx_bytes() as u64 >= self.cfg.lsm.memtable_size {
+            self.seal_memtable();
+        }
+        self.metrics.writes_done += 1;
+        let cpu_done = self.fg_charge(self.now, CPU_MEMTABLE_NS);
+        match staged {
+            StagedAppend::Overflow { finish } => StagePut::Immediate(finish.max(cpu_done)),
+            StagedAppend::Staged { dev, len } => {
+                let m = Member {
+                    shard: self.cpu_shard,
+                    client: c,
+                    bytes: len,
+                    issued_at,
+                    staged_at: self.now,
+                    cpu_ready: cpu_done,
+                };
+                let outcome = self.gc.stage(dev, m);
+                if outcome.opened {
+                    let (id, at) = (outcome.batch_id, self.now);
+                    self.trace.emit(|| Event::BatchOpen { id, dev, at });
+                    self.push_event(outcome.deadline, EventKind::WalCommit(outcome.batch_id));
+                }
+                StagePut::Staged
+            }
+        }
+    }
+
     fn seal_memtable(&mut self) {
         debug_assert!(self.immutables.len() + 1 < self.cfg.lsm.max_memtables);
         let seg = self.pool.seal_segment();
@@ -883,18 +1003,33 @@ impl Engine {
     ) {
         let dev = self.fs.file_dev(meta.id).expect("scan SST exists");
         let from_block = meta.find_block(start).unwrap_or(0);
+        // With `read_coalesce` on, this file's scatter-gather leg fuses
+        // into ONE charged device access: the blocks (adjacent in the
+        // file) are consumed untimed and the fused span is charged after
+        // the loop, promoted to a sequential read when more than one
+        // block joined (a lone block keeps its random-read cost).
+        let coalesce = self.cfg.batch.read_coalesce;
+        let mut fused_bytes = 0u64;
+        let mut fused_members = 0u32;
         for (i, h) in meta.blocks.iter().enumerate().skip(from_block) {
-            // First block of a file random (seek), subsequent sequential.
-            let kind = if i == from_block { AccessKind::RandRead } else { AccessKind::SeqRead };
             let data = self
                 .fs
                 .read_file_untimed(meta.id, h.offset, h.len as u64)
                 .expect("scan block");
-            let (s, f) = self.fs.charge(self.now, dev, kind, h.len as u64);
-            self.metrics.record_queue_wait(dev, s.saturating_sub(self.now));
-            self.trace_io(dev, IoOp::ScanRead, None, Some(meta.id), h.len as u64, s, self.now);
-            self.metrics.record_read(dev, h.len as u64);
-            *finish = (*finish).max(f);
+            if coalesce {
+                fused_bytes += h.len as u64;
+                fused_members += 1;
+            } else {
+                // First block of a file random (seek), subsequent
+                // sequential.
+                let kind =
+                    if i == from_block { AccessKind::RandRead } else { AccessKind::SeqRead };
+                let (s, f) = self.fs.charge(self.now, dev, kind, h.len as u64);
+                self.metrics.record_queue_wait(dev, s.saturating_sub(self.now));
+                self.trace_io(dev, IoOp::ScanRead, None, Some(meta.id), h.len as u64, s, self.now);
+                self.metrics.record_read(dev, h.len as u64);
+                *finish = (*finish).max(f);
+            }
             // Zero-copy block walk (prefix-shared keys compare in place);
             // only qualifying entries are cloned into the merge sources.
             for e in data.entries() {
@@ -907,6 +1042,30 @@ impl Engine {
             }
             if *live >= n {
                 break;
+            }
+        }
+        if coalesce && fused_members > 0 {
+            let kind =
+                if fused_members > 1 { AccessKind::SeqRead } else { AccessKind::RandRead };
+            let (s, f) = self.fs.charge_fused(self.now, dev, kind, fused_bytes, fused_members);
+            self.metrics.record_queue_wait(dev, s.saturating_sub(self.now));
+            self.trace_io(dev, IoOp::ScanRead, None, Some(meta.id), fused_bytes, s, self.now);
+            self.metrics.record_read(dev, fused_bytes);
+            *finish = (*finish).max(f);
+            if fused_members > 1 {
+                self.metrics.fused_reads += 1;
+                self.metrics.fused_read_bytes += fused_bytes;
+                let (shard, members, bytes, at) =
+                    (self.cpu_shard, fused_members, fused_bytes, self.now);
+                self.trace.emit(|| Event::ReadFuse {
+                    dev,
+                    shard,
+                    members,
+                    bytes,
+                    member_bytes: bytes,
+                    gap_bytes: 0,
+                    at,
+                });
             }
         }
         self.metrics.record_sst_read(meta.id, meta.level, dev);
@@ -1192,15 +1351,35 @@ impl Engine {
             }
             Job::Compaction(mut j) => match j.phase {
                 CompactionPhase::Read => {
-                    // Charge the next read chunk on some device.
+                    // Charge the next read chunk on some device. With
+                    // `read_coalesce` on, up to 8 adjacent chunks of one
+                    // input fuse into a single charged request (one
+                    // per-request overhead for the span).
                     if let Some(slot) = j.read_plan.iter_mut().find(|(_, rem)| *rem > 0) {
-                        let n = chunk.min(slot.1);
+                        let fuse = if self.cfg.batch.read_coalesce { 8 } else { 1 };
+                        let n = (chunk * fuse).min(slot.1);
+                        let members = (n.div_ceil(chunk.max(1)) as u32).max(1);
                         slot.1 -= n;
                         let dev = slot.0;
-                        let (s, f) = self.fs.charge(self.now, dev, AccessKind::SeqRead, n);
+                        let (s, f) =
+                            self.fs.charge_fused(self.now, dev, AccessKind::SeqRead, n, members);
                         self.metrics.record_queue_wait(dev, s.saturating_sub(self.now));
                         self.trace_io(dev, IoOp::CompactionRead, Some(id), None, n, s, self.now);
                         self.metrics.compaction_read_bytes += n;
+                        if members > 1 {
+                            self.metrics.fused_reads += 1;
+                            self.metrics.fused_read_bytes += n;
+                            let (shard, bytes, at) = (self.cpu_shard, n, self.now);
+                            self.trace.emit(|| Event::ReadFuse {
+                                dev,
+                                shard,
+                                members,
+                                bytes,
+                                member_bytes: bytes,
+                                gap_bytes: 0,
+                                at,
+                            });
+                        }
                         self.jobs.insert(id, Job::Compaction(j));
                         self.push_event(f, EventKind::JobStep(id));
                     } else {
@@ -1527,22 +1706,29 @@ impl Engine {
         }
         let is_write = Self::op_kind_is_write(&op);
         let is_scan = matches!(op, Op::Scan { .. });
-        let finish = self.execute_op(op);
-        let lat = finish.saturating_sub(issued_at);
-        if issued_at < self.now {
-            // Charge the stall to the measured phase only: a writer parked
-            // across a `begin_phase` boundary starts charging at the
-            // boundary, not at its pre-reset issue time — so the UNSTALL
-            // span and `Metrics::stall_ns` agree (checker-enforced) and
-            // the fresh phase never inherits pre-reset stall time.
-            let base = issued_at.max(self.metrics.start_ns);
-            let dur = self.now.saturating_sub(base);
-            if dur > 0 {
-                self.metrics.stall_ns += dur;
-                let (shard, at) = (self.cpu_shard, self.now);
-                self.trace.emit(|| Event::Unstall { shard, client: c, at, dur });
+        // Cross-shard group commit: plain writes stage into the shared
+        // committer and ack at the batch's fused append. Reads, scans, and
+        // RMW (whose read half pins the op to this event) keep the
+        // immediate path; with the knobs off `gc.enabled()` is false and
+        // this block never runs.
+        let finish = if self.gc.enabled() {
+            match op {
+                Op::Insert { key, value } | Op::Update { key, value } => {
+                    match self.stage_put(c, &key, Some(value), issued_at) {
+                        StagePut::Staged => {
+                            self.note_unstall(c, issued_at);
+                            return FrontendOp::Staged;
+                        }
+                        StagePut::Immediate(f) => f,
+                    }
+                }
+                other => self.execute_op(other),
             }
-        }
+        } else {
+            self.execute_op(op)
+        };
+        let lat = finish.saturating_sub(issued_at);
+        self.note_unstall(c, issued_at);
         if is_write {
             self.metrics.write_lat.record(lat);
         } else if is_scan {
@@ -1552,6 +1738,74 @@ impl Engine {
         }
         self.metrics.ops_done += 1;
         FrontendOp::Done(finish)
+    }
+
+    /// Charge the stall to the measured phase only: a writer parked across
+    /// a `begin_phase` boundary starts charging at the boundary, not at
+    /// its pre-reset issue time — so the UNSTALL span and
+    /// `Metrics::stall_ns` agree (checker-enforced) and the fresh phase
+    /// never inherits pre-reset stall time.
+    fn note_unstall(&mut self, c: usize, issued_at: Ns) {
+        if issued_at < self.now {
+            let base = issued_at.max(self.metrics.start_ns);
+            let dur = self.now.saturating_sub(base);
+            if dur > 0 {
+                self.metrics.stall_ns += dur;
+                let (shard, at) = (self.cpu_shard, self.now);
+                self.trace.emit(|| Event::Unstall { shard, client: c, at, dur });
+            }
+        }
+    }
+
+    /// Charge one closed batch's fused WAL append on the shared device
+    /// timer — ONE `per_req_overhead_ns` for the whole window — and emit
+    /// the close record. Called by the frontend's batch-close hook on the
+    /// first member's engine (any engine reaches the same shared timer).
+    /// Returns the fused grant `(start, finish)`.
+    pub(crate) fn charge_batch_close(&mut self, at: Ns, b: &Batch) -> (Ns, Ns) {
+        self.now = self.now.max(at);
+        self.trace.stamp(self.now);
+        let bytes = b.total_bytes();
+        let members = b.members.len() as u32;
+        let (start, finish) =
+            self.fs.charge_fused(self.now, b.dev, AccessKind::SeqWrite, bytes, members);
+        self.metrics.wal_group_size.record(members as u64);
+        let (id, dev, now) = (b.id, b.dev, self.now);
+        self.trace
+            .emit(|| Event::BatchClose { id, dev, members, bytes, start, finish, at: now });
+        (start, finish)
+    }
+
+    /// Book one member's share of a closed batch on its own engine: queue
+    /// wait measured from its stage point, Wal byte traffic (the request
+    /// count lands on the first member only — the batch was ONE device
+    /// request), the per-member Io record the snapshot checker sums, and
+    /// the ack-time latency sample. Returns the ack time for the
+    /// frontend's client rescheduling.
+    pub(crate) fn book_batch_member(
+        &mut self,
+        batch_id: u64,
+        dev: Dev,
+        m: &Member,
+        first: bool,
+        start: Ns,
+        finish: Ns,
+    ) -> Ns {
+        self.metrics.record_queue_wait(dev, start.saturating_sub(m.staged_at));
+        self.metrics.record_write_ios(
+            WriteCategory::Wal,
+            dev,
+            m.bytes,
+            if first { 1 } else { 0 },
+        );
+        self.trace_io(dev, IoOp::Wal, None, None, m.bytes, start, m.staged_at);
+        let ack = finish.max(m.cpu_ready);
+        self.metrics.write_lat.record(ack.saturating_sub(m.issued_at));
+        self.metrics.ops_done += 1;
+        let (id, shard, client, bytes, staged) =
+            (batch_id, m.shard, m.client, m.bytes, m.staged_at);
+        self.trace.emit(|| Event::BatchAck { id, shard, client, bytes, staged, ack });
+        ack
     }
 
     /// One shard's share of a scatter-gathered scan, charged at the global
@@ -1611,6 +1865,9 @@ impl Engine {
                     self.push_event(self.now + self.cfg.hhzs.sample_interval_ns, EventKind::Sample);
                 }
             }
+            // The frontend's post-event hook drains the due queue and
+            // issues the fused append.
+            EventKind::WalCommit(id) => self.gc.on_deadline(id),
         }
         None
     }
@@ -1740,6 +1997,9 @@ impl Engine {
                     self.push_event(next, EventKind::PolicyTick);
                 }
                 EventKind::Sample => {}
+                // Sync mode never stages (group commit is frontend-driven)
+                // — drain stale deadline events defensively.
+                EventKind::WalCommit(id) => self.gc.on_deadline(id),
             }
         }
         self.now = self.now.max(t);
@@ -2350,6 +2610,13 @@ impl Engine {
                 }
             }
         }
+        // 2½. Fused prefetch (`read_coalesce`): adjacent bloom-positive
+        //     candidate blocks of one SST are read as one device request
+        //     and installed in the block cache, so the per-key fetches
+        //     below hit memory instead of issuing a random read each.
+        if self.cfg.batch.read_coalesce {
+            self.prefetch_fused_blocks(keys, &resolved, &per_sst, &bloom_pass);
+        }
         // 3. Per-key block fetches for bloom-positive candidates, in the
         //    usual search order. Background work advanced by drain_until
         //    may compact candidates away between keys, so re-resolve the
@@ -2383,6 +2650,102 @@ impl Engine {
             self.drain_until(finish.max(self.now));
         }
         out
+    }
+
+    /// The `read_coalesce` half of the batched read path: for each SST
+    /// with bloom-positive candidates, sort the distinct candidate block
+    /// handles by offset, group runs whose inter-block gaps are within
+    /// `coalesce_gap_bytes`, and charge every ≥2-member run as ONE fused
+    /// sequential read of the whole span (gaps included in the transfer,
+    /// conserved in the FUSE trace record). The member blocks are read
+    /// untimed and installed in the block cache; single-block runs are
+    /// left to [`Engine::fetch_block`]'s unfused path.
+    fn prefetch_fused_blocks(
+        &mut self,
+        keys: &[Vec<u8>],
+        resolved: &[bool],
+        per_sst: &std::collections::HashMap<SstId, Vec<usize>>,
+        bloom_pass: &std::collections::HashSet<(SstId, usize)>,
+    ) {
+        let gap_max = self.cfg.batch.coalesce_gap_bytes;
+        let mut sst_ids: Vec<SstId> = per_sst.keys().copied().collect();
+        sst_ids.sort_unstable();
+        let mut ready = self.now;
+        for sst in sst_ids {
+            let Some(meta) = self.version.find(sst) else { continue };
+            let Some(dev) = self.fs.file_dev(sst) else { continue };
+            let mut handles: Vec<(u64, u64)> = Vec::new();
+            for &i in &per_sst[&sst] {
+                if resolved[i] || !bloom_pass.contains(&(sst, i)) {
+                    continue;
+                }
+                if let Some(bi) = meta.find_block(&keys[i]) {
+                    let h = meta.blocks[bi];
+                    handles.push((h.offset, h.len as u64));
+                }
+            }
+            handles.sort_unstable();
+            handles.dedup();
+            handles.retain(|&(off, _)| !self.cache.contains(&BlockKey { sst, offset: off }));
+            // Group into gap-bounded runs of adjacent blocks.
+            let mut runs: Vec<Vec<(u64, u64)>> = Vec::new();
+            for h in handles {
+                match runs.last_mut() {
+                    Some(r)
+                        if {
+                            let (o, l) = *r.last().unwrap();
+                            h.0 <= o + l + gap_max
+                        } =>
+                    {
+                        r.push(h)
+                    }
+                    _ => runs.push(vec![h]),
+                }
+            }
+            for run in runs {
+                if run.len() < 2 {
+                    continue;
+                }
+                let (first_off, _) = run[0];
+                let (last_off, last_len) = *run.last().unwrap();
+                let span = last_off + last_len - first_off;
+                let member_bytes: u64 = run.iter().map(|&(_, l)| l).sum();
+                let members = run.len() as u32;
+                let (s, f) =
+                    self.fs.charge_fused(self.now, dev, AccessKind::SeqRead, span, members);
+                self.metrics.record_queue_wait(dev, s.saturating_sub(self.now));
+                self.trace_io(dev, IoOp::BlockRead, None, Some(sst), span, s, self.now);
+                self.metrics.record_read(dev, span);
+                self.metrics.fused_reads += 1;
+                self.metrics.fused_read_bytes += span;
+                let (shard, bytes, gap_bytes, at) =
+                    (self.cpu_shard, span, span - member_bytes, self.now);
+                self.trace.emit(|| Event::ReadFuse {
+                    dev,
+                    shard,
+                    members,
+                    bytes,
+                    member_bytes,
+                    gap_bytes,
+                    at,
+                });
+                self.metrics.record_sst_read(sst, meta.level, dev);
+                self.policy.on_sst_read(sst, dev, self.now);
+                ready = ready.max(f);
+                for (off, len) in run {
+                    let Ok(data) = self.fs.read_file_untimed(sst, off, len) else { continue };
+                    let arc = Arc::new(data);
+                    debug_assert!(arc.is_hydrated(), "cache admits hydrated copies only");
+                    let evicted = self.cache.insert(BlockKey { sst, offset: off }, arc);
+                    for ev in evicted {
+                        self.handle_cache_eviction(ev.key.sst, ev.key.offset, ev.data);
+                    }
+                }
+            }
+        }
+        // The per-key fetches start after the fused transfers land: cache
+        // hits must not complete before the device read that filled them.
+        self.drain_until(ready);
     }
 
     /// Bytes of SSTs currently on the SSD, per level (Fig 5(b)).

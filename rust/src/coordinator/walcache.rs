@@ -24,6 +24,17 @@ use crate::wire::WireBuf;
 use crate::zenfs::ZenFs;
 use crate::zone::{Dev, ZoneId};
 
+/// Outcome of [`PoolManager::append_wal_staged`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StagedAppend {
+    /// The record is on media (untimed); the caller must register it with
+    /// the group committer so the batch close charges the fused transfer.
+    Staged { dev: Dev, len: u64 },
+    /// No pool zone could host it — fell back to a timed overflow append
+    /// completing at `finish`; the record must NOT join a batch.
+    Overflow { finish: Ns },
+}
+
 /// Location of a cached block inside an SSD cache zone.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CacheLoc {
@@ -155,6 +166,21 @@ impl PoolManager {
     // WAL
     // ------------------------------------------------------------------
 
+    /// A record that does not fit the active WAL zone strands the zone's
+    /// tail remainder — those bytes are write-pointer dead space until the
+    /// zone resets. Account them (metric + trace) before switching zones;
+    /// they were previously dropped silently.
+    fn account_stranded_tail(&mut self, fs: &ZenFs, metrics: &mut Metrics, at: Ns) {
+        let Some((dev, z)) = self.active_wal else { return };
+        let pad = fs.device_ref(dev).zone(z).remaining();
+        if pad == 0 {
+            return;
+        }
+        metrics.wal_pad_bytes += pad;
+        let shard = self.trace_shard;
+        self.trace.emit(|| Event::WalPad { shard, dev, zone: z, bytes: pad, at });
+    }
+
     /// Append a WAL record for the current segment. Returns the device used
     /// and the virtual completion time. `preferred` is the policy's WAL
     /// placement for dynamic mode.
@@ -173,6 +199,7 @@ impl PoolManager {
             Some((dev, z)) => fs.device_ref(dev).zone(z).remaining() < len,
         };
         if need_new {
+            self.account_stranded_tail(fs, metrics, now);
             self.active_wal = self.allocate_wal_zone(fs, preferred);
         }
         let Some((dev, z)) = self.active_wal else {
@@ -193,6 +220,54 @@ impl PoolManager {
         metrics.record_queue_wait(dev, start.saturating_sub(now));
         metrics.record_write(WriteCategory::Wal, dev, len);
         self.trace_io(dev, IoOp::Wal, None, len, start.saturating_sub(now), now);
+        self.note_record(dev, z, offset, len);
+        finish
+    }
+
+    /// Stage a WAL record for a cross-shard group commit: the record lands
+    /// on media *untimed* (full segment/run/ref bookkeeping, so crash
+    /// recovery replays it), but no device time, queue wait, or write
+    /// traffic is charged — the frontend's batch close issues ONE fused
+    /// append for the whole window and attributes those there. The
+    /// overflow path (nowhere to place the record) cannot batch and falls
+    /// back to the timed behaviour.
+    pub fn append_wal_staged(
+        &mut self,
+        fs: &mut ZenFs,
+        metrics: &mut Metrics,
+        now: Ns,
+        record: &WireBuf,
+        preferred: Dev,
+    ) -> StagedAppend {
+        let len = record.len();
+        let need_new = match self.active_wal {
+            None => true,
+            Some((dev, z)) => fs.device_ref(dev).zone(z).remaining() < len,
+        };
+        if need_new {
+            self.account_stranded_tail(fs, metrics, now);
+            self.active_wal = self.allocate_wal_zone(fs, preferred);
+        }
+        let Some((dev, z)) = self.active_wal else {
+            self.wal_overflows += 1;
+            let (s, f) = fs.charge(now, preferred, crate::sim::AccessKind::SeqWrite, len);
+            metrics.record_queue_wait(preferred, s.saturating_sub(now));
+            metrics.record_write(WriteCategory::Wal, preferred, len);
+            self.trace_io(preferred, IoOp::WalOverflow, None, len, s.saturating_sub(now), now);
+            self.last_record = None;
+            return StagedAppend::Overflow { finish: f };
+        };
+        let offset = fs
+            .device(dev)
+            .append_untimed(z, record)
+            .expect("WAL append within checked capacity");
+        self.note_record(dev, z, offset, len);
+        StagedAppend::Staged { dev, len }
+    }
+
+    /// Segment/run/zone-ref/tail bookkeeping shared by the timed and
+    /// staged append paths.
+    fn note_record(&mut self, dev: Dev, z: ZoneId, offset: u64, len: u64) {
         let seg = self.segments.entry(self.cur_segment).or_default();
         if !seg.zones.contains(&(dev, z)) {
             seg.zones.push((dev, z));
@@ -207,7 +282,6 @@ impl PoolManager {
             _ => seg.runs.push((dev, z, offset, len)),
         }
         self.last_record = Some((self.cur_segment, dev, z, offset, len));
-        finish
     }
 
     /// Logical length of the most recent WAL record, if it is still the
@@ -704,6 +778,53 @@ mod tests {
         assert_eq!(segs[0].0, seg0);
         assert_eq!(segs[0].1.entries().count(), 1);
         assert_eq!(segs[1].1.entries().count(), 1);
+    }
+
+    #[test]
+    fn stranded_zone_tail_is_accounted_as_pad() {
+        let (mut fs, mut pm, mut m) = fs_with_pool();
+        let zone_cap = fs.ssd.zone_cap;
+        let rec = wire(&vec![0u8; (zone_cap / 2 + 100) as usize]);
+        pm.append_wal(&mut fs, &mut m, 0, &rec, Dev::Ssd);
+        assert_eq!(m.wal_pad_bytes, 0, "first record opens a fresh zone");
+        // The second record does not fit zone 1's tail: the remainder is
+        // stranded behind the write pointer and must be accounted.
+        pm.append_wal(&mut fs, &mut m, 0, &rec, Dev::Ssd);
+        assert_eq!(m.wal_pad_bytes, zone_cap - (zone_cap / 2 + 100));
+        assert_eq!(pm.wal_zones_in_use(), 2);
+    }
+
+    #[test]
+    fn staged_append_lands_on_media_without_charging() {
+        let (mut fs, mut pm, mut m) = fs_with_pool();
+        let rec = wal_record(0);
+        let len = rec.len();
+        match pm.append_wal_staged(&mut fs, &mut m, 0, &rec, Dev::Ssd) {
+            StagedAppend::Staged { dev, len: l } => {
+                assert_eq!(dev, Dev::Ssd);
+                assert_eq!(l, len);
+            }
+            StagedAppend::Overflow { .. } => panic!("pool has room"),
+        }
+        // No write traffic yet — the batch close attributes the fused
+        // transfer — but the record is durable and recoverable.
+        assert!(m.write_traffic.get(&(WriteCategory::Wal, Dev::Ssd)).is_none());
+        assert_eq!(pm.wal_zones_in_use(), 1);
+        assert_eq!(pm.last_record_len(), Some(len));
+        let segs = pm.recover_segments(&mut fs, &mut m, 0);
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].1.entries().count(), 1);
+    }
+
+    #[test]
+    fn staged_record_tears_like_a_timed_one() {
+        let (mut fs, mut pm, mut m) = fs_with_pool();
+        let first_len = wal_record(0).len();
+        pm.append_wal(&mut fs, &mut m, 0, &wal_record(0), Dev::Ssd);
+        pm.append_wal_staged(&mut fs, &mut m, 0, &wal_record(1), Dev::Ssd);
+        let (dev, zone, wp) = pm.tear_wal_tail(&mut fs, 5).expect("tail tracked");
+        assert_eq!(wp, first_len + 5, "write pointer lands 5 bytes into the staged record");
+        assert_eq!(fs.device_ref(dev).zone(zone).wp(), wp);
     }
 
     #[test]

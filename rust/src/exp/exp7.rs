@@ -20,7 +20,7 @@
 //! copies, WAL windows, torn tails) rather than the logical dataset.
 
 use crate::config::{Config, WakePolicy};
-use crate::metrics::Metrics;
+use crate::metrics::{Metrics, WriteCategory};
 use crate::report::Table;
 use crate::shard::ShardedEngine;
 use crate::ycsb::{Kind, Spec, YcsbSource};
@@ -35,6 +35,17 @@ pub const SHARD_COUNTS: [usize; 7] = [1, 2, 4, 8, 16, 64, 256];
 /// gauges are per-shard and sum on merge, so this is the domain total.
 pub fn resident_total_bytes(m: &Metrics) -> u64 {
     m.resident_ssd_bytes + m.resident_hdd_bytes + m.resident_wal_bytes + m.resident_cache_bytes
+}
+
+/// Device-visible WAL write requests (both devices) — the request count
+/// group commit amortizes: a fused append counts once however many
+/// members it carried.
+pub fn wal_write_ios(m: &Metrics) -> u64 {
+    m.write_traffic
+        .iter()
+        .filter(|((cat, _), _)| matches!(cat, WriteCategory::Wal))
+        .map(|(_, c)| c.ios)
+        .sum()
 }
 
 /// Load + YCSB A at `n` shards; returns (load ops/s, A ops/s, merged A
@@ -112,6 +123,57 @@ fn sched_row(t: &mut Table, base: &Config, shards: usize, wake: WakePolicy, fg: 
     m
 }
 
+/// The request-fusion comparison table's header (shared by the full run
+/// and the `--quick` CI gate so the CSVs line up).
+fn batching_table(title: &'static str) -> Table {
+    Table::new(
+        title,
+        &[
+            "mode",
+            "A ops/s",
+            "acked ops",
+            "wal write ios",
+            "wal group p50",
+            "ssd queue wait ms",
+            "fused reads",
+            "wal pad KiB",
+        ],
+    )
+}
+
+/// One row of the request-fusion comparison: the §4.1 protocol at
+/// `shards` shards, with the batching knobs off or on (group commit at
+/// the default 100 µs window plus read coalescing), under a saturating
+/// closed-loop client pool so commit windows actually fill. Returns the
+/// merged A-phase metrics for the gates.
+fn batching_row(t: &mut Table, base: &Config, shards: usize, on: bool) -> Metrics {
+    let mut cfg = base.clone();
+    if on {
+        cfg.batch.group_commit = true;
+        cfg.batch.commit_batch_max = 64;
+        cfg.batch.read_coalesce = true;
+    }
+    // Saturation: enough concurrent writers that a commit window catches
+    // many staged records — the regime the fusion layer is built for.
+    cfg.workload.clients = cfg.workload.clients.max(32);
+    println!(
+        "exp7 batching: group_commit={} at {shards} shard(s)...",
+        if on { "on" } else { "off" }
+    );
+    let (_, a_tput, m, _, _) = run_one(&cfg, shards);
+    t.row(vec![
+        if on { "grouped" } else { "off" }.to_string(),
+        format!("{a_tput:.0}"),
+        m.ops_done.to_string(),
+        wal_write_ios(&m).to_string(),
+        m.wal_group_size.quantile(0.5).to_string(),
+        format!("{:.2}", m.queue_wait.get(&Dev::Ssd).copied().unwrap_or(0) as f64 / 1e6),
+        m.fused_reads.to_string(),
+        format!("{:.1}", m.wal_pad_bytes as f64 / 1024.0),
+    ]);
+    m
+}
+
 pub fn run(opts: &ExpOpts) {
     let csv = opts.csv_dir.as_deref();
     let mut cfg = opts.cfg.clone();
@@ -134,6 +196,7 @@ pub fn run(opts: &ExpOpts) {
             "resident MiB",
             "balance max/min",
             "migrations",
+            "wal ios",
         ],
     );
     // The stall/wait breakdown behind the aggregate columns: who stalls
@@ -190,6 +253,7 @@ pub fn run(opts: &ExpOpts) {
             format!("{:.2}", resident_total_bytes(&m) as f64 / (1024.0 * 1024.0)),
             format!("{:.2}", max_ops as f64 / (min_ops.max(1)) as f64),
             (m.migrations_cap + m.migrations_pop).to_string(),
+            wal_write_ios(&m).to_string(),
         ]);
     }
     t.emit(csv, "exp7_shards");
@@ -205,6 +269,16 @@ pub fn run(opts: &ExpOpts) {
     sched_row(&mut st, &cfg, 4, WakePolicy::StallAware, 0);
     sched_row(&mut st, &cfg, 4, WakePolicy::StallAware, 8);
     st.emit(csv, "exp7_sched");
+
+    // Request fusion off vs on at 4 shards under a saturating client
+    // pool: what cross-shard group commit does to the device-visible WAL
+    // request count and the shared SSD's queue.
+    let mut ft = batching_table(
+        "Exp#7 batching: cross-shard group commit + read coalescing at 4 shards (saturated)",
+    );
+    batching_row(&mut ft, &cfg, 4, false);
+    batching_row(&mut ft, &cfg, 4, true);
+    ft.emit(csv, "exp7_batching");
 }
 
 /// CI smoke: shards {8, 64} at 1× and 4× keyspace with the always-on
@@ -283,4 +357,39 @@ pub fn run_quick(opts: &ExpOpts) {
         "saturated fg pool (clients > slots) measured zero foreground CPU wait"
     );
     println!("exp7 --quick: scheduler comparison gates passed");
+
+    // Request-fusion gate — machine-independent (every input is a
+    // deterministic virtual count): at 4 shards under a saturating client
+    // pool, cross-shard group commit must ack the SAME ops with at most
+    // half the device-visible WAL requests and no higher shared-SSD queue
+    // wait. The 2× floor is conservative: a filled 100 µs window fuses
+    // tens of records, but overflow fallbacks and tail windows keep some
+    // singleton appends.
+    let mut ft = batching_table(
+        "Exp#7 --quick batching: cross-shard group commit at 4 shards (saturated)",
+    );
+    let off = batching_row(&mut ft, &base, 4, false);
+    let on = batching_row(&mut ft, &base, 4, true);
+    ft.emit(csv, "exp7_quick_batching");
+    assert_eq!(
+        off.ops_done, on.ops_done,
+        "group commit must ack exactly the ops the ungrouped run acked"
+    );
+    assert_eq!(off.wal_group_size.n, 0, "off path must never sample a group size");
+    assert!(on.wal_group_size.n > 0, "grouped run never closed a fused batch");
+    let (ios_off, ios_on) = (wal_write_ios(&off), wal_write_ios(&on));
+    assert!(
+        2 * ios_on <= ios_off,
+        "group commit gate: {ios_on} grouped WAL write ios > 0.5 x {ios_off} ungrouped \
+         at equal acked ops — the fusion layer is not amortizing requests"
+    );
+    let qw = |m: &Metrics| m.queue_wait.get(&Dev::Ssd).copied().unwrap_or(0);
+    assert!(
+        qw(&on) <= qw(&off),
+        "group commit gate: grouped SSD queue wait {} ns > ungrouped {} ns — \
+         batching made the shared device queue worse",
+        qw(&on),
+        qw(&off)
+    );
+    println!("exp7 --quick: group-commit fusion gate passed");
 }

@@ -43,6 +43,12 @@
 //! and the export written to FILE when the command completes (demo only;
 //! `exp`/`bench` drive many runs and would overwrite the file per run).
 //!
+//! Request-fusion knobs (all default off; see the `[batch]` TOML section):
+//! `--group-commit [--commit-window-ns NS] [--commit-batch-max N]` batches
+//! cross-shard WAL appends into one fused device request per commit window,
+//! and `--read-coalesce [--coalesce-gap-bytes N]` fuses adjacent SST block
+//! reads into one charged access.
+//!
 //! Argument parsing is hand-rolled (no external crates are available in
 //! this offline build environment).
 
@@ -124,6 +130,27 @@ fn build_config(args: &Args) -> anyhow::Result<Config> {
     }
     if let Some(v) = args.flags.get("fg-threads") {
         cfg.lsm.fg_threads = v.parse()?;
+    }
+    // Request fusion (mirrors the `[batch]` TOML section): `--group-commit`
+    // batches cross-shard WAL appends into one fused device request per
+    // commit window, `--read-coalesce` fuses adjacent SST block reads.
+    if args.flags.contains_key("group-commit") {
+        cfg.batch.group_commit = true;
+    }
+    if let Some(v) = args.flags.get("commit-window-ns") {
+        cfg.batch.group_commit = true;
+        cfg.batch.commit_window_ns = v.parse()?;
+    }
+    if let Some(v) = args.flags.get("commit-batch-max") {
+        cfg.batch.commit_batch_max = v.parse::<usize>()?;
+        anyhow::ensure!(cfg.batch.commit_batch_max > 0, "--commit-batch-max must be > 0");
+    }
+    if args.flags.contains_key("read-coalesce") {
+        cfg.batch.read_coalesce = true;
+    }
+    if let Some(v) = args.flags.get("coalesce-gap-bytes") {
+        cfg.batch.read_coalesce = true;
+        cfg.batch.coalesce_gap_bytes = v.parse()?;
     }
     if let Some(v) = args.flags.get("trace") {
         cfg.trace.enabled = true;
@@ -421,7 +448,9 @@ fn usage() -> ! {
          traced workload (Perfetto-loadable JSON), `hhzs trace check FILE` to\n\
          replay its DES invariants, and add `--trace FILE` to `demo` to trace it\n\
          (add `--cpu-sched stall_aware` / `--fg-threads N` to any run-like\n\
-         command for stall-aware CPU wakes / contended foreground CPU)\n\
+         command for stall-aware CPU wakes / contended foreground CPU;\n\
+         `--group-commit` / `--read-coalesce` for cross-shard WAL group\n\
+         commit and fused SST reads)\n\
          run `hhzs crash grid --quick` for the crash/power-loss injection grid\n\
          (CrashPoint x trigger x seed x shards; asserts the 4 recovery\n\
          invariants per cell) and `hhzs crash run --crash-point mid_flush\n\

@@ -100,6 +100,18 @@ pub struct Metrics {
     pub compactions: u64,
     pub compaction_read_bytes: u64,
     pub compaction_write_bytes: u64,
+    /// Group-commit batch sizes: one sample per fused WAL append, value =
+    /// member count. Empty when group commit is off (every append then is
+    /// its own device request and is not sampled here).
+    pub wal_group_size: LogHistogram,
+    /// Fused SST read accesses (one per coalesced device access carrying
+    /// >= 2 member block reads) and the data bytes they carried.
+    pub fused_reads: u64,
+    pub fused_read_bytes: u64,
+    /// Bytes stranded at active WAL zone tails when a record didn't fit
+    /// and the writer moved to a fresh zone (the zone-fill loss group
+    /// commit reduces).
+    pub wal_pad_bytes: u64,
     /// Resident interned-key bytes (unique key bytes + per-key overhead)
     /// of the engine's key arena at phase end. A *gauge*, not a counter —
     /// and a domain-level one: shards of one frontend share ONE arena and
@@ -127,6 +139,17 @@ impl Metrics {
         let c = self.write_traffic.entry((cat, dev)).or_default();
         c.bytes += bytes;
         c.ios += 1;
+    }
+
+    /// Like [`Metrics::record_write`] but with an explicit device-visible
+    /// request count: a fused group-commit append attributes its single
+    /// device IO to the first member's shard (`ios = 1`) and `ios = 0` to
+    /// the rest, so the merged `write_ios` counts device-visible requests
+    /// exactly.
+    pub fn record_write_ios(&mut self, cat: WriteCategory, dev: Dev, bytes: u64, ios: u64) {
+        let c = self.write_traffic.entry((cat, dev)).or_default();
+        c.bytes += bytes;
+        c.ios += ios;
     }
 
     pub fn record_read(&mut self, dev: Dev, bytes: u64) {
@@ -240,6 +263,10 @@ impl Metrics {
         self.compactions += other.compactions;
         self.compaction_read_bytes += other.compaction_read_bytes;
         self.compaction_write_bytes += other.compaction_write_bytes;
+        self.wal_group_size.merge(&other.wal_group_size);
+        self.fused_reads += other.fused_reads;
+        self.fused_read_bytes += other.fused_read_bytes;
+        self.wal_pad_bytes += other.wal_pad_bytes;
         // Domain gauge: engines sharing one arena stamp the same value;
         // max (not sum) keeps the merged number the domain's residency.
         self.key_arena_bytes = self.key_arena_bytes.max(other.key_arena_bytes);
@@ -376,6 +403,36 @@ mod tests {
         assert_eq!(a.resident_hdd_bytes, 30);
         assert_eq!(a.resident_wal_bytes, 10);
         assert_eq!(a.resident_cache_bytes, 7);
+    }
+
+    #[test]
+    fn fusion_counters_merge() {
+        let mut a = Metrics::default();
+        a.wal_group_size.record(4);
+        a.fused_reads = 2;
+        a.fused_read_bytes = 8192;
+        a.wal_pad_bytes = 100;
+        let mut b = Metrics::default();
+        b.wal_group_size.record(8);
+        b.fused_reads = 1;
+        b.fused_read_bytes = 4096;
+        b.wal_pad_bytes = 23;
+        a.merge(&b);
+        assert_eq!(a.wal_group_size.n, 2);
+        assert_eq!(a.wal_group_size.sum, 12);
+        assert_eq!(a.fused_reads, 3);
+        assert_eq!(a.fused_read_bytes, 12_288);
+        assert_eq!(a.wal_pad_bytes, 123);
+    }
+
+    #[test]
+    fn record_write_ios_controls_request_count() {
+        let mut m = Metrics::default();
+        m.record_write_ios(WriteCategory::Wal, Dev::Ssd, 100, 1);
+        m.record_write_ios(WriteCategory::Wal, Dev::Ssd, 100, 0);
+        m.record_write_ios(WriteCategory::Wal, Dev::Ssd, 100, 0);
+        let c = m.write_traffic[&(WriteCategory::Wal, Dev::Ssd)];
+        assert_eq!((c.bytes, c.ios), (300, 1));
     }
 
     #[test]

@@ -32,6 +32,7 @@ use std::cell::{Cell, RefCell};
 use std::collections::BinaryHeap;
 use std::rc::Rc;
 
+use crate::coordinator::groupcommit::{Batch, GroupCommitter};
 use crate::coordinator::{Engine, FrontendOp, Op, OpSource};
 use crate::lsm::Entry;
 use crate::sim::cpu::CpuPool;
@@ -90,6 +91,11 @@ pub struct Frontend<'a> {
     /// hint once per popped event — clockless emission sites (zone
     /// resets, cache-zone evictions) then carry the exact global time.
     trace: TraceSink,
+    /// The domain's shared group-commit ledger (shard 0's handle; the
+    /// shard layer rebinds every engine to it). `batching` caches
+    /// `gc.enabled()` so the off path costs one bool test per event.
+    gc: GroupCommitter,
+    batching: bool,
     events: BinaryHeap<FrontEv>,
     clients: Vec<FrontClient>,
     done_clients: usize,
@@ -108,6 +114,8 @@ impl<'a> Frontend<'a> {
         assert_eq!(router.shards(), engines.len(), "router does not match the engines");
         let cpu = engines[0].cpu_pool_handle();
         let trace = engines[0].trace_handle();
+        let gc = engines[0].group_committer_handle();
+        let batching = gc.enabled();
         Frontend {
             engines,
             router,
@@ -115,6 +123,8 @@ impl<'a> Frontend<'a> {
             event_seq,
             cpu,
             trace,
+            gc,
+            batching,
             events: BinaryHeap::new(),
             clients: Vec::new(),
             done_clients: 0,
@@ -214,6 +224,15 @@ impl<'a> Frontend<'a> {
                     self.engines[s].poll_cpu(at);
                 }
             }
+            // Batch-close hook: a window deadline (`WalCommit` event) or a
+            // fill during this event moved batches to the due queue —
+            // issue each one's fused append NOW, at the same `(time, seq)`
+            // point of the merged order, and ack its members.
+            if self.batching && self.gc.has_due() {
+                for b in self.gc.take_due() {
+                    self.close_batch(&b, at);
+                }
+            }
         }
         let end = self.now;
         for e in self.engines.iter_mut() {
@@ -259,6 +278,25 @@ impl<'a> Frontend<'a> {
                 self.clients[c].pending = Some((op, shard));
             }
             FrontendOp::Done(finish) => self.schedule_next(c, at, finish),
+            FrontendOp::Staged => {
+                // The record is on media and its batch is ledgered; the
+                // client sleeps until the batch's fused append acks it from
+                // the close hook (which reschedules it via `close_batch`).
+            }
+        }
+    }
+
+    /// Issue one due batch's fused append and wake its members. The first
+    /// member's shard charges the shared device timer ONCE (one
+    /// `per_req_overhead_ns` for the whole batch); every member then books
+    /// its own queue wait, latency, and trace records on its home shard,
+    /// and its client reschedules at `max(fused finish, cpu_ready)`.
+    fn close_batch(&mut self, b: &Batch, at: Ns) {
+        let s0 = b.members[0].shard;
+        let (start, finish) = self.engines[s0].charge_batch_close(at, b);
+        for (i, m) in b.members.iter().enumerate() {
+            let ack = self.engines[m.shard].book_batch_member(b.id, b.dev, m, i == 0, start, finish);
+            self.schedule_next(m.client, at, ack);
         }
     }
 

@@ -115,6 +115,7 @@ impl ShardedEngine {
         let arena = engines[0].key_arena_handle();
         let trace = engines[0].trace_handle();
         let residency = engines[0].residency_handle();
+        let gc = engines[0].group_committer_handle();
         cpu.borrow_mut().configure(engines.len(), cfg.lsm.cpu_sched, cfg.lsm.wake);
         for (s, e) in engines.iter_mut().enumerate().skip(1) {
             e.fs.ssd.set_timer(ssd_timer.clone());
@@ -124,6 +125,9 @@ impl ShardedEngine {
             e.share_fg_pool(fg.clone());
             e.share_key_arena(arena.clone());
             e.share_residency(residency.clone());
+            // ONE group-commit ledger: WAL records staged by any shard
+            // fuse into the same per-device commit windows.
+            e.share_group_committer(gc.clone());
             // ONE trace ring for the domain: rebinding AFTER the timer
             // swap re-tags the shared per-device FIFOs, and events from
             // every shard land in the shared buffer in emission order.

@@ -31,6 +31,11 @@ pub struct Traffic {
     pub read_ios: u64,
     pub write_ios: u64,
     pub busy_ns: u64,
+    /// Logical requests absorbed by fused accesses: a fused access with
+    /// `members > 1` counts 1 in `read_ios`/`write_ios` (it is one
+    /// device-visible request) and `members` here, so utilization
+    /// attribution stays exact before/after fusion.
+    pub fused_ios: u64,
 }
 
 /// QD1 FIFO timing server for one device.
@@ -77,6 +82,21 @@ impl DeviceTimer {
     /// Perform an access: returns `(start, finish)` in virtual time and
     /// advances the server.
     pub fn access(&mut self, now: Ns, kind: AccessKind, bytes: u64) -> (Ns, Ns) {
+        self.access_fused(now, kind, bytes, 1)
+    }
+
+    /// Perform one device-visible access carrying `members` logical
+    /// requests fused into a single transfer of `bytes`: one
+    /// `per_req_overhead_ns` (or IOP) charge for the whole batch. With
+    /// `members <= 1` this is exactly [`DeviceTimer::access`] — same
+    /// timing, same counters, same trace bytes.
+    pub fn access_fused(
+        &mut self,
+        now: Ns,
+        kind: AccessKind,
+        bytes: u64,
+        members: u32,
+    ) -> (Ns, Ns) {
         let start = now.max(self.free_at);
         let svc = self.service_ns(kind, bytes);
         let finish = start + svc;
@@ -84,7 +104,15 @@ impl DeviceTimer {
         self.traffic.busy_ns += svc;
         if let Some(dev) = self.trace_dev {
             self.trace.stamp(start);
-            self.trace.emit(|| Event::Dev { dev, kind, bytes, issue: now, start, finish });
+            self.trace.emit(|| Event::Dev {
+                dev,
+                kind,
+                bytes,
+                issue: now,
+                start,
+                finish,
+                members,
+            });
         }
         match kind {
             AccessKind::SeqRead | AccessKind::RandRead => {
@@ -95,6 +123,9 @@ impl DeviceTimer {
                 self.traffic.write_bytes += bytes;
                 self.traffic.write_ios += 1;
             }
+        }
+        if members > 1 {
+            self.traffic.fused_ios += members as u64;
         }
         (start, finish)
     }
@@ -136,6 +167,17 @@ impl SharedTimer {
     /// Perform an access: `(start, finish)`; `start - now` is queue wait.
     pub fn access(&self, now: Ns, kind: AccessKind, bytes: u64) -> (Ns, Ns) {
         self.0.borrow_mut().access(now, kind, bytes)
+    }
+
+    /// One fused device-visible access for `members` logical requests.
+    pub fn access_fused(
+        &self,
+        now: Ns,
+        kind: AccessKind,
+        bytes: u64,
+        members: u32,
+    ) -> (Ns, Ns) {
+        self.0.borrow_mut().access_fused(now, kind, bytes, members)
     }
 
     pub fn service_ns(&self, kind: AccessKind, bytes: u64) -> Ns {
@@ -236,6 +278,69 @@ mod tests {
         // The 1 ms idle gap is not busy time.
         assert!(t.utilization(f2) < 1.0);
         assert_eq!(t.traffic.busy_ns, f2 - 1_000_000);
+    }
+
+    #[test]
+    fn fused_access_is_one_request() {
+        // A fused append of N records costs ONE per_req_overhead_ns plus
+        // the bytes of all members — strictly cheaper than N separate
+        // appends, and it occupies exactly one QD1 service interval.
+        let mut t = DeviceTimer::new(DeviceProfile::zn540_ssd());
+        let rec = 1032u64;
+        let n = 8u32;
+        let split: Ns = (0..n)
+            .map(|_| t.service_ns(AccessKind::SeqWrite, rec))
+            .sum();
+        let fused = t.service_ns(AccessKind::SeqWrite, rec * n as u64);
+        let overhead = t.profile.per_req_overhead_ns;
+        assert!(fused < split, "fused={fused} split={split}");
+        assert!(split - fused >= (n as u64 - 1) * overhead - n as u64);
+        let (s, f) = t.access_fused(0, AccessKind::SeqWrite, rec * n as u64, n);
+        assert_eq!((s, f), (0, fused));
+        assert_eq!(t.traffic.write_ios, 1);
+        assert_eq!(t.traffic.fused_ios, n as u64);
+        assert_eq!(t.traffic.write_bytes, rec * n as u64);
+    }
+
+    #[test]
+    fn qd1_serializes_fused() {
+        // A fused access holds the FIFO server exactly like a plain one:
+        // the next request issued at t=0 starts at the fused finish.
+        let mut t = DeviceTimer::new(DeviceProfile::zn540_ssd());
+        let (s1, f1) = t.access_fused(0, AccessKind::SeqWrite, MIB, 4);
+        let (s2, f2) = t.access(0, AccessKind::SeqWrite, MIB);
+        assert_eq!(s1, 0);
+        assert_eq!(s2, f1);
+        assert!(f2 > f1);
+        assert_eq!(t.traffic.busy_ns, f2);
+    }
+
+    #[test]
+    fn fused_members_one_is_plain_access() {
+        let mut a = DeviceTimer::new(DeviceProfile::zn540_ssd());
+        let mut b = DeviceTimer::new(DeviceProfile::zn540_ssd());
+        let ra = a.access(7, AccessKind::RandRead, 4096);
+        let rb = b.access_fused(7, AccessKind::RandRead, 4096, 1);
+        assert_eq!(ra, rb);
+        assert_eq!(a.traffic.read_ios, b.traffic.read_ios);
+        assert_eq!(b.traffic.fused_ios, 0);
+    }
+
+    #[test]
+    fn fused_span_promotes_random_to_sequential() {
+        // Two adjacent 4-KiB random reads fused into one 8-KiB sequential
+        // read are cheaper than the two IOPs on both profiles (the 8-KiB
+        // span is past each profile's rand/seq crossover).
+        for p in [DeviceProfile::zn540_ssd(), DeviceProfile::st14000_smr_hdd()] {
+            let t = DeviceTimer::new(p);
+            let two_rand = 2 * t.service_ns(AccessKind::RandRead, 4096);
+            let fused_seq = t.service_ns(AccessKind::SeqRead, 8192);
+            assert!(
+                fused_seq < two_rand,
+                "{}: fused={fused_seq} rand2={two_rand}",
+                t.profile.name
+            );
+        }
     }
 
     #[test]

@@ -35,6 +35,7 @@
 //!
 //! ```text
 //! DEV|dev|kind|bytes|issue|start|finish        device service interval (QD1 FIFO)
+//! DEV|dev|kind|bytes|issue|start|finish|members   fused interval (members >= 2 logical reqs)
 //! IO|dev|op|shard|job|sst|bytes|wait|at        one Metrics::record_queue_wait site
 //! CPUWAIT|shard|kind|job|wait|at               one Metrics::cpu_wait sample
 //! ACQ|shard|kind|job|at|in_use                 CPU slot acquired (occupancy after)
@@ -60,7 +61,16 @@
 //! FG|shard|start|cost|wait|at                  foreground CPU charge (fg pool)
 //! SNAP|shard|at|stalls|stall_ns|qw_ssd|qw_hdd|cpuw_n|cpuw_sum|ops|fl|comp|fgw_n|fgw_sum
 //!                                              Metrics snapshot (phase boundary)
+//! BATCHO|id|dev|at                             group-commit batch opens (first record staged)
+//! BATCHC|id|dev|members|bytes|start|finish|at  batch closes: ONE fused device append
+//! BATCHA|id|shard|client|bytes|staged|ack      one member op acked (ack >= fused finish)
+//! FUSE|dev|shard|members|bytes|member_bytes|gap|at  coalesced SST read access
+//! WALPAD|shard|dev|zone|bytes|at               WAL zone tail stranded (record didn't fit)
 //! ```
+//!
+//! The checker replays BATCH/FUSE causally: every BATCHO must close, the
+//! fused access's byte total must equal the sum of its BATCHA members, the
+//! member count must match, and no ack may precede the fused finish.
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap, VecDeque};
@@ -150,8 +160,11 @@ fn kind_name(k: AccessKind) -> &'static str {
 #[derive(Clone, Debug)]
 pub enum Event {
     /// A device service interval from the QD1 FIFO timer: queued at
-    /// `issue`, served `[start, finish)`.
-    Dev { dev: Dev, kind: AccessKind, bytes: u64, issue: Ns, start: Ns, finish: Ns },
+    /// `issue`, served `[start, finish)`. `members > 1` marks a fused
+    /// access carrying that many logical requests in one transfer (the
+    /// record then grows an eighth field; plain accesses keep the
+    /// original 7-field form byte-for-byte).
+    Dev { dev: Dev, kind: AccessKind, bytes: u64, issue: Ns, start: Ns, finish: Ns, members: u32 },
     /// One `Metrics::record_queue_wait` site, with causal ids.
     Io {
         dev: Dev,
@@ -230,6 +243,23 @@ pub enum Event {
         fgw_n: u64,
         fgw_sum: u128,
     },
+    /// A group-commit batch opened: the first WAL record of a window was
+    /// staged. `id` is the causal key tying BATCHO/BATCHC/BATCHA together.
+    BatchOpen { id: u64, dev: Dev, at: Ns },
+    /// The batch closed: ONE fused device append of `bytes` (the sum of
+    /// all member records) served `[start, finish)` for `members` ops.
+    BatchClose { id: u64, dev: Dev, members: u32, bytes: u64, start: Ns, finish: Ns, at: Ns },
+    /// One member of a closed batch acked: the op staged its record at
+    /// `staged` and completes at `ack >= finish` (device durability plus
+    /// any residual CPU time).
+    BatchAck { id: u64, shard: usize, client: usize, bytes: u64, staged: Ns, ack: Ns },
+    /// A coalesced SST read: `members` block requests fused into one
+    /// device access of `bytes` = `member_bytes` data + `gap_bytes`
+    /// read-and-discarded gap.
+    ReadFuse { dev: Dev, shard: usize, members: u32, bytes: u64, member_bytes: u64, gap_bytes: u64, at: Ns },
+    /// The active WAL zone's tail remainder was stranded because the next
+    /// record didn't fit (mirrors `Metrics::wal_pad_bytes`).
+    WalPad { shard: usize, dev: Dev, zone: ZoneId, bytes: u64, at: Ns },
 }
 
 fn opt(v: Option<u64>) -> String {
@@ -259,8 +289,20 @@ impl Event {
     /// The pipe-delimited record for this event (see module docs).
     pub fn line(&self) -> String {
         match self {
-            Event::Dev { dev, kind, bytes, issue, start, finish } => {
-                format!("DEV|{}|{}|{bytes}|{issue}|{start}|{finish}", dev.name(), kind_name(*kind))
+            Event::Dev { dev, kind, bytes, issue, start, finish, members } => {
+                if *members > 1 {
+                    format!(
+                        "DEV|{}|{}|{bytes}|{issue}|{start}|{finish}|{members}",
+                        dev.name(),
+                        kind_name(*kind)
+                    )
+                } else {
+                    format!(
+                        "DEV|{}|{}|{bytes}|{issue}|{start}|{finish}",
+                        dev.name(),
+                        kind_name(*kind)
+                    )
+                }
             }
             Event::Io { dev, op, shard, job, sst, bytes, wait, at } => format!(
                 "IO|{}|{}|{shard}|{}|{}|{bytes}|{wait}|{at}",
@@ -333,6 +375,21 @@ impl Event {
             } => format!(
                 "SNAP|{shard}|{at}|{stalls}|{stall_ns}|{qw_ssd}|{qw_hdd}|{cpuw_n}|{cpuw_sum}|{ops}|{flushes}|{compactions}|{fgw_n}|{fgw_sum}"
             ),
+            Event::BatchOpen { id, dev, at } => format!("BATCHO|{id}|{}|{at}", dev.name()),
+            Event::BatchClose { id, dev, members, bytes, start, finish, at } => format!(
+                "BATCHC|{id}|{}|{members}|{bytes}|{start}|{finish}|{at}",
+                dev.name()
+            ),
+            Event::BatchAck { id, shard, client, bytes, staged, ack } => {
+                format!("BATCHA|{id}|{shard}|{client}|{bytes}|{staged}|{ack}")
+            }
+            Event::ReadFuse { dev, shard, members, bytes, member_bytes, gap_bytes, at } => format!(
+                "FUSE|{}|{shard}|{members}|{bytes}|{member_bytes}|{gap_bytes}|{at}",
+                dev.name()
+            ),
+            Event::WalPad { shard, dev, zone, bytes, at } => {
+                format!("WALPAD|{shard}|{}|{zone}|{bytes}|{at}", dev.name())
+            }
         }
     }
 }
@@ -522,7 +579,7 @@ fn perfetto_events(buf: &TraceBuf, shards: usize) -> Vec<String> {
     let mut mig_open: BTreeMap<(usize, u64), (Dev, Dev, Ns)> = BTreeMap::new();
     for ev in &buf.events {
         match ev {
-            Event::Dev { dev, kind, bytes, issue, start, finish } => {
+            Event::Dev { dev, kind, bytes, issue, start, finish, .. } => {
                 let t = dev_tid(*dev) as usize;
                 body.push(slice(1, t, *start, finish - start, &format!(
                     "{} {bytes}B",
@@ -625,7 +682,12 @@ fn perfetto_events(buf: &TraceBuf, shards: usize) -> Vec<String> {
             | Event::StallRisk { .. }
             | Event::SchedWake { .. }
             | Event::FgCharge { .. }
-            | Event::Snapshot { .. } => {}
+            | Event::Snapshot { .. }
+            | Event::BatchOpen { .. }
+            | Event::BatchClose { .. }
+            | Event::BatchAck { .. }
+            | Event::ReadFuse { .. }
+            | Event::WalPad { .. } => {}
         }
     }
     let mut out: Vec<String> = Vec::new();
@@ -782,6 +844,18 @@ pub fn check_lines(
     let mut last_risk = vec![0u64; shards.max(1)];
     let mut wake_prev: Option<(u64, usize, bool, u64, usize)> = None;
     let mut fg_busy = vec![0u64; fg_threads];
+    // Group-commit batch replay: id -> (dev, closed, expected members,
+    // expected bytes, fused finish, acked members, acked bytes).
+    struct BatchSt {
+        dev: String,
+        closed: bool,
+        members: u64,
+        bytes: u64,
+        finish: u64,
+        seen_members: u64,
+        seen_bytes: u64,
+    }
+    let mut batches: BTreeMap<u64, BatchSt> = BTreeMap::new();
     for (i, l) in lines.iter().enumerate() {
         let f: Vec<&str> = l.split('|').collect();
         let mut bad = false;
@@ -795,10 +869,13 @@ pub fn check_lines(
             ($($arg:tt)*) => { r.violations.push(format!("record {i} [{l}]: {}", format!($($arg)*))) };
         }
         match f.first().copied() {
-            Some("DEV") if f.len() == 7 => {
+            Some("DEV") if f.len() == 7 || f.len() == 8 => {
                 let (issue, start, finish) = (num(f[4]), num(f[5]), num(f[6]));
                 if issue > start || start > finish {
                     viol!("service interval not ordered issue<=start<=finish");
+                }
+                if f.len() == 8 && num(f[7]) < 2 {
+                    viol!("fused DEV record with members < 2 (plain accesses stay 7-field)");
                 }
                 let prev = dev_last_finish.entry(f[1].to_string()).or_insert(0);
                 if start < *prev {
@@ -1087,6 +1164,94 @@ pub fn check_lines(
             Some("CADM") if f.len() == 6 => {}
             Some("CEVT") if f.len() == 4 => {}
             Some("HINT") if f.len() == 4 => {}
+            Some("BATCHO") if f.len() == 4 => {
+                let id = num(f[1]);
+                let st = BatchSt {
+                    dev: f[2].to_string(),
+                    closed: false,
+                    members: 0,
+                    bytes: 0,
+                    finish: 0,
+                    seen_members: 0,
+                    seen_bytes: 0,
+                };
+                if batches.insert(id, st).is_some() {
+                    viol!("batch id {id} opened twice");
+                }
+            }
+            Some("BATCHC") if f.len() == 8 => {
+                let id = num(f[1]);
+                let (members, bytes) = (num(f[3]), num(f[4]));
+                let (start, finish, at) = (num(f[5]), num(f[6]), num(f[7]));
+                if members == 0 {
+                    viol!("batch closed with zero members");
+                }
+                if at > start || start > finish {
+                    viol!("fused append interval not ordered close<=start<=finish");
+                }
+                match batches.get_mut(&id) {
+                    None => viol!("batch id {id} closed without an open"),
+                    Some(b) if b.closed => viol!("batch id {id} closed twice"),
+                    Some(b) => {
+                        if b.dev != f[2] {
+                            viol!("batch id {id} closed on {} but opened on {}", f[2], b.dev);
+                        }
+                        b.closed = true;
+                        b.members = members;
+                        b.bytes = bytes;
+                        b.finish = finish;
+                    }
+                }
+            }
+            Some("BATCHA") if f.len() == 7 => {
+                let id = num(f[1]);
+                let shard = num(f[2]) as usize;
+                let bytes = num(f[4]);
+                let (staged, ack) = (num(f[5]), num(f[6]));
+                if shard >= acc.len() {
+                    viol!("shard out of range");
+                }
+                if staged > ack {
+                    viol!("member acked before it staged");
+                }
+                match batches.get_mut(&id) {
+                    None => viol!("member ack for unknown batch id {id}"),
+                    Some(b) if !b.closed => viol!("member acked before batch id {id} closed"),
+                    Some(b) => {
+                        if ack < b.finish {
+                            viol!("ack {ack} precedes the fused finish {} of batch {id}", b.finish);
+                        }
+                        b.seen_members += 1;
+                        b.seen_bytes += bytes;
+                    }
+                }
+            }
+            Some("FUSE") if f.len() == 8 => {
+                let shard = num(f[2]) as usize;
+                let members = num(f[3]);
+                let (bytes, member_bytes, gap) = (num(f[4]), num(f[5]), num(f[6]));
+                if shard >= acc.len() {
+                    viol!("shard out of range");
+                }
+                if members < 2 {
+                    viol!("fused read with fewer than 2 members");
+                }
+                if bytes != member_bytes + gap {
+                    viol!(
+                        "fused read bytes {bytes} != member bytes {member_bytes} + gap {gap} \
+                         (byte conservation)"
+                    );
+                }
+            }
+            Some("WALPAD") if f.len() == 6 => {
+                let shard = num(f[1]) as usize;
+                if shard >= acc.len() {
+                    viol!("shard out of range");
+                }
+                if num(f[4]) == 0 {
+                    viol!("zero-byte WAL pad record");
+                }
+            }
             _ => viol!("unknown or malformed record"),
         }
         if bad {
@@ -1101,6 +1266,24 @@ pub fn check_lines(
     }
     if in_use != 0 {
         r.violations.push(format!("{in_use} CPU slot(s) still held at end of trace"));
+    }
+    for (id, b) in &batches {
+        if !b.closed {
+            r.violations.push(format!("batch id {id} never closed"));
+            continue;
+        }
+        if b.seen_members != b.members {
+            r.violations.push(format!(
+                "batch id {id}: {} member ack(s) != fused member count {}",
+                b.seen_members, b.members
+            ));
+        }
+        if b.seen_bytes != b.bytes {
+            r.violations.push(format!(
+                "batch id {id}: member bytes {} != fused access bytes {} (byte conservation)",
+                b.seen_bytes, b.bytes
+            ));
+        }
     }
     for (s, a) in acc.iter().enumerate() {
         if a.any {
@@ -1304,6 +1487,7 @@ mod tests {
             issue: 0,
             start: 0,
             finish: 100,
+            members: 1,
         });
         t.emit(|| Event::Io {
             dev: Dev::Ssd,
@@ -1429,6 +1613,141 @@ mod tests {
             .collect();
         let r = check_lines(&sums, 1, 2, 2, 0);
         assert!(r.violations.iter().any(|v| v.contains("fg wait")), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn plain_dev_record_keeps_the_seven_field_form() {
+        // The off path must not grow a byte: members <= 1 renders exactly
+        // the pre-fusion record.
+        let plain = Event::Dev {
+            dev: Dev::Ssd,
+            kind: AccessKind::SeqWrite,
+            bytes: 4096,
+            issue: 0,
+            start: 5,
+            finish: 100,
+            members: 1,
+        };
+        assert_eq!(plain.line(), "DEV|ssd|seq_wr|4096|0|5|100");
+        let fused = Event::Dev {
+            dev: Dev::Ssd,
+            kind: AccessKind::SeqWrite,
+            bytes: 4096,
+            issue: 0,
+            start: 5,
+            finish: 100,
+            members: 3,
+        };
+        assert_eq!(fused.line(), "DEV|ssd|seq_wr|4096|0|5|100|3");
+    }
+
+    #[test]
+    fn checker_replays_batches_and_pins_byte_conservation() {
+        let good: Vec<String> = [
+            "BATCHO|1|ssd|10",
+            "DEV|ssd|seq_wr|3000|60|60|100|3",
+            "BATCHC|1|ssd|3|3000|60|100|60",
+            "BATCHA|1|0|0|1000|10|100",
+            "BATCHA|1|1|2|1000|25|101",
+            "BATCHA|1|0|5|1000|60|100",
+            "SNAP|0|200|0|0|0|0|0|0|0|0|0|0|0",
+            "SNAP|1|200|0|0|0|0|0|0|0|0|0|0|0",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let r = check_lines(&good, 2, 2, 0, 0);
+        assert!(r.ok(), "unexpected violations: {:?}", r.violations);
+
+        // Member bytes that don't sum to the fused access are rejected.
+        let short: Vec<String> = [
+            "BATCHO|1|ssd|10",
+            "BATCHC|1|ssd|2|3000|60|100|60",
+            "BATCHA|1|0|0|1000|10|100",
+            "BATCHA|1|0|1|1000|20|100",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let r = check_lines(&short, 1, 2, 0, 0);
+        assert!(
+            r.violations.iter().any(|v| v.contains("byte conservation")),
+            "{:?}",
+            r.violations
+        );
+
+        // An ack before the fused finish is rejected.
+        let early: Vec<String> = [
+            "BATCHO|1|ssd|10",
+            "BATCHC|1|ssd|1|1000|60|100|60",
+            "BATCHA|1|0|0|1000|10|99",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let r = check_lines(&early, 1, 2, 0, 0);
+        assert!(
+            r.violations.iter().any(|v| v.contains("precedes the fused finish")),
+            "{:?}",
+            r.violations
+        );
+
+        // A batch that never closes is rejected.
+        let open: Vec<String> = ["BATCHO|9|ssd|10"].iter().map(|s| s.to_string()).collect();
+        let r = check_lines(&open, 1, 2, 0, 0);
+        assert!(r.violations.iter().any(|v| v.contains("never closed")), "{:?}", r.violations);
+
+        // Acks before the close (or for unknown ids) are rejected.
+        let stray: Vec<String> =
+            ["BATCHO|3|ssd|10", "BATCHA|3|0|0|100|10|20"].iter().map(|s| s.to_string()).collect();
+        let r = check_lines(&stray, 1, 2, 0, 0);
+        assert!(
+            r.violations.iter().any(|v| v.contains("before batch id 3 closed")),
+            "{:?}",
+            r.violations
+        );
+    }
+
+    #[test]
+    fn checker_pins_fuse_and_walpad_records() {
+        let good: Vec<String> = [
+            "FUSE|ssd|0|2|8192|8192|0|10",
+            "FUSE|hdd|0|3|16384|12288|4096|20",
+            "WALPAD|0|ssd|4|100|30",
+            "SNAP|0|40|0|0|0|0|0|0|0|0|0|0|0",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let r = check_lines(&good, 1, 2, 0, 0);
+        assert!(r.ok(), "unexpected violations: {:?}", r.violations);
+
+        let bad_sum: Vec<String> =
+            ["FUSE|ssd|0|2|8192|4096|0|10"].iter().map(|s| s.to_string()).collect();
+        let r = check_lines(&bad_sum, 1, 2, 0, 0);
+        assert!(
+            r.violations.iter().any(|v| v.contains("byte conservation")),
+            "{:?}",
+            r.violations
+        );
+
+        let lone: Vec<String> = ["FUSE|ssd|0|1|4096|4096|0|10"].iter().map(|s| s.to_string()).collect();
+        let r = check_lines(&lone, 1, 2, 0, 0);
+        assert!(
+            r.violations.iter().any(|v| v.contains("fewer than 2 members")),
+            "{:?}",
+            r.violations
+        );
+
+        let zero: Vec<String> = ["WALPAD|0|ssd|4|0|30"].iter().map(|s| s.to_string()).collect();
+        let r = check_lines(&zero, 1, 2, 0, 0);
+        assert!(r.violations.iter().any(|v| v.contains("zero-byte")), "{:?}", r.violations);
+
+        // A fused DEV record must carry >= 2 members.
+        let dev1: Vec<String> =
+            ["DEV|ssd|seq_wr|4096|0|0|100|1"].iter().map(|s| s.to_string()).collect();
+        let r = check_lines(&dev1, 1, 2, 0, 0);
+        assert!(r.violations.iter().any(|v| v.contains("members < 2")), "{:?}", r.violations);
     }
 
     #[test]

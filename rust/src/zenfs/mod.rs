@@ -358,6 +358,18 @@ impl ZenFs {
         self.device(dev).charge(now, kind, bytes)
     }
 
+    /// Charge ONE fused access carrying `members` logical requests.
+    pub fn charge_fused(
+        &mut self,
+        now: Ns,
+        dev: Dev,
+        kind: AccessKind,
+        bytes: u64,
+        members: u32,
+    ) -> (Ns, Ns) {
+        self.device(dev).charge_fused(now, kind, bytes, members)
+    }
+
     /// Move a file's bytes to the other device (migration, §3.4). Data is
     /// copied untimed — the migration actor charges rate-limited chunk I/O
     /// itself — and the old zones are reset.

@@ -178,6 +178,19 @@ impl ZonedDevice {
         self.timer.access(now, kind, bytes)
     }
 
+    /// Charge ONE fused device access carrying `members` logical requests
+    /// (group commit / read coalescing): one `per_req_overhead_ns` for the
+    /// whole batch.
+    pub fn charge_fused(
+        &mut self,
+        now: Ns,
+        kind: AccessKind,
+        bytes: u64,
+        members: u32,
+    ) -> (Ns, Ns) {
+        self.timer.access_fused(now, kind, bytes, members)
+    }
+
     /// Append without charging time (the caller charges chunked I/O
     /// itself). Paged out like [`ZonedDevice::append`].
     pub fn append_untimed(&mut self, zone: ZoneId, buf: &WireBuf) -> Result<u64, ZoneError> {

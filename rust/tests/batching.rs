@@ -1,0 +1,306 @@
+//! Cross-shard group commit: equivalence, crash durability, saturation.
+//!
+//! Three properties pin the request-fusion layer (`[batch]` knobs):
+//!
+//! * **off ≡ default** — the knobs off (whatever the window/gap values
+//!   say) and the degenerate `commit_batch_max = 1` both take the exact
+//!   sync path, so the full §4.1 protocol digest — clock, metrics, SST
+//!   layout, zenfs extents, WAL ios, device queue waits — is identical
+//!   to a default run at shards ∈ {1, 4}. The committed golden in
+//!   `tests/datapath.golden` pins the default itself, so transitively
+//!   the knobs-off timeline is bit-identical to main.
+//! * **acked-write durability** — a crash torn mid-fused-batch (both
+//!   WAL-window points) loses at most the one record the injector tore;
+//!   every other staged member replays from media and the recovery
+//!   invariant sweep stays clean on all shards.
+//! * **saturation** — with 64 closed-loop clients on 4 shards, growing
+//!   the commit window strictly shrinks WAL `write_ios` and never grows
+//!   the merged SSD queue wait, at equal acked ops: the amortization
+//!   the tentpole exists for, pinned as a machine-independent DES fact.
+
+use hhzs::config::Config;
+use hhzs::exp::exp7::wal_write_ios;
+use hhzs::metrics::Metrics;
+use hhzs::shard::ShardedEngine;
+use hhzs::ycsb::{key_for, Kind, RoutedSource, Spec, YcsbSource};
+use hhzs::zone::Dev;
+
+fn make_se(cfg: &Config) -> ShardedEngine {
+    ShardedEngine::new(cfg, |c| hhzs::exp::common::make_policy("HHZS", c))
+}
+
+fn run_phase(se: &mut ShardedEngine, cfg: &Config, kind: Kind) {
+    let clients = cfg.workload.clients;
+    let router = se.router;
+    let spec = Spec::from_config(cfg, kind);
+    se.run(
+        |s| Box::new(RoutedSource::new(YcsbSource::new(spec.clone(), clients), router, s)),
+        clients,
+        None,
+        false,
+    );
+}
+
+// ---------------------------------------------------------------------
+// Equivalence: knobs off and batch-of-1 are the sync path, exactly
+// ---------------------------------------------------------------------
+
+fn proto_cfg(shards: usize) -> Config {
+    let mut cfg = Config::paper_scaled(2048);
+    cfg.workload.load_objects = 10_000;
+    cfg.workload.ops = 3_000;
+    cfg.shards = shards;
+    cfg
+}
+
+/// Everything observable about a finished run, per shard — the datapath
+/// digest plus the write-path counters group commit touches (WAL ios,
+/// per-device queue wait).
+fn digest(se: &ShardedEngine) -> Vec<String> {
+    let mut out = Vec::new();
+    for (s, e) in se.engines.iter().enumerate() {
+        let m = &e.metrics;
+        out.push(format!(
+            "shard{s} now={} ops={} tput={:x} stalls={} flushes={} compactions={} \
+             migr={} wal_over={} wal_ios={} qw={:?} p999={} cpuw={}:{}",
+            e.now,
+            m.ops_done,
+            m.ops_per_sec().to_bits(),
+            m.stalls,
+            m.flushes,
+            m.compactions,
+            m.migration_bytes,
+            e.pool.wal_overflows,
+            wal_write_ios(m),
+            m.queue_wait,
+            m.read_lat.quantile(0.999),
+            m.cpu_wait.n,
+            m.cpu_wait.sum,
+        ));
+        for lvl in 0..e.version.num_levels() {
+            for sst in e.version.level(lvl) {
+                out.push(format!(
+                    "shard{s} L{lvl} sst={} size={} n={}",
+                    sst.id, sst.file_size, sst.num_entries
+                ));
+            }
+        }
+        for f in e.fs.files() {
+            let extents: Vec<String> =
+                f.extents.iter().map(|x| format!("{}:{}+{}", x.zone, x.offset, x.len)).collect();
+            out.push(format!(
+                "shard{s} file={} dev={} size={} extents=[{}]",
+                f.id,
+                f.dev.name(),
+                f.size,
+                extents.join(",")
+            ));
+        }
+    }
+    out
+}
+
+fn run_protocol_cfg(cfg: Config) -> Vec<String> {
+    let mut se = make_se(&cfg);
+    run_phase(&mut se, &cfg, Kind::Load);
+    se.flush_all();
+    run_phase(&mut se, &cfg, Kind::A);
+    se.quiesce();
+    digest(&se)
+}
+
+#[test]
+fn knobs_off_and_batch_of_one_match_default_exactly() {
+    for shards in [1usize, 4] {
+        let base = run_protocol_cfg(proto_cfg(shards));
+
+        // Knobs off: the window/gap values must be dead config — only the
+        // two booleans gate anything.
+        let mut off = proto_cfg(shards);
+        off.batch.group_commit = false;
+        off.batch.commit_window_ns = 123_456;
+        off.batch.commit_batch_max = 7;
+        off.batch.read_coalesce = false;
+        off.batch.coalesce_gap_bytes = 1 << 20;
+        assert_eq!(
+            run_protocol_cfg(off),
+            base,
+            "{shards} shard(s): knobs-off run diverged from default"
+        );
+
+        // Degenerate batch of one: `group_commit = true, batch_max = 1`
+        // must reduce to the sync path (a "batch" of one record fuses
+        // nothing, so the committer disables itself).
+        let mut one = proto_cfg(shards);
+        one.batch.group_commit = true;
+        one.batch.commit_batch_max = 1;
+        one.batch.commit_window_ns = 500_000;
+        let mut se = make_se(&one);
+        run_phase(&mut se, &one, Kind::Load);
+        se.flush_all();
+        run_phase(&mut se, &one, Kind::A);
+        se.quiesce();
+        assert_eq!(
+            se.engines[0].group_commit_staged_total(),
+            0,
+            "{shards} shard(s): batch_max = 1 must never stage"
+        );
+        assert_eq!(
+            digest(&se),
+            base,
+            "{shards} shard(s): commit_batch_max = 1 diverged from the sync path"
+        );
+    }
+}
+
+#[test]
+fn shards_share_one_committer() {
+    let mut cfg = proto_cfg(4);
+    cfg.batch.group_commit = true;
+    let se = make_se(&cfg);
+    for (s, e) in se.engines.iter().enumerate().skip(1) {
+        assert!(
+            se.engines[0].shares_group_committer_with(e),
+            "shard {s} holds a private committer — cross-shard fusion impossible"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Crash durability: a tear mid-fused-batch loses at most the torn record
+// ---------------------------------------------------------------------
+
+#[test]
+fn batched_crash_loses_at_most_the_torn_record() {
+    for point in ["wal_before_memtable", "mid_zone_append"] {
+        let mut cfg = Config::paper_scaled(2048);
+        cfg.shards = 4;
+        cfg.workload.load_objects = 400;
+        cfg.workload.ops = 0;
+        cfg.workload.clients = 8;
+        cfg.batch.group_commit = true;
+        cfg.batch.commit_window_ns = 100_000;
+        cfg.batch.commit_batch_max = 8;
+        cfg.crash.enabled = true;
+        cfg.crash.point = point.into();
+        cfg.crash.at_op = 40;
+        cfg.crash.seed = 7;
+        cfg.crash.shard = 0;
+
+        let mut se = make_se(&cfg);
+        run_phase(&mut se, &cfg, Kind::Load);
+
+        assert!(
+            se.engines[cfg.crash.shard].crash_fired(),
+            "{point}: the injector never fired — the staged path skipped the crash hook"
+        );
+        assert!(
+            se.engines[0].group_commit_staged_total() > 0,
+            "{point}: group commit never engaged — the crash did not cross a fused batch"
+        );
+
+        // Every loaded key must be readable except (at most) the one the
+        // injector tore mid-record: staged members are on media before
+        // their batch closes, so recovery replays them even though their
+        // acks were still pending when power was lost.
+        let mut missing = Vec::new();
+        for i in 0..cfg.workload.load_objects {
+            let key = key_for(i, cfg.workload.key_size);
+            if se.get(&key).is_none() {
+                missing.push(i);
+            }
+        }
+        assert!(
+            missing.len() <= 1,
+            "{point}: {} keys lost ({missing:?}) — fused batching dropped durable records",
+            missing.len()
+        );
+
+        for (s, e) in se.engines.iter_mut().enumerate() {
+            let violations = e.verify_recovery_invariants();
+            assert!(
+                violations.is_empty(),
+                "{point}: shard {s} recovery invariants violated: {violations:?}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Saturation: wider windows fuse more, at equal acked ops
+// ---------------------------------------------------------------------
+
+/// Run load + YCSB A at 4 shards / 64 clients and return the A phase's
+/// (acked ops, WAL write ios, merged SSD queue wait) — the deltas across
+/// the mixed phase, where reads desynchronize the closed-loop clients
+/// and the commit window is what decides how many stragglers fuse.
+fn sweep_point(window_ns: Option<u64>) -> (u64, u64, u64) {
+    let mut cfg = Config::paper_scaled(2048);
+    cfg.shards = 4;
+    cfg.workload.load_objects = 8_000;
+    cfg.workload.ops = 4_000;
+    cfg.workload.clients = 64;
+    if let Some(w) = window_ns {
+        cfg.batch.group_commit = true;
+        cfg.batch.commit_window_ns = w;
+        // Fill closure must never bind: the deadline is the variable
+        // under test.
+        cfg.batch.commit_batch_max = 1024;
+    }
+    let mut se = make_se(&cfg);
+    run_phase(&mut se, &cfg, Kind::Load);
+    se.flush_all();
+    let before = se.merged_metrics();
+    run_phase(&mut se, &cfg, Kind::A);
+    let after = se.merged_metrics();
+    if window_ns.is_some() {
+        assert!(
+            se.engines[0].group_commit_staged_total() > 0,
+            "window {window_ns:?}: group commit never engaged"
+        );
+    }
+    let ssd_wait = |m: &Metrics| m.queue_wait.get(&Dev::Ssd).copied().unwrap_or(0);
+    (
+        after.ops_done - before.ops_done,
+        wal_write_ios(&after) - wal_write_ios(&before),
+        ssd_wait(&after) - ssd_wait(&before),
+    )
+}
+
+#[test]
+fn wider_windows_fuse_strictly_more_at_equal_acked_ops() {
+    let (ops_off, ios_off, _) = sweep_point(None);
+    let (ops_w0, ios_w0, qw_w0) = sweep_point(Some(0));
+    let (ops_w50, ios_w50, qw_w50) = sweep_point(Some(50_000));
+    let (ops_w500, ios_w500, qw_w500) = sweep_point(Some(500_000));
+
+    // Same acked work everywhere: fusion amortizes, it must not drop or
+    // invent operations.
+    assert_eq!(ops_off, ops_w0, "window 0 changed the acked op count");
+    assert_eq!(ops_off, ops_w50, "window 50µs changed the acked op count");
+    assert_eq!(ops_off, ops_w500, "window 500µs changed the acked op count");
+
+    // WAL write ios strictly decrease as the window grows: even a
+    // zero-width window fuses same-instant arrivals, and every widening
+    // catches more of the read-desynchronized stragglers.
+    assert!(
+        ios_off > ios_w0,
+        "window 0 did not fuse: off={ios_off} w0={ios_w0}"
+    );
+    assert!(
+        ios_w0 > ios_w50,
+        "50µs window fused no more than 0: w0={ios_w0} w50={ios_w50}"
+    );
+    assert!(
+        ios_w50 > ios_w500,
+        "500µs window fused no more than 50µs: w50={ios_w50} w500={ios_w500}"
+    );
+
+    // Under saturation the fused backlog drains faster than the
+    // per-request one, so the merged SSD queue wait never grows with the
+    // window.
+    assert!(
+        qw_w0 >= qw_w50 && qw_w50 >= qw_w500,
+        "SSD queue wait grew with the window: w0={qw_w0} w50={qw_w50} w500={qw_w500}"
+    );
+}
